@@ -1,0 +1,53 @@
+"""Paper Fig. 11: sustained socket bandwidth across kernels and
+microarchitectures (SNB / IVB / HSW / HSW-CoD).
+
+The sustained bandwidths are *calibration inputs* of the ECM model (the
+paper measures them with likwid-bench); this benchmark derives the Fig. 11
+bar heights from the model's calibration tables plus the published SNB/IVB
+peak ratios, and reports the effective application bandwidth including
+hidden RFO traffic (the paper's 1.3x write-allocate adjustment)."""
+from __future__ import annotations
+
+from repro.core import BENCHMARKS, HASWELL_MEASURED_BW
+from repro.core.machine import HASWELL_CHIP_BW_NONCOD
+
+from .util import fmt, table
+
+#: peak sustained stream-triad chip bandwidths from the paper's Fig. 4
+#: (GB/s at nominal clock) relative to Haswell, applied per kernel class.
+UARCH_SCALE = {"snb": 35.5 / 52.3, "ivb": 42.5 / 52.3, "hsw": 1.0}
+
+KERNELS = ("load", "copy", "update", "striad", "schoenauer",
+           "striad_nt", "schoenauer_nt")
+
+
+def run() -> str:
+    rows = []
+    for k in KERNELS:
+        spec = BENCHMARKS[k]
+        hsw_cod = HASWELL_MEASURED_BW[k] * 2      # two memory domains
+        hsw = HASWELL_CHIP_BW_NONCOD[k]
+        useful = (spec.loads_explicit + spec.stores + spec.nt_stores) \
+            / spec.mem_streams
+        rows.append([
+            k,
+            fmt(UARCH_SCALE["snb"] * hsw / 1e9, 1),
+            fmt(UARCH_SCALE["ivb"] * hsw / 1e9, 1),
+            fmt(hsw / 1e9, 1),
+            fmt(hsw_cod / 1e9, 1),
+            fmt(100 * useful, 0) + "%",
+        ])
+    out = [table(["kernel", "SNB GB/s", "IVB GB/s", "HSW", "HSW CoD",
+                  "useful traffic"], rows)]
+    out.append("\npaper: Haswell leads on every kernel; CoD helps all but "
+               "NT-store kernels; NT stores raise useful-traffic share by "
+               "dropping the RFO stream")
+    return "\n".join(out)
+
+
+def main():
+    print(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Run every benchmark: one section per paper table/figure, plus the TPU
+adaptation (stream kernels + §Roofline table from the dry-run artifacts).
+
+    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (
+    fig10_scaling,
+    fig11_bandwidth,
+    fig12_nt_stores,
+    fig56_energy,
+    fig789_sweeps,
+    table1_ecm,
+    tpu_energy,
+    tpu_roofline,
+    tpu_scaling,
+    tpu_stream_ecm,
+)
+
+SECTIONS = [
+    ("table1_ecm", "Table I: ECM model vs paper predictions & measurements",
+     table1_ecm),
+    ("fig789_sweeps", "Figs. 7-9: working-set sweeps + AGU-optimized triad",
+     fig789_sweeps),
+    ("fig10_scaling", "Fig. 10: multicore scaling, CoD vs non-CoD (Eq. 2)",
+     fig10_scaling),
+    ("fig56_energy", "Figs. 5/6: energy-to-solution and EDP grids",
+     fig56_energy),
+    ("fig11_bandwidth", "Fig. 11: sustained bandwidth across uarchs",
+     fig11_bandwidth),
+    ("fig12_nt_stores", "Fig. 12: non-temporal stores (ECM vs roofline)",
+     fig12_nt_stores),
+    ("tpu_stream_ecm", "TPU adaptation: Pallas stream kernels + TPU-ECM",
+     tpu_stream_ecm),
+    ("tpu_roofline", "TPU §Roofline: per (arch x shape x mesh) ECM terms",
+     tpu_roofline),
+    ("tpu_energy", "TPU Fig. 5/6 analogue: energy per step per cell",
+     tpu_energy),
+    ("tpu_scaling", "TPU Eq. 2 analogue: DP-scaling saturation per arch",
+     tpu_scaling),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=[s[0] for s in SECTIONS])
+    args = ap.parse_args()
+    for name, title, mod in SECTIONS:
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"\n{'=' * 78}\n== {title}\n{'=' * 78}")
+        print(mod.run())
+        print(f"[{name}: {time.time() - t0:.1f}s]")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

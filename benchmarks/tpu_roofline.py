@@ -1,0 +1,91 @@
+"""§Roofline: the per-(arch x shape x mesh) three-term ECM/roofline table,
+read from the dry-run result JSONs (results/dryrun/*.json).
+
+Terms per cell (seconds/step, per chip):
+
+    compute    = HLO_FLOPs / (chips x 197e12)
+    memory     = HLO_bytes / (chips x 819e9)
+    collective = collective wire bytes / (chips x 50e9/link)
+
+plus MODEL_FLOPS/HLO_FLOPs (useful-compute fraction) and the dominant term.
+Run ``python -m repro.launch.dryrun --all`` first to (re)generate cells.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .util import fmt, table
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def load_records(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_rows(recs: list[dict]) -> list[list]:
+    rows = []
+    for r in recs:
+        if r["status"] == "skipped":
+            rows.append([r["arch"], r["shape"], r["mesh"], "SKIP",
+                         "-", "-", "-", "-", "-", "-", r["reason"][:38]])
+            continue
+        if r["status"] == "error":
+            rows.append([r["arch"], r["shape"], r["mesh"], "ERROR",
+                         "-", "-", "-", "-", "-", "-",
+                         r["error"][:38]])
+            continue
+        e = r["ecm"]
+        rows.append([
+            r["arch"], r["shape"], r["mesh"], "ok",
+            fmt(e["t_comp_s"] * 1e3, 2), fmt(e["t_hbm_s"] * 1e3, 2),
+            fmt((e["t_ici_s"] + e["t_dcn_s"]) * 1e3, 2),
+            e["dominant"][:4],
+            fmt(e["useful_flops_fraction"], 3),
+            fmt(e["roofline_fraction"], 3),
+            fmt(r["peak_bytes_per_chip"] / 2**30, 1) + "GiB"
+            + ("" if r.get("fits_hbm") else "!"),
+        ])
+    return rows
+
+
+def run() -> str:
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        recs = load_records(mesh)
+        if not recs:
+            out.append(f"== {mesh}: no dry-run records in {RESULTS} ==")
+            continue
+        out.append(f"== §Roofline, mesh {mesh} ({len(recs)} cells) ==")
+        out.append(table(
+            ["arch", "shape", "mesh", "st", "comp_ms", "hbm_ms", "coll_ms",
+             "dom", "useful", "roofline", "mem/chip"],
+            roofline_rows(recs)))
+        ok = [r for r in recs if r["status"] == "ok"]
+        if ok:
+            worst = min(ok, key=lambda r: r["ecm"]["roofline_fraction"])
+            coll = max(ok, key=lambda r: r["ecm"]["t_ici_s"] + r["ecm"]["t_dcn_s"])
+            out.append(f"  worst roofline fraction: {worst['arch']} x "
+                       f"{worst['shape']} ({worst['ecm']['roofline_fraction']:.3f})")
+            out.append(f"  most collective-bound:  {coll['arch']} x "
+                       f"{coll['shape']} "
+                       f"({(coll['ecm']['t_ici_s']+coll['ecm']['t_dcn_s'])*1e3:.2f} ms)")
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    print(run())
+
+
+if __name__ == "__main__":
+    main()

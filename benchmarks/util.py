@@ -1,0 +1,30 @@
+"""Tiny text-table helpers shared by the benchmark scripts."""
+from __future__ import annotations
+
+
+def fmt(x, nd=1):
+    if x is None:
+        return "-"
+    if isinstance(x, str):
+        return x
+    r = round(float(x), nd)
+    if abs(r - round(r)) < 1e-9:
+        return str(int(round(r)))
+    return f"{r:.{nd}f}"
+
+
+def table(headers: list[str], rows: list[list], widths=None) -> str:
+    cols = len(headers)
+    widths = widths or [
+        max(len(str(headers[c])), *(len(str(r[c])) for r in rows)) + 2
+        for c in range(cols)
+    ]
+    def line(cells):
+        return "".join(str(c).ljust(w) for c, w in zip(cells, widths)).rstrip()
+    out = [line(headers), line(["-" * (w - 2) for w in widths])]
+    out += [line(r) for r in rows]
+    return "\n".join(out)
+
+
+def pred_str(t):
+    return "{" + " ] ".join(fmt(x) for x in t) + "}"

@@ -1,0 +1,60 @@
+"""ECM explorer: what-if analysis with the analytical model.
+
+Answers the paper's §IV questions for any kernel/machine combination from
+the command line — which level bottlenecks, where the multicore saturation
+point sits, what non-temporal stores would buy, and what an SMT/AVX-512
+style machine change would do.
+
+Run:  PYTHONPATH=src python examples/ecm_explorer.py --kernel striad
+      PYTHONPATH=src python examples/ecm_explorer.py --kernel schoenauer \
+          --optimized-agu --bw 30e9
+"""
+import argparse
+import dataclasses
+
+from repro.core import BENCHMARKS, HASWELL_EP, HASWELL_MEASURED_BW, haswell_ecm
+from repro.core.saturation import ScalingModel
+from repro.simcache import simulate_level
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernel", default="striad", choices=sorted(BENCHMARKS))
+    ap.add_argument("--bw", type=float, default=None,
+                    help="sustained memory-domain bandwidth [B/s]")
+    ap.add_argument("--optimized-agu", action="store_true")
+    ap.add_argument("--clock-ghz", type=float, default=2.3)
+    args = ap.parse_args()
+
+    spec = BENCHMARKS[args.kernel]
+    machine = dataclasses.replace(HASWELL_EP, clock_hz=args.clock_ghz * 1e9)
+    bw = args.bw or HASWELL_MEASURED_BW[args.kernel]
+    ecm = spec.ecm(machine, bw, optimized_agu=args.optimized_agu)
+
+    print(f"kernel    : {spec.name}   ({spec.expr})")
+    print(f"streams   : {spec.loads_explicit} load + {spec.rfo} RFO + "
+          f"{spec.stores} store + {spec.nt_stores} NT")
+    print(f"ECM input : {ecm.notation()} cy/CL")
+    print(f"prediction: {ecm.prediction_notation()} cy/CL")
+    for lv, name in enumerate(ecm.levels):
+        pred = ecm.prediction(lv)
+        sim = simulate_level(spec, lv, machine=machine, sustained_bw=bw,
+                             optimized_agu=args.optimized_agu)
+        mups = spec.elems_per_line(64) * machine.clock_hz / pred / 1e6
+        print(f"  {name:4s}: model {pred:6.1f} cy/CL  sim {sim:6.1f} cy/CL "
+              f"  -> {mups:8.0f} MUp/s/core")
+    sat = ScalingModel.from_ecm(ecm)
+    print(f"saturation: {sat.n_saturation} cores per memory domain (Eq. 2)")
+    if spec.stores and not args.optimized_agu:
+        nt = BENCHMARKS.get(f"{spec.name}_nt")
+        if nt:
+            bw_nt = HASWELL_MEASURED_BW[nt.name]
+            e_nt = nt.ecm(machine, bw_nt)
+            x = ecm.prediction(3) / e_nt.prediction(3)
+            print(f"non-temporal stores would give {x:.2f}x in memory "
+                  f"(roofline alone says "
+                  f"{spec.mem_streams/(nt.mem_streams):.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

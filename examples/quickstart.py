@@ -1,0 +1,56 @@
+"""Quickstart: the ECM model in two minutes.
+
+1. Paper mode — build the ECM model for a streaming kernel on Haswell-EP
+   from first principles and compare with the paper's Table I.
+2. TPU mode — jit a small training step, pull FLOPs/bytes/collectives out
+   of the compiled artifact and build the three-term TPU-ECM model that
+   drives the framework's §Roofline analysis.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+# --- 1. paper mode ---------------------------------------------------------
+from repro.core import haswell_ecm, PAPER_TABLE1_PREDICTIONS
+from repro.core.saturation import ScalingModel
+
+print("== ECM on Haswell-EP (paper Table I) ==")
+for name in ("ddot", "striad", "schoenauer"):
+    ecm = haswell_ecm(name)
+    sat = ScalingModel.from_ecm(ecm)
+    print(f"{name:12s} input {ecm.notation():28s} -> prediction "
+          f"{ecm.prediction_notation()}  (paper: "
+          f"{PAPER_TABLE1_PREDICTIONS[name]}), saturates at "
+          f"{sat.n_saturation} cores/domain (Eq. 2)")
+
+# --- 2. TPU mode -----------------------------------------------------------
+from repro.configs import get_arch
+from repro.configs.base import ShapeSpec
+from repro.core import hlo
+from repro.core.tpu_ecm import MeshSpec, from_resources
+from repro.optim import AdamWConfig
+from repro.train.steps import init_state, make_train_step
+
+print("\n== TPU-ECM of a compiled train step (smoke config) ==")
+arch = get_arch("internlm2-1.8b", smoke=True)
+opt = AdamWConfig()
+state = init_state(arch, jax.random.key(0), opt)
+shape = ShapeSpec("demo", seq_len=32, global_batch=4, kind="train")
+batch = {k: jnp.asarray(v) for k, v in arch.make_batch(shape).items()}
+
+lowered = jax.jit(make_train_step(arch, opt)).lower(state, batch)
+compiled = lowered.compile()
+res = hlo.analyze(compiled, lowered, n_devices=1)
+ecm = from_resources(res, MeshSpec(shape=(1,), axes=("data",)),
+                     name=f"{arch.name}-smoke/train",
+                     model_flops=arch.model_flops(shape),
+                     flops_are_global=False)
+print(f"FLOPs/chip {res.flops:.3e}, bytes/chip {res.bytes_accessed:.3e}")
+print(f"T_comp {ecm.t_comp*1e6:.1f} us | T_hbm {ecm.t_hbm*1e6:.1f} us | "
+      f"T_ici {ecm.t_ici*1e6:.1f} us -> dominant: {ecm.dominant}")
+print(f"paper notation: {ecm.as_ecm_model()}")
+
+# the step still runs for real:
+state2, metrics = jax.jit(make_train_step(arch, opt))(state, batch)
+print(f"one real step: loss = {float(metrics['loss']):.3f}")

@@ -1,0 +1,16 @@
+"""Checkpointing substrate: sharded, atomic, restartable."""
+from .checkpoint import (
+    AsyncCheckpointer,
+    CheckpointManager,
+    latest_step,
+    restore_tree,
+    save_tree,
+)
+
+__all__ = [
+    "AsyncCheckpointer",
+    "CheckpointManager",
+    "latest_step",
+    "restore_tree",
+    "save_tree",
+]

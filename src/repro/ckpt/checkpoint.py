@@ -1,0 +1,199 @@
+"""Atomic, manifest-driven checkpointing.
+
+Layout (one directory per step)::
+
+    <root>/step_00000420.tmp-<pid>/     # staging (invisible to restore)
+        manifest.json                   # leaf paths, shapes, dtypes, metadata
+        <leaf-path>.npy                 # one file per tree leaf
+    <root>/step_00000420/               # os.replace'd into place (atomic)
+
+Crash safety: a checkpoint is visible iff the final ``os.replace`` happened,
+so a failure mid-save never corrupts the latest restorable state — the
+restart driver (``repro.train.driver``) simply restores ``latest_step``.
+Stale ``*.tmp-*`` staging dirs are garbage-collected on the next save.
+
+Multi-host note: at >1 process each host writes only its addressable shards
+(per-shard files keyed by process index) and manifests are written by
+process 0; the single-process implementation here writes full arrays but
+keeps the same manifest/atomic-rename protocol.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        out.append((_SEP.join(keys), leaf))
+    return out
+
+
+def _leaf_filename(path: str) -> str:
+    return path.replace(_SEP, "__") + ".npy"
+
+
+def save_tree(root: str, step: int, tree, *, metadata: dict | None = None
+              ) -> str:
+    """Atomically save a pytree of arrays as ``<root>/step_<step>``."""
+    os.makedirs(root, exist_ok=True)
+    final = os.path.join(root, f"step_{step:08d}")
+    staging = f"{final}.tmp-{os.getpid()}"
+    # GC stale staging dirs from crashed saves
+    for d in os.listdir(root):
+        if ".tmp-" in d:
+            shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+    os.makedirs(staging, exist_ok=True)
+
+    leaves = _flatten_with_paths(tree)
+    manifest = {"step": step, "metadata": metadata or {}, "leaves": {}}
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)
+        fn = _leaf_filename(path)
+        np.save(os.path.join(staging, fn), arr)
+        manifest["leaves"][path] = {
+            "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(staging, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(staging, final)
+    return final
+
+
+def list_steps(root: str) -> list[int]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for d in os.listdir(root):
+        if d.startswith("step_") and ".tmp-" not in d and os.path.exists(
+                os.path.join(root, d, "manifest.json")):
+            out.append(int(d[len("step_"):]))
+    return sorted(out)
+
+
+def latest_step(root: str) -> int | None:
+    steps = list_steps(root)
+    return steps[-1] if steps else None
+
+
+def restore_tree(root: str, step: int, like_tree, *, shardings=None):
+    """Restore into the structure of ``like_tree`` (arrays or specs).
+
+    ``shardings``: optional matching pytree of ``NamedSharding``; leaves are
+    ``jax.device_put`` accordingly (each process would feed only its shard
+    at multi-host scale).
+    """
+    d = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    paths = [p for p, _ in _flatten_with_paths(like_tree)]
+    leaves, treedef = jax.tree_util.tree_flatten(like_tree)
+    shard_leaves = (treedef.flatten_up_to(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for path, sh in zip(paths, shard_leaves):
+        ent = manifest["leaves"][path]
+        arr = np.load(os.path.join(d, ent["file"]))
+        out.append(jax.device_put(arr, sh) if sh is not None else
+                   jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    return tree, manifest["metadata"]
+
+
+def prune(root: str, keep_last: int) -> None:
+    steps = list_steps(root)
+    for s in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(root, f"step_{s:08d}"), ignore_errors=True)
+
+
+class CheckpointManager:
+    """Synchronous manager: save every ``interval`` steps, keep the last N."""
+
+    def __init__(self, root: str, *, interval: int = 100, keep_last: int = 3):
+        self.root = root
+        self.interval = interval
+        self.keep_last = keep_last
+
+    def maybe_save(self, step: int, tree, metadata: dict | None = None
+                   ) -> str | None:
+        if step % self.interval:
+            return None
+        path = save_tree(self.root, step, tree, metadata=metadata)
+        prune(self.root, self.keep_last)
+        return path
+
+    def restore_latest(self, like_tree, shardings=None):
+        s = latest_step(self.root)
+        if s is None:
+            return None, None, None
+        tree, meta = restore_tree(self.root, s, like_tree,
+                                  shardings=shardings)
+        return s, tree, meta
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointing: the training loop hands off a
+    host-transferred copy and keeps stepping (compute/IO overlap — the same
+    overlap-of-contributions idea the ECM model formalizes, applied to the
+    checkpoint stream)."""
+
+    def __init__(self, root: str, *, keep_last: int = 3):
+        self.root = root
+        self.keep_last = keep_last
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._err: Exception | None = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree, meta = item
+            try:
+                save_tree(self.root, step, tree, metadata=meta)
+                prune(self.root, self.keep_last)
+            except Exception as e:          # surfaced on next submit/close
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, step: int, tree, metadata: dict | None = None) -> None:
+        if self._err:
+            raise self._err
+        host_tree = jax.tree.map(np.asarray, tree)   # D2H before enqueue
+        self._q.put((step, host_tree, metadata))
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=10)

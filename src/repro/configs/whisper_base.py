@@ -1,0 +1,84 @@
+"""whisper-base: encoder-decoder with stub conv/mel frontend
+[arXiv:2212.04356; unverified].
+
+Shape interpretation for the enc-dec family (DESIGN.md §6):
+
+* ``train_4k``    — encode seq_len frames, teacher-force seq_len tokens.
+* ``prefill_32k`` — encode seq_len frames, prefill a 256-token prompt.
+* ``decode_32k``  — one decoder token; self-KV cache of seq_len, cross-KV
+  over seq_len encoder frames (computed at prefill).
+* ``long_500k``   — skipped: the decoder is full attention.
+"""
+import jax.numpy as jnp
+
+from repro.models import whisper
+from repro.models.common import ParamSpec
+from .base import ArchDef, ShapeSpec
+
+SOURCE = "[arXiv:2212.04356; unverified]"
+
+PROMPT_LEN = 256
+
+
+def _prompt_len(shape: ShapeSpec) -> int:
+    """Decoder prompt for prefill: 256 at assigned scale, shrunk for the
+    smoke shapes so it stays within max_text."""
+    return min(PROMPT_LEN, max(shape.seq_len // 128, 8))
+
+
+def _batch_spec(shape: ShapeSpec, cfg: whisper.WhisperConfig) -> dict:
+    b = shape.global_batch
+    out: dict = {}
+    if shape.kind == "train":
+        s = shape.seq_len
+        out["frames"] = ParamSpec((b, s, cfg.d_model), ("batch", None, "embed"),
+                                  dtype=jnp.bfloat16)
+        out["tokens"] = ParamSpec((b, s), ("batch", None), init="zeros",
+                                  dtype=jnp.int32)
+        out["labels"] = ParamSpec((b, s), ("batch", None), init="zeros",
+                                  dtype=jnp.int32)
+        out["mask"] = ParamSpec((b, s), ("batch", None), init="ones",
+                                dtype=jnp.float32)
+    elif shape.kind == "prefill":
+        out["frames"] = ParamSpec((b, shape.seq_len, cfg.d_model),
+                                  ("batch", None, "embed"), dtype=jnp.bfloat16)
+        out["tokens"] = ParamSpec((b, _prompt_len(shape)), ("batch", None),
+                                  init="zeros", dtype=jnp.int32)
+    else:                                   # decode: one token
+        out["tokens"] = ParamSpec((b, 1), ("batch", None), init="zeros",
+                                  dtype=jnp.int32)
+    return out
+
+
+def _arch(cfg) -> ArchDef:
+    return ArchDef(
+        name="whisper-base",
+        family="audio",
+        cfg=cfg,
+        spec_fn=whisper.whisper_spec,
+        loss_fn=whisper.loss_fn,
+        prefill_fn=whisper.prefill,
+        decode_fn=whisper.decode_step,
+        cache_spec_fn=whisper.cache_spec,
+        profile="tp_dp",
+        sub_quadratic=False,
+        source=SOURCE,
+        batch_spec_fn=_batch_spec,
+    )
+
+
+def full():
+    return _arch(whisper.WhisperConfig(
+        name="whisper-base",
+        n_layers=6, d_model=512, n_heads=8, d_ff=2048, vocab=51865,
+        attn_impl="chunked", remat="full",
+    ))
+
+
+def smoke():
+    return _arch(whisper.WhisperConfig(
+        name="whisper-smoke",
+        n_layers=2, d_model=64, n_heads=2, d_ff=128, vocab=512,
+        max_frames=64, max_text=64,
+        attn_impl="dense", vocab_pad_multiple=64,
+    ))

@@ -1,0 +1,49 @@
+"""ECM performance-model core (the paper's contribution).
+
+Paper-faithful pieces: :mod:`.ecm` (model + Eq. 1 overlap rule + notation),
+:mod:`.machine` (Haswell-EP port/bandwidth model), :mod:`.kernel_spec`
+(§IV-C construction recipe + Table I benchmarks), :mod:`.saturation`
+(Eq. 2 multicore scaling) and :mod:`.energy` (§III-D energy/EDP analysis).
+
+TPU adaptation: :mod:`.hlo` (compiled-HLO resource extraction) and
+:mod:`.tpu_ecm` (three-term compute/HBM/ICI ECM for JAX programs).
+"""
+from .ecm import ECMModel, parse_prediction
+from .kernel_spec import (
+    BENCHMARKS,
+    PAPER_TABLE1_INPUTS,
+    PAPER_TABLE1_MEASUREMENTS,
+    PAPER_TABLE1_PREDICTIONS,
+    StreamKernelSpec,
+    haswell_ecm,
+)
+from .machine import (
+    HASWELL_EP,
+    HASWELL_MEASURED_BW,
+    TPU_V5E,
+    MachineModel,
+    PortModel,
+    TPUMachineModel,
+    TransferLevel,
+)
+from .saturation import ScalingModel, domain_scaling
+
+__all__ = [
+    "ECMModel",
+    "parse_prediction",
+    "BENCHMARKS",
+    "PAPER_TABLE1_INPUTS",
+    "PAPER_TABLE1_MEASUREMENTS",
+    "PAPER_TABLE1_PREDICTIONS",
+    "StreamKernelSpec",
+    "haswell_ecm",
+    "HASWELL_EP",
+    "HASWELL_MEASURED_BW",
+    "TPU_V5E",
+    "MachineModel",
+    "PortModel",
+    "TPUMachineModel",
+    "TransferLevel",
+    "ScalingModel",
+    "domain_scaling",
+]

@@ -1,0 +1,156 @@
+"""ECM-guided configuration selection (beyond-paper use of the model).
+
+The paper's workflow is: build the light-speed model from resource counts,
+find the dominant term, act on it.  This module automates that loop over
+*distribution configs*: for a transformer-like workload it estimates the
+three TPU-ECM terms analytically for every candidate (data, model) mesh
+factorization and gradient-accumulation depth, rejects configs whose
+working set exceeds HBM, and ranks the rest by the ECM-bound step time.
+
+The estimator is deliberately first-order (the same spirit as the paper's
+stream counting): weights/activations/collectives are counted from model
+dimensions, not from a compile.  `repro.launch.dryrun` remains the ground
+truth; the autotuner prunes the candidate set before any compile happens.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from .machine import TPU_V5E, TPUMachineModel
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """First-order description of one training/serving step (global)."""
+
+    n_params: int                      # active parameters
+    d_model: int
+    n_layers: int
+    global_batch: int
+    seq_len: int
+    kind: str = "train"                # train | prefill | decode
+    dtype_bytes: int = 2               # compute dtype
+    opt_bytes_per_param: int = 12      # f32 master + 2 f32 moments
+    remat_factor: float = 1.33         # fwd recompute in bwd
+    #: activation bytes per token per layer in the residual path (empirical
+    #: multiple of d_model; ~12 covers qkv/mlp/norm streams of a swiglu block)
+    act_streams: float = 12.0
+
+    @property
+    def tokens(self) -> int:
+        return self.global_batch * (1 if self.kind == "decode"
+                                    else self.seq_len)
+
+    @property
+    def step_flops(self) -> float:
+        mult = 6.0 if self.kind == "train" else 2.0
+        return mult * self.n_params * self.tokens
+
+
+@dataclass(frozen=True)
+class CandidateConfig:
+    data: int
+    model: int
+    accum: int = 1
+
+    @property
+    def chips(self) -> int:
+        return self.data * self.model
+
+
+@dataclass(frozen=True)
+class Estimate:
+    config: CandidateConfig
+    t_comp: float
+    t_hbm: float
+    t_coll: float
+    hbm_bytes: float
+    fits: bool
+
+    @property
+    def t_ecm(self) -> float:
+        return max(self.t_comp, self.t_hbm) + self.t_coll
+
+    def summary(self) -> dict:
+        return {"data": self.config.data, "model": self.config.model,
+                "accum": self.config.accum,
+                "t_comp_ms": self.t_comp * 1e3, "t_hbm_ms": self.t_hbm * 1e3,
+                "t_coll_ms": self.t_coll * 1e3, "t_ecm_ms": self.t_ecm * 1e3,
+                "hbm_gib": self.hbm_bytes / 2**30, "fits": self.fits}
+
+
+def estimate(w: WorkloadSpec, c: CandidateConfig,
+             m: TPUMachineModel = TPU_V5E) -> Estimate:
+    """Three-term ECM estimate for one candidate (per chip, per step)."""
+    chips = c.chips
+    # ---- compute ----
+    t_comp = w.step_flops * w.remat_factor / (chips * m.peak_bf16_flops)
+
+    # ---- memory: weights + optimizer resident; activations streamed ----
+    tokens_chip = w.tokens / c.data
+    act_bytes = (tokens_chip * w.n_layers * w.act_streams * w.d_model
+                 * w.dtype_bytes / c.model)
+    micro = max(c.accum, 1)
+    # FSDP/ZeRO semantics: params shard over (model x data); every
+    # microbatch gathers + reads the full model-shard of the weights
+    weight_stream = (w.n_params * w.dtype_bytes / c.model
+                     * (micro if w.kind == "train" else 1))
+    hbm_stream = act_bytes * (3.0 if w.kind == "train" else 1.0) \
+        + weight_stream
+    t_hbm = hbm_stream / m.hbm_bytes_per_s
+
+    # ---- collectives ----
+    coll = 0.0
+    if w.kind == "train":
+        # grad reduce-scatter+all-gather over data: 2 (N-1)/N bytes/param
+        n = c.data
+        coll += 2 * (n - 1) / max(n, 1) * w.n_params * 4 / (c.model * c.data)
+        # FSDP weight all-gather over data, once per microbatch
+        coll += (micro * (c.data - 1) / max(c.data, 1)
+                 * w.n_params * w.dtype_bytes / c.model)
+    if c.model > 1:
+        # TP: 2 all-reduces of the residual stream per layer
+        n = c.model
+        stream = tokens_chip * w.d_model * w.dtype_bytes
+        coll += 2 * w.n_layers * 2 * (n - 1) / n * stream / n
+    t_coll = coll / (m.ici_link_bytes_per_s * 1)
+
+    # ---- residency ----
+    resident = (w.n_params * (w.dtype_bytes + (w.opt_bytes_per_param
+                                               if w.kind == "train" else 0))
+                / (c.model * c.data))
+    live_act = act_bytes / micro + tokens_chip / micro * w.d_model \
+        * w.dtype_bytes * w.n_layers / c.model   # remat carries
+    fits = resident + live_act < m.hbm_bytes * 0.9
+    return Estimate(c, t_comp, t_hbm, t_coll, resident + live_act, fits)
+
+
+def candidates(n_chips: int, w: WorkloadSpec,
+               accums=(1, 2, 4, 8, 16)) -> list[CandidateConfig]:
+    out = []
+    d = 1
+    while d <= n_chips:
+        if n_chips % d == 0:
+            for a in accums:
+                if w.global_batch % (d * a) == 0 or w.kind != "train":
+                    out.append(CandidateConfig(data=d, model=n_chips // d,
+                                               accum=a))
+                    if w.kind != "train":
+                        break
+        d *= 2
+    return out
+
+
+def rank(w: WorkloadSpec, n_chips: int = 256,
+         m: TPUMachineModel = TPU_V5E) -> list[Estimate]:
+    """All feasible candidates, best (lowest ECM time) first."""
+    ests = [estimate(w, c, m) for c in candidates(n_chips, w)]
+    feasible = [e for e in ests if e.fits]
+    pool = feasible or ests
+    return sorted(pool, key=lambda e: e.t_ecm)
+
+
+def recommend(w: WorkloadSpec, n_chips: int = 256,
+              m: TPUMachineModel = TPU_V5E) -> Estimate:
+    return rank(w, n_chips, m)[0]

@@ -1,0 +1,173 @@
+"""The Execution-Cache-Memory (ECM) analytical performance model.
+
+Implements the model of Hofmann, Eitzinger & Fey (2015), §IV:
+
+* runtime decomposition into overlapping in-core cycles ``T_OL``,
+  non-overlapping in-core cycles ``T_nOL`` and per-level transfer times;
+* the composition / overlap rule (Eq. 1)::
+
+      T_core = max(T_nOL, T_OL)
+      T_ECM  = max(T_nOL + T_data, T_OL)
+
+  where ``T_data`` is the sum of the transfer contributions down to the
+  memory level the working set lives in;
+* the shorthand notations ``{T_OL || T_nOL | T_L1L2 | T_L2L3 | T_L3Mem}``
+  for model inputs and ``{L1 ] L2 ] L3 ] Mem}`` for predictions;
+* conversion from cycles to performance (``P = W / T_ECM``).
+
+Times are core cycles per unit of work (one cache-line of work on the CPU,
+one VMEM block or one training step on the TPU — the model is agnostic, see
+``machine.py``).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field, replace
+
+
+def _fmt(x: float) -> str:
+    """Format a cycle count the way the paper does (1 decimal, trim .0)."""
+    r = round(x, 1)
+    if abs(r - round(r)) < 1e-9:
+        return str(int(round(r)))
+    return f"{r:.1f}"
+
+
+@dataclass(frozen=True)
+class ECMModel:
+    """An ECM model instance for one kernel on one machine.
+
+    ``transfers[i]`` is the data-transfer time (cycles per unit of work)
+    between hierarchy level ``i`` and level ``i+1``; ``levels`` names the
+    *prediction* levels, so ``len(levels) == len(transfers) + 1``.
+    """
+
+    t_ol: float
+    t_nol: float
+    transfers: tuple[float, ...]
+    levels: tuple[str, ...] = ("L1", "L2", "L3", "Mem")
+    unit: str = "cy/CL"
+    name: str = ""
+
+    def __post_init__(self) -> None:
+        if len(self.levels) != len(self.transfers) + 1:
+            raise ValueError(
+                f"need len(levels) == len(transfers)+1, got {len(self.levels)} "
+                f"levels and {len(self.transfers)} transfers"
+            )
+        if self.t_ol < 0 or self.t_nol < 0 or any(t < 0 for t in self.transfers):
+            raise ValueError("ECM times must be non-negative")
+
+    # ------------------------------------------------------------------
+    # Eq. (1)
+    # ------------------------------------------------------------------
+    @property
+    def t_core(self) -> float:
+        return max(self.t_nol, self.t_ol)
+
+    def t_data(self, level: int | str) -> float:
+        """Cumulative transfer time for data residing in ``level``."""
+        idx = self._level_index(level)
+        return sum(self.transfers[:idx])
+
+    def prediction(self, level: int | str) -> float:
+        """``T_ECM`` for data in ``level`` (Eq. 1)."""
+        return max(self.t_nol + self.t_data(level), self.t_ol)
+
+    def predictions(self) -> tuple[float, ...]:
+        return tuple(self.prediction(i) for i in range(len(self.levels)))
+
+    def _level_index(self, level: int | str) -> int:
+        if isinstance(level, int):
+            if not 0 <= level < len(self.levels):
+                raise IndexError(f"level {level} out of range")
+            return level
+        try:
+            return self.levels.index(level)
+        except ValueError:
+            raise KeyError(f"unknown level {level!r}; have {self.levels}") from None
+
+    # ------------------------------------------------------------------
+    # Shorthand notation (paper §IV-A)
+    # ------------------------------------------------------------------
+    def notation(self) -> str:
+        parts = " | ".join(_fmt(t) for t in self.transfers)
+        return f"{{{_fmt(self.t_ol)} || {_fmt(self.t_nol)} | {parts}}}"
+
+    def prediction_notation(self) -> str:
+        return "{" + " ] ".join(_fmt(p) for p in self.predictions()) + "}"
+
+    @classmethod
+    def parse(cls, s: str, *, levels: tuple[str, ...] | None = None,
+              name: str = "") -> "ECMModel":
+        """Parse the paper's input shorthand, e.g. ``{1 || 2 | 2 | 4 | 9.1}``.
+
+        Both the ASCII ``||`` and the typographic ``‖`` separator are
+        accepted.
+        """
+        body = s.strip()
+        if body.startswith("{") and body.endswith("}"):
+            body = body[1:-1]
+        body = body.replace("‖", "||")
+        if "||" not in body:
+            raise ValueError(f"not an ECM input notation: {s!r}")
+        ol_part, rest = body.split("||", 1)
+        xs = [float(x) for x in rest.split("|")]
+        t_nol, transfers = xs[0], tuple(xs[1:])
+        lv = levels or tuple(
+            ["L1"] + [f"L{i+2}" for i in range(len(transfers) - 1)] + ["Mem"]
+        )
+        return cls(t_ol=float(ol_part), t_nol=t_nol, transfers=transfers,
+                   levels=lv, name=name)
+
+    # ------------------------------------------------------------------
+    # Performance conversion (paper §IV-A: P = W / T_ECM)
+    # ------------------------------------------------------------------
+    def performance(self, work_per_unit: float, level: int | str,
+                    clock_hz: float | None = None) -> float:
+        """Performance for data in ``level``: work units per cycle, or per
+        second if ``clock_hz`` is given."""
+        p = work_per_unit / self.prediction(level)
+        return p * clock_hz if clock_hz else p
+
+    # ------------------------------------------------------------------
+    # Utilities
+    # ------------------------------------------------------------------
+    def with_penalty(self, penalty_per_level: dict[int, float] | None = None,
+                     ) -> "ECMModel":
+        """Return a copy with extra per-transfer-level penalty cycles added
+        (the paper's empirical off-core latency penalty, §VII-A)."""
+        if not penalty_per_level:
+            return self
+        new = list(self.transfers)
+        for i, p in penalty_per_level.items():
+            new[i] = new[i] + p
+        return replace(self, transfers=tuple(new))
+
+    def scaled(self, factor: float) -> "ECMModel":
+        return replace(
+            self,
+            t_ol=self.t_ol * factor,
+            t_nol=self.t_nol * factor,
+            transfers=tuple(t * factor for t in self.transfers),
+        )
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        nm = f"{self.name}: " if self.name else ""
+        return f"{nm}{self.notation()} {self.unit} -> T_ECM = {self.prediction_notation()}"
+
+
+# ---------------------------------------------------------------------------
+# Prediction-notation parsing (for validating against the paper's tables)
+# ---------------------------------------------------------------------------
+
+_PRED_SPLIT = re.compile(r"\]")
+
+
+def parse_prediction(s: str) -> tuple[float, ...]:
+    """Parse the paper's prediction shorthand ``{2 ] 4 ] 8 ] 17.1}``."""
+    body = s.strip()
+    if body.startswith("{") and body.endswith("}"):
+        body = body[1:-1]
+    return tuple(float(x) for x in _PRED_SPLIT.split(body))

@@ -1,0 +1,106 @@
+"""Energy-to-solution and EDP modelling (paper §III-D, Figs. 5/6).
+
+The paper shows, for bandwidth-limited kernels, that (i) race-to-idle is not
+efficient, (ii) once memory bandwidth is saturated, adding cores or clock
+only costs energy, and (iii) on Haswell the sustained bandwidth is frequency
+independent, so the lowest frequency minimises energy.
+
+We reproduce the *structure* of those heat maps analytically: a simple power
+model ``P(n, f) = P_idle + n * (p0 + p1 * f + p2 * f**2)`` combined with the
+frequency-dependent ECM runtime prediction gives energy-to-solution
+``E = P * T`` and ``EDP = P * T^2`` over a (cores x frequency) grid.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .ecm import ECMModel
+from .saturation import ScalingModel
+
+
+@dataclass(frozen=True)
+class PowerModel:
+    """Chip power as a function of active cores and frequency (GHz).
+
+    Coefficients calibrated against the paper's reference points
+    (single-core package power ~40-55 W, Haswell-vs-SNB/IVB energy ratio
+    1.12-1.23x, EDP ratio 1.35-1.55x); see EXPERIMENTS.md."""
+
+    idle_watts: float = 25.0
+    static_per_core: float = 0.5       # W per active core
+    dyn_lin: float = 0.3               # W per core per GHz
+    dyn_quad: float = 2.2              # W per core per GHz^2
+
+    def watts(self, n_cores: int, f_ghz: float) -> float:
+        return self.idle_watts + n_cores * (
+            self.static_per_core + self.dyn_lin * f_ghz + self.dyn_quad * f_ghz**2
+        )
+
+
+@dataclass(frozen=True)
+class FrequencyScaledECM:
+    """Frequency behaviour of an ECM model.
+
+    In-core and in-cache cycles are frequency-invariant *in cycles* (they
+    live in the core clock domain).  The memory term is fixed *in seconds*
+    (DRAM clock domain), so in core cycles it scales with f.  On Haswell
+    sustained memory bandwidth is frequency-independent
+    (``bw_freq_coupled=False``); on Sandy/Ivy Bridge it degrades at low
+    frequency (paper Fig. 4), modelled with a coupling floor.
+    """
+
+    ecm: ECMModel
+    f_nominal_ghz: float
+    bw_freq_coupled: bool = False
+    coupling_floor: float = 2.0 / 3.0  # SNB/IVB: 1.2GHz gives ~2/3 bandwidth
+
+    def at_frequency(self, f_ghz: float) -> ECMModel:
+        scale = f_ghz / self.f_nominal_ghz
+        mem_cy = self.ecm.transfers[-1] * scale
+        if self.bw_freq_coupled:
+            # bandwidth degrades towards the floor as f decreases
+            rel = min(1.0, self.coupling_floor + (1 - self.coupling_floor) * scale)
+            mem_cy = mem_cy / rel
+        transfers = self.ecm.transfers[:-1] + (mem_cy,)
+        return ECMModel(t_ol=self.ecm.t_ol, t_nol=self.ecm.t_nol,
+                        transfers=transfers, levels=self.ecm.levels,
+                        name=self.ecm.name)
+
+
+def energy_grid(
+    fecm: FrequencyScaledECM,
+    power: PowerModel,
+    *,
+    n_cores_max: int,
+    f_ghz_list: list[float],
+    total_work_units: float,
+) -> dict[str, list[list[float]]]:
+    """Energy-to-solution [J] and EDP [Js] over (frequency x cores)."""
+    energy, edp, runtime = [], [], []
+    for f in f_ghz_list:
+        ecm_f = fecm.at_frequency(f)
+        scal = ScalingModel.from_ecm(ecm_f)
+        e_row, d_row, t_row = [], [], []
+        for n in range(1, n_cores_max + 1):
+            perf_cy = scal.performance(n)                 # work / cycle
+            t_s = total_work_units / (perf_cy * f * 1e9)  # seconds
+            w = power.watts(n, f)
+            e_row.append(w * t_s)
+            d_row.append(w * t_s * t_s)
+            t_row.append(t_s)
+        energy.append(e_row)
+        edp.append(d_row)
+        runtime.append(t_row)
+    return {"energy_J": energy, "edp_Js": edp, "runtime_s": runtime}
+
+
+def best_config(grid_rows: list[list[float]], f_ghz_list: list[float]
+                ) -> tuple[float, int, float]:
+    """Return (f_ghz, n_cores, value) minimising a grid."""
+    best = (f_ghz_list[0], 1, grid_rows[0][0])
+    for fi, row in enumerate(grid_rows):
+        for ni, v in enumerate(row):
+            if v < best[2]:
+                best = (f_ghz_list[fi], ni + 1, v)
+    return best

@@ -1,0 +1,213 @@
+"""Extract ECM resource terms from compiled XLA artifacts.
+
+The dry-run (``repro.launch.dryrun``) lowers and compiles every
+(architecture x input-shape x mesh) cell; this module is the framework's
+"performance counter": it pulls
+
+* HLO FLOPs and HLO bytes-accessed from ``compiled.cost_analysis()``;
+* collective traffic by parsing the HLO text for ``all-gather`` /
+  ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+  ``collective-permute`` ops and summing their operand sizes (cost_analysis
+  does not report collective bytes).
+
+On-wire bytes differ from operand bytes per collective kind; we apply the
+standard ring-algorithm multipliers so the ICI term reflects actual link
+traffic per chip.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# HLO text parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g.  f32[16,1024,512]{2,1,0}  or  bf16[8192,49152]
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9a-z]+)?|pred)\[([0-9,]*)\]")
+
+_COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# an HLO instruction line:  %name = TYPE[shape] op-name(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_REPLICA_GROUPS_ALT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of all array shapes in an HLO type string (handles
+    tuples by summing members)."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    out_bytes: float
+    group_size: int
+    line: str = ""
+
+    @property
+    def wire_bytes_per_chip(self) -> float:
+        """Per-chip on-wire bytes for a ring algorithm.
+
+        With output/buffer size B and group size N (per chip contribution):
+          all-gather:        each chip sends its shard around: (N-1)/N * B
+          reduce-scatter:    same traffic pattern: (N-1)/N * B
+          all-reduce:        RS + AG: 2 (N-1)/N * B
+          all-to-all:        each chip keeps 1/N: (N-1)/N * B
+          collective-permute: B (point-to-point)
+        """
+        n = max(self.group_size, 1)
+        frac = (n - 1) / n
+        if self.kind == "all-reduce":
+            return 2.0 * frac * self.out_bytes
+        if self.kind == "collective-permute":
+            return self.out_bytes
+        return frac * self.out_bytes
+
+
+@dataclass
+class HLOResources:
+    """Aggregated per-program resources (global, all chips)."""
+
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    transcendentals: float = 0.0
+    collectives: list[CollectiveOp] = field(default_factory=list)
+    collective_out_bytes: dict[str, float] = field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        """Sum of collective operand (output) bytes — the §Roofline input."""
+        return sum(c.out_bytes for c in self.collectives)
+
+    @property
+    def wire_bytes_per_chip(self) -> float:
+        return sum(c.wire_bytes_per_chip for c in self.collectives)
+
+    def by_kind(self) -> dict[str, float]:
+        out: dict[str, float] = defaultdict(float)
+        for c in self.collectives:
+            out[c.kind] += c.out_bytes
+        return dict(out)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _REPLICA_GROUPS_ALT_RE.search(line)
+    if m:
+        # replica_groups=[G,S] — G groups of size S (iota format)
+        return int(m.group(2))
+    m = _REPLICA_GROUPS_RE.search(line)
+    if m:
+        body = m.group(1)
+        first = body.split("}", 1)[0].strip("{} ")
+        if first:
+            return len([x for x in first.split(",") if x.strip() != ""])
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> list[CollectiveOp]:
+    """Parse collective ops and their sizes from HLO text.
+
+    Async pairs (``-start``/``-done``) are counted once (on the ``-start``).
+    """
+    ops: list[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # counted at -start
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(type_str)
+        if nbytes <= 0:
+            continue
+        gs = _group_size(line, n_devices)
+        ops.append(CollectiveOp(kind=kind, out_bytes=nbytes, group_size=gs,
+                                line=line.strip()[:200]))
+    return ops
+
+
+def analyze(compiled, lowered=None, n_devices: int | None = None) -> HLOResources:
+    """Build :class:`HLOResources` from a ``jax`` compiled (and optionally
+    lowered) artifact."""
+    res = HLOResources()
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+    except Exception:
+        ca = None
+    if ca:
+        res.flops = float(ca.get("flops", 0.0))
+        res.bytes_accessed = float(ca.get("bytes accessed", 0.0))
+        res.transcendentals = float(ca.get("transcendentals", 0.0))
+    if n_devices is None:
+        try:
+            n_devices = len(compiled.input_shardings[0].device_set)  # best effort
+        except Exception:
+            n_devices = 1
+    text = None
+    for src in (compiled, lowered):
+        if src is None:
+            continue
+        try:
+            text = src.as_text()
+            break
+        except Exception:
+            continue
+    if text:
+        res.collectives = parse_collectives(text, n_devices)
+        res.collective_out_bytes = res.by_kind()
+    return res
+
+
+def memory_analysis_dict(compiled) -> dict[str, float]:
+    """Best-effort extraction of ``compiled.memory_analysis()`` fields."""
+    out: dict[str, float] = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return out
+    if ma is None:
+        return out
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out

@@ -1,0 +1,231 @@
+"""Stream-kernel specifications and automatic ECM model construction.
+
+This module implements the paper's model-construction recipe (§IV-C):
+
+1. count the micro-ops needed to process one cache line of work and push
+   them through the machine's port model -> ``T_OL``, ``T_nOL``;
+2. count cache-line streams (explicit loads, write-allocate/RFO streams,
+   evictions, non-temporal stores) and convert them to per-level transfer
+   cycles using the machine's per-level bandwidths;
+3. compose everything into an :class:`~repro.core.ecm.ECMModel`.
+
+The seven microbenchmarks of the paper's Table I (plus the two
+non-temporal-store variants of §VII-E) ship as :data:`BENCHMARKS`.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from .ecm import ECMModel
+from .machine import HASWELL_MEASURED_BW, MachineModel
+
+
+@dataclass(frozen=True)
+class StreamKernelSpec:
+    """A steady-state streaming loop kernel, in the paper's Table I terms.
+
+    Stream counts are *cache lines per cache line of work*: e.g. the copy
+    kernel ``A[i]=B[i]`` reads one CL (B), write-allocates one CL (A, the
+    RFO stream) and evicts one CL (A) per CL of work.
+
+    ``flops_per_elem`` counts floating-point operations per scalar element
+    (an FMA counts as two), used for performance conversion.
+    """
+
+    name: str
+    expr: str
+    loads_explicit: int
+    rfo: int
+    stores: int
+    nt_stores: int = 0
+    elem_bytes: int = 8            # double precision
+    flops_per_elem: int = 0
+    updates_per_elem: int = 1      # "MUp/s" work definition (1 elem update)
+    # micro-op mix per CL of work, AVX (see machine.PortModel)
+    uop_loads: int = 0
+    uop_stores: int = 0
+    uop_fma: int = 0
+    uop_mul: int = 0
+    uop_add: int = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def load_streams(self) -> int:
+        return self.loads_explicit + self.rfo
+
+    @property
+    def mem_streams(self) -> int:
+        """Cache lines crossing the L3<->Mem edge per CL of work."""
+        return self.loads_explicit + self.rfo + self.stores + self.nt_stores
+
+    @property
+    def l2_streams(self) -> int:
+        """Cache lines crossing L2<->L3 (NT stores bypass L2/L3)."""
+        return self.loads_explicit + self.rfo + self.stores
+
+    def elems_per_line(self, line_bytes: int) -> int:
+        return line_bytes // self.elem_bytes
+
+    # ------------------------------------------------------------------
+    # §IV-C step 1+2+3: build the ECM model on a machine
+    # ------------------------------------------------------------------
+    def ecm(
+        self,
+        machine: MachineModel,
+        sustained_bw: float,
+        *,
+        optimized_agu: bool = False,
+    ) -> ECMModel:
+        t_nol, t_ol = machine.ports.core_cycles(
+            loads=self.uop_loads,
+            stores=self.uop_stores,
+            fma=self.uop_fma,
+            mul=self.uop_mul,
+            add=self.uop_add,
+            optimized_agu=optimized_agu,
+        )
+        lb = machine.line_bytes
+        transfers: list[float] = []
+        # inner cache edges (L1<->L2, L2<->L3 on Haswell)
+        for i, lvl in enumerate(machine.levels):
+            if i == 0:
+                # L1<->L2: explicit loads + RFO inward; evictions (write-back
+                # streams and NT stores leaving L1 towards the LFBs) outward.
+                cyc = lvl.load_cycles(self.load_streams, lb)
+                cyc += lvl.evict_cycles(self.stores + self.nt_stores, lb)
+            else:
+                # deeper edges: NT stores bypass (LFB -> memory directly)
+                cyc = lvl.load_cycles(self.loads_explicit + self.rfo, lb)
+                cyc += lvl.evict_cycles(self.stores, lb)
+            transfers.append(cyc)
+        # final edge: sustained-bandwidth-derived cycles per line x lines
+        mem_cy = machine.mem_cycles_per_line(sustained_bw) * self.mem_streams
+        transfers.append(mem_cy)
+        return ECMModel(
+            t_ol=t_ol,
+            t_nol=t_nol,
+            transfers=tuple(transfers),
+            levels=machine.level_names(),
+            name=self.name,
+        )
+
+
+# ---------------------------------------------------------------------------
+# The paper's benchmark set (Table I + §VII-E non-temporal variants).
+# uop counts are per cache line of work with AVX (32 B) vector registers:
+# one 64 B line of doubles = 2 AVX loads or stores per stream.
+# ---------------------------------------------------------------------------
+
+BENCHMARKS: dict[str, StreamKernelSpec] = {
+    "ddot": StreamKernelSpec(
+        name="ddot", expr="s += A[i]*B[i]",
+        loads_explicit=2, rfo=0, stores=0,
+        flops_per_elem=2,
+        uop_loads=4, uop_fma=2,
+    ),
+    "load": StreamKernelSpec(
+        name="load", expr="s += A[i]",
+        loads_explicit=1, rfo=0, stores=0,
+        flops_per_elem=1,
+        uop_loads=2, uop_add=2,
+    ),
+    "store": StreamKernelSpec(
+        name="store", expr="A[i] = s",
+        loads_explicit=0, rfo=1, stores=1,
+        flops_per_elem=0,
+        uop_stores=2,
+    ),
+    "update": StreamKernelSpec(
+        name="update", expr="A[i] = s*A[i]",
+        loads_explicit=1, rfo=0, stores=1,
+        flops_per_elem=1,
+        uop_loads=2, uop_stores=2, uop_mul=2,
+    ),
+    "copy": StreamKernelSpec(
+        name="copy", expr="A[i] = B[i]",
+        loads_explicit=1, rfo=1, stores=1,
+        flops_per_elem=0,
+        uop_loads=2, uop_stores=2,
+    ),
+    "striad": StreamKernelSpec(
+        name="striad", expr="A[i] = B[i] + s*C[i]",
+        loads_explicit=2, rfo=1, stores=1,
+        flops_per_elem=2,
+        uop_loads=4, uop_stores=2, uop_fma=2,
+    ),
+    "schoenauer": StreamKernelSpec(
+        name="schoenauer", expr="A[i] = B[i] + C[i]*D[i]",
+        loads_explicit=3, rfo=1, stores=1,
+        flops_per_elem=2,
+        uop_loads=6, uop_stores=2, uop_fma=2,
+    ),
+    # §VII-E: non-temporal-store variants (no RFO, stores bypass the caches)
+    "striad_nt": StreamKernelSpec(
+        name="striad_nt", expr="A[i] = B[i] + s*C[i]  (NT stores)",
+        loads_explicit=2, rfo=0, stores=0, nt_stores=1,
+        flops_per_elem=2,
+        uop_loads=4, uop_stores=2, uop_fma=2,
+    ),
+    "schoenauer_nt": StreamKernelSpec(
+        name="schoenauer_nt", expr="A[i] = B[i] + C[i]*D[i]  (NT stores)",
+        loads_explicit=3, rfo=0, stores=0, nt_stores=1,
+        flops_per_elem=2,
+        uop_loads=6, uop_stores=2, uop_fma=2,
+    ),
+}
+
+
+def haswell_ecm(name: str, *, optimized_agu: bool = False,
+                machine: MachineModel | None = None,
+                sustained_bw: float | None = None) -> ECMModel:
+    """Build the ECM model for one of the paper's benchmarks on Haswell-EP,
+    using the paper's measured sustained memory-domain bandwidths."""
+    from .machine import HASWELL_EP
+
+    spec = BENCHMARKS[name]
+    m = machine or HASWELL_EP
+    bw = sustained_bw or HASWELL_MEASURED_BW[name]
+    return spec.ecm(m, bw, optimized_agu=optimized_agu)
+
+
+# ---------------------------------------------------------------------------
+# Ground truth from the paper, used by tests and the Table I benchmark.
+# Predictions: Table I ("ECM Prediction" column); measurements: Table I
+# ("Measurement" column).  NT variants from §VII-E prose.
+# ---------------------------------------------------------------------------
+
+PAPER_TABLE1_PREDICTIONS: dict[str, tuple[float, ...]] = {
+    "ddot": (2, 4, 8, 17.1),
+    "load": (2, 2, 4, 8.5),
+    "store": (2, 5, 9, 21.5),
+    "update": (2, 5, 9, 21.5),
+    "copy": (2, 6, 12, 28.8),
+    "striad": (3, 8, 16, 37.7),
+    "schoenauer": (4, 10, 20, 46.5),
+    "striad_nt": (3, 7, 11, 26.6),
+    "schoenauer_nt": (4, 9, 15, 35.3),
+}
+
+PAPER_TABLE1_MEASUREMENTS: dict[str, tuple[float, ...]] = {
+    "ddot": (2.1, 4.7, 9.6, 19.4),
+    "load": (2, 2.3, 5, 10.5),
+    "store": (2, 6, 8.2, 17.7),
+    "update": (2.1, 6.5, 8.3, 17.6),
+    "copy": (2.1, 8, 13, 27),
+    "striad": (3.1, 10, 17.5, 37),
+    "schoenauer": (4.1, 11.9, 21.9, 46.8),
+}
+
+#: paper-stated model inputs (§V prose), for regression-testing the builder.
+PAPER_TABLE1_INPUTS: dict[str, str] = {
+    "ddot": "{1 || 2 | 2 | 4 | 9.1}",
+    "load": "{2 || 1 | 1 | 2 | 4.5}",
+    "store": "{0 || 2 | 3 | 4 | 12.5}",
+    "update": "{2 || 2 | 3 | 4 | 12.5}",
+    "copy": "{0 || 2 | 4 | 6 | 16.8}",
+    "striad": "{1 || 3 | 5 | 8 | 21.7}",
+    "schoenauer": "{1 || 4 | 6 | 10 | 26.5}",
+    "striad_nt": "{1 || 3 | 4 | 4 | 15.6}",
+    "schoenauer_nt": "{1 || 4 | 5 | 6 | 20.3}",
+}

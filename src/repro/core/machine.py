@@ -1,0 +1,243 @@
+"""Machine models for the ECM performance model.
+
+A :class:`MachineModel` captures everything the ECM model needs to know about
+a processor: clock, unit-of-work granularity (cache line / VMEM block), the
+per-level transfer bandwidths of the memory hierarchy, and an in-core issue
+model (ports for the CPU, MXU/VPU/DMA occupancy for the TPU).
+
+Two concrete machines ship with the library:
+
+* ``HASWELL_EP`` — the paper's testbed (Xeon E5-2695 v3, Table II), used to
+  reproduce the paper's Table I / Figs. 7-12 numbers exactly.
+* ``TPU_V5E`` — the adaptation target for the JAX/Pallas framework.  The
+  hierarchy becomes VREG <- VMEM <- HBM <- ICI <- DCN and the port model is
+  replaced by MXU/VPU issue throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+
+# ---------------------------------------------------------------------------
+# Generic building blocks
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TransferLevel:
+    """One edge of the memory hierarchy (e.g. the L1<->L2 data path).
+
+    Bandwidths are in bytes per core cycle.  ``load_bpc`` is the bandwidth
+    towards the core, ``evict_bpc`` the bandwidth away from the core (the two
+    differ on Haswell: 64 B/c L2->L1 but 32 B/c L1->L2 eviction).
+    """
+
+    name: str
+    load_bpc: float
+    evict_bpc: float
+
+    def load_cycles(self, n_lines: float, line_bytes: int) -> float:
+        return n_lines * line_bytes / self.load_bpc
+
+    def evict_cycles(self, n_lines: float, line_bytes: int) -> float:
+        return n_lines * line_bytes / self.evict_bpc
+
+
+@dataclass(frozen=True)
+class PortModel:
+    """Simplified Haswell-style issue/port model (paper §III-A, §V).
+
+    Only throughput is modelled (the ECM model is a light-speed model:
+    hazards, dependencies and latencies are neglected by design).  Resource
+    classes and their port counts:
+
+    * ``n_load_ports``  — AVX loads (ports 2/3)
+    * ``n_store_ports`` — AVX store-data (port 4)
+    * ``n_full_agu``    — full AGUs supporting base+index+offset (ports 2/3)
+    * ``n_simple_agu``  — the Haswell port-7 simple AGU; usable for streaming
+      kernels only with the LEA pre-computation trick (§VII-C), enabled via
+      ``optimized_agu=True``
+    * ``n_fma`` / ``n_mul`` (ports 0/1) and ``n_add`` (port 1 only)
+    """
+
+    n_load_ports: int = 2
+    n_store_ports: int = 1
+    n_full_agu: int = 2
+    n_simple_agu: int = 1
+    n_fma: int = 2
+    n_mul: int = 2
+    n_add: int = 1
+    retire_width: int = 4
+
+    def core_cycles(
+        self,
+        *,
+        loads: int = 0,
+        stores: int = 0,
+        fma: int = 0,
+        mul: int = 0,
+        add: int = 0,
+        optimized_agu: bool = False,
+    ) -> tuple[float, float]:
+        """Return ``(t_nol, t_ol)`` in cycles for one unit of work.
+
+        ``t_nol`` — cycles in which loads/stores retire; by the ECM model's
+        assumption (i) these do not overlap with any transfer in the
+        hierarchy.  ``t_ol`` — everything else (arithmetic), which does.
+        """
+        agus = self.n_full_agu + (self.n_simple_agu if optimized_agu else 0)
+        t_nol = max(
+            math.ceil(loads / self.n_load_ports) if loads else 0,
+            math.ceil(stores / self.n_store_ports) if stores else 0,
+            math.ceil((loads + stores) / agus) if (loads + stores) else 0,
+        )
+        t_ol = max(
+            math.ceil(fma / self.n_fma) if fma else 0,
+            math.ceil(mul / self.n_mul) if mul else 0,
+            math.ceil(add / self.n_add) if add else 0,
+        )
+        return float(t_nol), float(t_ol)
+
+
+# ---------------------------------------------------------------------------
+# Machine model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MachineModel:
+    """Everything the ECM model needs to know about one processor."""
+
+    name: str
+    clock_hz: float
+    line_bytes: int                      # unit-of-work transfer granule
+    simd_bytes: int                      # register width for load/store ops
+    levels: tuple[TransferLevel, ...]    # in-cache hierarchy edges, inner->outer
+    mem_level_name: str                  # name of the final (measured-bw) edge
+    ports: PortModel
+    cores: int = 1
+    # peak compute, for roofline-style cross-checks
+    flops_per_cycle_dp: float = 16.0
+    flops_per_cycle_sp: float = 32.0
+    # empirical off-core latency penalty (paper §VII-A): cycles per load
+    # stream per cache level beyond L2, for kernels with low cy/CL counts
+    offcore_penalty_cy: float = 1.0
+
+    # ------------------------------------------------------------------
+    def mem_cycles_per_line(self, sustained_bw_bytes_per_s: float) -> float:
+        """Convert a measured sustained memory bandwidth into cy/CL
+        (paper §IV-A: other clock domains are converted into core cycles)."""
+        return self.line_bytes * self.clock_hz / sustained_bw_bytes_per_s
+
+    def level_names(self) -> tuple[str, ...]:
+        """Prediction-level names, innermost first (e.g. L1, L2, L3, Mem)."""
+        names = ["L1"]
+        for lvl in self.levels:
+            names.append(lvl.name.split("<->")[-1].split("->")[-1])
+        names.append(self.mem_level_name)
+        return tuple(names)
+
+    def with_cores(self, n: int) -> "MachineModel":
+        return dataclasses.replace(self, cores=n)
+
+
+# ---------------------------------------------------------------------------
+# The paper's testbed: Xeon E5-2695 v3 (Haswell-EP), Table II
+# ---------------------------------------------------------------------------
+
+HASWELL_EP = MachineModel(
+    name="haswell-ep-2695v3",
+    clock_hz=2.3e9,
+    line_bytes=64,
+    simd_bytes=32,                       # AVX
+    levels=(
+        # register<-L1 is captured by the port model, not a TransferLevel.
+        TransferLevel("L1<->L2", load_bpc=64.0, evict_bpc=32.0),
+        TransferLevel("L2<->L3", load_bpc=32.0, evict_bpc=32.0),
+    ),
+    mem_level_name="Mem",
+    ports=PortModel(),
+    cores=14,
+    flops_per_cycle_dp=16.0,
+    flops_per_cycle_sp=32.0,
+)
+
+#: Sustained single-memory-domain (CoD) bandwidths measured in the paper, in
+#: bytes/s, keyed by benchmark.  These are *calibration inputs* of the model
+#: (the paper measures them with likwid-bench); they are not predictions.
+HASWELL_MEASURED_BW = {
+    "ddot": 32.4e9,
+    "load": 32.4e9,          # footnote 2: identical to ddot
+    "store": 23.6e9,
+    "update": 23.6e9,        # "almost identical to that of the store kernel"
+    "copy": 26.3e9,
+    "striad": 27.1e9,
+    "schoenauer": 27.8e9,
+    "striad_nt": 28.3e9,
+    "schoenauer_nt": 29.0e9,
+}
+
+#: Non-CoD sustained chip bandwidths (both memory controllers, Fig. 10/11).
+#: The paper gives CoD ~= 1.08x non-CoD for most kernels; we use the chip
+#: bandwidth ~= 52.3 GB/s stream-triad figure scaled per kernel class.
+HASWELL_CHIP_BW_NONCOD = {k: 1.85 * v for k, v in HASWELL_MEASURED_BW.items()}
+
+
+# ---------------------------------------------------------------------------
+# Adaptation target: TPU v5e
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TPUMachineModel:
+    """TPU machine constants for the TPU-ECM model (per chip).
+
+    The TPU hierarchy is software-managed: VREG <- VMEM <- HBM, with ICI
+    links between chips inside a pod and DCN between pods.  There is no
+    write-allocate: Pallas ``out_specs`` / XLA output buffers stream whole
+    blocks (the "non-temporal store" of the paper is the default, see
+    DESIGN.md §3).
+    """
+
+    name: str = "tpu-v5e"
+    clock_hz: float = 0.94e9
+    peak_bf16_flops: float = 197e12          # per chip
+    peak_f32_flops: float = 49.25e12
+    hbm_bytes_per_s: float = 819e9           # per chip
+    hbm_bytes: int = 16 * 1024**3
+    vmem_bytes: int = 128 * 1024**2
+    ici_link_bytes_per_s: float = 50e9       # per link per direction
+    ici_links_per_chip: int = 4              # 2D torus: +/-x, +/-y
+    dcn_bytes_per_s: float = 25e9            # per host, pod-to-pod
+    # MXU shape: 128x128 systolic; VPU: 8x128 lanes
+    mxu_dim: int = 128
+    vpu_lanes: int = 8 * 128
+    # energy model (approximate public figures, used for the Fig. 5/6
+    # analogue only — relative structure matters, not absolute joules)
+    pj_per_flop: float = 0.35
+    pj_per_hbm_byte: float = 15.0
+    pj_per_ici_byte: float = 30.0
+    idle_watts: float = 70.0
+    peak_watts: float = 220.0
+
+    # ------------------------------------------------------------------
+    def compute_seconds(self, flops: float, dtype_peak: float | None = None) -> float:
+        return flops / (dtype_peak or self.peak_bf16_flops)
+
+    def hbm_seconds(self, nbytes: float) -> float:
+        return nbytes / self.hbm_bytes_per_s
+
+    def ici_seconds(self, nbytes: float, links: int | None = None) -> float:
+        links = links or self.ici_links_per_chip
+        return nbytes / (self.ici_link_bytes_per_s * links)
+
+    def hbm_bytes_per_cycle(self) -> float:
+        return self.hbm_bytes_per_s / self.clock_hz     # ~871 B/cy
+
+    def mxu_flops_per_cycle_bf16(self) -> float:
+        return self.peak_bf16_flops / self.clock_hz
+
+
+TPU_V5E = TPUMachineModel()

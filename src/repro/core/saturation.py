@@ -1,0 +1,74 @@
+"""Chip-level bottleneck and saturation (paper §IV-B, Eq. 2).
+
+Single-core (single-chip) performance scales linearly with the number of
+cores until the shared bottleneck — memory bandwidth on the CPU, HBM or
+interconnect on the TPU — is hit::
+
+    P(n) = min(n * P_ECM^mem, I * b_S)
+
+with the saturation point ``n_S = ceil(T_ECM^mem / T_L3Mem)``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .ecm import ECMModel
+
+
+@dataclass(frozen=True)
+class ScalingModel:
+    """Multicore scaling of one ECM model on one machine."""
+
+    ecm: ECMModel
+    #: transfer time over the shared bottleneck edge (cy per unit of work);
+    #: on Haswell this is T_L3Mem — the last transfer term by default.
+    bottleneck_cycles: float
+
+    @classmethod
+    def from_ecm(cls, ecm: ECMModel, bottleneck_level: int = -1) -> "ScalingModel":
+        return cls(ecm=ecm, bottleneck_cycles=ecm.transfers[bottleneck_level])
+
+    # ------------------------------------------------------------------
+    @property
+    def t_single(self) -> float:
+        """Single-core in-memory runtime, cy per unit of work."""
+        return self.ecm.prediction(len(self.ecm.levels) - 1)
+
+    @property
+    def n_saturation(self) -> int:
+        """Eq. 2: cores needed to saturate the bottleneck."""
+        return math.ceil(self.t_single / self.bottleneck_cycles)
+
+    def performance(self, n_cores: int, work_per_unit: float = 1.0,
+                    clock_hz: float | None = None) -> float:
+        """P(n) in work units per cycle (or per second with ``clock_hz``)."""
+        p_one = work_per_unit / self.t_single
+        p_sat = work_per_unit / self.bottleneck_cycles
+        p = min(n_cores * p_one, p_sat)
+        return p * clock_hz if clock_hz else p
+
+    def curve(self, n_cores: int, work_per_unit: float = 1.0,
+              clock_hz: float | None = None) -> list[float]:
+        return [self.performance(n, work_per_unit, clock_hz)
+                for n in range(1, n_cores + 1)]
+
+
+def domain_scaling(ecm_domain: ECMModel, n_domains: int,
+                   cores_per_domain: int, work_per_unit: float = 1.0,
+                   clock_hz: float | None = None) -> list[float]:
+    """Cluster-on-Die-style scaling (paper §VII-D): cores fill one affinity
+    domain after the other; each domain saturates independently.
+
+    ``ecm_domain`` must be built with the *single-domain* sustained
+    bandwidth.  Returns P(n) for n = 1..n_domains*cores_per_domain.
+    """
+    single = ScalingModel.from_ecm(ecm_domain)
+    out = []
+    for n in range(1, n_domains * cores_per_domain + 1):
+        full, rem = divmod(n, cores_per_domain)
+        p = full * single.performance(cores_per_domain, work_per_unit)
+        if rem:
+            p += single.performance(rem, work_per_unit)
+        out.append(p * clock_hz if clock_hz else p)
+    return out

@@ -1,0 +1,221 @@
+"""ECM model for TPU programs (the paper's model, adapted — DESIGN.md §3/§4).
+
+The unit of work is one compiled step (train / prefill / decode).  The
+hierarchy terms become:
+
+* ``T_comp`` — MXU/VPU execution time; this is the paper's ``T_OL`` (compute
+  overlaps with DMA on TPU);
+* ``T_hbm``  — HBM<->VMEM streaming time, the analogue of the in-cache
+  transfer terms;
+* ``T_ici``  — inter-chip collective time (ICI within a pod, DCN across
+  pods), the analogue of the L3<->Mem term of the slowest shared resource.
+
+Composition (paper Eq. 1 adapted): a fraction of the collective time is not
+overlappable with compute (blocking gradient/activation dependencies) — that
+fraction plays the role of ``T_nOL``.  We report both the full-overlap
+(roofline) bound and the ECM no-overlap bound; the dominant term drives the
+§Perf hillclimb.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from .ecm import ECMModel
+from .hlo import HLOResources
+from .machine import TPU_V5E, TPUMachineModel
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Physical interpretation of a mesh for the ICI/DCN term."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    #: axes that ride on DCN (pod-to-pod) instead of ICI
+    dcn_axes: tuple[str, ...] = ("pod",)
+
+    @property
+    def n_chips(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def n_pods(self) -> int:
+        n = 1
+        for s, a in zip(self.shape, self.axes):
+            if a in self.dcn_axes:
+                n *= s
+        return n
+
+
+@dataclass(frozen=True)
+class TPUStepECM:
+    """Three-term ECM model of one compiled step on a TPU mesh.
+
+    All times in seconds per step, *per chip* (resources are divided over
+    chips by construction: cost_analysis FLOPs/bytes are per-device program
+    totals already when compiled under SPMD; see ``from_resources``).
+    """
+
+    name: str
+    t_comp: float
+    t_hbm: float
+    t_ici: float
+    t_dcn: float = 0.0
+    #: fraction of collective time serialized with compute (ECM T_nOL role).
+    #: 1.0 = fully exposed (paper's non-overlapping loads assumption);
+    #: tuned down by overlap optimizations (async collectives, FSDP prefetch).
+    exposed_ici_fraction: float = 1.0
+    exposed_hbm_fraction: float = 1.0
+    model_flops: float = 0.0            # useful-work FLOPs (6ND), global
+    hlo_flops: float = 0.0              # compiled FLOPs, global
+    details: dict = field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    @property
+    def t_roofline(self) -> float:
+        """Full-overlap (light-speed) bound: max of the three terms."""
+        return max(self.t_comp, self.t_hbm, self.t_ici + self.t_dcn)
+
+    @property
+    def t_ecm(self) -> float:
+        """ECM bound: compute overlaps only the non-exposed transfer part."""
+        exposed = (self.exposed_hbm_fraction * self.t_hbm
+                   + self.exposed_ici_fraction * (self.t_ici + self.t_dcn))
+        hidden_hbm = (1 - self.exposed_hbm_fraction) * self.t_hbm
+        hidden_ici = (1 - self.exposed_ici_fraction) * (self.t_ici + self.t_dcn)
+        return max(self.t_comp, hidden_hbm, hidden_ici) + exposed
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_comp, "memory": self.t_hbm,
+                 "collective": self.t_ici + self.t_dcn}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the ECM-bound step time: how close the
+        step is to the compute roofline (MFU-at-lightspeed)."""
+        if self.t_ecm <= 0:
+            return 0.0
+        return self.t_comp / self.t_ecm * self.useful_flops_fraction
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        if self.hlo_flops <= 0:
+            return 1.0
+        return min(1.0, self.model_flops / self.hlo_flops)
+
+    # ------------------------------------------------------------------
+    def as_ecm_model(self) -> ECMModel:
+        """Express as the paper's notation (times in microseconds):
+        {T_comp || exposed | T_hbm | T_ici | T_dcn}."""
+        us = 1e6
+        exposed = 0.0
+        return ECMModel(
+            t_ol=self.t_comp * us,
+            t_nol=exposed,
+            transfers=(self.t_hbm * us, self.t_ici * us, self.t_dcn * us),
+            levels=("VMEM", "HBM", "ICI", "DCN"),
+            unit="us/step",
+            name=self.name,
+        )
+
+    def summary(self) -> dict:
+        return {
+            "name": self.name,
+            "t_comp_s": self.t_comp,
+            "t_hbm_s": self.t_hbm,
+            "t_ici_s": self.t_ici,
+            "t_dcn_s": self.t_dcn,
+            "t_roofline_s": self.t_roofline,
+            "t_ecm_s": self.t_ecm,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops": self.hlo_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            **{f"detail_{k}": v for k, v in self.details.items()},
+        }
+
+
+def from_resources(
+    res: HLOResources,
+    mesh: MeshSpec,
+    *,
+    name: str = "step",
+    machine: TPUMachineModel = TPU_V5E,
+    model_flops: float = 0.0,
+    flops_are_global: bool = True,
+    exposed_ici_fraction: float = 1.0,
+    exposed_hbm_fraction: float = 0.0,
+    ici_axis_links: int = 1,
+    dtype_peak: float | None = None,
+) -> TPUStepECM:
+    """Build the per-chip three-term model from HLO resources.
+
+    ``flops_are_global``: XLA's SPMD cost analysis reports the per-module
+    numbers of the partitioned program — i.e. per device.  When compiling
+    with ``--xla_force_host_platform_device_count`` the analysis is of the
+    already-partitioned module, so figures are per chip; set
+    ``flops_are_global=False`` in that case.  collective wire bytes from
+    :class:`HLOResources` are per chip already.
+    """
+    n = mesh.n_chips
+    div = n if flops_are_global else 1
+    flops_chip = res.flops / div
+    bytes_chip = res.bytes_accessed / div
+
+    t_comp = flops_chip / (dtype_peak or machine.peak_bf16_flops)
+    t_hbm = bytes_chip / machine.hbm_bytes_per_s
+
+    # split wire traffic into ICI vs DCN by group size: groups spanning more
+    # chips than one pod holds must cross DCN.
+    chips_per_pod = n // max(mesh.n_pods, 1)
+    ici_bytes = 0.0
+    dcn_bytes = 0.0
+    for c in res.collectives:
+        w = c.wire_bytes_per_chip
+        if mesh.n_pods > 1 and c.group_size > chips_per_pod:
+            # hierarchical split: intra-pod part on ICI, 1/pod-th on DCN
+            dcn_bytes += w / max(c.group_size // chips_per_pod, 1)
+            ici_bytes += w
+        else:
+            ici_bytes += w
+    t_ici = ici_bytes / (machine.ici_link_bytes_per_s * ici_axis_links)
+    t_dcn = dcn_bytes / machine.dcn_bytes_per_s
+
+    return TPUStepECM(
+        name=name,
+        t_comp=t_comp,
+        t_hbm=t_hbm,
+        t_ici=t_ici,
+        t_dcn=t_dcn,
+        exposed_ici_fraction=exposed_ici_fraction,
+        exposed_hbm_fraction=exposed_hbm_fraction,
+        model_flops=model_flops,
+        hlo_flops=res.flops if flops_are_global else res.flops * n,
+        details={
+            "chips": n,
+            "pods": mesh.n_pods,
+            "bytes_chip": bytes_chip,
+            "ici_wire_bytes_chip": ici_bytes,
+            "dcn_wire_bytes_chip": dcn_bytes,
+            "collective_out_bytes": res.collective_bytes,
+            "collectives_by_kind": res.by_kind(),
+        },
+    )
+
+
+def saturation_chips(step: TPUStepECM, bottleneck: str = "collective") -> int:
+    """Eq. 2 analogue: chips after which adding more stops helping for a
+    fixed global problem (the bottleneck term stops shrinking)."""
+    terms = {"compute": step.t_comp, "memory": step.t_hbm,
+             "collective": step.t_ici + step.t_dcn}
+    b = terms[bottleneck]
+    if b <= 0:
+        return 1
+    return max(1, math.ceil(step.t_ecm / b))

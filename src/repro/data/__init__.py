@@ -1,0 +1,21 @@
+"""Data pipeline: deterministic synthetic streams + memmap token files.
+
+Determinism contract (fault tolerance): ``batch(step)`` is a pure function
+of ``(seed, step)`` — after a checkpoint-restart the pipeline resumes at the
+restored step with bit-identical batches, with no iterator state to persist.
+"""
+from .pipeline import (
+    DataConfig,
+    SyntheticLMDataset,
+    TokenFileDataset,
+    make_global_array,
+    shard_batch,
+)
+
+__all__ = [
+    "DataConfig",
+    "SyntheticLMDataset",
+    "TokenFileDataset",
+    "make_global_array",
+    "shard_batch",
+]

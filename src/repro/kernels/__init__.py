@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Each kernel family ships three files (see EXAMPLE.md): ``kernel.py`` with the
+``pl.pallas_call`` + explicit ``BlockSpec`` VMEM tiling, ``ops.py`` with the
+jitted public wrapper, and ``ref.py`` with the pure-jnp oracle used by the
+allclose test sweeps.
+
+* ``stream``    -- the paper's Table I streaming microbenchmarks, TPU-native
+* ``matmul``    -- MXU-tiled blocked matmul (compute microbenchmark)
+* ``attention`` -- blockwise flash attention (VMEM-resident score tiles)
+"""
+from . import stream
+from . import matmul
+from . import attention

@@ -1,0 +1,103 @@
+"""Blockwise (flash-style) attention Pallas kernel for TPU.
+
+Online-softmax attention computed over KV blocks with running (m, l, acc)
+state in VMEM scratch — the standard memory-hierarchy-aware formulation,
+which is exactly the paper's insight (decompose into compute + hierarchy
+streams, keep the working set in the fast level) applied to attention:
+instead of materialising the (Sq, Sk) score matrix in HBM, scores live in
+VMEM one (bq, bk) tile at a time.
+
+Supports causal masking (block-skipping for fully-masked tiles) and GQA via
+the q-heads-per-kv-head index map.  f32 accumulation regardless of input
+dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 n_kv: int, bq: int, bk: int, causal: bool, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _block():
+        q = q_ref[0, ...].astype(jnp.float32) * scale      # (bq, d)
+        k = k_ref[0, ...].astype(jnp.float32)              # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]                                # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                             # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                    # (bq, 1)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, ...].astype(jnp.float32)              # (bk, d)
+        acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip tiles strictly above the diagonal
+        @pl.when(qi * bq + bq - 1 >= ki * bk)
+        def _maybe():
+            _block()
+    else:
+        _block()
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_call(
+    batch_heads: int, sq: int, sk: int, d: int, dtype, *,
+    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+    causal: bool = True, scale: float | None = None,
+    interpret: bool = False,
+):
+    """Build a pallas_call for attention with fused heads: inputs are
+    q (BH, Sq, d), k/v (BH, Sk, d) with GQA pre-expanded in the wrapper."""
+    bq, bk = min(bq, sq), min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    scale = scale if scale is not None else d ** -0.5
+    n_kv = sk // bk
+    kern = functools.partial(
+        _attn_kernel, n_kv=n_kv, bq=bq, bk=bk, causal=causal, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(batch_heads, 1, sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, _, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, _, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, _, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, _, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch_heads, sq, d), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )

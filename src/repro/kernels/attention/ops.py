@@ -1,0 +1,38 @@
+"""Jitted wrappers for the flash attention kernel (GQA-aware)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as K
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, bq=K.DEFAULT_BQ, bk=K.DEFAULT_BK,
+                    interpret=None):
+    """q: (B, Sq, H, d); k, v: (B, Sk, Hkv, d).  Returns (B, Sq, H, d).
+
+    GQA is handled by repeating KV heads to match Q heads before the fused
+    (batch*heads) kernel grid.  Causal masking requires Sq == Sk (prefill);
+    decode uses ``causal=False`` with a pre-masked/valid cache.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    if causal:
+        assert sq == sk, "causal masking assumes aligned q/k positions"
+    if hkv != h:
+        assert h % hkv == 0
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    call = K.flash_attention_call(b * h, sq, sk, d, q.dtype, bq=bq, bk=bk,
+                                  causal=causal, interpret=interpret)
+    out = call(qf, kf, vf)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

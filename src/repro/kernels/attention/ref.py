@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: exact softmax attention with optional causal mask."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal=True, scale=None):
+    """q: (BH, Sq, d); k, v: (BH, Sk, d) — GQA pre-expanded."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool), k=sk - sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,21 @@
+"""Jitted wrapper for the blocked matmul Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import kernel as K
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype",
+                                              "interpret"))
+def matmul(x, y, *, bm=K.DEFAULT_BM, bn=K.DEFAULT_BN, bk=K.DEFAULT_BK,
+           out_dtype=None, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    (m, k), (k2, n) = x.shape, y.shape
+    assert k == k2
+    call = K.matmul_call(m, n, k, x.dtype, bm=bm, bn=bn, bk=bk,
+                         out_dtype=out_dtype, interpret=interpret)
+    return call(x, y)

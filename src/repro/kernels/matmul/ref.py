@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the blocked matmul kernel."""
+import jax.numpy as jnp
+
+
+def matmul(x, y, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(out_dtype)

@@ -1,0 +1,105 @@
+"""Jitted public wrappers for the streaming Pallas kernels.
+
+``interpret`` defaults to True on CPU backends (this container) so the
+kernel bodies execute in Python for correctness validation; on a real TPU
+backend the same code lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as K
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _as2d(x):
+    """Reshape a flat stream to (rows, BLOCK_COLS)."""
+    n = x.shape[0] if x.ndim == 1 else x.shape[0] * x.shape[1]
+    rows = n // K.BLOCK_COLS
+    return x.reshape(rows, K.BLOCK_COLS)
+
+
+def _scal(s, dtype):
+    return jnp.asarray(s, dtype=dtype).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def load(a, *, block_rows=K.BLOCK_ROWS, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    a2 = _as2d(a)
+    out = K.load_call(a2.shape, a2.dtype, block_rows=block_rows,
+                      interpret=interpret)(a2)
+    return out[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ddot(a, b, *, block_rows=K.BLOCK_ROWS, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    a2, b2 = _as2d(a), _as2d(b)
+    out = K.ddot_call(a2.shape, a2.dtype, block_rows=block_rows,
+                      interpret=interpret)(a2, b2)
+    return out[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype", "block_rows", "interpret"))
+def store(s, shape, dtype, *, block_rows=K.BLOCK_ROWS, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    rows = (shape[0] * (shape[1] if len(shape) > 1 else 1)) // K.BLOCK_COLS
+    out = K.store_call((rows, K.BLOCK_COLS), dtype, block_rows=block_rows,
+                       interpret=interpret)(_scal(s, dtype))
+    return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def update(s, a, *, block_rows=K.BLOCK_ROWS, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    a2 = _as2d(a)
+    out = K.update_call(a2.shape, a2.dtype, block_rows=block_rows,
+                        interpret=interpret)(_scal(s, a2.dtype), a2)
+    return out.reshape(a.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def copy(b, *, block_rows=K.BLOCK_ROWS, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    b2 = _as2d(b)
+    out = K.copy_call(b2.shape, b2.dtype, block_rows=block_rows,
+                      interpret=interpret)(b2)
+    return out.reshape(b.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def striad(s, b, c, *, block_rows=K.BLOCK_ROWS, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    b2, c2 = _as2d(b), _as2d(c)
+    out = K.striad_call(b2.shape, b2.dtype, block_rows=block_rows,
+                        interpret=interpret)(_scal(s, b2.dtype), b2, c2)
+    return out.reshape(b.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def schoenauer(b, c, d, *, block_rows=K.BLOCK_ROWS, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    b2, c2, d2 = _as2d(b), _as2d(c), _as2d(d)
+    out = K.schoenauer_call(b2.shape, b2.dtype, block_rows=block_rows,
+                            interpret=interpret)(b2, c2, d2)
+    return out.reshape(b.shape)
+
+
+# ---------------------------------------------------------------------------
+# RFO-analogue variants (§VII-E inverted): force a read-modify-write of the
+# output stream by aliasing it as an input, i.e. the "regular store" case of
+# the paper.  Used by the fig12 TPU benchmark to contrast traffic.
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def striad_rmw(s, a, b, c):
+    """A[i] = B[i] + s*C[i], but reading A first (write-allocate analogue)."""
+    return (a * 0 + b + s * c).astype(a.dtype)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the streaming kernels (Table I loop bodies)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def load(a):
+    """s += A[i]"""
+    return jnp.sum(a, dtype=jnp.float32 if a.dtype == jnp.bfloat16 else a.dtype)
+
+
+def ddot(a, b):
+    """s += A[i] * B[i]"""
+    acc = jnp.float32 if a.dtype == jnp.bfloat16 else a.dtype
+    return jnp.sum((a * b).astype(acc))
+
+
+def store(s, shape, dtype):
+    """A[i] = s"""
+    return jnp.full(shape, s, dtype=dtype)
+
+
+def update(s, a):
+    """A[i] = s * A[i]"""
+    return (s * a).astype(a.dtype)
+
+
+def copy(b):
+    """A[i] = B[i]"""
+    return b
+
+
+def striad(s, b, c):
+    """A[i] = B[i] + s * C[i]"""
+    return (b + s * c).astype(b.dtype)
+
+
+def schoenauer(b, c, d):
+    """A[i] = B[i] + C[i] * D[i]"""
+    return (b + c * d).astype(b.dtype)

@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and extract the ECM/roofline resource terms from the compiled
+artifact.
+
+This is how the distribution config is proven coherent without hardware:
+``.lower().compile()`` must succeed on the 16x16 single-pod mesh AND the
+2x16x16 multi-pod mesh for every runnable cell; ``memory_analysis()``
+proves the per-chip footprint fits a v5e's 16 GB HBM, ``cost_analysis()``
++ HLO collective parsing feed EXPERIMENTS.md §Roofline.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+        --shape train_4k [--multi-pod] [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell
+
+Each cell writes ``<out>/<arch>__<shape>__<mesh>.json`` (resumable: cells
+with an existing result are skipped unless --force).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, SHAPES, get_arch
+from repro.configs.base import ArchDef, ShapeSpec
+from repro.core import hlo as hlo_mod
+from repro.core.tpu_ecm import MeshSpec, from_resources
+from repro.dist.sharding import (
+    PROFILES,
+    ShardingProfile,
+    param_shardings,
+    use_mesh_context,
+)
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models.common import abstract
+from repro.optim import AdamWConfig
+from repro.optim.schedule import linear_warmup_cosine
+from repro.train.steps import (
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    state_spec,
+)
+
+
+HBM_BYTES = 16 * 1024**3
+
+
+# ---------------------------------------------------------------------------
+# input construction
+# ---------------------------------------------------------------------------
+
+
+def input_specs(arch: ArchDef, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for the step's data inputs (no device
+    allocation) — the dry-run's replacement for a real data pipeline."""
+    return arch.abstract_batch(shape)
+
+
+def _input_profile(arch: ArchDef, mesh, *, multi_pod: bool,
+                   kv_divisible: bool,
+                   batch_axes=None) -> ShardingProfile:
+    batch_axes = batch_axes or (("pod", "data") if multi_pod else ("data",))
+    rules = {
+        "batch": batch_axes,
+        "embed": None,
+        "layers": None,
+        "head_dim": None,
+        # decode caches: shard kv heads over model when divisible, else
+        # shard the sequence dim (SP) so 32k-500k caches fit per chip
+        "kv_heads": "model" if kv_divisible else None,
+        "seq": None if kv_divisible else "model",
+        "heads": "model",
+        "mamba_inner": "model",
+    }
+    return ShardingProfile(name="inputs", rules=rules)
+
+
+def _kv_divisible(arch: ArchDef, mesh) -> bool:
+    sizes = mesh_axis_sizes(mesh)
+    kvh = getattr(arch.cfg, "n_kv_heads", None)
+    if kvh is None:
+        kvh = getattr(arch.cfg, "n_heads", 1)
+    return kvh % sizes["model"] == 0
+
+
+# ---------------------------------------------------------------------------
+# lowering one cell
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(arch: ArchDef, shape: ShapeSpec, *, multi_pod: bool,
+               opt_cfg: AdamWConfig | None = None,
+               profile_name: str | None = None,
+               accum: int | None = None):
+    """Lower + compile one (arch x shape x mesh) cell; returns
+    (record dict, lowered, compiled)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    profile_name = profile_name or arch.profile
+    profile = PROFILES[profile_name](multi_pod)
+    opt_cfg = opt_cfg or AdamWConfig(moment_dtype=arch.moment_dtype)
+    kv_div = _kv_divisible(arch, mesh)
+    in_prof = _input_profile(arch, mesh, multi_pod=multi_pod,
+                             kv_divisible=kv_div,
+                             batch_axes=profile.activation_rules.get("batch"))
+    if shape.kind == "prefill":
+        # sequence parallelism for the prefill residual stream: GSPMD turns
+        # the per-layer TP all-reduces into reduce-scatter/all-gather pairs
+        # on seq-sharded activations (half the wire bytes, 16x smaller
+        # norm/residual working set per chip)
+        import dataclasses as _dc
+        profile = _dc.replace(
+            profile,
+            activation_rules={**profile.activation_rules, "seq": "model"})
+    if shape.kind == "decode" and not kv_div:
+        # flash-decode: with the KV cache sequence-sharded, q-heads must be
+        # replicated over `model` or GSPMD all-gathers the whole cache per
+        # layer per token (measured: 40 ms collective term on internlm2
+        # decode_32k from exactly this)
+        import dataclasses as _dc
+        profile = _dc.replace(
+            profile,
+            activation_rules={**profile.activation_rules, "heads": None})
+
+    batch_abs = input_specs(arch, shape)
+    batch_sh = param_shardings(arch.batch_spec(shape), mesh, in_prof)
+    pspec_tree = arch.param_spec()
+    params_sh = param_shardings(pspec_tree, mesh, profile,
+                                ensure_model_axis=True)
+    params_abs = abstract(pspec_tree)
+
+    accum = arch.train_accum if accum is None else accum
+    if shape.kind == "train":
+        # microbatches must stay divisible by the batch-sharding degree
+        # (resolved from the profile's batch axes with prefix fallback)
+        sizes = mesh_axis_sizes(mesh)
+        group = profile.activation_rules.get("batch", ("data",))
+        group = group if isinstance(group, tuple) else (group,)
+        batch_shards = 1
+        for k in range(len(group), 0, -1):
+            n = 1
+            for g in group[:k]:
+                n *= sizes.get(g, 1)
+            if shape.global_batch % n == 0:
+                batch_shards = n
+                break
+        accum = min(accum, max(shape.global_batch // batch_shards, 1))
+    cache_seq_axis = None if kv_div else "model"
+    t0 = time.time()
+    with use_mesh_context(mesh, profile, multi_pod=multi_pod,
+                          cache_seq_axis=(cache_seq_axis
+                                          if shape.kind == "decode" else None)):
+        if shape.kind == "train":
+            sspec = state_spec(arch, opt_cfg)
+            state_sh = param_shardings(sspec, mesh, profile,
+                                       ensure_model_axis=True)
+            state_abs = abstract(sspec)
+            step = make_train_step(arch, opt_cfg,
+                                   linear_warmup_cosine(3e-4, 100, 10_000),
+                                   accum=accum)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            cspec = arch.cache_spec(shape.global_batch, shape.seq_len)
+            cache_sh = param_shardings(cspec, mesh, in_prof)
+            prefill_step = make_prefill_step(arch, max_len=shape.seq_len)
+            jitted = jax.jit(prefill_step,
+                             in_shardings=(params_sh, batch_sh),
+                             out_shardings=(None, cache_sh))
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:                                           # decode
+            cspec = arch.cache_spec(shape.global_batch, shape.seq_len)
+            cache_sh = param_shardings(cspec, mesh, in_prof)
+            cache_abs = abstract(cspec)
+            step = make_serve_step(arch)
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, cache_sh, batch_sh),
+                             out_shardings=(None, cache_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, cache_abs, batch_abs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    n_dev = 512 if multi_pod else 256
+    res = hlo_mod.analyze(compiled, lowered, n_devices=n_dev)
+    mem = hlo_mod.memory_analysis_dict(compiled)
+    mesh_spec = MeshSpec(shape=(2, 16, 16) if multi_pod else (16, 16),
+                         axes=("pod", "data", "model") if multi_pod
+                         else ("data", "model"))
+    ecm = from_resources(
+        res, mesh_spec, name=f"{arch.name}/{shape.name}",
+        model_flops=arch.model_flops(shape), flops_are_global=False)
+
+    peak_bytes = (mem.get("argument_size_in_bytes", 0)
+                  + mem.get("output_size_in_bytes", 0)
+                  + mem.get("temp_size_in_bytes", 0)
+                  - mem.get("alias_size_in_bytes", 0))
+    record = {
+        "arch": arch.name,
+        "shape": shape.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "profile": profile_name,
+        "kind": shape.kind,
+        "status": "ok",
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "memory": mem,
+        "peak_bytes_per_chip": peak_bytes,
+        "fits_hbm": bool(peak_bytes < HBM_BYTES),
+        "cost": {"flops_per_chip": res.flops,
+                 "bytes_per_chip": res.bytes_accessed,
+                 "transcendentals": res.transcendentals},
+        "collectives": {
+            "n_ops": len(res.collectives),
+            "out_bytes_by_kind": res.by_kind(),
+            "wire_bytes_per_chip": res.wire_bytes_per_chip,
+        },
+        "ecm": ecm.summary(),
+    }
+    return record, lowered, compiled
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _result_path(out: str, arch_name: str, shape_name: str, multi_pod: bool
+                 ) -> str:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    safe = arch_name.replace("/", "_")
+    return os.path.join(out, f"{safe}__{shape_name}__{mesh}.json")
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool, out: str,
+             force: bool = False, verbose: bool = True) -> dict:
+    os.makedirs(out, exist_ok=True)
+    path = _result_path(out, arch_name, shape_name, multi_pod)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    ok, reason = arch.shape_supported(shape)
+    if not ok:
+        record = {"arch": arch_name, "shape": shape_name,
+                  "mesh": "2x16x16" if multi_pod else "16x16",
+                  "status": "skipped", "reason": reason}
+    else:
+        try:
+            record, lowered, compiled = lower_cell(arch, shape,
+                                                   multi_pod=multi_pod)
+            if verbose:
+                print(f"[dryrun] {arch_name} x {shape_name} "
+                      f"({record['mesh']}): compile ok, "
+                      f"{record['peak_bytes_per_chip']/2**30:.2f} GiB/chip, "
+                      f"dominant={record['ecm']['dominant']}")
+                print(json.dumps(record["memory"], indent=1))
+                print(json.dumps(record["cost"], indent=1))
+        except Exception as e:                       # record the bug
+            record = {"arch": arch_name, "shape": shape_name,
+                      "mesh": "2x16x16" if multi_pod else "16x16",
+                      "status": "error", "error": f"{type(e).__name__}: {e}",
+                      "traceback": traceback.format_exc()[-4000:]}
+            if verbose:
+                print(f"[dryrun] {arch_name} x {shape_name} FAILED: {e}")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) cell on both meshes")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for a in ARCH_NAMES:
+            for s in SHAPES:
+                cells.append((a, s, False))
+                cells.append((a, s, True))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        pods = [False, True] if args.both_meshes else [args.multi_pod]
+        cells = [(args.arch, args.shape, mp) for mp in pods]
+
+    failures = 0
+    for a, s, mp in cells:
+        rec = run_cell(a, s, multi_pod=mp, out=args.out, force=args.force)
+        if rec["status"] == "error":
+            failures += 1
+    print(f"[dryrun] done: {len(cells)} cells, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,208 @@
+"""Mamba2 (SSD — state-space duality) layer, chunked-parallel.
+
+Implements the discrete selective SSM
+
+    h_t = a_t * h_{t-1} + dt_t * B_t x_t        (per head, state size N)
+    y_t = C_t . h_t + D * x_t
+
+with a_t = exp(-dt_t * A_h), dt_t = softplus(dt_raw + bias), via the SSD
+chunked algorithm: within-chunk attention-like scores with decay masks +
+cross-chunk state recurrence (``lax.scan`` over chunks).  Training cost is
+O(S * L) per head (L = chunk), decode is O(1) per token — which is why the
+SSM archs run the ``long_500k`` cell.
+
+Includes the depthwise causal conv frontend (kernel 4) on (x, B, C) and the
+gated RMSNorm output stage, matching the reference Mamba2 block layout.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, rmsnorm, shard_annotate
+
+
+@dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    conv_kernel: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def mamba2_spec(cfg: Mamba2Config) -> dict:
+    d, di, g, n, h = (cfg.d_model, cfg.d_inner, cfg.n_groups, cfg.d_state,
+                      cfg.n_heads)
+    proj_out = 2 * di + 2 * g * n + h          # z, x, B, C, dt
+    return {
+        "in_proj": ParamSpec((d, proj_out), ("embed", "mamba_inner")),
+        "conv_w": ParamSpec((cfg.conv_kernel, cfg.conv_dim),
+                            (None, "mamba_inner"), scale=0.1),
+        "conv_b": ParamSpec((cfg.conv_dim,), ("mamba_inner",), init="zeros"),
+        "a_log": ParamSpec((h,), ("heads",), init="zeros"),
+        "dt_bias": ParamSpec((h,), ("heads",), init="zeros"),
+        "d_skip": ParamSpec((h,), ("heads",), init="ones"),
+        "norm": ParamSpec((di,), ("mamba_inner",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("mamba_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: Mamba2Config, zxbcdt):
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    bmat = zxbcdt[..., 2 * di:2 * di + g * n]
+    cmat = zxbcdt[..., 2 * di + g * n:2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    return z, x, bmat, cmat, dt
+
+
+def _causal_conv(w, b, x, *, state=None):
+    """Depthwise causal conv along time.  x: (B, S, C); w: (K, C).
+
+    If ``state`` (B, K-1, C) is given (decode), uses it as left context and
+    returns the updated state."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(k))
+    out = jax.nn.silu(out + b[None, None])
+    new_state = xp[:, -(k - 1):, :]
+    return out, new_state
+
+
+def _ssd_chunked(cfg: Mamba2Config, x, bmat, cmat, dt, a_log, *, h0=None):
+    """Chunked SSD.  x: (B,S,H,P); bmat/cmat: (B,S,G,N); dt: (B,S,H).
+
+    Returns (y (B,S,H,P), h_final (B,H,N,P))."""
+    bsz, s_orig, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hpg = h // g                                    # heads per group
+    l = min(cfg.chunk, s_orig)
+    # pad to a chunk multiple: padded steps have dt=0 (=> decay 1, no input)
+    pad = (-s_orig) % l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // l
+
+    a = jnp.exp(a_log.astype(jnp.float32))          # (H,) positive
+    dtf = dt.astype(jnp.float32)
+    la = -dtf * a[None, None]                       # log a_t  (B,S,H)
+
+    # chunked views
+    xc = x.reshape(bsz, nc, l, h, p)
+    bc = bmat.reshape(bsz, nc, l, g, n)
+    cc = cmat.reshape(bsz, nc, l, g, n)
+    dtc = dtf.reshape(bsz, nc, l, h)
+    lac = la.reshape(bsz, nc, l, h)
+
+    def chunk_step(h_prev, inp):
+        xk, bk, ck, dtk, lak = inp                  # (B,l,...) per chunk
+        cum = jnp.cumsum(lak, axis=1)               # (B,l,H) inclusive
+        # intra-chunk: decay(i,j) = exp(cum_i - cum_j), j <= i
+        diff = cum[:, :, None, :] - cum[:, None, :, :]      # (B,l,l,H)
+        ii = jnp.arange(l)
+        mask = (ii[:, None] >= ii[None, :])[None, :, :, None]
+        decay = jnp.where(mask, jnp.exp(diff), 0.0)
+        # scores: C_i . B_j per group -> broadcast to heads
+        cb = jnp.einsum("bign,bjgn->bijg", ck.astype(jnp.float32),
+                        bk.astype(jnp.float32))     # (B,l,l,G)
+        cb = jnp.repeat(cb, hpg, axis=3)            # (B,l,l,H)
+        w_ij = cb * decay * dtk[:, None, :, :]      # dt_j weight
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w_ij, xk.astype(jnp.float32))
+        # inter-chunk: y_i += exp(cum_i) C_i . h_prev
+        cfull = jnp.repeat(ck.astype(jnp.float32), hpg, axis=2)  # (B,l,H,N)
+        y_inter = jnp.einsum("bihn,bhnp->bihp", cfull, h_prev) \
+            * jnp.exp(cum)[..., None]
+        # state update: h_new = exp(cum_L) h_prev + sum_j exp(cum_L - cum_j) dt_j B_j x_j
+        wj = jnp.exp(cum[:, -1:, :] - cum) * dtk    # (B,l,H)
+        bfull = jnp.repeat(bk.astype(jnp.float32), hpg, axis=2)  # (B,l,H,N)
+        h_new = jnp.einsum("blh,blhn,blhp->bhnp", wj, bfull,
+                           xk.astype(jnp.float32))
+        h_new = h_new + jnp.exp(cum[:, -1])[..., None, None] * h_prev
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    xs = (xc.transpose(1, 0, 2, 3, 4), bc.transpose(1, 0, 2, 3, 4),
+          cc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+          lac.transpose(1, 0, 2, 3))
+    # checkpoint each chunk: the (l, l, H) decay/score tiles are otherwise
+    # all saved for backward -- O(S*l) f32 per layer instead of O(S)
+    h_fin, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    return y[:, :s_orig], h_fin
+
+
+def mamba2_layer(p, cfg: Mamba2Config, u, *, ssm_state=None, conv_state=None,
+                 return_state: bool = False):
+    """Full Mamba2 block.  u: (B, S, d_model).
+
+    Train/prefill: ``ssm_state``/``conv_state`` None.  Decode: S == 1 and
+    both states provided; returns (out, (ssm_state, conv_state))."""
+    bsz, s, _ = u.shape
+    dt_ = u.dtype
+    zxbcdt = jnp.einsum("bsd,dk->bsk", u, p["in_proj"].astype(dt_))
+    z, x, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)
+    xbc, new_conv = _causal_conv(p["conv_w"].astype(dt_),
+                                 p["conv_b"].astype(dt_), xbc,
+                                 state=conv_state)
+    di, g, n = cfg.d_inner, cfg.n_groups, cfg.d_state
+    x = xbc[..., :di].reshape(bsz, s, cfg.n_heads, cfg.head_dim)
+    bmat = xbc[..., di:di + g * n].reshape(bsz, s, g, n)
+    cmat = xbc[..., di + g * n:].reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    x = shard_annotate(x, ("batch", None, "heads", None))
+
+    if ssm_state is None and s > 1:
+        y, h_fin = _ssd_chunked(cfg, x, bmat, cmat, dt, p["a_log"])
+    else:
+        # single-step (decode) recurrence
+        h_prev = (jnp.zeros((bsz, cfg.n_heads, n, cfg.head_dim), jnp.float32)
+                  if ssm_state is None else ssm_state)
+        a = jnp.exp(p["a_log"].astype(jnp.float32))
+        at = jnp.exp(-dt[:, 0] * a[None])                    # (B,H)
+        hpg = cfg.n_heads // g
+        bfull = jnp.repeat(bmat[:, 0].astype(jnp.float32), hpg, axis=1)
+        cfull = jnp.repeat(cmat[:, 0].astype(jnp.float32), hpg, axis=1)
+        contrib = jnp.einsum("bh,bhn,bhp->bhnp", dt[:, 0], bfull,
+                             x[:, 0].astype(jnp.float32))
+        h_fin = at[..., None, None] * h_prev + contrib
+        y = jnp.einsum("bhn,bhnp->bhp", cfull, h_fin)[:, None]
+        y = y.astype(dt_)
+
+    y = y + (p["d_skip"].astype(jnp.float32)[None, None, :, None]
+             * x.astype(jnp.float32)).astype(dt_)
+    y = y.reshape(bsz, s, di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dt_))
+    if return_state:
+        return out, (h_fin, new_conv)
+    return out

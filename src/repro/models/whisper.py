@@ -1,0 +1,304 @@
+"""Whisper-style encoder-decoder transformer backbone (arXiv:2212.04356).
+
+Per the brief, the conv/mel audio frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings (B, S_frames, d) directly — i.e. the
+output the two-conv frontend would produce.  Everything downstream is real:
+a bidirectional pre-LN encoder, a causal decoder with cross-attention, and
+learned (sinusoidal for the encoder) position embeddings.
+
+Decode shapes drive the decoder: ``prefill`` encodes the frames once and
+caches cross-attention K/V per layer (computed from encoder output — the
+standard inference factorization); ``decode_step`` grows the self-attention
+KV cache one token at a time.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import AttnConfig, attn_spec, attention, decode_attention, _qkv
+from .common import (
+    ParamSpec,
+    embed,
+    embedding_spec,
+    gelu_mlp,
+    gelu_mlp_spec,
+    layernorm,
+    layernorm_spec,
+    masked_xent,
+    shard_annotate,
+    unembed,
+)
+from .lm import pad_vocab
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class WhisperConfig:
+    name: str
+    n_layers: int                  # encoder layers == decoder layers
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    max_frames: int = 32768        # stub-frontend frame positions
+    max_text: int = 32768
+    attn_impl: str = "chunked"
+    attn_chunk: int = 1024
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    remat: str = "none"
+    vocab_pad_multiple: int = 2048
+    z_loss: float = 0.0
+
+    @property
+    def head_dim_(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return pad_vocab(self.vocab, self.vocab_pad_multiple)
+
+    def attn_cfg(self, *, causal: bool, rope: bool = False) -> AttnConfig:
+        return AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
+                          n_kv_heads=self.n_heads, head_dim=self.head_dim_,
+                          causal=causal, rope_fraction=0.0,
+                          impl=self.attn_impl, chunk_size=self.attn_chunk)
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+
+def _stack(spec, n: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), ("layers", *s.axes), init=s.init,
+                            scale=s.scale, dtype=s.dtype),
+        spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def whisper_spec(cfg: WhisperConfig) -> dict:
+    enc_layer = {
+        "ln_attn": layernorm_spec(cfg.d_model),
+        "attn": attn_spec(cfg.attn_cfg(causal=False)),
+        "ln_ffn": layernorm_spec(cfg.d_model),
+        "mlp": gelu_mlp_spec(cfg.d_model, cfg.d_ff),
+    }
+    dec_layer = {
+        "ln_self": layernorm_spec(cfg.d_model),
+        "self_attn": attn_spec(cfg.attn_cfg(causal=True)),
+        "ln_cross": layernorm_spec(cfg.d_model),
+        "cross_attn": attn_spec(cfg.attn_cfg(causal=False)),
+        "ln_ffn": layernorm_spec(cfg.d_model),
+        "mlp": gelu_mlp_spec(cfg.d_model, cfg.d_ff),
+    }
+    return {
+        "enc": {
+            "layers": _stack(enc_layer, cfg.n_layers),
+            "ln_f": layernorm_spec(cfg.d_model),
+        },
+        "dec": {
+            # tied embedding/unembedding: init at 1/sqrt(d) so initial
+            # logits are O(1) (std-1 init puts the tied logits at O(sqrt d))
+            "embedding": ParamSpec((cfg.vocab_padded, cfg.d_model),
+                                   ("vocab", "embed"),
+                                   scale=cfg.d_model ** -0.5),
+            "pos": ParamSpec((cfg.max_text, cfg.d_model), (None, "embed"),
+                             scale=0.01),
+            "layers": _stack(dec_layer, cfg.n_layers),
+            "ln_f": layernorm_spec(cfg.d_model),
+        },
+    }
+
+
+def _sinusoid(s: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos * jnp.exp(-math.log(10000.0) * dim / max(d // 2 - 1, 1))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params, cfg: WhisperConfig, frames):
+    """frames: (B, S_f, d) stub frontend output -> encoder states."""
+    h = frames.astype(cfg.dtype)
+    h = h + _sinusoid(h.shape[1], cfg.d_model).astype(cfg.dtype)[None]
+    h = shard_annotate(h, ("batch", None, "embed"))
+    acfg = cfg.attn_cfg(causal=False)
+
+    def body(hh, p_l):
+        a, _ = attention(p_l["attn"], acfg,
+                         layernorm(p_l["ln_attn"], hh, cfg.norm_eps))
+        hh = hh + a
+        hh = hh + gelu_mlp(p_l["mlp"],
+                           layernorm(p_l["ln_ffn"], hh, cfg.norm_eps))
+        return hh, None
+
+    fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    h, _ = jax.lax.scan(fn, h, params["enc"]["layers"])
+    return layernorm(params["enc"]["ln_f"], h, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+
+def _cross_attention(p, cfg: WhisperConfig, x, enc_k, enc_v):
+    """x: (B, Sq, d) decoder states attending to cached encoder K/V.
+
+    Chunked (online-softmax) by default: the dense (B,H,Sq,Sk) score tensor
+    at train_4k would be GiBs per layer."""
+    from .attention import _chunked_attn, _dense_attn
+
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if cfg.attn_impl == "chunked" and q.shape[1] > 1:
+        out = _chunked_attn(q, enc_k, enc_v, causal=False,
+                            chunk=cfg.attn_chunk)
+    else:
+        out = _dense_attn(q, enc_k, enc_v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def _enc_kv(p_l, cfg: WhisperConfig, enc_out):
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p_l["cross_attn"]["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p_l["cross_attn"]["wv"].astype(dt))
+    return k, v
+
+
+def _dec_layer(p_l, cfg: WhisperConfig, h, enc_kv, *, self_cache=None,
+               cache_len=None):
+    acfg = cfg.attn_cfg(causal=True)
+    x = layernorm(p_l["ln_self"], h, cfg.norm_eps)
+    if self_cache is None:
+        a, kv = attention(p_l["self_attn"], acfg, x)
+        new_cache = kv
+    else:
+        ck, cv = self_cache
+        a, ck, cv = decode_attention(p_l["self_attn"], acfg, x, ck, cv,
+                                     cache_len)
+        new_cache = (ck, cv)
+    h = h + a
+    x = layernorm(p_l["ln_cross"], h, cfg.norm_eps)
+    h = h + _cross_attention(p_l["cross_attn"], cfg, x, *enc_kv)
+    h = h + gelu_mlp(p_l["mlp"], layernorm(p_l["ln_ffn"], h, cfg.norm_eps))
+    return h, new_cache
+
+
+def decode_train(params, cfg: WhisperConfig, tokens, enc_out):
+    """Teacher-forced decoder pass (training)."""
+    b, s = tokens.shape
+    h = embed(params["dec"]["embedding"], tokens).astype(cfg.dtype)
+    h = h + params["dec"]["pos"][:s].astype(cfg.dtype)[None]
+    h = shard_annotate(h, ("batch", None, "embed"))
+
+    def body(hh, p_l):
+        enc_kv = _enc_kv(p_l, cfg, enc_out)
+        hh, _ = _dec_layer(p_l, cfg, hh, enc_kv)
+        return hh, None
+
+    fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    h, _ = jax.lax.scan(fn, h, params["dec"]["layers"])
+    return layernorm(params["dec"]["ln_f"], h, cfg.norm_eps)
+
+
+def loss_fn(params, cfg: WhisperConfig, batch):
+    """batch: frames (B,S_f,d), tokens (B,S_t), labels, mask."""
+    enc_out = encode(params, cfg, batch["frames"])
+    h = decode_train(params, cfg, batch["tokens"], enc_out)
+    logits = _logits(params, cfg, h)
+    logits = shard_annotate(logits, ("batch", None, "vocab"))
+    loss = masked_xent(logits, batch["labels"], batch.get("mask"),
+                       vocab=cfg.vocab, vocab_padded=cfg.vocab_padded,
+                       z_loss=cfg.z_loss)
+    return loss, {"loss": loss, "aux_loss": 0.0}
+
+
+def _logits(params, cfg: WhisperConfig, h):
+    # tied unembedding (Whisper ties decoder embedding and output proj)
+    return unembed(jnp.swapaxes(params["dec"]["embedding"], 0, 1), h)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode (inference)
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: WhisperConfig, batch: int, max_len: int,
+               n_frames: int | None = None) -> dict:
+    h, hd = cfg.n_heads, cfg.head_dim_
+    nf = n_frames or cfg.max_frames
+    self_shape = (cfg.n_layers, batch, max_len, h, hd)
+    cross_shape = (cfg.n_layers, batch, nf, h, hd)
+    axes = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    return {
+        "self_k": ParamSpec(self_shape, axes, init="zeros", dtype=cfg.dtype),
+        "self_v": ParamSpec(self_shape, axes, init="zeros", dtype=cfg.dtype),
+        "cross_k": ParamSpec(cross_shape, axes, init="zeros", dtype=cfg.dtype),
+        "cross_v": ParamSpec(cross_shape, axes, init="zeros", dtype=cfg.dtype),
+        "length": ParamSpec((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def prefill(params, cfg: WhisperConfig, batch, *, max_len: int | None = None):
+    """Encode frames, prefill the decoder on the prompt tokens; returns
+    (last-token logits, cache)."""
+    frames, tokens = batch["frames"], batch["tokens"]
+    b, s = tokens.shape
+    max_len = max_len or s
+    enc_out = encode(params, cfg, frames)
+    h = embed(params["dec"]["embedding"], tokens).astype(cfg.dtype)
+    h = h + params["dec"]["pos"][:s].astype(cfg.dtype)[None]
+
+    def body(hh, p_l):
+        enc_kv = _enc_kv(p_l, cfg, enc_out)
+        hh, (k, v) = _dec_layer(p_l, cfg, hh, enc_kv)
+        return hh, (k.astype(cfg.dtype), v.astype(cfg.dtype),
+                    enc_kv[0].astype(cfg.dtype), enc_kv[1].astype(cfg.dtype))
+
+    h, (ks, vs, cks, cvs) = jax.lax.scan(body, h, params["dec"]["layers"])
+    h = layernorm(params["dec"]["ln_f"], h, cfg.norm_eps)
+    logits = _logits(params, cfg, h[:, -1:, :])
+    pad = max_len - s
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"self_k": ks, "self_v": vs, "cross_k": cks, "cross_v": cvs,
+             "length": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cfg: WhisperConfig, cache, batch):
+    """One-token decode with cached self + cross KV."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    length = cache["length"]
+    h = embed(params["dec"]["embedding"], tokens).astype(cfg.dtype)
+    h = h + jnp.take(params["dec"]["pos"], length[None], axis=0
+                     ).astype(cfg.dtype)[None]
+
+    def body(hh, xs):
+        p_l, ck, cv, xk, xv = xs
+        hh, (ck, cv) = _dec_layer(p_l, cfg, hh, (xk, xv),
+                                  self_cache=(ck, cv), cache_len=length)
+        return hh, (ck, cv)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, h, (params["dec"]["layers"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    h = layernorm(params["dec"]["ln_f"], h, cfg.norm_eps)
+    logits = _logits(params, cfg, h)
+    return logits, {"self_k": ks, "self_v": vs, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"], "length": length + 1}

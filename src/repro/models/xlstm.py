@@ -1,0 +1,305 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, recurrent), per Beck et al. 2024 (arXiv:2405.04517).
+
+mLSTM uses stabilized exponential gating with a matrix memory per head:
+
+    m_t = max(logsig(f_t) + m_{t-1}, i_t)
+    C_t = exp(logsig(f_t) + m_{t-1} - m_t) C_{t-1} + exp(i_t - m_t) v_t k_t^T
+    n_t = exp(logsig(f_t) + m_{t-1} - m_t) n_{t-1} + exp(i_t - m_t) k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+
+computed here with a ``lax.scan`` over time (the chunkwise-parallel variant
+is an optimization documented in EXPERIMENTS.md).  sLSTM keeps a scalar
+cell/normalizer pair per unit with block-diagonal (per-head) recurrent
+weights and the same stabilizer; it is inherently sequential.
+
+Both blocks follow the paper's pre-LN residual layout; the assigned
+xlstm-125m config has d_ff=0, so feed-forward capacity lives inside the
+blocks (mLSTM: x2 up-projection; sLSTM: 4/3 gated MLP after the cell),
+as in the reference implementation.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, rmsnorm, shard_annotate
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int
+    expand_m: int = 2            # mLSTM up-projection factor
+    ff_factor: float = 4.0 / 3.0  # sLSTM post-MLP factor
+    chunk: int = 256             # mLSTM chunkwise-parallel chunk length
+    mlstm_impl: str = "chunked"  # chunked | scan (reference)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand_m * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+    @property
+    def s_head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff_s(self) -> int:
+        return int(self.d_model * self.ff_factor)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_spec(cfg: XLSTMConfig) -> dict:
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return {
+        "w_up": ParamSpec((d, di), ("embed", "mlp")),
+        "w_z": ParamSpec((d, di), ("embed", "mlp")),
+        "w_q": ParamSpec((di, di), ("mlp", "heads_qk")),
+        "w_k": ParamSpec((di, di), ("mlp", "heads_qk")),
+        "w_v": ParamSpec((di, di), ("mlp", "heads_qk")),
+        "w_i": ParamSpec((di, h), ("mlp", "heads")),
+        "w_f": ParamSpec((di, h), ("mlp", "heads")),
+        "b_i": ParamSpec((h,), ("heads",), init="zeros"),
+        "b_f": ParamSpec((h,), ("heads",), init="ones"),
+        "w_down": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_core(q, k, v, i_raw, f_raw, *, state=None):
+    """q/k/v: (B,S,H,P); i_raw/f_raw: (B,S,H).  Returns (h, state).
+
+    state = (C (B,H,P,P), n (B,H,P), m (B,H))."""
+    b, s, h, p = q.shape
+    scale = 1.0 / math.sqrt(p)
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))          # (B,S,H)
+    ir = i_raw.astype(jnp.float32)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, p, p), jnp.float32)
+        n0 = jnp.zeros((b, h, p), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, it, ft = inp                                # (B,H,P)...
+        m_new = jnp.maximum(ft + m, it)
+        a = jnp.exp(ft + m - m_new)[..., None]                  # (B,H,1)
+        bgate = jnp.exp(it - m_new)[..., None]
+        c = a[..., None] * c + bgate[..., None] * (
+            vt[..., :, None] * kt[..., None, :])                # (B,H,P,P)
+        n = a * n + bgate * kt
+        qs = qt * scale
+        num = jnp.einsum("bhvk,bhk->bhv", c, qs)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qs)),
+                          jnp.exp(-m_new))[..., None]
+        return (c, n, m_new), num / den
+
+    xs = (q.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          ir.transpose(1, 0, 2), lf.transpose(1, 0, 2))
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    out = hs.transpose(1, 0, 2, 3).astype(q.dtype)              # (B,S,H,P)
+    return out, (c, n, m)
+
+
+def _mlstm_chunked(q, k, v, i_raw, f_raw, *, state=None, chunk: int = 256):
+    """Chunkwise-parallel mLSTM: identical semantics to :func:`_mlstm_core`
+    (same stabilized exponential gating) but O(S/L) sequential steps with
+    (L, L) intra-chunk score matrices — the trainable formulation (mLSTM is
+    linear attention with decay, so the SSD-style chunking applies).
+
+    Derivation: with g_t = logsig(f_t), F_t = cumsum(g)_t and carry
+    stabilizer m_prev, the sequential m_t equals
+    ``max(F_t + cummax(i - F)_t, F_t + m_prev)`` and every term of C_t/n_t
+    becomes a row of ``exp(F_t - F_j + i_j - m_t)`` scores.
+    """
+    b, s_orig, h, p = q.shape
+    scale = 1.0 / math.sqrt(p)
+    l = min(chunk, s_orig)
+    pad = (-s_orig) % l
+    if pad:
+        # padded steps: f=+inf (decay 1 keeps state), i=-inf (no input)
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        f_raw = jnp.pad(f_raw, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=60.0)       # logsig(60) ~ 0
+    s = s_orig + pad
+    nc = s // l
+
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    ir = i_raw.astype(jnp.float32)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, p, p), jnp.float32)
+        n0 = jnp.zeros((b, h, p), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    qc = (q.astype(jnp.float32) * scale).reshape(b, nc, l, h, p)
+    kc = k.astype(jnp.float32).reshape(b, nc, l, h, p)
+    vc = v.astype(jnp.float32).reshape(b, nc, l, h, p)
+    ic = ir.reshape(b, nc, l, h)
+    gc = lf.reshape(b, nc, l, h)
+
+    ii = jnp.arange(l)
+    tri = (ii[:, None] >= ii[None, :])[None, :, :, None]    # (1,L,L,1)
+
+    def chunk_step(carry, inp):
+        c_prev, n_prev, m_prev = carry
+        qk, kk, vk, ik, gk = inp                       # (B,L,H,*) per chunk
+        f_cum = jnp.cumsum(gk, axis=1)                 # F_t inclusive
+        r = jax.lax.cummax(ik - f_cum, axis=1)         # cummax(i - F)
+        m_t = f_cum + jnp.maximum(r, m_prev[:, None])  # (B,L,H)
+        # intra scores: exp(F_t - F_j + i_j - m_t), j <= t
+        logS = (f_cum[:, :, None, :] - f_cum[:, None, :, :]
+                + ik[:, None, :, :] - m_t[:, :, None, :])
+        sc = jnp.where(tri, jnp.exp(logS), 0.0)        # (B,L,L,H)
+        # inter decay: exp(F_t + m_prev - m_t)
+        inter = jnp.exp(f_cum + m_prev[:, None] - m_t)  # (B,L,H)
+        kq = jnp.einsum("bjhp,bthp->btjh", kk, qk)      # k_j . q_t
+        num = jnp.einsum("btjh,btjh,bjhp->bthp", sc, kq, vk)
+        num = num + inter[..., None] * jnp.einsum("bhvp,bthp->bthv",
+                                                  c_prev, qk)
+        den = jnp.einsum("btjh,btjh->bth", sc, kq) \
+            + inter * jnp.einsum("bhp,bthp->bth", n_prev, qk)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        hs = num / den
+        # carry update at chunk end
+        m_new = m_t[:, -1]
+        dec_last = jnp.exp(f_cum[:, -1:, :] + m_prev[:, None] - m_t[:, -1:])
+        w_j = jnp.exp(f_cum[:, -1:, :] - f_cum + ik - m_t[:, -1:])  # (B,L,H)
+        c_new = dec_last[:, 0, :, None, None] * c_prev + jnp.einsum(
+            "bjh,bjhv,bjhk->bhvk", w_j, vk, kk)
+        n_new = dec_last[:, 0, :, None] * n_prev + jnp.einsum(
+            "bjh,bjhp->bhp", w_j, kk)
+        return (c_new, n_new, m_new), hs
+
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), ic.transpose(1, 0, 2, 3),
+          gc.transpose(1, 0, 2, 3))
+    # checkpoint each chunk (see mamba2._ssd_chunked): keeps backward memory
+    # at O(S) instead of saving every (L, L, H) score tile
+    (c, n, m), hs = jax.lax.scan(jax.checkpoint(chunk_step), (c0, n0, m0), xs)
+    out = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)[:, :s_orig]
+    return out.astype(q.dtype), (c, n, m)
+
+
+def mlstm_block(p, cfg: XLSTMConfig, u, *, state=None, return_state=False):
+    b, s, d = u.shape
+    dt = u.dtype
+    x = jnp.einsum("bsd,dk->bsk", u, p["w_up"].astype(dt))
+    z = jnp.einsum("bsd,dk->bsk", u, p["w_z"].astype(dt))
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = jnp.einsum("bsk,kj->bsj", x, p["w_q"].astype(dt)).reshape(b, s, h, hd)
+    k = jnp.einsum("bsk,kj->bsj", x, p["w_k"].astype(dt)).reshape(b, s, h, hd)
+    v = jnp.einsum("bsk,kj->bsj", x, p["w_v"].astype(dt)).reshape(b, s, h, hd)
+    i_raw = jnp.einsum("bsk,kh->bsh", x, p["w_i"].astype(dt)) + p["b_i"].astype(dt)
+    f_raw = jnp.einsum("bsk,kh->bsh", x, p["w_f"].astype(dt)) + p["b_f"].astype(dt)
+    q = shard_annotate(q, ("batch", None, "heads", None))
+    if cfg.mlstm_impl == "chunked" and s > 1:
+        core, new_state = _mlstm_chunked(q, k, v, i_raw, f_raw, state=state,
+                                         chunk=cfg.chunk)
+    else:
+        core, new_state = _mlstm_core(q, k, v, i_raw, f_raw, state=state)
+    core = core.reshape(b, s, cfg.d_inner)
+    out = jnp.einsum("bsk,kd->bsd", core * jax.nn.silu(z),
+                     p["w_down"].astype(dt))
+    if return_state:
+        return out, new_state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_spec(cfg: XLSTMConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.s_head_dim
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gates[f"w_{g}"] = ParamSpec((d, d), ("embed", "heads_qk"))
+        gates[f"r_{g}"] = ParamSpec((h, hd, hd), ("heads", None, None),
+                                    scale=0.5 / math.sqrt(hd))
+        gates[f"b_{g}"] = ParamSpec((d,), ("embed",),
+                                    init="ones" if g == "f" else "zeros")
+    return {
+        **gates,
+        "ff_up": ParamSpec((d, cfg.d_ff_s), ("embed", "mlp")),
+        "ff_gate": ParamSpec((d, cfg.d_ff_s), ("embed", "mlp")),
+        "ff_down": ParamSpec((cfg.d_ff_s, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_core(p, cfg: XLSTMConfig, x, *, state=None):
+    """x: (B,S,d).  Sequential scan with per-head recurrent weights."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.s_head_dim
+    dt = x.dtype
+
+    pre = {g: (jnp.einsum("bsd,dk->bsk", x, p[f"w_{g}"].astype(dt))
+               + p[f"b_{g}"].astype(dt)).astype(jnp.float32)
+           for g in ("z", "i", "f", "o")}
+
+    if state is None:
+        c0 = jnp.zeros((b, h, hd), jnp.float32)
+        n0 = jnp.ones((b, h, hd), jnp.float32)
+        hid0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.zeros((b, h, hd), jnp.float32)
+    else:
+        c0, n0, hid0, m0 = state
+
+    rw = {g: p[f"r_{g}"].astype(jnp.float32) for g in ("z", "i", "f", "o")}
+
+    def step(carry, inp):
+        c, n, hid, m = carry
+        zt, it, ft, ot = (v.reshape(b, h, hd) for v in inp)
+        rec = {g: jnp.einsum("bhk,hkj->bhj", hid, rw[g])
+               for g in ("z", "i", "f", "o")}
+        zv = jnp.tanh(zt + rec["z"])
+        ov = jax.nn.sigmoid(ot + rec["o"])
+        ilog = it + rec["i"]
+        flog = jax.nn.log_sigmoid(ft + rec["f"])
+        m_new = jnp.maximum(flog + m, ilog)
+        iv = jnp.exp(ilog - m_new)
+        fv = jnp.exp(flog + m - m_new)
+        c = fv * c + iv * zv
+        n = fv * n + iv
+        hid_new = ov * c / jnp.maximum(n, 1e-6)
+        return (c, n, hid_new, m_new), hid_new
+
+    xs = tuple(pre[g].transpose(1, 0, 2) for g in ("z", "i", "f", "o"))
+    (c, n, hid, m), hs = jax.lax.scan(step, (c0, n0, hid0, m0), xs)
+    out = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(dt)
+    return out, (c, n, hid, m)
+
+
+def slstm_block(p, cfg: XLSTMConfig, u, *, state=None, return_state=False):
+    core, new_state = _slstm_core(p, cfg, u, state=state)
+    # post gated MLP (factor 4/3)
+    dt = u.dtype
+    g = jnp.einsum("bsd,df->bsf", core, p["ff_gate"].astype(dt))
+    up = jnp.einsum("bsd,df->bsf", core, p["ff_up"].astype(dt))
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * up,
+                     p["ff_down"].astype(dt))
+    if return_state:
+        return out, new_state
+    return out

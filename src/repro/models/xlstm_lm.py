@@ -1,0 +1,204 @@
+"""xLSTM language model: a stack of mLSTM blocks with sLSTM blocks at
+configurable depths (Beck et al. 2024), pre-LN residual layout.
+
+The assigned xlstm-125m config has ``d_ff = 0``: feed-forward capacity
+lives inside the blocks (mLSTM 2x up-projection, sLSTM 4/3 gated post-MLP),
+matching the reference implementation.
+
+Layers are heterogeneous (two different param structures), so the stack is
+a Python loop rather than ``lax.scan`` — at 12 layers the HLO stays small.
+Decode carries per-layer recurrent states (matrix memory for mLSTM, scalar
+cell for sLSTM): O(1) per token, so this arch runs ``long_500k``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    ParamSpec,
+    embed,
+    embedding_spec,
+    masked_xent,
+    rmsnorm,
+    rmsnorm_spec,
+    shard_annotate,
+    unembed,
+    unembed_spec,
+)
+from .lm import pad_vocab
+from .xlstm import (
+    XLSTMConfig,
+    mlstm_block,
+    mlstm_spec,
+    slstm_block,
+    slstm_spec,
+)
+
+
+@dataclass(frozen=True)
+class XLSTMLMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    vocab: int
+    slstm_at: tuple[int, ...] = (3, 7)
+    chunk: int = 256
+    mlstm_impl: str = "chunked"
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    remat: str = "none"
+    vocab_pad_multiple: int = 2048
+    z_loss: float = 0.0
+
+    @property
+    def vocab_padded(self) -> int:
+        return pad_vocab(self.vocab, self.vocab_pad_multiple)
+
+    @property
+    def block_cfg(self) -> XLSTMConfig:
+        return XLSTMConfig(d_model=self.d_model, n_heads=self.n_heads,
+                           chunk=self.chunk, mlstm_impl=self.mlstm_impl)
+
+    def is_slstm(self, i: int) -> bool:
+        return i in self.slstm_at
+
+
+def xlstm_lm_spec(cfg: XLSTMLMConfig) -> dict:
+    layers = {}
+    for i in range(cfg.n_layers):
+        kind = "slstm" if cfg.is_slstm(i) else "mlstm"
+        block = (slstm_spec if cfg.is_slstm(i) else mlstm_spec)(cfg.block_cfg)
+        layers[f"layer_{i}"] = {"ln": rmsnorm_spec(cfg.d_model), kind: block}
+    return {
+        "embedding": embedding_spec(cfg.vocab_padded, cfg.d_model),
+        "layers": layers,
+        "ln_f": rmsnorm_spec(cfg.d_model),
+        "unembed": unembed_spec(cfg.d_model, cfg.vocab_padded),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _block(p_l, cfg: XLSTMLMConfig, i: int, h, *, state=None,
+           return_state=False):
+    bc = cfg.block_cfg
+    x = rmsnorm(p_l["ln"], h, cfg.norm_eps)
+    if cfg.is_slstm(i):
+        out = slstm_block(p_l["slstm"], bc, x, state=state,
+                          return_state=return_state)
+    else:
+        out = mlstm_block(p_l["mlstm"], bc, x, state=state,
+                          return_state=return_state)
+    if return_state:
+        o, st = out
+        return h + o, st
+    return h + out
+
+
+def hidden_states(params, cfg: XLSTMLMConfig, tokens):
+    h = embed(params["embedding"], tokens).astype(cfg.dtype)
+    h = shard_annotate(h, ("batch", None, "embed"))
+    for i in range(cfg.n_layers):
+        fn = lambda hh, p_l, i=i: _block(p_l, cfg, i, hh)
+        if cfg.remat != "none":
+            fn = jax.checkpoint(fn)
+        h = fn(h, params["layers"][f"layer_{i}"])
+    return rmsnorm(params["ln_f"], h, cfg.norm_eps)
+
+
+def loss_fn(params, cfg: XLSTMLMConfig, batch):
+    h = hidden_states(params, cfg, batch["tokens"])
+    logits = unembed(params["unembed"], h)
+    logits = shard_annotate(logits, ("batch", None, "vocab"))
+    loss = masked_xent(logits, batch["labels"], batch.get("mask"),
+                       vocab=cfg.vocab, vocab_padded=cfg.vocab_padded,
+                       z_loss=cfg.z_loss)
+    return loss, {"loss": loss, "aux_loss": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: XLSTMLMConfig, batch: int, max_len: int) -> dict:
+    """Recurrent decode state (max_len is irrelevant: O(1) state)."""
+    bc = cfg.block_cfg
+    out: dict = {}
+    for i in range(cfg.n_layers):
+        if cfg.is_slstm(i):
+            h, hd = bc.n_heads, bc.s_head_dim
+            out[f"layer_{i}"] = {
+                "c": ParamSpec((batch, h, hd), ("batch", "heads", None),
+                               init="zeros", dtype=jnp.float32),
+                "n": ParamSpec((batch, h, hd), ("batch", "heads", None),
+                               init="ones", dtype=jnp.float32),
+                "hid": ParamSpec((batch, h, hd), ("batch", "heads", None),
+                                 init="zeros", dtype=jnp.float32),
+                "m": ParamSpec((batch, h, hd), ("batch", "heads", None),
+                               init="zeros", dtype=jnp.float32),
+            }
+        else:
+            h, p = bc.n_heads, bc.head_dim
+            out[f"layer_{i}"] = {
+                "c": ParamSpec((batch, h, p, p), ("batch", "heads", None, None),
+                               init="zeros", dtype=jnp.float32),
+                "n": ParamSpec((batch, h, p), ("batch", "heads", None),
+                               init="zeros", dtype=jnp.float32),
+                "m": ParamSpec((batch, h), ("batch", "heads"),
+                               init="zeros", dtype=jnp.float32),
+            }
+    out["length"] = ParamSpec((), (), init="zeros", dtype=jnp.int32)
+    return out
+
+
+def _state_tuple(cfg: XLSTMLMConfig, i: int, entry: dict | None):
+    if entry is None:
+        return None
+    if cfg.is_slstm(i):
+        return (entry["c"], entry["n"], entry["hid"], entry["m"])
+    return (entry["c"], entry["n"], entry["m"])
+
+
+def _state_dict(cfg: XLSTMLMConfig, i: int, st) -> dict:
+    if cfg.is_slstm(i):
+        c, n, hid, m = st
+        return {"c": c, "n": n, "hid": hid, "m": m}
+    c, n, m = st
+    return {"c": c, "n": n, "m": m}
+
+
+def _run_with_state(params, cfg: XLSTMLMConfig, tokens, cache):
+    h = embed(params["embedding"], tokens).astype(cfg.dtype)
+    new_cache: dict = {}
+    for i in range(cfg.n_layers):
+        key = f"layer_{i}"
+        st = _state_tuple(cfg, i, cache.get(key) if cache else None)
+        h, st = _block(params["layers"][key], cfg, i, h, state=st,
+                       return_state=True)
+        new_cache[key] = _state_dict(cfg, i, st)
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    return h, new_cache
+
+
+def prefill(params, cfg: XLSTMLMConfig, batch, *, max_len: int | None = None):
+    tokens = batch["tokens"]
+    h, cache = _run_with_state(params, cfg, tokens, None)
+    logits = unembed(params["unembed"], h[:, -1:, :])
+    cache["length"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    return logits, cache
+
+
+def decode_step(params, cfg: XLSTMLMConfig, cache, batch):
+    h, new_cache = _run_with_state(params, cfg, batch["tokens"], cache)
+    logits = unembed(params["unembed"], h)
+    new_cache["length"] = cache["length"] + 1
+    return logits, new_cache

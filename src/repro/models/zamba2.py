@@ -1,0 +1,337 @@
+"""Zamba2 hybrid LM: a Mamba2 backbone with one *shared* attention+MLP
+block applied at evenly spaced depths (arXiv:2411.15242).
+
+Faithfulness notes (DESIGN.md §6): the shared block's weights are reused at
+every application; per-application specialization is a stacked per-use
+RMSNorm gain + low-rank (LoRA) adapter on the attention output projection
+(the reference model uses per-use LoRA on all shared projections; we keep
+one site).  The reference concatenates the original embedding with the
+hidden state at shared-block inputs; we use the standard residual stream.
+
+Decode carries one SSM state + conv state per Mamba layer and one KV cache
+per shared-block *application* — sub-quadratic in sequence length, which is
+why this arch runs the ``long_500k`` cell.
+
+Scan structure: ``lax.scan`` over the 38 stacked Mamba layers; a per-layer
+boolean flag selects (``lax.cond``) whether the shared block fires before
+the Mamba mixer, and a carried application counter indexes the shared KV
+cache — HLO stays O(1) in depth.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import AttnConfig, attn_spec, attention, decode_attention
+from .common import (
+    ParamSpec,
+    embed,
+    embedding_spec,
+    masked_xent,
+    rmsnorm,
+    rmsnorm_spec,
+    shard_annotate,
+    swiglu,
+    swiglu_spec,
+    unembed,
+    unembed_spec,
+)
+from .mamba2 import Mamba2Config, mamba2_layer, mamba2_spec
+from .lm import pad_vocab
+
+
+@dataclass(frozen=True)
+class Zamba2Config:
+    name: str
+    n_layers: int                 # Mamba2 layers
+    d_model: int
+    n_heads: int                  # shared attention block heads
+    n_kv_heads: int
+    d_ff: int                     # shared block MLP
+    vocab: int
+    d_state: int = 64
+    shared_every: int = 6         # apply shared block before layer i if i % shared_every == 0
+    lora_rank: int = 64
+    mamba_head_dim: int = 64
+    mamba_chunk: int = 256
+    attn_impl: str = "chunked"
+    attn_chunk: int = 1024
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    remat: str = "none"
+    vocab_pad_multiple: int = 2048
+    z_loss: float = 0.0
+
+    @property
+    def n_shared(self) -> int:
+        return (self.n_layers + self.shared_every - 1) // self.shared_every
+
+    @property
+    def head_dim_(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return pad_vocab(self.vocab, self.vocab_pad_multiple)
+
+    @property
+    def mamba_cfg(self) -> Mamba2Config:
+        return Mamba2Config(d_model=self.d_model, d_state=self.d_state,
+                            head_dim=self.mamba_head_dim,
+                            chunk=self.mamba_chunk)
+
+    @property
+    def attn_cfg(self) -> AttnConfig:
+        return AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
+                          n_kv_heads=self.n_kv_heads, head_dim=self.head_dim_,
+                          impl=self.attn_impl, chunk_size=self.attn_chunk)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _stack(spec, n: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), ("layers", *s.axes), init=s.init,
+                            scale=s.scale, dtype=s.dtype),
+        spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def zamba2_spec(cfg: Zamba2Config) -> dict:
+    mamba_layer = {
+        "ln": rmsnorm_spec(cfg.d_model),
+        "mamba": mamba2_spec(cfg.mamba_cfg),
+    }
+    d, r, ns = cfg.d_model, cfg.lora_rank, cfg.n_shared
+    return {
+        "embedding": embedding_spec(cfg.vocab_padded, cfg.d_model),
+        "layers": _stack(mamba_layer, cfg.n_layers),
+        "shared": {
+            "ln_attn": rmsnorm_spec(d),
+            "attn": attn_spec(cfg.attn_cfg),
+            "ln_ffn": rmsnorm_spec(d),
+            "mlp": swiglu_spec(d, cfg.d_ff),
+            # per-application specialization (stacked over applications)
+            "use_gain": ParamSpec((ns, d), (None, "embed"), init="ones"),
+            "lora_a": ParamSpec((ns, d, r), (None, "embed", None),
+                                scale=0.01),
+            "lora_b": ParamSpec((ns, r, d), (None, None, "embed"),
+                                init="zeros"),
+        },
+        "ln_f": rmsnorm_spec(cfg.d_model),
+        "unembed": unembed_spec(cfg.d_model, cfg.vocab_padded),
+    }
+
+
+def _shared_flags(cfg: Zamba2Config) -> jnp.ndarray:
+    return (jnp.arange(cfg.n_layers) % cfg.shared_every == 0)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill path)
+# ---------------------------------------------------------------------------
+
+
+def _apply_shared(ps, cfg: Zamba2Config, h, app_idx, *, cache=None,
+                  cache_len=None):
+    """One application of the shared transformer block.  ``app_idx`` selects
+    the per-use gain/LoRA.  Returns (h, (k, v)) — k/v for cache collection
+    (train/prefill) or the updated cache slice (decode)."""
+    gain = jax.lax.dynamic_index_in_dim(ps["use_gain"], app_idx, 0,
+                                        keepdims=False)
+    la = jax.lax.dynamic_index_in_dim(ps["lora_a"], app_idx, 0, keepdims=False)
+    lb = jax.lax.dynamic_index_in_dim(ps["lora_b"], app_idx, 0, keepdims=False)
+    x = rmsnorm(ps["ln_attn"], h, cfg.norm_eps) * gain.astype(h.dtype)
+    if cache is None:
+        a, (k, v) = attention(ps["attn"], cfg.attn_cfg, x)
+        kv = (k, v)
+    else:
+        ck, cv = cache
+        a, ck, cv = decode_attention(ps["attn"], cfg.attn_cfg, x, ck, cv,
+                                     cache_len)
+        kv = (ck, cv)
+    a = a + jnp.einsum("bsd,dr,re->bse", x, la.astype(h.dtype),
+                       lb.astype(h.dtype))
+    h = h + a
+    h = h + swiglu(ps["mlp"], rmsnorm(ps["ln_ffn"], h, cfg.norm_eps))
+    return h, kv
+
+
+def hidden_states(params, cfg: Zamba2Config, tokens, *, collect_kv=False):
+    """Embeddings through the hybrid stack.
+
+    Returns (h_final, aux=0, kv_stack)  where kv_stack is (n_layers, ...)
+    with zeros at non-shared layers when ``collect_kv`` (prefill uses it).
+    """
+    b, s = tokens.shape
+    h = embed(params["embedding"], tokens).astype(cfg.dtype)
+    h = shard_annotate(h, ("batch", None, "embed"))
+    flags = _shared_flags(cfg)
+    ps = params["shared"]
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim_
+
+    def body(carry, xs):
+        hh, app = carry
+        p_l, flag = xs
+
+        def with_shared(hh):
+            out, (k, v) = _apply_shared(ps, cfg, hh, app)
+            return out, (k.astype(cfg.dtype), v.astype(cfg.dtype))
+
+        def without(hh):
+            z = jnp.zeros((b, s, kvh, hd), cfg.dtype)
+            return hh, (z, z)
+
+        hh, kv = jax.lax.cond(flag, with_shared, without, hh)
+        app = app + flag.astype(jnp.int32)
+        hh = hh + mamba2_layer(p_l["mamba"], cfg.mamba_cfg,
+                               rmsnorm(p_l["ln"], hh, cfg.norm_eps))
+        hh = shard_annotate(hh, ("batch", None, "embed"))
+        return (hh, app), (kv if collect_kv else 0.0)
+
+    wrapped = body
+    if cfg.remat != "none":
+        wrapped = jax.checkpoint(body)
+    (h, _), kvs = jax.lax.scan(wrapped, (h, jnp.asarray(0, jnp.int32)),
+                               (params["layers"], flags))
+    return rmsnorm(params["ln_f"], h, cfg.norm_eps), 0.0, kvs
+
+
+def loss_fn(params, cfg: Zamba2Config, batch):
+    h, aux, _ = hidden_states(params, cfg, batch["tokens"])
+    logits = unembed(params["unembed"], h)
+    logits = shard_annotate(logits, ("batch", None, "vocab"))
+    loss = masked_xent(logits, batch["labels"], batch.get("mask"),
+                       vocab=cfg.vocab, vocab_padded=cfg.vocab_padded,
+                       z_loss=cfg.z_loss)
+    return loss, {"loss": loss, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: Zamba2Config, batch: int, max_len: int) -> dict:
+    """Decode state: per-Mamba-layer SSM + conv states, per-application
+    shared-attention KV (only n_shared caches, not n_layers)."""
+    m = cfg.mamba_cfg
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim_
+    kv_shape = (cfg.n_shared, batch, max_len, kvh, hd)
+    kv_axes = (None, "batch", "seq", "kv_heads", "head_dim")
+    return {
+        "ssm": ParamSpec((cfg.n_layers, batch, m.n_heads, m.d_state,
+                          m.head_dim),
+                         ("layers", "batch", "heads", None, None),
+                         init="zeros", dtype=jnp.float32),
+        "conv": ParamSpec((cfg.n_layers, batch, m.conv_kernel - 1, m.conv_dim),
+                          ("layers", "batch", None, "mamba_inner"),
+                          init="zeros", dtype=cfg.dtype),
+        "k": ParamSpec(kv_shape, kv_axes, init="zeros", dtype=cfg.dtype),
+        "v": ParamSpec(kv_shape, kv_axes, init="zeros", dtype=cfg.dtype),
+        "length": ParamSpec((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def prefill(params, cfg: Zamba2Config, batch, *, max_len: int | None = None):
+    """Process the prompt; return (last-token logits, decode cache).
+
+    The shared-application KV caches ride the layer scan as a *carry* of
+    shape (n_shared, B, max_len, kvh, hd) written in place at the current
+    application index — memory stays at cache size (never n_layers x)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_len = max_len or s
+    h = embed(params["embedding"], tokens).astype(cfg.dtype)
+    flags = _shared_flags(cfg)
+    ps = params["shared"]
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim_
+
+    k0 = jnp.zeros((cfg.n_shared, b, max_len, kvh, hd), cfg.dtype)
+    v0 = jnp.zeros_like(k0)
+
+    def body(carry, xs):
+        hh, app, kc, vc = carry
+        p_l, flag = xs
+
+        def with_shared(args):
+            hh, kc, vc = args
+            out, (k, v) = _apply_shared(ps, cfg, hh, app)
+            pad = max_len - s
+            if pad > 0:
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kc = jax.lax.dynamic_update_index_in_dim(
+                kc, k.astype(cfg.dtype), app, 0)
+            vc = jax.lax.dynamic_update_index_in_dim(
+                vc, v.astype(cfg.dtype), app, 0)
+            return out, kc, vc
+
+        hh, kc, vc = jax.lax.cond(flag, with_shared, lambda a: a,
+                                  (hh, kc, vc))
+        app = app + flag.astype(jnp.int32)
+        mixed, (ssm, conv) = mamba2_layer(
+            p_l["mamba"], cfg.mamba_cfg,
+            rmsnorm(p_l["ln"], hh, cfg.norm_eps), return_state=True)
+        hh = hh + mixed
+        return (hh, app, kc, vc), (ssm, conv)
+
+    (h, _, k, v), (ssms, convs) = jax.lax.scan(
+        body, (h, jnp.asarray(0, jnp.int32), k0, v0),
+        (params["layers"], flags))
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = unembed(params["unembed"], h[:, -1:, :])
+    cache = {"ssm": ssms, "conv": convs, "k": k, "v": v,
+             "length": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cfg: Zamba2Config, cache, batch):
+    """One-token decode.  batch: tokens (B, 1).
+
+    Shared KV caches are scan *carries* (updated in place at the current
+    application index); Mamba states are scan xs/ys (one per layer)."""
+    tokens = batch["tokens"]
+    h = embed(params["embedding"], tokens).astype(cfg.dtype)
+    flags = _shared_flags(cfg)
+    ps = params["shared"]
+    length = cache["length"]
+
+    def body(carry, xs):
+        hh, app, kc, vc = carry
+        p_l, flag, ssm, conv = xs
+
+        def with_shared(args):
+            hh, kc, vc = args
+            ck = jax.lax.dynamic_index_in_dim(kc, app, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(vc, app, 0, keepdims=False)
+            out, (ck, cv) = _apply_shared(ps, cfg, hh, app, cache=(ck, cv),
+                                          cache_len=length)
+            kc = jax.lax.dynamic_update_index_in_dim(kc, ck, app, 0)
+            vc = jax.lax.dynamic_update_index_in_dim(vc, cv, app, 0)
+            return out, kc, vc
+
+        hh, kc, vc = jax.lax.cond(flag, with_shared, lambda a: a,
+                                  (hh, kc, vc))
+        app = app + flag.astype(jnp.int32)
+        mixed, (ssm, conv) = mamba2_layer(
+            p_l["mamba"], cfg.mamba_cfg,
+            rmsnorm(p_l["ln"], hh, cfg.norm_eps),
+            ssm_state=ssm, conv_state=conv, return_state=True)
+        hh = hh + mixed
+        return (hh, app, kc, vc), (ssm, conv)
+
+    (h, _, k, v), (ssms, convs) = jax.lax.scan(
+        body, (h, jnp.asarray(0, jnp.int32), cache["k"], cache["v"]),
+        (params["layers"], flags, cache["ssm"], cache["conv"]))
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = unembed(params["unembed"], h)
+    new_cache = {"ssm": ssms, "conv": convs, "k": k, "v": v,
+                 "length": length + 1}
+    return logits, new_cache

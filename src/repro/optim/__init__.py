@@ -1,0 +1,34 @@
+"""Optimizer substrate: AdamW with schedules, clipping and quantized moments.
+
+Built from scratch in pure JAX (no optax dependency).  The optimizer state
+is declared via ``ParamSpec`` trees like the models' parameters, so the same
+logical-axis sharding machinery (``repro.dist.sharding``) derives the
+optimizer-state shardings — moments inherit the parameter sharding (FSDP
+shards optimizer state for free).
+
+The int8-quantized moment option is one of the framework's beyond-paper
+distributed-optimization tricks: it reduces the optimizer's HBM term in the
+TPU-ECM model by 4x for the moment streams (EXPERIMENTS.md §Perf).
+"""
+from .adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    apply_updates,
+    global_norm,
+    opt_state_spec,
+)
+from .schedule import Schedule, constant, cosine, linear_warmup_cosine
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "apply_updates",
+    "global_norm",
+    "opt_state_spec",
+    "Schedule",
+    "constant",
+    "cosine",
+    "linear_warmup_cosine",
+]

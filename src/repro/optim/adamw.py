@@ -1,0 +1,192 @@
+"""AdamW with global-norm clipping and optionally int8-quantized moments.
+
+State layout per parameter leaf:
+
+* ``f32``/``bf16`` moments: ``mu``/``nu`` arrays of the parameter's shape.
+* ``int8`` moments: ``mu_q``/``nu_q`` int8 arrays + per-row ``f32`` absmax
+  scales over the last axis (symmetric quantization).  The HBM cost of the
+  moment streams drops from 8 B/param to ~2 B/param — this is the
+  "moment-stream" optimization recorded in the TPU-ECM §Perf log.
+
+All moment math happens in f32; quantization error only affects what is
+*stored* between steps (same trade-off as 8-bit Adam, Dettmers et al.).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, is_spec
+from .schedule import Schedule, constant
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    moment_dtype: str = "f32"          # f32 | bf16 | int8
+    #: serialize per-leaf updates with optimization barriers so XLA reuses
+    #: the f32 transient buffers across leaves instead of scheduling all
+    #: leaves' mf/vf/update chains concurrently (observed ~5 concurrent
+    #: 1.1 GiB chains on 94-layer stacked MoE weights in the dry-run)
+    serialize_leaves: bool = True
+
+    def validate(self) -> None:
+        assert self.moment_dtype in ("f32", "bf16", "int8"), self.moment_dtype
+
+
+# ---------------------------------------------------------------------------
+# int8 moment quantization (symmetric, per-row over the last axis)
+# ---------------------------------------------------------------------------
+
+
+def _quantize(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# state construction
+# ---------------------------------------------------------------------------
+
+
+def _moment_like(p, cfg: AdamWConfig):
+    if cfg.moment_dtype == "int8":
+        scale_shape = (*p.shape[:-1], 1) if p.ndim else ()
+        return {
+            "q": jnp.zeros(p.shape, jnp.int8),
+            "scale": jnp.zeros(scale_shape, jnp.float32),
+        }
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bf16" else jnp.float32
+    return jnp.zeros(p.shape, dt)
+
+
+def adamw_init(params, cfg: AdamWConfig) -> dict:
+    cfg.validate()
+    return {
+        "mu": jax.tree.map(lambda p: _moment_like(p, cfg), params),
+        "nu": jax.tree.map(lambda p: _moment_like(p, cfg), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_spec(param_spec_tree, cfg: AdamWConfig) -> dict:
+    """Optimizer-state ParamSpec tree mirroring the parameter specs, so the
+    sharding machinery can derive optimizer shardings (moments inherit the
+    parameter's logical axes)."""
+    cfg.validate()
+
+    def moment_spec(s: ParamSpec):
+        if cfg.moment_dtype == "int8":
+            scale_shape = (*s.shape[:-1], 1) if s.shape else ()
+            scale_axes = (*s.axes[:-1], None) if s.axes else ()
+            return {
+                "q": ParamSpec(s.shape, s.axes, init="zeros", dtype=jnp.int8),
+                "scale": ParamSpec(scale_shape, scale_axes, init="zeros",
+                                   dtype=jnp.float32),
+            }
+        dt = jnp.bfloat16 if cfg.moment_dtype == "bf16" else jnp.float32
+        return ParamSpec(s.shape, s.axes, init="zeros", dtype=dt)
+
+    return {
+        "mu": jax.tree.map(moment_spec, param_spec_tree, is_leaf=is_spec),
+        "nu": jax.tree.map(moment_spec, param_spec_tree, is_leaf=is_spec),
+        "count": ParamSpec((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _load_moment(m, cfg: AdamWConfig):
+    if cfg.moment_dtype == "int8":
+        return _dequantize(m["q"], m["scale"])
+    return m.astype(jnp.float32)
+
+
+def _store_moment(x, cfg: AdamWConfig):
+    if cfg.moment_dtype == "int8":
+        q, scale = _quantize(x)
+        return {"q": q, "scale": scale}
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bf16" else jnp.float32
+    return x.astype(dt)
+
+
+def adamw_update(grads, state: dict, params, cfg: AdamWConfig,
+                 schedule: Schedule | None = None):
+    """One AdamW step.  Returns ``(updates, new_state, metrics)``; apply with
+    :func:`apply_updates`."""
+    cfg.validate()
+    schedule = schedule or constant(1e-3)
+    count = state["count"] + 1
+    lr = schedule(count)
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip_norm else jnp.asarray(1.0, jnp.float32)
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    mu_leaves, treedef = jax.tree.flatten(state["mu"],
+                                          is_leaf=lambda x: isinstance(x, dict)
+                                          and "q" in x)
+    nu_leaves = treedef.flatten_up_to(state["nu"])
+    g_leaves = treedef.flatten_up_to(grads)
+    p_leaves = treedef.flatten_up_to(params)
+
+    new_mu, new_nu, upd = [], [], []
+    token = None
+    for g, m, v, p in zip(g_leaves, mu_leaves, nu_leaves, p_leaves):
+        gf = g.astype(jnp.float32) * clip
+        if cfg.serialize_leaves and token is not None:
+            gf, _ = jax.lax.optimization_barrier((gf, token))
+        mf = b1 * _load_moment(m, cfg) + (1 - b1) * gf
+        vf = b2 * _load_moment(v, cfg) + (1 - b2) * gf * gf
+        mhat = mf / c1
+        vhat = vf / c2
+        step_dir = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            step_dir = step_dir + cfg.weight_decay * p.astype(jnp.float32)
+        u = (-lr * step_dir).astype(p.dtype)
+        upd.append(u)
+        new_mu.append(_store_moment(mf, cfg))
+        new_nu.append(_store_moment(vf, cfg))
+        token = u.ravel()[:1] if u.ndim else u
+
+    new_state = {
+        "mu": jax.tree.unflatten(treedef, new_mu),
+        "nu": jax.tree.unflatten(treedef, new_nu),
+        "count": count,
+    }
+    updates = jax.tree.unflatten(treedef, upd)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return updates, new_state, metrics
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)

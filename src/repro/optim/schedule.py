@@ -1,0 +1,37 @@
+"""Learning-rate schedules as jittable step -> lr functions."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(lr: float) -> Schedule:
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+    return fn
+
+
+def cosine(peak_lr: float, total_steps: int, *, final_fraction: float = 0.1
+           ) -> Schedule:
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(math.pi * t))
+        return peak_lr * (final_fraction + (1 - final_fraction) * cos)
+    return fn
+
+
+def linear_warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                         *, final_fraction: float = 0.1) -> Schedule:
+    decay = cosine(peak_lr, max(total_steps - warmup_steps, 1),
+                   final_fraction=final_fraction)
+
+    def fn(step):
+        stepf = step.astype(jnp.float32)
+        warm = peak_lr * stepf / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, decay(step - warmup_steps))
+    return fn

@@ -1,0 +1,27 @@
+"""Cache-hierarchy simulator — the "measurement" stand-in.
+
+This container has neither the paper's Haswell-EP testbed nor a TPU, so the
+paper's *measured* columns (Table I, Figs. 7-10) are reproduced by a
+calibrated simulator instead of `likwid-perfctr` runs.  See DESIGN.md §8.
+"""
+from .sim import (
+    SimParams,
+    CacheHierarchy,
+    HASWELL_CACHES,
+    HASWELL_CACHES_COD,
+    simulate_level,
+    simulate_working_set,
+    simulate_scaling,
+    sweep,
+)
+
+__all__ = [
+    "SimParams",
+    "CacheHierarchy",
+    "HASWELL_CACHES",
+    "HASWELL_CACHES_COD",
+    "simulate_level",
+    "simulate_working_set",
+    "simulate_scaling",
+    "sweep",
+]

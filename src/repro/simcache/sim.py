@@ -1,0 +1,228 @@
+"""Calibrated memory-hierarchy simulator for streaming kernels.
+
+The ECM model (``repro.core``) is a *light-speed* model: it neglects
+latencies, clock-domain crossings and end-of-benchmark eviction effects by
+design.  Real measurements (the paper's Table I "Measurement" column) differ
+from the light-speed prediction in reproducible, mechanistic ways that the
+paper itself identifies:
+
+* §VII-A: an off-core latency penalty ("one clock cycle per load stream and
+  cache-level") for kernels with a *low* cycle count per cache line — i.e.
+  the penalty is progressively hidden once the per-CL cycle count grows
+  (more slack for the out-of-order engine to hide latency in);
+* §VII-A: sustained L2 load bandwidth below the advertised 64 B/c
+  (a ~0.3 cy/CL penalty per load stream);
+* §VII-B: eviction traffic still in flight when the benchmark ends
+  ("caches and several store buffers still holding data to be evicted"),
+  which makes *measured* runtimes for evicting kernels better than the
+  light-speed prediction in L3/memory;
+* eviction/load interference on the shared L1<->L2 bus.
+
+This simulator composes the light-speed ECM terms with those four effects.
+The effect magnitudes (:class:`SimParams`) are calibrated once against the
+paper's published measurements (the same way any timing simulator is
+calibrated against hardware) and then frozen; tests pin the simulator to the
+paper's measured values within ~12%.
+
+It also provides working-set sweeps (for the Fig. 7-9 style curves, using
+LRU-streaming residence: a cyclically streamed working set larger than a
+level thrashes it) and multi-core scaling with shared-bandwidth saturation
+(Fig. 10).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core.ecm import ECMModel
+from repro.core.kernel_spec import BENCHMARKS, StreamKernelSpec
+from repro.core.machine import HASWELL_EP, HASWELL_MEASURED_BW, MachineModel
+
+
+@dataclass(frozen=True)
+class SimParams:
+    """Calibrated non-light-speed effects (see module docstring)."""
+
+    l2_load_penalty: float = 0.3      # cy per load stream (L2-resident)
+    l2_evict_interference: float = 0.7  # cy per evict stream (L2-resident)
+    offcore_load_penalty: float = 1.0  # cy per load stream per off-core level
+    mem_load_penalty: float = 2.0     # cy per load stream (memory-resident)
+    #: latency hiding: penalties fade linearly to zero as the light-speed
+    #: cy/CL prediction approaches this many cycles (OoO slack).
+    hide_scale_l3: float = 40.0
+    hide_scale_mem: float = 40.0
+    #: async-eviction credit: fraction-style credits for in-flight evictions
+    evict_credit_l3: float = 3.2      # cy x (evict share of streams)
+    evict_credit_mem_scale: float = 45.0  # hide scale for the mem credit
+    frontend_jitter: float = 0.1      # cy, for kernels with >=4 L1 uops
+
+
+DEFAULT_PARAMS = SimParams()
+
+
+@dataclass(frozen=True)
+class CacheHierarchy:
+    """Capacities for working-set residence (inclusive, LRU, streaming)."""
+
+    l1_bytes: int = 32 * 1024
+    l2_bytes: int = 256 * 1024
+    l3_bytes: int = 35 * 1024 * 1024
+
+    def capacities(self) -> tuple[int, ...]:
+        return (self.l1_bytes, self.l2_bytes, self.l3_bytes)
+
+
+HASWELL_CACHES = CacheHierarchy()
+#: Cluster-on-Die mode: the LLC is segmented, 7 x 2.5 MB per affinity domain
+HASWELL_CACHES_COD = CacheHierarchy(l3_bytes=35 * 1024 * 1024 // 2)
+
+
+# ---------------------------------------------------------------------------
+# Level-resident simulation (Table I's measurement columns)
+# ---------------------------------------------------------------------------
+
+
+def _level_effects(spec: StreamKernelSpec, pred: tuple[float, ...],
+                   p: SimParams) -> list[float]:
+    """Per-level additive effects on top of the light-speed prediction."""
+    loads = spec.loads_explicit + spec.rfo
+    evicts = spec.stores + spec.nt_stores
+    share = evicts / max(spec.mem_streams, 1)
+
+    eff = [0.0, 0.0, 0.0, 0.0]
+    # L1: front-end jitter only
+    if (spec.uop_loads + spec.uop_stores) >= 4:
+        eff[0] = p.frontend_jitter
+    # L2: sub-spec sustained load bandwidth + eviction interference
+    eff[1] = p.l2_load_penalty * loads + p.l2_evict_interference * evicts
+    # L3: off-core latency, hidden with growing per-CL cycles; async-evict credit
+    h3 = max(0.0, 1.0 - pred[2] / p.hide_scale_l3)
+    eff[2] = p.offcore_load_penalty * loads * h3 - p.evict_credit_l3 * share
+    # Mem: one more clock-domain crossing (the eviction credit is applied by
+    # the caller, which knows the per-CL memory cycles)
+    hm = max(0.0, 1.0 - pred[3] / p.hide_scale_mem)
+    eff[3] = p.mem_load_penalty * loads * hm
+    return eff
+
+
+def simulate_level(
+    name_or_spec: str | StreamKernelSpec,
+    level: int,
+    *,
+    machine: MachineModel = HASWELL_EP,
+    sustained_bw: float | None = None,
+    params: SimParams = DEFAULT_PARAMS,
+    optimized_agu: bool = False,
+) -> float:
+    """Simulated ("measured") cy/CL for data resident in ``level``
+    (0=L1, 1=L2, 2=L3, 3=Mem)."""
+    spec = BENCHMARKS[name_or_spec] if isinstance(name_or_spec, str) else name_or_spec
+    bw = sustained_bw or HASWELL_MEASURED_BW.get(spec.name, 27e9)
+    ecm = spec.ecm(machine, bw, optimized_agu=optimized_agu)
+    pred = ecm.predictions()
+    eff = _level_effects(spec, pred, params)
+    out = pred[level] + eff[level]
+    if level == 3 and (spec.stores or spec.nt_stores):
+        # async-eviction credit: evictions still in flight at benchmark end
+        mem_cy_per_cl = machine.mem_cycles_per_line(bw)
+        evict_cy = (spec.stores + spec.nt_stores) * mem_cy_per_cl
+        hm = max(0.0, 1.0 - pred[3] / params.evict_credit_mem_scale)
+        out -= evict_cy * hm
+    return max(out, ecm.t_core)
+
+
+def simulate_table(names: list[str] | None = None,
+                   **kw) -> dict[str, tuple[float, ...]]:
+    names = names or list(BENCHMARKS)
+    return {n: tuple(simulate_level(n, lv, **kw) for lv in range(4))
+            for n in names}
+
+
+# ---------------------------------------------------------------------------
+# Working-set sweeps (Figs. 7-9)
+# ---------------------------------------------------------------------------
+
+
+def _residence_weights(ws_bytes: float, caches: CacheHierarchy
+                       ) -> list[float]:
+    """Blend weights over residence levels for a streamed working set.
+
+    Pure cyclic streaming with LRU gives a sharp thrash transition at each
+    capacity; measurements show a knee.  We model the hit fraction of level
+    ``k`` as ``clamp(2*C_k/WS - 1, 0, 1)`` (full hits up to C, none at 2C).
+    """
+    caps = caches.capacities()
+    weights = []
+    remaining = 1.0
+    for c in caps:
+        h = min(1.0, max(0.0, 2.0 * c / ws_bytes - 1.0)) if ws_bytes > 0 else 1.0
+        w = remaining * h
+        weights.append(w)
+        remaining -= w
+    weights.append(remaining)          # memory
+    return weights
+
+
+def simulate_working_set(
+    name: str,
+    ws_bytes: float,
+    *,
+    machine: MachineModel = HASWELL_EP,
+    caches: CacheHierarchy = HASWELL_CACHES_COD,
+    params: SimParams = DEFAULT_PARAMS,
+    sustained_bw: float | None = None,
+) -> float:
+    """Simulated cy/CL for a given total working-set size in bytes."""
+    w = _residence_weights(ws_bytes, caches)
+    lv = [simulate_level(name, i, machine=machine, params=params,
+                         sustained_bw=sustained_bw) for i in range(4)]
+    return sum(wi * ci for wi, ci in zip(w, lv))
+
+
+def sweep(name: str, sizes_bytes: list[float], **kw) -> list[tuple[float, float]]:
+    """(working_set_bytes, cy/CL) curve — the Fig. 7-9 x/y data."""
+    return [(s, simulate_working_set(name, s, **kw)) for s in sizes_bytes]
+
+
+# ---------------------------------------------------------------------------
+# Multi-core scaling (Fig. 10)
+# ---------------------------------------------------------------------------
+
+
+def simulate_scaling(
+    name: str,
+    n_cores: int,
+    *,
+    machine: MachineModel = HASWELL_EP,
+    domain_bw: float | None = None,
+    cores_per_domain: int = 7,
+    n_domains: int = 2,
+    params: SimParams = DEFAULT_PARAMS,
+    fill_domains_first: bool = True,
+) -> list[float]:
+    """Measured-style scaling curve in updates/s for n = 1..n_cores.
+
+    Each affinity domain saturates at its sustained bandwidth; cores fill
+    one domain after the other (CoD) or round-robin (non-CoD, which behaves
+    like one big domain with the chip bandwidth).
+    """
+    spec = BENCHMARKS[name]
+    bw = domain_bw or HASWELL_MEASURED_BW[spec.name]
+    t_single = simulate_level(name, 3, machine=machine, params=params,
+                              sustained_bw=bw)
+    upd_per_line = spec.elems_per_line(machine.line_bytes) * spec.updates_per_elem
+    p1 = upd_per_line * machine.clock_hz / t_single           # single core
+    bytes_per_update = spec.mem_streams * machine.line_bytes / upd_per_line
+    p_sat_domain = bw / bytes_per_update
+
+    out = []
+    for n in range(1, n_cores + 1):
+        if fill_domains_first:
+            full, rem = divmod(n, cores_per_domain)
+            p = full * min(cores_per_domain * p1, p_sat_domain)
+            p += min(rem * p1, p_sat_domain) if rem else 0.0
+            p = min(p, n_domains * p_sat_domain)
+        else:
+            p = min(n * p1, n_domains * p_sat_domain)
+        out.append(p)
+    return out

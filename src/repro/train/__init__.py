@@ -1,0 +1,21 @@
+"""Training/serving runtime: jitted steps, state, fault-tolerant driver."""
+from .steps import (
+    init_state,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    state_spec,
+)
+from .driver import Trainer, TrainerConfig
+from .elastic import remesh_state
+
+__all__ = [
+    "init_state",
+    "make_prefill_step",
+    "make_serve_step",
+    "make_train_step",
+    "state_spec",
+    "Trainer",
+    "TrainerConfig",
+    "remesh_state",
+]

@@ -1,0 +1,46 @@
+"""Elastic scaling: re-mesh a live training state onto a different mesh.
+
+When nodes are lost (or gained) the driver rebuilds the mesh from the
+surviving devices, recomputes every sharding from the *logical* axis rules
+(the same rules — the mesh is an input, not baked into the model, which is
+the ECM paper's machine-model-as-input lesson applied to distribution), and
+resharded the state with ``jax.device_put``.  The step function is then
+re-jitted for the new mesh by the caller.
+
+On a real cluster the surviving hosts coordinate through the checkpoint
+store: if the state is unreachable (host died holding unreplicated shards)
+the driver falls back to checkpoint-restart instead.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.dist.sharding import ShardingProfile, param_shardings
+from repro.models.common import is_spec
+
+
+def remesh_state(state, state_spec_tree, new_mesh: Mesh,
+                 profile: ShardingProfile):
+    """Reshard ``state`` (array pytree) onto ``new_mesh``."""
+    shardings = param_shardings(state_spec_tree, new_mesh, profile)
+    flat_sh = jax.tree.flatten(shardings,
+                               is_leaf=lambda x: hasattr(x, "spec"))[0]
+    flat_st, treedef = jax.tree.flatten(state)
+    assert len(flat_sh) == len(flat_st), (len(flat_sh), len(flat_st))
+    out = [jax.device_put(x, s) for x, s in zip(flat_st, flat_sh)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def shrink_mesh(mesh: Mesh, lost_fraction_axis: str = "data") -> Mesh:
+    """Build the largest power-of-two sub-mesh after losing one slice of
+    ``lost_fraction_axis`` (simulated node failure)."""
+    names = mesh.axis_names
+    shape = dict(zip(names, mesh.devices.shape))
+    if shape[lost_fraction_axis] <= 1:
+        raise ValueError(f"cannot shrink axis {lost_fraction_axis} below 1")
+    shape[lost_fraction_axis] //= 2
+    devs = mesh.devices
+    idx = [slice(None)] * devs.ndim
+    idx[names.index(lost_fraction_axis)] = slice(0, shape[lost_fraction_axis])
+    return Mesh(devs[tuple(idx)], names)

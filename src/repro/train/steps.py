@@ -1,0 +1,151 @@
+"""Jittable train / prefill / serve steps over the uniform ArchDef API.
+
+The train state is a plain dict pytree (easy to checkpoint and shard):
+
+    {"params": ..., "opt_state": {"mu", "nu", "count"}, "step": i32}
+
+``make_train_step`` supports gradient accumulation via ``lax.scan`` over
+microbatches (batch arrays reshaped to ``(accum, B/accum, ...)``) — the
+standard memory-term reduction when the HBM roofline term dominates.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef
+from repro.models.common import ParamSpec, materialize
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    apply_updates,
+    opt_state_spec,
+)
+from repro.optim.schedule import Schedule
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+
+def init_state(arch: ArchDef, key, opt_cfg: AdamWConfig) -> dict:
+    params = materialize(arch.param_spec(), key)
+    return {
+        "params": params,
+        "opt_state": adamw_init(params, opt_cfg),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_spec(arch: ArchDef, opt_cfg: AdamWConfig) -> dict:
+    pspec = arch.param_spec()
+    return {
+        "params": pspec,
+        "opt_state": opt_state_spec(pspec, opt_cfg),
+        "step": ParamSpec((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def _split_micro(batch: dict, accum: int) -> dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape(accum, b // accum, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def cast_params_for_compute(arch: ArchDef, params):
+    """fp32-master / low-precision-compute: cast >=2-D float params to the
+    arch compute dtype ONCE at step entry.  Hypothesis was that downstream
+    FSDP/TP weight gathers would then move 2 B/param instead of 4; the
+    dry-run measurement REFUTED it for the assigned shapes (GSPMD's chosen
+    schedules were not weight-gather-bound; the extra cast copies cost
+    ~3-5% HBM bytes) — kept as an opt-in knob, default off.  See
+    EXPERIMENTS.md §Perf iteration log.  Grads still arrive in f32 through
+    the cast's VJP (master-weight pattern)."""
+    cdt = getattr(arch.cfg, "dtype", None)
+    if cdt is None:
+        return params
+
+    def cast(p):
+        if p.ndim >= 2 and p.dtype == jnp.float32:
+            return p.astype(cdt)
+        return p
+    return jax.tree.map(cast, params)
+
+
+def make_train_step(arch: ArchDef, opt_cfg: AdamWConfig,
+                    schedule: Schedule | None = None, *, accum: int = 1,
+                    cast_once: bool = False) -> Callable:
+    """Returns ``train_step(state, batch) -> (state, metrics)``."""
+
+    def loss_of(params, batch):
+        p = cast_params_for_compute(arch, params) if cast_once else params
+        return arch.loss(p, batch)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(state: dict, batch: dict):
+        params = state["params"]
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = _split_micro(batch, accum)
+
+            def mb(g_acc, mb_batch):
+                (l, m), g = grad_fn(params, mb_batch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return g_acc, (l, m)
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, ms) = jax.lax.scan(mb, g0, micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(lambda x: jnp.mean(x), ms)
+
+        updates, opt_state, om = adamw_update(
+            grads, state["opt_state"], params, opt_cfg, schedule)
+        new_params = apply_updates(params, updates)
+        metrics = {**metrics, **om, "loss": loss}
+        return (
+            {"params": new_params, "opt_state": opt_state,
+             "step": state["step"] + 1},
+            metrics,
+        )
+
+    return train_step
+
+
+def make_prefill_step(arch: ArchDef, *, max_len: int | None = None,
+                      cast_once: bool = False) -> Callable:
+    def prefill_step(params, batch):
+        p = cast_params_for_compute(arch, params) if cast_once else params
+        return arch.prefill(p, batch, max_len=max_len)
+    return prefill_step
+
+
+def make_serve_step(arch: ArchDef, *, cast_once: bool = False) -> Callable:
+    """One batched decode step: ``serve_step(params, cache, batch)``."""
+    def serve_step(params, cache, batch):
+        p = cast_params_for_compute(arch, params) if cast_once else params
+        return arch.decode(p, cache, batch)
+    return serve_step
+
+
+def make_eval_step(arch: ArchDef) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = arch.loss(params, batch)
+        return metrics
+    return eval_step

@@ -1,0 +1,60 @@
+"""ECM-guided config selection: sanity of the analytic ranking."""
+import pytest
+
+from repro.core.autotune import (
+    CandidateConfig,
+    WorkloadSpec,
+    estimate,
+    rank,
+    recommend,
+)
+
+
+def _w(n_params=2e9, kind="train", batch=256):
+    return WorkloadSpec(n_params=int(n_params), d_model=2048, n_layers=24,
+                        global_batch=batch, seq_len=4096, kind=kind)
+
+
+def test_recommend_is_feasible_and_best():
+    w = _w()
+    ranked = rank(w, 256)
+    best = recommend(w, 256)
+    assert best.summary() == ranked[0].summary()
+    assert best.fits
+    assert all(ranked[0].t_ecm <= e.t_ecm for e in ranked)
+
+
+def test_small_model_prefers_data_parallelism():
+    """A 125M model should want little/no tensor parallelism."""
+    w = WorkloadSpec(n_params=125_000_000, d_model=768, n_layers=12,
+                     global_batch=256, seq_len=4096)
+    best = recommend(w, 256)
+    assert best.config.model <= 2, best.summary()
+
+
+def test_huge_model_wants_model_sharding():
+    """At 111B the per-microbatch ZeRO weight stream makes pure DP lose
+    badly to TP+FSDP (the estimator reproduces the qwen1.5-110b profile
+    choice)."""
+    w = WorkloadSpec(n_params=111_000_000_000, d_model=8192, n_layers=80,
+                     global_batch=256, seq_len=4096)
+    best = recommend(w, 256)
+    assert best.config.model >= 8, best.summary()
+    assert best.fits
+    pure_dp = estimate(w, CandidateConfig(data=256, model=1, accum=16))
+    assert pure_dp.t_ecm > 2 * best.t_ecm
+
+
+def test_decode_estimates_memory_bound():
+    """One-token decode is HBM-dominated at any mesh (the §Roofline
+    observation, reproduced analytically)."""
+    w = _w(kind="decode", batch=128)
+    for e in rank(w, 256)[:3]:
+        assert e.t_hbm > e.t_comp
+
+
+def test_more_chips_never_worse():
+    w = _w(n_params=9e9)
+    t256 = recommend(w, 256).t_ecm
+    t64 = recommend(w, 64).t_ecm
+    assert t256 <= t64 * 1.05

@@ -1,0 +1,81 @@
+"""Checkpoint substrate: atomicity, roundtrip, pruning, async."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (
+    AsyncCheckpointer,
+    CheckpointManager,
+    latest_step,
+    restore_tree,
+    save_tree,
+)
+from repro.ckpt.checkpoint import list_steps, prune
+
+
+def _tree(x=1.0):
+    return {"params": {"w": jnp.full((4, 3), x), "b": jnp.zeros((3,))},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_roundtrip(tmp_path):
+    root = str(tmp_path)
+    t = _tree(2.5)
+    save_tree(root, 10, t, metadata={"loss": 0.5})
+    got, meta = restore_tree(root, 10, t)
+    assert meta["loss"] == 0.5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomic_staging_never_visible(tmp_path):
+    root = str(tmp_path)
+    save_tree(root, 1, _tree())
+    # plant a stale staging dir (simulated crash mid-save)
+    stale = os.path.join(root, "step_00000002.tmp-999")
+    os.makedirs(stale)
+    assert list_steps(root) == [1]          # staging invisible
+    save_tree(root, 3, _tree())             # next save GCs it
+    assert not os.path.exists(stale)
+    assert latest_step(root) == 3
+
+
+def test_prune_keeps_last(tmp_path):
+    root = str(tmp_path)
+    for s in (1, 2, 3, 4):
+        save_tree(root, s, _tree(float(s)))
+    prune(root, keep_last=2)
+    assert list_steps(root) == [3, 4]
+
+
+def test_manager_interval(tmp_path):
+    m = CheckpointManager(str(tmp_path), interval=5, keep_last=2)
+    for s in range(1, 12):
+        m.maybe_save(s, _tree(float(s)))
+    assert list_steps(str(tmp_path)) == [5, 10]
+    s, tree, meta = m.restore_latest(_tree())
+    assert s == 10
+
+
+def test_restore_corrupt_manifest_raises(tmp_path):
+    root = str(tmp_path)
+    save_tree(root, 1, _tree())
+    with open(os.path.join(root, "step_00000001", "manifest.json"), "w") as f:
+        f.write("{")
+    with pytest.raises(json.JSONDecodeError):
+        restore_tree(root, 1, _tree())
+
+
+def test_async_checkpointer(tmp_path):
+    ac = AsyncCheckpointer(str(tmp_path), keep_last=2)
+    for s in (1, 2, 3):
+        ac.submit(s, _tree(float(s)), metadata={"s": s})
+    ac.close()
+    assert list_steps(str(tmp_path)) == [2, 3]
+    got, meta = restore_tree(str(tmp_path), 3, _tree())
+    assert meta["s"] == 3
+    assert float(np.asarray(got["params"]["w"])[0, 0]) == 3.0

@@ -1,0 +1,131 @@
+"""Paper-faithfulness tests: reproduce Table I and §V/§VII numbers exactly.
+
+These tests pin the ECM core to the paper's own published values; they are
+the reproduction baseline everything else builds on.
+"""
+import math
+
+import pytest
+
+from repro.core import (
+    BENCHMARKS,
+    HASWELL_EP,
+    PAPER_TABLE1_INPUTS,
+    PAPER_TABLE1_MEASUREMENTS,
+    PAPER_TABLE1_PREDICTIONS,
+    ECMModel,
+    ScalingModel,
+    haswell_ecm,
+    parse_prediction,
+)
+
+#: Display rounding used by the paper is 1 decimal; the paper itself rounds
+#: intermediates (e.g. 6.2 cy/CL -> 12.5 for two lines), so allow 0.15 cy.
+TOL = 0.15
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_TABLE1_PREDICTIONS))
+def test_table1_predictions(name):
+    """ECM predictions match Table I (and §VII-E for the NT variants)."""
+    model = haswell_ecm(name)
+    expected = PAPER_TABLE1_PREDICTIONS[name]
+    got = model.predictions()
+    assert len(got) == len(expected)
+    for g, e in zip(got, expected):
+        assert g == pytest.approx(e, abs=TOL), (
+            f"{name}: predicted {model.prediction_notation()} "
+            f"vs paper {expected}"
+        )
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_TABLE1_INPUTS))
+def test_table1_model_inputs(name):
+    """The §IV-C construction recipe reproduces the paper's stated inputs.
+
+    Exception (documented in DESIGN.md §8): the paper states T_OL=2 for
+    `update` via a pairing argument; the port model gives 1 cy (two AVX muls
+    on ports 0/1).  Predictions are identical at every level.
+    """
+    model = haswell_ecm(name)
+    paper = ECMModel.parse(PAPER_TABLE1_INPUTS[name])
+    assert model.t_nol == pytest.approx(paper.t_nol, abs=TOL)
+    for g, e in zip(model.transfers, paper.transfers):
+        assert g == pytest.approx(e, abs=TOL)
+    if name != "update":
+        assert model.t_ol == pytest.approx(paper.t_ol, abs=TOL)
+    else:
+        assert model.predictions() == pytest.approx(
+            paper.predictions(), abs=TOL)
+
+
+def test_notation_roundtrip():
+    m = haswell_ecm("ddot")
+    s = m.notation()
+    p = ECMModel.parse(s)
+    assert p.predictions() == pytest.approx(m.predictions(), abs=0.05)
+
+
+def test_prediction_notation_format():
+    m = haswell_ecm("load")
+    assert m.prediction_notation() == "{2 ] 2 ] 4 ] 8.5}"
+    assert parse_prediction("{2 ] 2 ] 4 ] 8.5}") == (2, 2, 4, 8.5)
+
+
+def test_eq1_overlap_rule():
+    """Worked example from §IV-A: {2 || 4 | 4 | 9} -> L2 = max(2, 4+4) = 8."""
+    m = ECMModel(t_ol=2, t_nol=4, transfers=(4, 9), levels=("L1", "L2", "L3"))
+    assert m.prediction("L1") == 4
+    assert m.prediction("L2") == 8
+    assert m.prediction("L3") == 17
+
+
+def test_schoenauer_agu_optimization():
+    """§VII-C: using the port-7 simple AGU + LEA trick, the eight addressing
+    operations complete in three instead of four cycles."""
+    naive = haswell_ecm("schoenauer")
+    opt = haswell_ecm("schoenauer", optimized_agu=True)
+    assert naive.t_nol == 4
+    assert opt.t_nol == 3
+    assert opt.prediction("L1") == 3
+
+
+def test_nt_store_speedups_match_paper():
+    """§VII-E: ECM-inferred speedups of exactly 1.42x (stream) / 1.32x
+    (Schönauer) from non-temporal stores — beyond the roofline 1.33x/1.25x."""
+    st, st_nt = haswell_ecm("striad"), haswell_ecm("striad_nt")
+    sc, sc_nt = haswell_ecm("schoenauer"), haswell_ecm("schoenauer_nt")
+    sp_st = st.prediction("Mem") / st_nt.prediction("Mem")
+    sp_sc = sc.prediction("Mem") / sc_nt.prediction("Mem")
+    assert sp_st == pytest.approx(1.42, abs=0.01)
+    assert sp_sc == pytest.approx(1.32, abs=0.01)
+    # naive roofline (stream-count ratio) underpredicts
+    assert 4 / 3 < sp_st
+    assert 5 / 4 < sp_sc
+
+
+def test_measurement_error_bands():
+    """Model error vs the paper's measured values stays inside Table I's
+    reported error column (max 33%, on copy/L2)."""
+    for name, meas in PAPER_TABLE1_MEASUREMENTS.items():
+        model = haswell_ecm(name)
+        for lvl, (g, m) in enumerate(zip(model.predictions(), meas)):
+            err = abs(g - m) / m
+            assert err <= 0.34, f"{name} level {lvl}: error {err:.0%}"
+
+
+def test_saturation_point_eq2():
+    """Eq. 2 on the ddot model: n_S = ceil(17.1 / 9.1) = 2 per memory domain
+    (the light-speed bound; measured saturation in Fig. 10 is later)."""
+    scal = ScalingModel.from_ecm(haswell_ecm("ddot"))
+    assert scal.n_saturation == 2
+    # per-domain saturated performance: 8 updates per CL / T_L3Mem cycles
+    mups = scal.performance(7, work_per_unit=8, clock_hz=HASWELL_EP.clock_hz)
+    # paper Fig. 10: one domain saturates slightly above 2000 MUp/s
+    assert mups == pytest.approx(2.02e9, rel=0.02)
+
+
+def test_scaling_monotone_and_saturating():
+    scal = ScalingModel.from_ecm(haswell_ecm("striad"))
+    curve = scal.curve(14)
+    assert all(b >= a - 1e-12 for a, b in zip(curve, curve[1:]))
+    assert curve[-1] == pytest.approx(curve[scal.n_saturation - 1], rel=1e-9)

@@ -1,0 +1,63 @@
+"""Energy/EDP model (paper §III-D, Figs. 5/6): structural claims pinned."""
+import pytest
+
+from repro.core import haswell_ecm
+from repro.core.energy import (
+    FrequencyScaledECM,
+    PowerModel,
+    best_config,
+    energy_grid,
+)
+
+FREQS = [1.2, 1.6, 2.0, 2.3, 2.7, 3.0]
+WORK = 10e9 / 3 / 64        # 10 GB striad dataset, CLs of the A array
+
+
+def _grids(coupled: bool):
+    fecm = FrequencyScaledECM(haswell_ecm("striad"), f_nominal_ghz=2.3,
+                              bw_freq_coupled=coupled)
+    return energy_grid(fecm, PowerModel(), n_cores_max=14,
+                       f_ghz_list=FREQS, total_work_units=WORK)
+
+
+def test_race_to_idle_not_optimal():
+    """Max frequency + all cores is never the energy optimum."""
+    g = _grids(False)
+    f, n, _ = best_config(g["energy_J"], FREQS)
+    assert (f, n) != (FREQS[-1], 14)
+
+
+def test_haswell_energy_optimum_at_lowest_frequency():
+    """BW frequency-independent => lowest frequency minimises energy."""
+    g = _grids(False)
+    f, _, _ = best_config(g["energy_J"], FREQS)
+    assert f == FREQS[0]
+
+
+def test_coupled_uarch_needs_higher_frequency():
+    """SNB/IVB-style coupling pushes the optima to higher frequencies."""
+    f_h, _, _ = best_config(_grids(False)["edp_Js"], FREQS)
+    f_s, _, _ = best_config(_grids(True)["edp_Js"], FREQS)
+    assert f_s > f_h
+
+
+def test_haswell_beats_coupled_on_energy_and_edp():
+    """Paper: 12-23% energy, 35-55% EDP improvement over SNB/IVB."""
+    gh, gs = _grids(False), _grids(True)
+    e_ratio = best_config(gs["energy_J"], FREQS)[2] / \
+        best_config(gh["energy_J"], FREQS)[2]
+    d_ratio = best_config(gs["edp_Js"], FREQS)[2] / \
+        best_config(gh["edp_Js"], FREQS)[2]
+    assert 1.05 < e_ratio < 1.35
+    assert 1.15 < d_ratio < 1.65
+
+
+def test_saturation_plateau():
+    """Beyond bandwidth saturation, extra cores only add energy (Fig. 5)."""
+    g = _grids(False)
+    row = g["energy_J"][0]                     # 1.2 GHz
+    t_row = g["runtime_s"][0]
+    # runtime stops improving after some core count...
+    assert t_row[13] == pytest.approx(t_row[7], rel=0.01)
+    # ...while energy keeps growing
+    assert row[13] > row[7]

@@ -1,0 +1,106 @@
+"""Optimizer substrate: AdamW semantics + quantized moments (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    apply_updates,
+    global_norm,
+    opt_state_spec,
+)
+from repro.optim.schedule import constant, cosine, linear_warmup_cosine
+from repro.models.common import ParamSpec, abstract
+
+
+def _params():
+    return {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]]),
+            "b": jnp.zeros((2,))}
+
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.asarray(5.0)}
+    cfg = AdamWConfig(weight_decay=0.0, grad_clip_norm=0.0)
+    state = adamw_init(params, cfg)
+    sched = constant(0.1)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}          # d/dw w^2
+        upd, state, _ = adamw_update(grads, state, params, cfg, sched)
+        params = apply_updates(params, upd)
+    assert abs(float(params["w"])) < 0.5
+
+
+@pytest.mark.parametrize("mdt", ["f32", "bf16", "int8"])
+def test_moment_dtypes_agree_on_direction(mdt):
+    params = _params()
+    cfg = AdamWConfig(moment_dtype=mdt, weight_decay=0.0)
+    state = adamw_init(params, cfg)
+    grads = jax.tree.map(lambda p: jnp.ones_like(p), params)
+    upd, state, _ = adamw_update(grads, state, params, cfg, constant(1e-2))
+    for u in jax.tree.leaves(upd):
+        assert np.all(np.asarray(u) < 0)        # positive grad -> negative step
+
+
+def test_int8_moments_close_to_f32():
+    params = {"w": jnp.linspace(-1, 1, 64).reshape(8, 8)}
+    grads = {"w": jnp.ones((8, 8)) * 0.3}
+    cfg32 = AdamWConfig(moment_dtype="f32", weight_decay=0.0)
+    cfg8 = AdamWConfig(moment_dtype="int8", weight_decay=0.0)
+    s32, s8 = adamw_init(params, cfg32), adamw_init(params, cfg8)
+    p32 = p8 = params
+    for _ in range(10):
+        u32, s32, _ = adamw_update(grads, s32, p32, cfg32, constant(1e-2))
+        u8, s8, _ = adamw_update(grads, s8, p8, cfg8, constant(1e-2))
+        p32, p8 = apply_updates(p32, u32), apply_updates(p8, u8)
+    np.testing.assert_allclose(np.asarray(p32["w"]), np.asarray(p8["w"]),
+                               rtol=0.05, atol=5e-3)
+
+
+def test_grad_clipping_bounds_update():
+    params = {"w": jnp.zeros((4,))}
+    cfg = AdamWConfig(grad_clip_norm=1.0, weight_decay=0.0)
+    state = adamw_init(params, cfg)
+    huge = {"w": jnp.full((4,), 1e6)}
+    _, _, metrics = adamw_update(huge, state, params, cfg, constant(1.0))
+    assert float(metrics["grad_norm"]) > 1e5     # reported pre-clip
+
+
+def test_opt_state_spec_matches_init_structure():
+    pspec = {"w": ParamSpec((8, 4), ("embed", "mlp")),
+             "b": ParamSpec((4,), ("mlp",), init="zeros")}
+    for mdt in ("f32", "bf16", "int8"):
+        cfg = AdamWConfig(moment_dtype=mdt)
+        params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), pspec,
+                              is_leaf=lambda x: isinstance(x, ParamSpec))
+        st_real = adamw_init(params, cfg)
+        st_abs = abstract(opt_state_spec(pspec, cfg))
+        real_flat = jax.tree.flatten(st_real)[1]
+        abs_flat = jax.tree.flatten(st_abs)[1]
+        assert str(real_flat) == str(abs_flat)
+        for a, b in zip(jax.tree.leaves(st_real), jax.tree.leaves(st_abs)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+
+
+@given(st.floats(1e-5, 1.0), st.integers(1, 50), st.integers(51, 500))
+@settings(max_examples=20, deadline=None)
+def test_schedule_properties(peak, warm, total):
+    sched = linear_warmup_cosine(peak, warm, total)
+    lrs = [float(sched(jnp.asarray(s))) for s in range(0, total, 7)]
+    assert all(0 <= lr <= peak * (1 + 1e-6) for lr in lrs)
+    # warmup is nondecreasing
+    warm_lrs = [float(sched(jnp.asarray(s))) for s in range(warm)]
+    assert all(b >= a - 1e-9 for a, b in zip(warm_lrs, warm_lrs[1:]))
+
+
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=8))
+@settings(max_examples=30, deadline=None)
+def test_global_norm_matches_numpy(xs):
+    tree = {"x": jnp.asarray(xs, jnp.float32)}
+    want = np.linalg.norm(np.asarray(xs, np.float32))
+    got = float(global_norm(tree))
+    assert got == pytest.approx(want, rel=1e-4, abs=1e-4)

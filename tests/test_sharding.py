@@ -1,0 +1,83 @@
+"""Logical-axis sharding: rule resolution, divisibility fallbacks, remesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.sharding import (
+    PROFILES,
+    ShardingProfile,
+    logical_to_pspec,
+    param_shardings,
+    tp_dp,
+)
+from repro.models.common import ParamSpec
+from repro.train.elastic import remesh_state, shrink_mesh
+
+
+def _mesh(shape=(2, 2), axes=("data", "model")):
+    devs = np.array(jax.devices()[:1] * int(np.prod(shape))).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def test_logical_to_pspec_basic():
+    rules = {"embed": None, "mlp": "model", "batch": ("data",)}
+    ps = logical_to_pspec(("embed", "mlp"), rules)
+    assert ps == P(None, "model")
+
+
+def test_duplicate_mesh_axis_deduped():
+    rules = {"embed": "model", "mlp": "model"}
+    ps = logical_to_pspec(("embed", "mlp"), rules)
+    assert ps == P("model", None)
+
+
+def test_divisibility_fallback_replicates():
+    mesh = _mesh((1, 2))
+    rules = {"heads": "model"}
+    ps = logical_to_pspec(("heads",), rules, (3,), mesh)   # 3 % 2 != 0
+    assert ps == P(None)
+    ps2 = logical_to_pspec(("heads",), rules, (4,), mesh)
+    assert ps2 == P("model")
+
+
+def test_ensure_model_axis_fallback():
+    mesh = _mesh((1, 2))
+    prof = ShardingProfile("t", rules={"heads": "model"})
+    spec = {"wq": ParamSpec((4096, 3, 256), ("embed", "heads", "head_dim"))}
+    sh = param_shardings(spec, mesh, prof, ensure_model_axis=True,
+                         min_elems=1 << 20)
+    # heads=3 indivisible -> largest divisible dim (embed) gets model
+    assert sh["wq"].spec == P("model", None, None)
+    # but layers axes are never chosen
+    spec2 = {"w": ParamSpec((2048, 4096), ("layers", "embed"))}
+    sh2 = param_shardings(spec2, mesh, prof, ensure_model_axis=True,
+                          min_elems=1 << 20)
+    assert sh2["w"].spec == P(None, "model")
+
+
+def test_profiles_construct_both_modes():
+    for name, fn in PROFILES.items():
+        for mp in (False, True):
+            p = fn(mp)
+            assert "batch" in p.activation_rules, name
+
+
+def test_remesh_state_roundtrip():
+    mesh = _mesh((1, 1))
+    prof = tp_dp(False)
+    spec = {"w": ParamSpec((8, 4), ("embed", "mlp"))}
+    state = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4)}
+    out = remesh_state(state, spec, mesh, prof)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(state["w"]))
+
+
+def test_shrink_mesh():
+    mesh = _mesh((2, 2))
+    small = shrink_mesh(mesh, "data")
+    assert dict(zip(small.axis_names, small.devices.shape)) == {
+        "data": 1, "model": 2}
+    with pytest.raises(ValueError):
+        shrink_mesh(small, "data")

@@ -1,0 +1,78 @@
+"""Simulator ("measurement" oracle) vs the paper's measured values."""
+import pytest
+
+from repro.core import (
+    BENCHMARKS,
+    HASWELL_EP,
+    HASWELL_MEASURED_BW,
+    PAPER_TABLE1_MEASUREMENTS,
+    haswell_ecm,
+)
+from repro.simcache import (
+    HASWELL_CACHES_COD,
+    simulate_level,
+    simulate_scaling,
+    simulate_working_set,
+    sweep,
+)
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_TABLE1_MEASUREMENTS))
+def test_simulator_matches_paper_measurements(name):
+    meas = PAPER_TABLE1_MEASUREMENTS[name]
+    for lv in range(4):
+        sim = simulate_level(name, lv)
+        assert sim == pytest.approx(meas[lv], rel=0.12), (
+            f"{name} level {lv}: sim {sim:.2f} vs paper {meas[lv]}"
+        )
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_TABLE1_MEASUREMENTS))
+def test_simulator_error_within_paper_error_band(name):
+    """Model-vs-simulator error stays within Table I's model-vs-hardware
+    error band (max 33%) — the simulator is a plausible hardware stand-in."""
+    model = haswell_ecm(name)
+    for lv in range(4):
+        sim = simulate_level(name, lv)
+        err = abs(model.prediction(lv) - sim) / sim
+        assert err <= 0.35
+
+
+def test_levels_are_monotone():
+    for name in BENCHMARKS:
+        vals = [simulate_level(name, lv) for lv in range(4)]
+        assert vals == sorted(vals), name
+
+
+def test_working_set_residence():
+    tiny = simulate_working_set("ddot", 8 * 1024)
+    huge = simulate_working_set("ddot", 512 * 1024 * 1024)
+    assert tiny == pytest.approx(simulate_level("ddot", 0), rel=1e-6)
+    assert huge == pytest.approx(simulate_level("ddot", 3), rel=0.02)
+
+
+def test_sweep_monotone_nondecreasing():
+    sizes = [2.0**k * 1024 for k in range(3, 18)]
+    curve = sweep("striad", sizes)
+    ys = [y for _, y in curve]
+    assert all(b >= a - 1e-9 for a, b in zip(ys, ys[1:]))
+
+
+def test_scaling_saturates_at_domain_bandwidth():
+    """Fig. 10: ddot saturates slightly above 2000 MUp/s per memory domain,
+    slightly above 4000 MUp/s per chip (both domains)."""
+    curve = simulate_scaling("ddot", 14)
+    spec = BENCHMARKS["ddot"]
+    bpu = spec.mem_streams * 64 / 8            # 16 B per update
+    p_domain = HASWELL_MEASURED_BW["ddot"] / bpu
+    assert curve[-1] == pytest.approx(2 * p_domain, rel=1e-6)
+    assert 3.9e9 < curve[-1] < 4.2e9
+    # measured-style saturation is later than the light-speed Eq. 2 point
+    assert curve[3] == pytest.approx(min(4 * curve[0], p_domain), rel=1e-6)
+
+
+def test_cod_vs_noncod_same_peak():
+    """Fig. 10: peak performance of CoD and non-CoD modes is nearly equal."""
+    cod = simulate_scaling("striad", 14, fill_domains_first=True)
+    noncod = simulate_scaling("striad", 14, fill_domains_first=False)
+    assert cod[-1] == pytest.approx(noncod[-1], rel=0.05)
