@@ -5,10 +5,12 @@ identical chip performance; CoD saturates each 7-core memory domain with
 ~4 cores (2x4 cores for the chip = same count as non-CoD's 8)."""
 from __future__ import annotations
 
-from repro.core import BENCHMARKS, HASWELL_EP, HASWELL_MEASURED_BW, haswell_ecm
+import time
+
+from repro.core import BENCHMARKS, benchmark_batch
 from repro.core.machine import HASWELL_CHIP_BW_NONCOD
-from repro.core.saturation import ScalingModel
-from repro.simcache import simulate_scaling
+from repro.core.saturation import batch_saturation
+from repro.simcache import scaling_batch
 
 from .util import fmt, table
 
@@ -17,37 +19,40 @@ KERNELS = ("ddot", "striad", "schoenauer")
 
 def run() -> str:
     out = []
+    # both modes for all kernels: vectorized (K x cores) evaluations
+    from repro.simcache import EVAL_COUNTERS
+
+    t0 = time.perf_counter()
+    evals0 = EVAL_COUNTERS["batch_array_evals"]
+    _, cod = scaling_batch(KERNELS, 14, fill_domains_first=True)
+    _, noncod = scaling_batch(
+        KERNELS, 14,
+        domain_bw={k: HASWELL_CHIP_BW_NONCOD[k] for k in KERNELS},
+        cores_per_domain=14, n_domains=1, fill_domains_first=False)
+    n_sat = batch_saturation(benchmark_batch(KERNELS))
+    dt = time.perf_counter() - t0
+    n_evals = EVAL_COUNTERS["batch_array_evals"] - evals0
+
     rows = []
-    for name in KERNELS:
-        spec = BENCHMARKS[name]
-        upd = spec.elems_per_line(64) * spec.updates_per_elem
-        ecm_cod = haswell_ecm(name)
-        sat = ScalingModel.from_ecm(ecm_cod)
-        cod = simulate_scaling(name, 14, fill_domains_first=True)
-        noncod = simulate_scaling(
-            name, 14, domain_bw=HASWELL_CHIP_BW_NONCOD[name],
-            cores_per_domain=14, n_domains=1, fill_domains_first=False)
+    for i, name in enumerate(KERNELS):
         rows.append([
             name,
-            sat.n_saturation,
-            fmt(cod[3] / 1e6, 0), fmt(cod[-1] / 1e6, 0),
-            fmt(noncod[7] / 1e6, 0), fmt(noncod[-1] / 1e6, 0),
-            fmt(cod[-1] / noncod[-1], 3),
+            int(n_sat[i]),
+            fmt(cod[i, 3] / 1e6, 0), fmt(cod[i, -1] / 1e6, 0),
+            fmt(noncod[i, 7] / 1e6, 0), fmt(noncod[i, -1] / 1e6, 0),
+            fmt(cod[i, -1] / noncod[i, -1], 3),
         ])
     out.append(table(
         ["kernel", "n_sat/domain (Eq.2)", "CoD P(4) MUp/s", "CoD P(14)",
          "nonCoD P(8)", "nonCoD P(14)", "CoD/nonCoD"],
         rows))
     out.append("\nper-core scaling curve (ddot, MUp/s):")
-    cod = simulate_scaling("ddot", 14)
-    noncod = simulate_scaling("ddot", 14,
-                              domain_bw=HASWELL_CHIP_BW_NONCOD["ddot"],
-                              cores_per_domain=14, n_domains=1,
-                              fill_domains_first=False)
     out.append(table(["cores", "CoD", "non-CoD"],
                      [[n + 1, fmt(c / 1e6, 0), fmt(nc / 1e6, 0)]
-                      for n, (c, nc) in enumerate(zip(cod, noncod))]))
-    out.append("\npaper: ddot saturates slightly above 4000 MUp/s (CoD), "
+                      for n, (c, nc) in enumerate(zip(cod[0], noncod[0]))]))
+    out.append(f"\n[batch eval: {cod.size + noncod.size} (kernel x cores) "
+               f"points in {n_evals} array ops, {dt * 1e3:.2f} ms wall]")
+    out.append("paper: ddot saturates slightly above 4000 MUp/s (CoD), "
                "slightly below (non-CoD)")
     return "\n".join(out)
 

@@ -3,11 +3,17 @@ ECM prediction (light-speed, per residence level) against the simulator's
 "measurement" curve.  Fig. 9's right panel — the AGU-optimized Schönauer
 triad (port-7 simple-AGU + LEA trick, §VII-C) — is included as
 ``schoenauer(opt-AGU)``: T_nOL drops from 4 to 3 cycles.
+
+The whole (kernels x sizes) surface of each figure is one vectorized
+``sweep_batch`` evaluation (the per-point scalar path used to cost
+4 model builds per size per kernel).
 """
 from __future__ import annotations
 
+import time
+
 from repro.core import haswell_ecm
-from repro.simcache import HASWELL_CACHES_COD, simulate_working_set, sweep
+from repro.simcache import EVAL_COUNTERS, sweep_batch
 
 from .util import fmt, pred_str, table
 
@@ -23,12 +29,20 @@ FIGS = {
 
 def run() -> str:
     out = []
+    sizes = [kb * 1024 for kb in SIZES_KB]
+    t0 = time.perf_counter()
+    evals0 = EVAL_COUNTERS["batch_array_evals"]
+    surfaces = {fig: sweep_batch(kernels, sizes)[1]
+                for fig, kernels in FIGS.items()}
+    dt = time.perf_counter() - t0
+    n_points = sum(s.size for s in surfaces.values())
+    n_evals = EVAL_COUNTERS["batch_array_evals"] - evals0
+
     for fig, kernels in FIGS.items():
+        surface = surfaces[fig]
         rows = []
-        for kb in SIZES_KB:
-            row = [kb]
-            for k in kernels:
-                row.append(fmt(simulate_working_set(k, kb * 1024), 1))
+        for j, kb in enumerate(SIZES_KB):
+            row = [kb] + [fmt(surface[i, j], 1) for i in range(len(kernels))]
             rows.append(row)
         hdr = ["WS_KiB"] + [f"{k} sim" for k in kernels]
         out.append(f"== {fig}: working-set sweep (cy/CL) ==")
@@ -36,6 +50,9 @@ def run() -> str:
         for k in kernels:
             out.append(f"  {k}: ECM prediction {pred_str(haswell_ecm(k).predictions())}")
         out.append("")
+
+    out.append(f"[batch eval: {n_points} (kernel x size) points in "
+               f"{n_evals} array ops, {dt * 1e3:.2f} ms wall]")
 
     # Fig. 9 right panel: naive vs AGU-optimized Schönauer
     naive = haswell_ecm("schoenauer")

@@ -2,10 +2,18 @@
 adaptation (stream kernels + §Roofline table from the dry-run artifacts).
 
     PYTHONPATH=src python -m benchmarks.run [--only <name>]
+    PYTHONPATH=src python -m benchmarks.run --json [BENCH_pipeline.json]
+
+``--json`` skips the report sections and emits the perf-trajectory
+artifact instead: per-kernel pipelined wall-clock (num_stages 1/2/3, the
+fused triad->update chain) and model-eval throughput of the vectorized
+``ECMBatch`` path vs the per-point scalar API, so future PRs can track
+both hot paths.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 from . import (
@@ -45,11 +53,118 @@ SECTIONS = [
 ]
 
 
+def model_eval_benchmark(n_sizes: int = 2000, n_cores: int = 64) -> dict:
+    """Model-eval throughput: vectorized batch path vs per-point API calls.
+
+    The batch path evaluates the full (9 kernels x n_sizes) working-set
+    surface and the (9 kernels x n_cores) scaling surface in a handful of
+    array ops; the scalar baseline calls the per-point API the way the
+    pre-batch ``sweep()`` / ``simulate_scaling()`` did (subsampled and
+    extrapolated, it is that slow).
+    """
+    import numpy as np
+
+    from repro.core import BENCHMARKS
+    from repro.simcache import (
+        EVAL_COUNTERS,
+        reset_counters,
+        scaling_batch,
+        simulate_level,
+        simulate_working_set,
+        sweep_batch,
+    )
+
+    names = tuple(BENCHMARKS)
+    sizes = list(np.geomspace(16 * 1024, 256 * 1024 * 1024, n_sizes))
+
+    reset_counters()
+    t0 = time.perf_counter()
+    _, surface = sweep_batch(names, sizes)
+    _, scaling = scaling_batch(names, n_cores)
+    dt_batch = time.perf_counter() - t0
+    batch_points = int(surface.size + scaling.size)
+    batch_array_evals = EVAL_COUNTERS["batch_array_evals"]
+
+    # scalar baseline: one API call per (kernel, size) point; 4 levels per
+    # call internally (the old sweep() shape).  Subsample, then extrapolate.
+    sub = sizes[:: max(n_sizes // 20, 1)]
+    t0 = time.perf_counter()
+    for n in names:
+        for s_ in sub:
+            simulate_working_set(n, s_)
+        for lv in range(4):
+            simulate_level(n, lv)
+    dt_sub = time.perf_counter() - t0
+    scalar_points = len(names) * (len(sub) + 4)
+    scalar_rate = scalar_points / dt_sub
+
+    return {
+        "batch_points": batch_points,
+        "batch_wall_s": dt_batch,
+        "batch_points_per_s": batch_points / dt_batch,
+        "batch_array_evals": batch_array_evals,
+        "python_calls_per_point_batch": batch_array_evals / batch_points,
+        "scalar_points_per_s": scalar_rate,
+        "python_calls_per_point_scalar": 1.0,
+        "throughput_ratio": (batch_points / dt_batch) / scalar_rate,
+        "per_point_call_reduction": batch_points / batch_array_evals,
+    }
+
+
+def autotune_rank_benchmark(n_chips: int = 4096) -> dict:
+    """Candidate-ranking throughput of the vectorized autotuner."""
+    from repro.core.autotune import WorkloadSpec, candidates, estimate, rank
+
+    w = WorkloadSpec(n_params=9_000_000_000, d_model=4096, n_layers=40,
+                     global_batch=4096, seq_len=4096)
+    cands = candidates(n_chips, w)
+    t0 = time.perf_counter()
+    ranked = rank(w, n_chips)
+    dt_batch = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for c in cands[: max(len(cands) // 4, 1)]:
+        estimate(w, c)
+    dt_scalar = (time.perf_counter() - t0) * 4
+    return {
+        "n_candidates": len(cands),
+        "batch_rank_wall_s": dt_batch,
+        "scalar_estimate_wall_s_extrapolated": dt_scalar,
+        "best_config": ranked[0].summary() if ranked else None,
+    }
+
+
+def emit_json(path: str) -> None:
+    from . import tpu_stream_ecm
+
+    payload = {
+        "pipeline": tpu_stream_ecm.pipeline_timings(rows=256, repeats=3),
+        "model_eval": model_eval_benchmark(),
+        "autotune": autotune_rank_benchmark(),
+        "schema": 1,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    me = payload["model_eval"]
+    print(f"[bench] wrote {path}: "
+          f"{me['batch_points_per_s']:.0f} model points/s batch vs "
+          f"{me['scalar_points_per_s']:.0f} scalar "
+          f"({me['throughput_ratio']:.0f}x), "
+          f"{me['per_point_call_reduction']:.0f}x fewer Python-level calls "
+          f"per point")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[s[0] for s in SECTIONS])
+    ap.add_argument("--json", nargs="?", const="BENCH_pipeline.json",
+                    default=None, metavar="PATH",
+                    help="emit the perf-trajectory JSON instead of the "
+                         "report sections")
     args = ap.parse_args()
+    if args.json:
+        emit_json(args.json)
+        return 0
     for name, title, mod in SECTIONS:
         if args.only and name != args.only:
             continue

@@ -8,13 +8,14 @@ Paper-faithful pieces: :mod:`.ecm` (model + Eq. 1 overlap rule + notation),
 TPU adaptation: :mod:`.hlo` (compiled-HLO resource extraction) and
 :mod:`.tpu_ecm` (three-term compute/HBM/ICI ECM for JAX programs).
 """
-from .ecm import ECMModel, parse_prediction
+from .ecm import ECMBatch, ECMModel, parse_prediction
 from .kernel_spec import (
     BENCHMARKS,
     PAPER_TABLE1_INPUTS,
     PAPER_TABLE1_MEASUREMENTS,
     PAPER_TABLE1_PREDICTIONS,
     StreamKernelSpec,
+    benchmark_batch,
     haswell_ecm,
 )
 from .machine import (
@@ -26,9 +27,10 @@ from .machine import (
     TPUMachineModel,
     TransferLevel,
 )
-from .saturation import ScalingModel, domain_scaling
+from .saturation import ScalingModel, batch_curve, batch_saturation, domain_scaling
 
 __all__ = [
+    "ECMBatch",
     "ECMModel",
     "parse_prediction",
     "BENCHMARKS",
@@ -36,7 +38,10 @@ __all__ = [
     "PAPER_TABLE1_MEASUREMENTS",
     "PAPER_TABLE1_PREDICTIONS",
     "StreamKernelSpec",
+    "benchmark_batch",
     "haswell_ecm",
+    "batch_curve",
+    "batch_saturation",
     "HASWELL_EP",
     "HASWELL_MEASURED_BW",
     "TPU_V5E",

@@ -17,6 +17,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from .machine import TPU_V5E, TPUMachineModel
 
 
@@ -80,50 +82,76 @@ class Estimate:
                 "hbm_gib": self.hbm_bytes / 2**30, "fits": self.fits}
 
 
-def estimate(w: WorkloadSpec, c: CandidateConfig,
-             m: TPUMachineModel = TPU_V5E) -> Estimate:
-    """Three-term ECM estimate for one candidate (per chip, per step)."""
-    chips = c.chips
+def estimate_batch(w: WorkloadSpec, configs: "list[CandidateConfig]",
+                   m: TPUMachineModel = TPU_V5E) -> dict[str, np.ndarray]:
+    """Three-term ECM estimates for ALL candidates in single array ops.
+
+    Returns a dict of (C,)-shaped arrays: ``t_comp``, ``t_hbm``,
+    ``t_coll``, ``t_ecm``, ``hbm_bytes``, ``fits``.  This is the
+    autotuner's hot path: a mesh scan over thousands of (data, model,
+    accum) factorizations costs one NumPy pass, not one Python estimate
+    per candidate.
+    """
+    data = np.array([c.data for c in configs], float)
+    model = np.array([c.model for c in configs], float)
+    accum = np.array([c.accum for c in configs], float)
+    chips = data * model
+
     # ---- compute ----
     t_comp = w.step_flops * w.remat_factor / (chips * m.peak_bf16_flops)
 
     # ---- memory: weights + optimizer resident; activations streamed ----
-    tokens_chip = w.tokens / c.data
+    tokens_chip = w.tokens / data
     act_bytes = (tokens_chip * w.n_layers * w.act_streams * w.d_model
-                 * w.dtype_bytes / c.model)
-    micro = max(c.accum, 1)
+                 * w.dtype_bytes / model)
+    micro = np.maximum(accum, 1.0)
     # FSDP/ZeRO semantics: params shard over (model x data); every
     # microbatch gathers + reads the full model-shard of the weights
-    weight_stream = (w.n_params * w.dtype_bytes / c.model
-                     * (micro if w.kind == "train" else 1))
+    weight_stream = (w.n_params * w.dtype_bytes / model
+                     * (micro if w.kind == "train" else 1.0))
     hbm_stream = act_bytes * (3.0 if w.kind == "train" else 1.0) \
         + weight_stream
     t_hbm = hbm_stream / m.hbm_bytes_per_s
 
     # ---- collectives ----
-    coll = 0.0
+    coll = np.zeros_like(data)
     if w.kind == "train":
         # grad reduce-scatter+all-gather over data: 2 (N-1)/N bytes/param
-        n = c.data
-        coll += 2 * (n - 1) / max(n, 1) * w.n_params * 4 / (c.model * c.data)
+        coll += (2 * (data - 1) / np.maximum(data, 1) * w.n_params * 4
+                 / (model * data))
         # FSDP weight all-gather over data, once per microbatch
-        coll += (micro * (c.data - 1) / max(c.data, 1)
-                 * w.n_params * w.dtype_bytes / c.model)
-    if c.model > 1:
-        # TP: 2 all-reduces of the residual stream per layer
-        n = c.model
-        stream = tokens_chip * w.d_model * w.dtype_bytes
-        coll += 2 * w.n_layers * 2 * (n - 1) / n * stream / n
+        coll += (micro * (data - 1) / np.maximum(data, 1)
+                 * w.n_params * w.dtype_bytes / model)
+    # TP: 2 all-reduces of the residual stream per layer (only model > 1)
+    tp_stream = tokens_chip * w.d_model * w.dtype_bytes
+    coll += np.where(
+        model > 1,
+        2 * w.n_layers * 2 * (model - 1) / model * tp_stream / model,
+        0.0)
     t_coll = coll / (m.ici_link_bytes_per_s * 1)
 
     # ---- residency ----
     resident = (w.n_params * (w.dtype_bytes + (w.opt_bytes_per_param
                                                if w.kind == "train" else 0))
-                / (c.model * c.data))
+                / (model * data))
     live_act = act_bytes / micro + tokens_chip / micro * w.d_model \
-        * w.dtype_bytes * w.n_layers / c.model   # remat carries
-    fits = resident + live_act < m.hbm_bytes * 0.9
-    return Estimate(c, t_comp, t_hbm, t_coll, resident + live_act, fits)
+        * w.dtype_bytes * w.n_layers / model   # remat carries
+    hbm_bytes = resident + live_act
+    fits = hbm_bytes < m.hbm_bytes * 0.9
+    t_ecm = np.maximum(t_comp, t_hbm) + t_coll
+    return {"t_comp": t_comp, "t_hbm": t_hbm, "t_coll": t_coll,
+            "t_ecm": t_ecm, "hbm_bytes": hbm_bytes, "fits": fits}
+
+
+def estimate(w: WorkloadSpec, c: CandidateConfig,
+             m: TPUMachineModel = TPU_V5E) -> Estimate:
+    """Three-term ECM estimate for one candidate (per chip, per step).
+
+    Scalar view of :func:`estimate_batch`."""
+    b = estimate_batch(w, [c], m)
+    return Estimate(c, float(b["t_comp"][0]), float(b["t_hbm"][0]),
+                    float(b["t_coll"][0]), float(b["hbm_bytes"][0]),
+                    bool(b["fits"][0]))
 
 
 def candidates(n_chips: int, w: WorkloadSpec,
@@ -144,11 +172,22 @@ def candidates(n_chips: int, w: WorkloadSpec,
 
 def rank(w: WorkloadSpec, n_chips: int = 256,
          m: TPUMachineModel = TPU_V5E) -> list[Estimate]:
-    """All feasible candidates, best (lowest ECM time) first."""
-    ests = [estimate(w, c, m) for c in candidates(n_chips, w)]
-    feasible = [e for e in ests if e.fits]
-    pool = feasible or ests
-    return sorted(pool, key=lambda e: e.t_ecm)
+    """All feasible candidates, best (lowest ECM time) first.
+
+    Routed through :func:`estimate_batch`: one vectorized evaluation over
+    the whole candidate set, then a NumPy argsort — Estimate objects are
+    materialized only for the returned ranking."""
+    cands = candidates(n_chips, w)
+    if not cands:
+        return []
+    b = estimate_batch(w, cands, m)
+    keep = b["fits"] if bool(b["fits"].any()) else np.ones(len(cands), bool)
+    idx = np.flatnonzero(keep)
+    order = idx[np.argsort(b["t_ecm"][idx], kind="stable")]
+    return [Estimate(cands[i], float(b["t_comp"][i]), float(b["t_hbm"][i]),
+                     float(b["t_coll"][i]), float(b["hbm_bytes"][i]),
+                     bool(b["fits"][i]))
+            for i in order]
 
 
 def recommend(w: WorkloadSpec, n_chips: int = 256,

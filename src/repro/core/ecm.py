@@ -25,6 +25,8 @@ import math
 import re
 from dataclasses import dataclass, field, replace
 
+import numpy as np
+
 
 def _fmt(x: float) -> str:
     """Format a cycle count the way the paper does (1 decimal, trim .0)."""
@@ -156,6 +158,126 @@ class ECMModel:
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         nm = f"{self.name}: " if self.name else ""
         return f"{nm}{self.notation()} {self.unit} -> T_ECM = {self.prediction_notation()}"
+
+
+# ---------------------------------------------------------------------------
+# Vectorized batch evaluation
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ECMBatch:
+    """A batch of ECM models over one shared level hierarchy, evaluated as
+    NumPy array ops instead of per-model Python calls.
+
+    All time arrays share an arbitrary leading batch shape ``B`` (kernels,
+    kernels x sizes, candidates, ...): ``t_ol``/``t_nol`` are ``B``-shaped
+    and ``transfers`` is ``B + (len(levels) - 1,)``.  The scalar
+    :class:`ECMModel` API is available per element via :meth:`scalar` —
+    the two agree exactly (same Eq. 1, same floats).
+    """
+
+    t_ol: np.ndarray
+    t_nol: np.ndarray
+    transfers: np.ndarray
+    levels: tuple[str, ...] = ("L1", "L2", "L3", "Mem")
+    names: tuple[str, ...] = ()
+    unit: str = "cy/CL"
+
+    def __post_init__(self):
+        object.__setattr__(self, "t_ol", np.asarray(self.t_ol, float))
+        object.__setattr__(self, "t_nol", np.asarray(self.t_nol, float))
+        object.__setattr__(self, "transfers",
+                           np.asarray(self.transfers, float))
+        if self.transfers.shape[-1] != len(self.levels) - 1:
+            raise ValueError(
+                f"need transfers.shape[-1] == len(levels)-1, got "
+                f"{self.transfers.shape[-1]} vs {len(self.levels)} levels")
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_models(cls, models: "list[ECMModel] | tuple[ECMModel, ...]"
+                    ) -> "ECMBatch":
+        levels = models[0].levels
+        for m in models:
+            if m.levels != levels:
+                raise ValueError(f"level mismatch: {m.levels} vs {levels}")
+        return cls(
+            t_ol=np.array([m.t_ol for m in models]),
+            t_nol=np.array([m.t_nol for m in models]),
+            transfers=np.array([m.transfers for m in models]),
+            levels=levels,
+            names=tuple(m.name for m in models),
+            unit=models[0].unit,
+        )
+
+    @property
+    def batch_shape(self) -> tuple[int, ...]:
+        return self.t_ol.shape
+
+    def __len__(self) -> int:
+        return int(np.prod(self.batch_shape)) if self.batch_shape else 1
+
+    # ------------------------------------------------------------------
+    # Eq. (1), vectorized
+    # ------------------------------------------------------------------
+    @property
+    def t_core(self) -> np.ndarray:
+        return np.maximum(self.t_nol, self.t_ol)
+
+    def t_data(self) -> np.ndarray:
+        """Cumulative transfer time per level: ``B + (L,)``, level 0 = 0."""
+        zero = np.zeros(self.transfers.shape[:-1] + (1,))
+        return np.concatenate(
+            [zero, np.cumsum(self.transfers, axis=-1)], axis=-1)
+
+    def predictions(self) -> np.ndarray:
+        """``T_ECM`` for every batch element x level: ``B + (L,)``."""
+        return np.maximum(self.t_nol[..., None] + self.t_data(),
+                          self.t_ol[..., None])
+
+    def prediction(self, level: int | str) -> np.ndarray:
+        idx = (level if isinstance(level, int)
+               else self.levels.index(level))
+        return self.predictions()[..., idx]
+
+    def performance(self, work_per_unit, level: int | str,
+                    clock_hz: float | None = None) -> np.ndarray:
+        p = np.asarray(work_per_unit, float) / self.prediction(level)
+        return p * clock_hz if clock_hz else p
+
+    # ------------------------------------------------------------------
+    # Utilities
+    # ------------------------------------------------------------------
+    def scaled(self, factor) -> "ECMBatch":
+        f = np.asarray(factor, float)
+        return replace(self, t_ol=self.t_ol * f, t_nol=self.t_nol * f,
+                       transfers=self.transfers * f[..., None]
+                       if f.ndim else self.transfers * f)
+
+    def with_penalty(self, penalty: np.ndarray) -> "ECMBatch":
+        """Add per-transfer-edge penalty cycles (broadcast over ``B``)."""
+        return replace(self, transfers=self.transfers + penalty)
+
+    def scalar(self, i) -> ECMModel:
+        """Thin scalar view of batch element ``i`` (flat index or tuple)."""
+        name = ""
+        if isinstance(i, int):
+            if self.names:
+                name = self.names[i]
+            if len(self.batch_shape) > 1:       # flat index into B dims
+                i = np.unravel_index(i, self.batch_shape)
+        return ECMModel(
+            t_ol=float(self.t_ol[i]),
+            t_nol=float(self.t_nol[i]),
+            transfers=tuple(float(x) for x in self.transfers[i]),
+            levels=self.levels,
+            unit=self.unit,
+            name=name,
+        )
+
+    def models(self) -> "list[ECMModel]":
+        return [self.scalar(i) for i in range(len(self))]
 
 
 # ---------------------------------------------------------------------------

@@ -50,18 +50,35 @@ class StreamKernelSpec:
     uop_add: int = 0
 
     # ------------------------------------------------------------------
+    # Stream accounting (§IV-C / §VII-E).  Non-temporal stores bypass the
+    # L2/L3 *caches* (no write-allocate, no residence) but still traverse
+    # the L1<->L2 *interface*: they leave the core through the line-fill
+    # buffers at the L1 eviction bandwidth on their way to memory.  So NT
+    # streams count on the L1<->L2 edge (outward) and on the L3<->Mem edge,
+    # and are absent from the L2<->L3 edge — exactly the accounting that
+    # reproduces the paper's striad_nt input {1 || 3 | 4 | 4 | 15.6}.
+    # ------------------------------------------------------------------
     @property
     def load_streams(self) -> int:
+        """Inward cache lines on every in-cache edge (loads + RFO)."""
         return self.loads_explicit + self.rfo
 
     @property
+    def l1_evict_streams(self) -> int:
+        """Outward cache lines on the L1<->L2 interface: write-backs plus
+        NT stores draining through the line-fill buffers."""
+        return self.stores + self.nt_stores
+
+    @property
     def mem_streams(self) -> int:
-        """Cache lines crossing the L3<->Mem edge per CL of work."""
+        """Cache lines crossing the L3<->Mem edge per CL of work (NT
+        stores land here directly from the LFBs)."""
         return self.loads_explicit + self.rfo + self.stores + self.nt_stores
 
     @property
     def l2_streams(self) -> int:
-        """Cache lines crossing L2<->L3 (NT stores bypass L2/L3)."""
+        """Cache lines crossing the L2<->L3 edge: NT stores bypass the
+        deeper cache levels entirely (LFB -> memory, §VII-E)."""
         return self.loads_explicit + self.rfo + self.stores
 
     def elems_per_line(self, line_bytes: int) -> int:
@@ -90,14 +107,16 @@ class StreamKernelSpec:
         # inner cache edges (L1<->L2, L2<->L3 on Haswell)
         for i, lvl in enumerate(machine.levels):
             if i == 0:
-                # L1<->L2: explicit loads + RFO inward; evictions (write-back
-                # streams and NT stores leaving L1 towards the LFBs) outward.
+                # L1<->L2 interface: loads + RFO inward; write-backs AND NT
+                # stores outward (see the stream-accounting note above).
                 cyc = lvl.load_cycles(self.load_streams, lb)
-                cyc += lvl.evict_cycles(self.stores + self.nt_stores, lb)
+                cyc += lvl.evict_cycles(self.l1_evict_streams, lb)
             else:
-                # deeper edges: NT stores bypass (LFB -> memory directly)
-                cyc = lvl.load_cycles(self.loads_explicit + self.rfo, lb)
-                cyc += lvl.evict_cycles(self.stores, lb)
+                # deeper edges: NT stores bypass (LFB -> memory directly),
+                # so only l2_streams cross here.
+                cyc = lvl.load_cycles(self.load_streams, lb)
+                cyc += lvl.evict_cycles(self.l2_streams - self.load_streams,
+                                        lb)
             transfers.append(cyc)
         # final edge: sustained-bandwidth-derived cycles per line x lines
         mem_cy = machine.mem_cycles_per_line(sustained_bw) * self.mem_streams
@@ -174,6 +193,66 @@ BENCHMARKS: dict[str, StreamKernelSpec] = {
         uop_loads=6, uop_stores=2, uop_fma=2,
     ),
 }
+
+
+def benchmark_batch(names: "list | tuple | None" = None, *,
+                    machine: MachineModel | None = None,
+                    sustained_bw: dict[str, float] | None = None,
+                    optimized_agu: bool = False) -> "ECMBatch":
+    """Vectorized §IV-C model construction for a set of benchmarks.
+
+    Builds every per-kernel ECM model in one set of NumPy array ops
+    (streams x per-level bandwidths) instead of per-kernel Python loops;
+    agrees with :func:`haswell_ecm` / ``StreamKernelSpec.ecm`` exactly.
+    ``names`` entries may be registry keys or :class:`StreamKernelSpec`
+    objects (custom kernels); bandwidths are looked up by spec name, so a
+    custom spec needs a ``sustained_bw`` entry under its name (the
+    simulator layer, ``simulate_levels_batch``, supplies defaults).
+    """
+    import numpy as np
+
+    from .ecm import ECMBatch
+    from .machine import HASWELL_EP
+
+    m = machine or HASWELL_EP
+    bws = sustained_bw or HASWELL_MEASURED_BW
+    specs = [n if isinstance(n, StreamKernelSpec) else BENCHMARKS[n]
+             for n in (names or BENCHMARKS)]
+    names = tuple(s.name for s in specs)
+    lb = m.line_bytes
+
+    # in-core times still go through the (cheap, K-sized) port model
+    core = np.array([
+        m.ports.core_cycles(loads=s.uop_loads, stores=s.uop_stores,
+                            fma=s.uop_fma, mul=s.uop_mul, add=s.uop_add,
+                            optimized_agu=optimized_agu)
+        for s in specs
+    ])
+    t_nol, t_ol = core[:, 0], core[:, 1]
+
+    loads = np.array([s.load_streams for s in specs], float)
+    l1_evicts = np.array([s.l1_evict_streams for s in specs], float)
+    l2_evicts = np.array([s.l2_streams - s.load_streams for s in specs],
+                         float)
+    mem = np.array([s.mem_streams for s in specs], float)
+    try:
+        bw = np.array([bws[n] for n in names], float)
+    except KeyError as e:
+        raise KeyError(
+            f"no sustained bandwidth for kernel {e.args[0]!r}: pass "
+            f"sustained_bw={{{e.args[0]!r}: <bytes/s>}} for custom specs"
+        ) from None
+
+    edges = []
+    for i, lvl in enumerate(m.levels):
+        evicts = l1_evicts if i == 0 else l2_evicts
+        edges.append(loads * lb / lvl.load_bpc + evicts * lb / lvl.evict_bpc)
+    # same association order as MachineModel.mem_cycles_per_line so the
+    # batch agrees with the scalar builder to the last ulp
+    edges.append((lb * m.clock_hz / bw) * mem)
+    return ECMBatch(
+        t_ol=t_ol, t_nol=t_nol, transfers=np.stack(edges, axis=-1),
+        levels=m.level_names(), names=names, unit="cy/CL")
 
 
 def haswell_ecm(name: str, *, optimized_agu: bool = False,

@@ -54,6 +54,34 @@ class ScalingModel:
                 for n in range(1, n_cores + 1)]
 
 
+def batch_curve(batch, n_cores: int, work_per_unit=1.0,
+                clock_hz: float | None = None,
+                bottleneck_level: int = -1):
+    """Vectorized Eq. 2 scaling surface for an :class:`~repro.core.ecm.
+    ECMBatch`: P(n) for every batch element x n = 1..n_cores, shape
+    ``B + (n_cores,)`` — one array op instead of a per-(kernel, n) loop."""
+    import numpy as np
+
+    t_single = batch.prediction(len(batch.levels) - 1)       # (B,)
+    bottleneck = batch.transfers[..., bottleneck_level]       # (B,)
+    w = np.asarray(work_per_unit, float)
+    p_one = w / t_single
+    p_sat = w / bottleneck
+    n = np.arange(1, n_cores + 1, dtype=float)
+    p = np.minimum(n * p_one[..., None], p_sat[..., None])
+    return p * clock_hz if clock_hz else p
+
+
+def batch_saturation(batch, bottleneck_level: int = -1):
+    """Vectorized Eq. 2 saturation points: ``ceil(T_ECM^mem / T_bottleneck)``
+    per batch element."""
+    import numpy as np
+
+    t_single = batch.prediction(len(batch.levels) - 1)
+    bottleneck = batch.transfers[..., bottleneck_level]
+    return np.ceil(t_single / bottleneck).astype(int)
+
+
 def domain_scaling(ecm_domain: ECMModel, n_domains: int,
                    cores_per_domain: int, work_per_unit: float = 1.0,
                    clock_hz: float | None = None) -> list[float]:

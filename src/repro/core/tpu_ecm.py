@@ -210,6 +210,55 @@ def from_resources(
     )
 
 
+# ---------------------------------------------------------------------------
+# Overlap calibration (Eq. 1 inverted)
+# ---------------------------------------------------------------------------
+
+
+def overlap_coefficient(measured_s: float, t_comp_s: float,
+                        t_transfer_s: float) -> float:
+    """Invert Eq. 1 for the exposed-transfer fraction ``f``.
+
+    The ECM composition is ``T(f) = max(T_comp, (1-f)*T_x) + f*T_x`` with
+    ``f`` the fraction of transfer time serialized with compute (the
+    ``T_nOL`` role).  Given a measured step time, return the *smallest*
+    ``f`` consistent with it: when the kernel is transfer-bound
+    (``T_x > T_comp``) any ``f <= 1 - T_comp/T_x`` predicts ``T = T_x``,
+    so a measurement at the transfer bound pins only that upper range.
+    """
+    if t_transfer_s <= 0:
+        return 0.0
+    return min(1.0, max(0.0, (measured_s - t_comp_s) / t_transfer_s))
+
+
+def measured_overlap(t_serial_s: float, t_pipelined_s: float,
+                     t_transfer_s: float) -> float:
+    """Exposed-transfer fraction from a serial/pipelined measurement pair.
+
+    ``t_serial`` is the ``num_stages=1`` runtime (no overlap: compute and
+    DMA strictly alternate, the T_nOL + T_data bound); ``t_pipelined`` the
+    multi-buffered runtime.  The transfer time hidden by the pipeline is
+    their difference, so the *exposed* fraction of the transfer term is
+    ``1 - (t_serial - t_pipelined) / T_x`` — this is the calibrated
+    ``exposed_hbm_fraction`` for :class:`TPUStepECM`.
+    """
+    if t_transfer_s <= 0:
+        return 0.0
+    hidden = max(0.0, t_serial_s - t_pipelined_s)
+    return min(1.0, max(0.0, 1.0 - hidden / t_transfer_s))
+
+
+def with_measured_overlap(step: TPUStepECM, *, t_serial_s: float,
+                          t_pipelined_s: float) -> TPUStepECM:
+    """Return a copy of ``step`` whose HBM exposure is calibrated from a
+    serial vs multi-buffered kernel timing pair (see
+    ``repro.kernels.pipeline``)."""
+    import dataclasses
+
+    f = measured_overlap(t_serial_s, t_pipelined_s, step.t_hbm)
+    return dataclasses.replace(step, exposed_hbm_fraction=f)
+
+
 def saturation_chips(step: TPUStepECM, bottleneck: str = "collective") -> int:
     """Eq. 2 analogue: chips after which adding more stops helping for a
     fixed global problem (the bottleneck term stops shrinking)."""

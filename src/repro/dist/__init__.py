@@ -1,0 +1,13 @@
+"""Distribution: logical-axis sharding rules and mesh context."""
+from .sharding import (  # noqa: F401
+    PROFILES,
+    MeshContext,
+    ShardingProfile,
+    current_context,
+    current_mesh,
+    logical_to_pspec,
+    param_shardings,
+    tp_dp,
+    tp_fsdp,
+    use_mesh_context,
+)

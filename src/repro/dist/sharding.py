@@ -1,0 +1,286 @@
+"""Logical-axis sharding: rules, profiles and the active mesh context.
+
+The mesh is an *input*, never baked into model code (the ECM paper's
+machine-model-as-input lesson applied to distribution).  Models declare
+parameters with *logical* axis names (``repro.models.common.ParamSpec``);
+a :class:`ShardingProfile` maps logical names to mesh axes; and
+:func:`param_shardings` resolves a whole spec tree into
+``NamedSharding``s for one concrete mesh.
+
+Resolution is divisibility-aware: a logical axis whose dimension does not
+divide the mesh axes it maps to is left unsharded, because uneven
+shardings make GSPMD pad and replicate (observed: 24 q-heads annotated
+onto a 16-way axis cost GiBs of padded full-size copies in the
+minitron-4b dry-run).  A mesh axis may appear at most once per
+``PartitionSpec``; the first (leftmost) logical axis that claims it wins.
+
+:func:`use_mesh_context` installs the active mesh + profile for the
+duration of a trace: model code reads it back via :func:`current_context`
+(for ``shard_map`` meshes, data axes, decode-cache sequence sharding) and
+``repro.models.common.shard_annotate`` picks up the activation rules.
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import is_spec, set_activation_rules
+
+
+# ---------------------------------------------------------------------------
+# Profiles
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardingProfile:
+    """Named bundle of logical-axis -> mesh-axis rules.
+
+    ``rules`` governs parameters (and optimizer state, which shares the
+    parameter specs); ``activation_rules`` governs the in-graph
+    ``with_sharding_constraint`` annotations.  A rule value is a mesh axis
+    name, a tuple of mesh axis names, or ``None`` (replicate).
+    """
+
+    name: str
+    rules: dict[str, Any]
+    activation_rules: dict[str, Any] = field(default_factory=dict)
+
+
+def _batch_axes(multi_pod: bool) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def tp_dp(multi_pod: bool = False) -> ShardingProfile:
+    """Tensor parallel over ``model``, data parallel over batch."""
+    return ShardingProfile(
+        name="tp_dp",
+        rules={
+            "mlp": "model", "heads": "model", "kv_heads": "model",
+            "heads_qk": "model", "experts": "model", "experts_r": None,
+            "mamba_inner": "model", "vocab": "model",
+            "embed": None, "layers": None, "head_dim": None,
+        },
+        activation_rules={
+            "batch": _batch_axes(multi_pod),
+            "mlp": "model", "heads": "model", "kv_heads": "model",
+            "mamba_inner": "model", "vocab": "model",
+            "embed": None, "seq": None,
+        },
+    )
+
+
+def tp_fsdp(multi_pod: bool = False) -> ShardingProfile:
+    """TP over ``model`` + FSDP: the embed axis of every weight is sharded
+    over ``data`` (gathered per microbatch by GSPMD / the MoE shard_map)."""
+    base = tp_dp(multi_pod)
+    return ShardingProfile(
+        name="tp_fsdp",
+        rules={**base.rules, "embed": "data"},
+        activation_rules=base.activation_rules,
+    )
+
+
+def moe_ep(multi_pod: bool = False) -> ShardingProfile:
+    """Expert parallelism: experts over ``model``, tokens data-sharded,
+    expert weights FSDP'd over ``data`` (see ``moe_ffn_shard_map``)."""
+    base = tp_dp(multi_pod)
+    return ShardingProfile(
+        name="moe_ep",
+        rules={**base.rules, "experts": "model", "mlp": None,
+               "embed": "data"},
+        activation_rules=base.activation_rules,
+    )
+
+
+def dp_vocab(multi_pod: bool = False) -> ShardingProfile:
+    """Pure data parallel with only the (large) vocab dims model-sharded —
+    for small recurrent archs where TP'ing the inner dims doesn't pay."""
+    base = tp_dp(multi_pod)
+    return ShardingProfile(
+        name="dp_vocab",
+        rules={**base.rules, "mlp": None, "heads": None, "heads_qk": None,
+               "mamba_inner": None, "vocab": "model"},
+        activation_rules={**base.activation_rules, "mlp": None,
+                          "heads": None, "mamba_inner": None},
+    )
+
+
+PROFILES: dict[str, Any] = {
+    "tp_dp": tp_dp,
+    "tp_fsdp": tp_fsdp,
+    "moe_ep": moe_ep,
+    "dp_vocab": dp_vocab,
+}
+
+
+# ---------------------------------------------------------------------------
+# Rule resolution
+# ---------------------------------------------------------------------------
+
+
+def _axis_sizes(mesh: Mesh | None) -> dict[str, int]:
+    if mesh is None:
+        return {}
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _group_size(group: tuple[str, ...], sizes: dict[str, int]) -> int:
+    n = 1
+    for g in group:
+        n *= sizes.get(g, 1)
+    return n
+
+
+def _resolve_one(assignment, dim: int | None, sizes: dict[str, int],
+                 taken: set[str]):
+    """Resolve one logical-axis assignment against divisibility + dedup.
+
+    Returns the mesh axis (or tuple, or None) actually used.  Tuples keep
+    the largest prefix whose mesh-size product divides ``dim`` (matching
+    ``models.common.shard_annotate``).
+    """
+    if assignment is None:
+        return None
+    group = assignment if isinstance(assignment, tuple) else (assignment,)
+    if any(g in taken for g in group):
+        return None
+    if dim is None or not sizes:
+        return assignment
+    for k in range(len(group), 0, -1):
+        n = _group_size(group[:k], sizes)
+        if n and dim % n == 0:
+            return group[:k] if k > 1 else group[0]
+    return None
+
+
+def logical_to_pspec(axes, rules: dict[str, Any],
+                     dims: tuple[int, ...] | None = None,
+                     mesh: Mesh | None = None) -> P:
+    """Map logical axis names to a ``PartitionSpec`` via ``rules``.
+
+    ``dims``/``mesh`` enable the divisibility fallback (an indivisible
+    logical axis is replicated).  Duplicate mesh axes are deduped, first
+    occurrence wins.
+    """
+    sizes = _axis_sizes(mesh)
+    taken: set[str] = set()
+    out = []
+    for i, a in enumerate(axes):
+        assignment = rules.get(a) if a else None
+        dim = dims[i] if dims is not None else None
+        chosen = _resolve_one(assignment, dim, sizes, taken)
+        if chosen is not None:
+            grp = chosen if isinstance(chosen, tuple) else (chosen,)
+            taken.update(grp)
+        out.append(chosen)
+    return P(*out)
+
+
+def _ensure_model(spec, pspec: P, sizes: dict[str, int],
+                  min_elems: int) -> P:
+    """Force ``model`` onto the largest divisible dim of a big param that
+    would otherwise be replicated over ``model`` (keeps per-chip footprint
+    bounded even when the profile's preferred axis is indivisible).
+
+    ``layers`` axes (scan stacks) are never chosen: sharding the stack dim
+    would shard *different layers* onto different chips."""
+    n_model = sizes.get("model", 1)
+    if n_model <= 1:
+        return pspec
+    flat: set[str] = set()
+    for e in pspec:
+        if e is None:
+            continue
+        flat.update(e if isinstance(e, tuple) else (e,))
+    if "model" in flat:
+        return pspec
+    if math.prod(spec.shape) < min_elems:
+        return pspec
+    order = sorted(range(len(spec.shape)), key=lambda i: -spec.shape[i])
+    for i in order:
+        if spec.axes[i] == "layers":
+            continue
+        if pspec[i] is not None:
+            continue
+        if spec.shape[i] % n_model == 0:
+            out = list(pspec)
+            out[i] = "model"
+            return P(*out)
+    return pspec
+
+
+def param_shardings(spec_tree, mesh: Mesh, profile: ShardingProfile, *,
+                    ensure_model_axis: bool = False,
+                    min_elems: int = 1 << 16):
+    """Spec tree -> ``NamedSharding`` tree for one concrete mesh."""
+    sizes = _axis_sizes(mesh)
+
+    def one(spec):
+        pspec = logical_to_pspec(spec.axes, profile.rules, spec.shape, mesh)
+        if ensure_model_axis:
+            pspec = _ensure_model(spec, pspec, sizes, min_elems)
+        return NamedSharding(mesh, pspec)
+
+    return jax.tree.map(one, spec_tree, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Active mesh context
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshContext:
+    """What model code may ask about the ambient distribution."""
+
+    mesh: Mesh | None = None
+    profile: ShardingProfile | None = None
+    data_axes: tuple[str, ...] = ("data",)
+    cache_seq_axis: str | None = None
+
+
+_NULL_CONTEXT = MeshContext()
+_CONTEXT: list[MeshContext] = []
+
+
+def current_context() -> MeshContext:
+    return _CONTEXT[-1] if _CONTEXT else _NULL_CONTEXT
+
+
+def current_mesh() -> Mesh | None:
+    return current_context().mesh
+
+
+@contextmanager
+def use_mesh_context(mesh: Mesh, profile: ShardingProfile | None, *,
+                     multi_pod: bool = False,
+                     cache_seq_axis: str | None = None):
+    """Install ``mesh``/``profile`` as the ambient distribution context.
+
+    Inside the block, ``current_context()`` reports the mesh,
+    ``shard_annotate`` applies the profile's activation rules, and plain
+    ``PartitionSpec`` sharding constraints resolve against ``mesh``.
+    """
+    batch = None
+    if profile is not None:
+        batch = profile.activation_rules.get("batch")
+    data_axes = (batch if isinstance(batch, tuple)
+                 else (batch,) if batch else _batch_axes(multi_pod))
+    ctx = MeshContext(mesh=mesh, profile=profile, data_axes=data_axes,
+                      cache_seq_axis=cache_seq_axis)
+    _CONTEXT.append(ctx)
+    set_activation_rules(profile.activation_rules if profile else None)
+    try:
+        with mesh:
+            yield ctx
+    finally:
+        _CONTEXT.pop()
+        prev = current_context()
+        set_activation_rules(prev.profile.activation_rules
+                             if prev.profile else None)

@@ -19,18 +19,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..pipeline import _fit_block
+
 #: default block: 8 sublanes x 128 lanes x 8 rows = fits VMEM comfortably and
 #: keeps the MXU/VPU tile alignment (multiples of (8, 128)).
 BLOCK_ROWS = 64
 BLOCK_COLS = 128
-
-
-def _fit_block(n_rows: int, block_rows: int) -> int:
-    """Largest divisor of ``n_rows`` that is <= the requested block."""
-    b = min(block_rows, n_rows)
-    while n_rows % b:
-        b -= 1
-    return b
 
 
 def _grid(n_rows: int, block_rows: int) -> tuple[int]:
@@ -95,6 +89,17 @@ def _ddot_kernel(a_ref, b_ref, o_ref):
 # ---------------------------------------------------------------------------
 
 
+def _compiler_params(semantics: str, interpret: bool):
+    """Declare grid-dimension semantics to Mosaic: ``parallel`` grid steps
+    may be reordered/overlapped by the pipeliner, ``arbitrary`` ones are
+    sequential (reductions).  Ignored (but accepted) in interpret mode."""
+    if interpret:
+        return None
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.TPUCompilerParams(dimension_semantics=(semantics,))
+
+
 def _streaming_call(body, n_in: int, *, scalar_first: bool, interpret: bool,
                     block_rows: int, x_shape, dtype):
     rows = x_shape[0]
@@ -109,6 +114,7 @@ def _streaming_call(body, n_in: int, *, scalar_first: bool, interpret: bool,
         out_specs=_io_spec(block_rows),
         out_shape=jax.ShapeDtypeStruct(x_shape, dtype),
         interpret=interpret,
+        compiler_params=_compiler_params("parallel", interpret),
     )
 
 
@@ -153,6 +159,7 @@ def _reduce_call(body, n_in, x_shape, dtype, *, block_rows, interpret):
         out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 1), acc_dtype),
         interpret=interpret,
+        compiler_params=_compiler_params("arbitrary", interpret),
     )
 
 

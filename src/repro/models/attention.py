@@ -325,7 +325,10 @@ def decode_attention(p, cfg: AttnConfig, x, cache_k, cache_v, cache_len):
     valid = (jnp.arange(s_max) <= cache_len)[None, None, None, :]
     s = jnp.where(valid, s, NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkrs,bskd->bkrd", pr.astype(cache_v.dtype), cache_v,
+    # probabilities stay f32 (matching _dense_attn): rounding them to the
+    # cache dtype makes decode drift from the teacher-forced logits by
+    # O(1e-1) within a few steps; only the CACHE stays in the low dtype
+    out = jnp.einsum("bkrs,bskd->bkrd", pr, cache_v,
                      preferred_element_type=jnp.float32)
     out = out.reshape(b_, 1, h_, d_).astype(x.dtype)
     return (jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)),

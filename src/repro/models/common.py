@@ -133,6 +133,31 @@ def shard_annotate(x, axes: tuple[str | None, ...]):
 
 
 # ---------------------------------------------------------------------------
+# Differentiable optimization barrier
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def grad_barrier(x):
+    """``jax.lax.optimization_barrier`` with a gradient rule (the primitive
+    has none on this jax version).  The barrier is applied on both the
+    forward and the cotangent so XLA cannot hoist converts out of the
+    scan/backward loop in either direction."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _grad_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _grad_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+grad_barrier.defvjp(_grad_barrier_fwd, _grad_barrier_bwd)
+
+
+# ---------------------------------------------------------------------------
 # Norms
 # ---------------------------------------------------------------------------
 

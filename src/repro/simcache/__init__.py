@@ -5,23 +5,35 @@ paper's *measured* columns (Table I, Figs. 7-10) are reproduced by a
 calibrated simulator instead of `likwid-perfctr` runs.  See DESIGN.md §8.
 """
 from .sim import (
+    EVAL_COUNTERS,
     SimParams,
     CacheHierarchy,
     HASWELL_CACHES,
     HASWELL_CACHES_COD,
+    reset_counters,
+    scaling_batch,
     simulate_level,
+    simulate_levels_batch,
+    simulate_table,
     simulate_working_set,
     simulate_scaling,
     sweep,
+    sweep_batch,
 )
 
 __all__ = [
+    "EVAL_COUNTERS",
     "SimParams",
     "CacheHierarchy",
     "HASWELL_CACHES",
     "HASWELL_CACHES_COD",
+    "reset_counters",
+    "scaling_batch",
     "simulate_level",
+    "simulate_levels_batch",
+    "simulate_table",
     "simulate_working_set",
     "simulate_scaling",
     "sweep",
+    "sweep_batch",
 ]

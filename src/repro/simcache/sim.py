@@ -28,15 +28,41 @@ It also provides working-set sweeps (for the Fig. 7-9 style curves, using
 LRU-streaming residence: a cyclically streamed working set larger than a
 level thrashes it) and multi-core scaling with shared-bandwidth saturation
 (Fig. 10).
+
+**Evaluation path.**  Everything is evaluated through the vectorized
+:class:`repro.core.ecm.ECMBatch` core: :func:`simulate_levels_batch`
+produces the full (kernels x levels) table in one set of array ops, and
+:func:`sweep_batch` / :func:`scaling_batch` evaluate whole (kernel x
+working-set) / (kernel x cores) grids the same way.  The scalar functions
+(:func:`simulate_level`, :func:`simulate_working_set`, ...) are thin views
+over the batch path and agree with it bit-for-bit.  ``EVAL_COUNTERS``
+tracks how many Python-level evaluations happen per batch call — the
+``benchmarks/run.py --json`` model-eval throughput numbers come from it.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
 
-from repro.core.ecm import ECMModel
-from repro.core.kernel_spec import BENCHMARKS, StreamKernelSpec
+import numpy as np
+
+from repro.core.ecm import ECMBatch, ECMModel
+from repro.core.kernel_spec import (
+    BENCHMARKS,
+    StreamKernelSpec,
+    benchmark_batch,
+)
 from repro.core.machine import HASWELL_EP, HASWELL_MEASURED_BW, MachineModel
+
+#: batch_array_evals counts vectorized evaluations (one per grid, however
+#: large); scalar_points counts individual (kernel, level/size/core) points
+#: produced.  Their ratio is the "Python-level calls per point" figure.
+EVAL_COUNTERS = {"batch_array_evals": 0, "scalar_points": 0}
+
+
+def reset_counters() -> None:
+    EVAL_COUNTERS["batch_array_evals"] = 0
+    EVAL_COUNTERS["scalar_points"] = 0
 
 
 @dataclass(frozen=True)
@@ -78,31 +104,81 @@ HASWELL_CACHES_COD = CacheHierarchy(l3_bytes=35 * 1024 * 1024 // 2)
 
 
 # ---------------------------------------------------------------------------
-# Level-resident simulation (Table I's measurement columns)
+# Vectorized core: (kernels x levels) in one shot
 # ---------------------------------------------------------------------------
 
 
-def _level_effects(spec: StreamKernelSpec, pred: tuple[float, ...],
-                   p: SimParams) -> list[float]:
-    """Per-level additive effects on top of the light-speed prediction."""
-    loads = spec.loads_explicit + spec.rfo
-    evicts = spec.stores + spec.nt_stores
-    share = evicts / max(spec.mem_streams, 1)
+def _as_spec(name_or_spec) -> StreamKernelSpec:
+    return (name_or_spec if isinstance(name_or_spec, StreamKernelSpec)
+            else BENCHMARKS[name_or_spec])
 
-    eff = [0.0, 0.0, 0.0, 0.0]
+
+def _spec_arrays(specs: list[StreamKernelSpec]) -> dict[str, np.ndarray]:
+    return {
+        "loads": np.array([s.load_streams for s in specs], float),
+        "evicts": np.array([s.stores + s.nt_stores for s in specs], float),
+        "mem_streams": np.array([s.mem_streams for s in specs], float),
+        "l1_uops": np.array([s.uop_loads + s.uop_stores for s in specs],
+                            float),
+    }
+
+
+def simulate_levels_batch(
+    names: "list | tuple | None" = None,
+    *,
+    machine: MachineModel = HASWELL_EP,
+    sustained_bw: "dict[str, float] | float | None" = None,
+    params: SimParams = DEFAULT_PARAMS,
+    optimized_agu: bool = False,
+) -> tuple[tuple[str, ...], np.ndarray]:
+    """Simulated ("measured") cy/CL for every kernel x residence level.
+
+    Returns ``(names, table)`` with ``table`` of shape (K, 4).  One
+    vectorized evaluation regardless of K.  ``names`` entries may be
+    registry keys or :class:`StreamKernelSpec` objects.
+    """
+    specs = [_as_spec(n) for n in (names or BENCHMARKS)]
+    names = tuple(s.name for s in specs)
+    if isinstance(sustained_bw, (int, float)):
+        bws = {n: float(sustained_bw) for n in names}
+    else:
+        base = {n: HASWELL_MEASURED_BW.get(n, 27e9) for n in names}
+        bws = {**base, **(sustained_bw or {})}
+    batch = benchmark_batch(specs, machine=machine, sustained_bw=bws,
+                            optimized_agu=optimized_agu)
+    pred = batch.predictions()                              # (K, 4)
+    arr = _spec_arrays(specs)
+    loads, evicts = arr["loads"], arr["evicts"]
+    share = evicts / np.maximum(arr["mem_streams"], 1.0)
+    p = params
+
+    eff = np.zeros_like(pred)
     # L1: front-end jitter only
-    if (spec.uop_loads + spec.uop_stores) >= 4:
-        eff[0] = p.frontend_jitter
+    eff[:, 0] = np.where(arr["l1_uops"] >= 4, p.frontend_jitter, 0.0)
     # L2: sub-spec sustained load bandwidth + eviction interference
-    eff[1] = p.l2_load_penalty * loads + p.l2_evict_interference * evicts
-    # L3: off-core latency, hidden with growing per-CL cycles; async-evict credit
-    h3 = max(0.0, 1.0 - pred[2] / p.hide_scale_l3)
-    eff[2] = p.offcore_load_penalty * loads * h3 - p.evict_credit_l3 * share
-    # Mem: one more clock-domain crossing (the eviction credit is applied by
-    # the caller, which knows the per-CL memory cycles)
-    hm = max(0.0, 1.0 - pred[3] / p.hide_scale_mem)
-    eff[3] = p.mem_load_penalty * loads * hm
-    return eff
+    eff[:, 1] = p.l2_load_penalty * loads + p.l2_evict_interference * evicts
+    # L3: off-core latency, hidden with growing per-CL cycles; async credit
+    h3 = np.maximum(0.0, 1.0 - pred[:, 2] / p.hide_scale_l3)
+    eff[:, 2] = p.offcore_load_penalty * loads * h3 - p.evict_credit_l3 * share
+    # Mem: one more clock-domain crossing
+    hm = np.maximum(0.0, 1.0 - pred[:, 3] / p.hide_scale_mem)
+    eff[:, 3] = p.mem_load_penalty * loads * hm
+
+    out = pred + eff
+    # async-eviction credit: evictions still in flight at benchmark end
+    bw_arr = np.array([bws[n] for n in names], float)
+    mem_cy = machine.line_bytes * machine.clock_hz / bw_arr
+    hmc = np.maximum(0.0, 1.0 - pred[:, 3] / p.evict_credit_mem_scale)
+    out[:, 3] = out[:, 3] - np.where(evicts > 0, evicts * mem_cy * hmc, 0.0)
+    out = np.maximum(out, batch.t_core[:, None])
+    EVAL_COUNTERS["batch_array_evals"] += 1
+    EVAL_COUNTERS["scalar_points"] += out.size
+    return names, out
+
+
+# ---------------------------------------------------------------------------
+# Level-resident simulation (Table I's measurement columns)
+# ---------------------------------------------------------------------------
 
 
 def simulate_level(
@@ -115,27 +191,20 @@ def simulate_level(
     optimized_agu: bool = False,
 ) -> float:
     """Simulated ("measured") cy/CL for data resident in ``level``
-    (0=L1, 1=L2, 2=L3, 3=Mem)."""
-    spec = BENCHMARKS[name_or_spec] if isinstance(name_or_spec, str) else name_or_spec
-    bw = sustained_bw or HASWELL_MEASURED_BW.get(spec.name, 27e9)
-    ecm = spec.ecm(machine, bw, optimized_agu=optimized_agu)
-    pred = ecm.predictions()
-    eff = _level_effects(spec, pred, params)
-    out = pred[level] + eff[level]
-    if level == 3 and (spec.stores or spec.nt_stores):
-        # async-eviction credit: evictions still in flight at benchmark end
-        mem_cy_per_cl = machine.mem_cycles_per_line(bw)
-        evict_cy = (spec.stores + spec.nt_stores) * mem_cy_per_cl
-        hm = max(0.0, 1.0 - pred[3] / params.evict_credit_mem_scale)
-        out -= evict_cy * hm
-    return max(out, ecm.t_core)
+    (0=L1, 1=L2, 2=L3, 3=Mem).  Scalar view of the batch path; a
+    :class:`StreamKernelSpec` argument is evaluated as-is (it may differ
+    from the registry entry of the same name)."""
+    _, table = simulate_levels_batch(
+        [name_or_spec], machine=machine, sustained_bw=sustained_bw,
+        params=params, optimized_agu=optimized_agu)
+    return float(table[0, level])
 
 
 def simulate_table(names: list[str] | None = None,
                    **kw) -> dict[str, tuple[float, ...]]:
-    names = names or list(BENCHMARKS)
-    return {n: tuple(simulate_level(n, lv, **kw) for lv in range(4))
-            for n in names}
+    names_t, table = simulate_levels_batch(names, **kw)
+    return {n: tuple(float(x) for x in table[i])
+            for i, n in enumerate(names_t)}
 
 
 # ---------------------------------------------------------------------------
@@ -143,24 +212,55 @@ def simulate_table(names: list[str] | None = None,
 # ---------------------------------------------------------------------------
 
 
-def _residence_weights(ws_bytes: float, caches: CacheHierarchy
-                       ) -> list[float]:
-    """Blend weights over residence levels for a streamed working set.
+def residence_weights_batch(sizes_bytes, caches: CacheHierarchy
+                            ) -> np.ndarray:
+    """Blend weights over residence levels, vectorized over sizes: (S, 4).
 
     Pure cyclic streaming with LRU gives a sharp thrash transition at each
     capacity; measurements show a knee.  We model the hit fraction of level
     ``k`` as ``clamp(2*C_k/WS - 1, 0, 1)`` (full hits up to C, none at 2C).
     """
-    caps = caches.capacities()
-    weights = []
-    remaining = 1.0
-    for c in caps:
-        h = min(1.0, max(0.0, 2.0 * c / ws_bytes - 1.0)) if ws_bytes > 0 else 1.0
+    ws = np.asarray(sizes_bytes, float)
+    weights = np.zeros(ws.shape + (4,))
+    remaining = np.ones_like(ws)
+    for k, c in enumerate(caches.capacities()):
+        h = np.where(ws > 0, np.clip(2.0 * c / np.maximum(ws, 1e-30) - 1.0,
+                                     0.0, 1.0), 1.0)
         w = remaining * h
-        weights.append(w)
-        remaining -= w
-    weights.append(remaining)          # memory
+        weights[..., k] = w
+        remaining = remaining - w
+    weights[..., 3] = remaining
     return weights
+
+
+def _residence_weights(ws_bytes: float, caches: CacheHierarchy
+                       ) -> list[float]:
+    """Scalar view of :func:`residence_weights_batch`."""
+    return [float(x) for x in residence_weights_batch([ws_bytes], caches)[0]]
+
+
+def sweep_batch(
+    names: "list[str] | tuple[str, ...] | None",
+    sizes_bytes,
+    *,
+    machine: MachineModel = HASWELL_EP,
+    caches: CacheHierarchy = HASWELL_CACHES_COD,
+    params: SimParams = DEFAULT_PARAMS,
+    sustained_bw: "dict[str, float] | float | None" = None,
+) -> tuple[tuple[str, ...], np.ndarray]:
+    """(kernels x sizes) cy/CL surface in one evaluation: (K, S).
+
+    This is the Fig. 7-9 grid: the per-level table is built once (one
+    batch call) and the residence blend is a (S,4) x (K,4) -> (K,S)
+    matrix product — no per-point Python.
+    """
+    names_t, table = simulate_levels_batch(
+        names, machine=machine, sustained_bw=sustained_bw, params=params)
+    weights = residence_weights_batch(sizes_bytes, caches)       # (S, 4)
+    EVAL_COUNTERS["batch_array_evals"] += 1
+    surface = table @ weights.T                                  # (K, S)
+    EVAL_COUNTERS["scalar_points"] += surface.size
+    return names_t, surface
 
 
 def simulate_working_set(
@@ -173,20 +273,79 @@ def simulate_working_set(
     sustained_bw: float | None = None,
 ) -> float:
     """Simulated cy/CL for a given total working-set size in bytes."""
-    w = _residence_weights(ws_bytes, caches)
-    lv = [simulate_level(name, i, machine=machine, params=params,
-                         sustained_bw=sustained_bw) for i in range(4)]
-    return sum(wi * ci for wi, ci in zip(w, lv))
+    _, surface = sweep_batch([name], [ws_bytes], machine=machine,
+                             caches=caches, params=params,
+                             sustained_bw=sustained_bw)
+    return float(surface[0, 0])
 
 
 def sweep(name: str, sizes_bytes: list[float], **kw) -> list[tuple[float, float]]:
-    """(working_set_bytes, cy/CL) curve — the Fig. 7-9 x/y data."""
-    return [(s, simulate_working_set(name, s, **kw)) for s in sizes_bytes]
+    """(working_set_bytes, cy/CL) curve — the Fig. 7-9 x/y data.
+
+    One batch evaluation for the whole curve (was: 4 model builds per
+    point)."""
+    _, surface = sweep_batch([name], sizes_bytes, **kw)
+    return list(zip([float(s) for s in sizes_bytes],
+                    [float(y) for y in surface[0]]))
 
 
 # ---------------------------------------------------------------------------
 # Multi-core scaling (Fig. 10)
 # ---------------------------------------------------------------------------
+
+
+def scaling_batch(
+    names: "list[str] | tuple[str, ...] | None",
+    n_cores: int,
+    *,
+    machine: MachineModel = HASWELL_EP,
+    domain_bw: "dict[str, float] | float | None" = None,
+    cores_per_domain: int = 7,
+    n_domains: int = 2,
+    params: SimParams = DEFAULT_PARAMS,
+    fill_domains_first: bool = True,
+) -> tuple[tuple[str, ...], np.ndarray]:
+    """Measured-style scaling surface in updates/s: (K, n_cores).
+
+    Each affinity domain saturates at its sustained bandwidth; cores fill
+    one domain after the other (CoD) or round-robin (non-CoD, which behaves
+    like one big domain with the chip bandwidth).  Vectorized over kernels
+    AND core counts.
+    """
+    names_t = tuple(names or BENCHMARKS)
+    if isinstance(domain_bw, (int, float)):
+        bws = {n: float(domain_bw) for n in names_t}
+    else:
+        base = {n: HASWELL_MEASURED_BW[n] for n in names_t}
+        bws = {**base, **(domain_bw or {})}
+    _, table = simulate_levels_batch(names_t, machine=machine,
+                                     sustained_bw=bws, params=params)
+    t_single = table[:, 3]                                     # (K,)
+    specs = [BENCHMARKS[n] for n in names_t]
+    upd = np.array([s.elems_per_line(machine.line_bytes) * s.updates_per_elem
+                    for s in specs], float)
+    mem_streams = np.array([s.mem_streams for s in specs], float)
+    bw_arr = np.array([bws[n] for n in names_t], float)
+
+    p1 = upd * machine.clock_hz / t_single                     # (K,)
+    bytes_per_update = mem_streams * machine.line_bytes / upd
+    p_sat = bw_arr / bytes_per_update                          # per domain
+
+    n = np.arange(1, n_cores + 1, dtype=float)                 # (N,)
+    EVAL_COUNTERS["batch_array_evals"] += 1
+    if fill_domains_first:
+        full = np.floor_divide(n, cores_per_domain)
+        rem = n - full * cores_per_domain
+        p = (full[None, :] * np.minimum(cores_per_domain * p1[:, None],
+                                        p_sat[:, None])
+             + np.minimum(rem[None, :] * p1[:, None], p_sat[:, None])
+             * (rem[None, :] > 0))
+        p = np.minimum(p, n_domains * p_sat[:, None])
+    else:
+        p = np.minimum(n[None, :] * p1[:, None],
+                       n_domains * p_sat[:, None])
+    EVAL_COUNTERS["scalar_points"] += p.size
+    return names_t, p
 
 
 def simulate_scaling(
@@ -202,27 +361,10 @@ def simulate_scaling(
 ) -> list[float]:
     """Measured-style scaling curve in updates/s for n = 1..n_cores.
 
-    Each affinity domain saturates at its sustained bandwidth; cores fill
-    one domain after the other (CoD) or round-robin (non-CoD, which behaves
-    like one big domain with the chip bandwidth).
-    """
-    spec = BENCHMARKS[name]
-    bw = domain_bw or HASWELL_MEASURED_BW[spec.name]
-    t_single = simulate_level(name, 3, machine=machine, params=params,
-                              sustained_bw=bw)
-    upd_per_line = spec.elems_per_line(machine.line_bytes) * spec.updates_per_elem
-    p1 = upd_per_line * machine.clock_hz / t_single           # single core
-    bytes_per_update = spec.mem_streams * machine.line_bytes / upd_per_line
-    p_sat_domain = bw / bytes_per_update
-
-    out = []
-    for n in range(1, n_cores + 1):
-        if fill_domains_first:
-            full, rem = divmod(n, cores_per_domain)
-            p = full * min(cores_per_domain * p1, p_sat_domain)
-            p += min(rem * p1, p_sat_domain) if rem else 0.0
-            p = min(p, n_domains * p_sat_domain)
-        else:
-            p = min(n * p1, n_domains * p_sat_domain)
-        out.append(p)
-    return out
+    Scalar view of :func:`scaling_batch`."""
+    _, p = scaling_batch([name], n_cores, machine=machine,
+                         domain_bw=domain_bw,
+                         cores_per_domain=cores_per_domain,
+                         n_domains=n_domains, params=params,
+                         fill_domains_first=fill_domains_first)
+    return [float(x) for x in p[0]]

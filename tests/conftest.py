@@ -1,0 +1,93 @@
+"""Shared test config: `slow` marker + a hypothesis fallback.
+
+The container may not ship `hypothesis`; the property tests degrade to a
+seeded mini-runner (a handful of deterministic random examples per test)
+instead of failing at collection.  With the real package installed the
+stub is inert.
+"""
+import importlib.util
+import random
+import sys
+import types
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running integration tests (deselect with "
+        "-m 'not slow')")
+
+
+if importlib.util.find_spec("hypothesis") is None:
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def _floats(min_value=-1e9, max_value=1e9, allow_nan=True, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _integers(min_value=0, max_value=1 << 31, **_kw):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    def _lists(elems, min_size=0, max_size=None, **_kw):
+        hi = max_size if max_size is not None else min_size + 8
+
+        def draw(rng):
+            n = rng.randint(min_size, hi)
+            return [elems.example(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.floats = _floats
+    _st.integers = _integers
+    _st.booleans = _booleans
+    _st.sampled_from = _sampled_from
+    _st.lists = _lists
+
+    _MAX_EXAMPLES = [5]
+
+    def _settings(max_examples=5, **_kw):
+        def deco(fn):
+            fn._max_examples = min(max_examples, 10)
+            return fn
+        return deco
+
+    def _given(*arg_st, **kw_st):
+        def deco(fn):
+            inner = fn
+
+            def wrapper(*args, **kwargs):
+                rng = random.Random(f"stub:{inner.__name__}")
+                n = getattr(wrapper, "_max_examples", _MAX_EXAMPLES[0])
+                for _ in range(n):
+                    drawn = [s.example(rng) for s in arg_st]
+                    drawn_kw = {k: s.example(rng) for k, s in kw_st.items()}
+                    inner(*args, *drawn, **kwargs, **drawn_kw)
+
+            wrapper.__name__ = inner.__name__
+            wrapper.__doc__ = inner.__doc__
+            # allow @settings above or below @given
+            if hasattr(inner, "_max_examples"):
+                wrapper._max_examples = inner._max_examples
+            return wrapper
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.strategies = _st
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.__stub__ = True
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

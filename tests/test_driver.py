@@ -14,7 +14,7 @@ from repro.optim.schedule import constant
 from repro.train.driver import InjectedFailure, Trainer, TrainerConfig
 
 
-def _mk(tmp_path, total_steps, hooks=None, interval=5):
+def _mk(tmp_path, total_steps, hooks=None, interval=5, lr=1e-3):
     arch = get_arch("internlm2-1.8b", smoke=True)
     mesh = make_host_mesh(model=1)
     profile = PROFILES[arch.profile](False)
@@ -23,7 +23,7 @@ def _mk(tmp_path, total_steps, hooks=None, interval=5):
     cfg = TrainerConfig(total_steps=total_steps, ckpt_dir=str(tmp_path),
                         ckpt_interval=interval, straggler_factor=5.0)
     return Trainer(arch, data, mesh, profile, AdamWConfig(),
-                   constant(1e-3), cfg, hooks=hooks)
+                   constant(lr), cfg, hooks=hooks)
 
 
 def test_checkpoint_restart_bit_identical(tmp_path):
@@ -65,6 +65,11 @@ def test_straggler_detection(tmp_path):
 
 
 def test_loss_decreases_over_run(tmp_path):
-    t = _mk(tmp_path, 30)
+    # fresh random batches per step make single-point loss comparisons pure
+    # noise (sigma ~0.15 per batch); compare 5-step window means at a lr
+    # where the trend dominates within 30 steps.
+    t = _mk(tmp_path, 30, lr=1e-2)
     out = t.run()
-    assert out["losses"][-1] < out["losses"][0]
+    first = sum(out["losses"][:5]) / 5
+    last = sum(out["losses"][-5:]) / 5
+    assert last < first, (first, last, out["losses"])

@@ -1,0 +1,178 @@
+"""Vectorized ECMBatch path == scalar ECMModel path, everywhere it's used:
+model construction, Eq. 1 predictions, the simulator table, sweeps,
+scaling and the autotuner ranking."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BENCHMARKS,
+    ECMBatch,
+    HASWELL_MEASURED_BW,
+    benchmark_batch,
+    haswell_ecm,
+)
+from repro.core.autotune import (
+    WorkloadSpec,
+    candidates,
+    estimate,
+    estimate_batch,
+    rank,
+)
+from repro.core.kernel_spec import PAPER_TABLE1_INPUTS
+from repro.core.ecm import ECMModel
+from repro.core.saturation import ScalingModel, batch_curve, batch_saturation
+from repro.simcache import (
+    scaling_batch,
+    simulate_level,
+    simulate_scaling,
+    simulate_working_set,
+    sweep,
+    sweep_batch,
+)
+
+ALL = sorted(BENCHMARKS)
+
+
+# ---------------------------------------------------------------------------
+# construction + Eq. 1
+# ---------------------------------------------------------------------------
+
+
+def test_batch_construction_matches_scalar_bitwise():
+    batch = benchmark_batch(ALL)
+    for i, name in enumerate(batch.names):
+        scalar = haswell_ecm(name)
+        assert tuple(batch.transfers[i]) == scalar.transfers, name
+        assert float(batch.t_ol[i]) == scalar.t_ol
+        assert float(batch.t_nol[i]) == scalar.t_nol
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_batch_predictions_match_scalar_1e12(name):
+    batch = benchmark_batch(ALL)
+    i = batch.names.index(name)
+    scalar = haswell_ecm(name)
+    np.testing.assert_allclose(batch.predictions()[i], scalar.predictions(),
+                               rtol=0, atol=1e-12)
+    # and through the scalar view
+    view = batch.scalar(i)
+    assert view.predictions() == scalar.predictions()
+    assert view.name == name
+
+
+def test_from_models_roundtrip():
+    models = [haswell_ecm(n) for n in ALL]
+    batch = ECMBatch.from_models(models)
+    for i, m in enumerate(models):
+        assert batch.scalar(i).predictions() == m.predictions()
+
+
+def test_batch_performance_matches_scalar():
+    batch = benchmark_batch(ALL)
+    perf = batch.performance(8.0, "Mem", clock_hz=2.3e9)
+    for i, name in enumerate(batch.names):
+        want = haswell_ecm(name).performance(8.0, "Mem", clock_hz=2.3e9)
+        assert perf[i] == pytest.approx(want, rel=1e-12)
+
+
+def test_batch_shape_validation():
+    with pytest.raises(ValueError):
+        ECMBatch(t_ol=[1.0], t_nol=[1.0], transfers=[[1.0, 2.0]],
+                 levels=("L1", "L2"))
+
+
+# ---------------------------------------------------------------------------
+# simulator: scalar APIs are views over the batch path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_sweep_matches_pointwise(name):
+    sizes = [2.0**k * 1024 for k in range(4, 18)]
+    curve = dict(sweep(name, sizes))
+    _, surface = sweep_batch([name], sizes)
+    for j, s_ in enumerate(sizes):
+        assert surface[0, j] == pytest.approx(
+            simulate_working_set(name, s_), rel=0, abs=1e-12)
+        assert curve[s_] == pytest.approx(surface[0, j], rel=0, abs=1e-12)
+
+
+def test_levels_batch_matches_levels():
+    from repro.simcache import simulate_levels_batch
+
+    names, table = simulate_levels_batch(ALL)
+    for i, n in enumerate(names):
+        for lv in range(4):
+            assert table[i, lv] == simulate_level(n, lv), (n, lv)
+
+
+def test_scaling_batch_matches_scalar():
+    names, p = scaling_batch(["ddot", "striad"], 14)
+    for i, n in enumerate(names):
+        want = simulate_scaling(n, 14)
+        np.testing.assert_allclose(p[i], want, rtol=0, atol=1e-6)
+
+
+def test_batch_curve_matches_scaling_model():
+    batch = benchmark_batch(ALL)
+    curves = batch_curve(batch, 14, work_per_unit=8.0, clock_hz=2.3e9)
+    sats = batch_saturation(batch)
+    for i, name in enumerate(batch.names):
+        sm = ScalingModel.from_ecm(haswell_ecm(name))
+        np.testing.assert_allclose(
+            curves[i], sm.curve(14, 8.0, 2.3e9), rtol=1e-12)
+        assert sats[i] == sm.n_saturation
+
+
+# ---------------------------------------------------------------------------
+# autotuner: batch ranking == scalar estimates
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_batch_matches_scalar():
+    w = WorkloadSpec(n_params=2_000_000_000, d_model=2048, n_layers=24,
+                     global_batch=256, seq_len=4096)
+    cands = candidates(256, w)
+    b = estimate_batch(w, cands)
+    for i, c in enumerate(cands):
+        e = estimate(w, c)
+        assert b["t_comp"][i] == pytest.approx(e.t_comp, rel=1e-12)
+        assert b["t_hbm"][i] == pytest.approx(e.t_hbm, rel=1e-12)
+        assert b["t_coll"][i] == pytest.approx(e.t_coll, rel=1e-12)
+        assert b["t_ecm"][i] == pytest.approx(e.t_ecm, rel=1e-12)
+        assert bool(b["fits"][i]) == e.fits
+
+
+def test_rank_is_sorted_and_consistent():
+    w = WorkloadSpec(n_params=9_000_000_000, d_model=4096, n_layers=40,
+                     global_batch=1024, seq_len=4096)
+    ranked = rank(w, 1024)
+    ts = [e.t_ecm for e in ranked]
+    assert ts == sorted(ts)
+    for e in ranked[:5]:
+        want = estimate(w, e.config)
+        assert e.t_ecm == pytest.approx(want.t_ecm, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# §VII-E NT-store accounting regression (satellite: l2_streams reconcile)
+# ---------------------------------------------------------------------------
+
+
+def test_striad_nt_accounting_matches_paper_inputs():
+    """NT stores cross the L1<->L2 interface (LFB drain) and the memory
+    edge, but bypass L2<->L3 — the builder must reproduce the paper's
+    stated striad_nt input {1 || 3 | 4 | 4 | 15.6} (§VII-E)."""
+    spec = BENCHMARKS["striad_nt"]
+    assert spec.l1_evict_streams == 1            # NT store leaves L1
+    assert spec.l2_streams == spec.load_streams  # ...but never crosses L2<->L3
+    assert spec.mem_streams == 3                 # ...and lands in memory
+    model = haswell_ecm("striad_nt")
+    paper = ECMModel.parse(PAPER_TABLE1_INPUTS["striad_nt"])
+    assert model.t_nol == pytest.approx(paper.t_nol, abs=0.15)
+    for got, want in zip(model.transfers, paper.transfers):
+        assert got == pytest.approx(want, abs=0.15)
+    # batch builder agrees with the same accounting
+    batch = benchmark_batch(["striad_nt"])
+    np.testing.assert_allclose(batch.transfers[0], model.transfers,
+                               rtol=0, atol=1e-12)

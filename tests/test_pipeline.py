@@ -1,0 +1,167 @@
+"""Multi-buffered DMA pipeline kernels: bit-identical across pipeline
+depths (num_stages 1/2/3), to the classic grid kernels, and to the jnp
+oracles — including odd/prime grid sizes where blocks shrink."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import pipeline as P
+from repro.kernels.stream import ops, ref
+
+KEY = jax.random.key(7)
+
+
+def _streams(rows, dtype=jnp.float32):
+    n = rows * 128
+    return [jax.random.normal(jax.random.fold_in(KEY, i), (n,), dtype)
+            for i in range(4)]
+
+
+ROWS = [512, 64, 33, 7]          # even, block-sized, odd, prime
+STAGES = [1, 2, 3]
+S, T = 1.7, -0.3
+
+
+def _all_outputs(rows, ns):
+    a, b, c, d = _streams(rows)
+    n = rows * 128
+    kw = dict(interpret=True, num_stages=ns)
+    return {
+        "copy": np.asarray(ops.copy(b, **kw)),
+        "store": np.asarray(ops.store(S, (n,), jnp.float32, **kw)),
+        "update": np.asarray(ops.update(S, a, **kw)),
+        "striad": np.asarray(ops.striad(S, b, c, **kw)),
+        "schoenauer": np.asarray(ops.schoenauer(b, c, d, **kw)),
+        "triad_update": np.asarray(ops.triad_update(S, T, b, c, **kw)),
+        "load": np.asarray(ops.load(a, **kw)),
+        "ddot": np.asarray(ops.ddot(a, b, **kw)),
+    }
+
+
+@pytest.mark.parametrize("rows", ROWS)
+def test_bit_identical_across_num_stages(rows):
+    """Pipeline depth must not change a single bit of any kernel output
+    (the reduction accumulates in chunk order regardless of depth)."""
+    base = _all_outputs(rows, 1)
+    for ns in STAGES[1:]:
+        outs = _all_outputs(rows, ns)
+        for k in outs:
+            assert np.array_equal(outs[k], base[k]), (rows, ns, k)
+
+
+@pytest.mark.parametrize("rows", ROWS)
+@pytest.mark.parametrize("ns", STAGES)
+def test_bit_identical_to_grid_kernels(rows, ns):
+    """DMA pipeline == classic one-block-per-grid-step Pallas kernels."""
+    a, b, c, d = _streams(rows)
+    n = rows * 128
+    kw = dict(interpret=True, num_stages=ns)
+    legacy = dict(interpret=True)
+    assert np.array_equal(np.asarray(ops.copy(b, **kw)),
+                          np.asarray(ops.copy(b, **legacy)))
+    assert np.array_equal(
+        np.asarray(ops.store(S, (n,), jnp.float32, **kw)),
+        np.asarray(ops.store(S, (n,), jnp.float32, **legacy)))
+    assert np.array_equal(np.asarray(ops.update(S, a, **kw)),
+                          np.asarray(ops.update(S, a, **legacy)))
+    assert np.array_equal(np.asarray(ops.striad(S, b, c, **kw)),
+                          np.asarray(ops.striad(S, b, c, **legacy)))
+    assert np.array_equal(np.asarray(ops.schoenauer(b, c, d, **kw)),
+                          np.asarray(ops.schoenauer(b, c, d, **legacy)))
+
+
+@pytest.mark.parametrize("rows", [512, 33])
+def test_elementwise_match_ref_oracles(rows):
+    """Elementwise pipeline kernels equal the jnp oracles bit-for-bit
+    (identical per-element arithmetic; reductions get tolerances since
+    summation order legitimately differs from a whole-array jnp.sum)."""
+    a, b, c, d = _streams(rows)
+    n = rows * 128
+    kw = dict(interpret=True, num_stages=2)
+    assert np.array_equal(np.asarray(ops.copy(b, **kw)),
+                          np.asarray(ref.copy(b)))
+    assert np.array_equal(np.asarray(ops.store(S, (n,), jnp.float32, **kw)),
+                          np.asarray(ref.store(S, (n,), jnp.float32)))
+    assert np.array_equal(np.asarray(ops.update(S, a, **kw)),
+                          np.asarray(ref.update(S, a)))
+    np.testing.assert_allclose(np.asarray(ops.striad(S, b, c, **kw)),
+                               np.asarray(ref.striad(S, b, c)),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ops.schoenauer(b, c, d, **kw)),
+                               np.asarray(ref.schoenauer(b, c, d)),
+                               rtol=1e-6, atol=1e-6)
+    atol = 1e-3 * n**0.5
+    np.testing.assert_allclose(float(ops.load(a, **kw)),
+                               float(ref.load(a)), rtol=1e-4, atol=atol)
+    np.testing.assert_allclose(float(ops.ddot(a, b, **kw)),
+                               float(ref.ddot(a, b)), rtol=1e-4, atol=atol)
+
+
+def test_fused_chain_matches_composition():
+    a, b, c, d = _streams(64)
+    fused = np.asarray(ops.triad_update(S, T, b, c, interpret=True))
+    chained = np.asarray(ops.triad_update_unfused(S, T, b, c,
+                                                  interpret=True))
+    np.testing.assert_allclose(fused, chained, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        fused, np.asarray(ref.update(T, ref.striad(S, b, c))),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_fused_chain_stream_counts():
+    unfused, fused = P.triad_update_chain_streams()
+    assert (unfused, fused) == (5, 3)
+
+
+def test_bf16_pipeline():
+    rows = 64
+    b = jax.random.normal(jax.random.fold_in(KEY, 9), (rows * 128,),
+                          jnp.bfloat16)
+    c = jax.random.normal(jax.random.fold_in(KEY, 10), (rows * 128,),
+                          jnp.bfloat16)
+    got = ops.striad(S, b, c, interpret=True, num_stages=3)
+    legacy = ops.striad(S, b, c, interpret=True)
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(legacy, np.float32))
+
+
+def test_num_stages_capped_by_chunks():
+    """num_stages larger than the chunk count degrades gracefully."""
+    b = jax.random.normal(KEY, (2 * 128,), jnp.float32)
+    got = ops.copy(b, interpret=True, num_stages=3, block_rows=2)
+    assert np.array_equal(np.asarray(got), np.asarray(b))
+
+
+def test_pipeline_config_vmem_budget():
+    cfg = P.PipelineConfig(num_stages=3, block_rows=64)
+    assert cfg.vmem_bytes(n_streams=4) == 3 * 4 * 64 * 128 * 4
+
+
+# ---------------------------------------------------------------------------
+# overlap calibration (tpu_ecm glue)
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_coefficient_inversion():
+    from repro.core.tpu_ecm import measured_overlap, overlap_coefficient
+
+    # fully serialized: measured = t_comp + t_x -> f = 1
+    assert overlap_coefficient(3.0, 1.0, 2.0) == pytest.approx(1.0)
+    # fully hidden (transfer-bound): measured = t_x -> smallest f
+    assert overlap_coefficient(2.0, 1.0, 2.0) == pytest.approx(0.5)
+    # compute-bound and hidden: f = 0
+    assert overlap_coefficient(1.0, 1.0, 0.5) == pytest.approx(0.0)
+    # serial vs pipelined pair: hiding t_x fully -> f = 0
+    assert measured_overlap(3.0, 1.0, 2.0) == pytest.approx(0.0)
+    assert measured_overlap(3.0, 3.0, 2.0) == pytest.approx(1.0)
+    assert measured_overlap(3.0, 2.0, 2.0) == pytest.approx(0.5)
+
+
+def test_with_measured_overlap():
+    from repro.core.tpu_ecm import TPUStepECM, with_measured_overlap
+
+    step = TPUStepECM(name="t", t_comp=1.0, t_hbm=2.0, t_ici=0.0)
+    cal = with_measured_overlap(step, t_serial_s=3.0, t_pipelined_s=2.0)
+    assert cal.exposed_hbm_fraction == pytest.approx(0.5)
+    assert cal.t_ecm == pytest.approx(2.0)      # max(1, 1) + 1
