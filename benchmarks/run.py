@@ -22,6 +22,7 @@ from . import (
     fig12_nt_stores,
     fig56_energy,
     fig789_sweeps,
+    stencil_sweep,
     table1_ecm,
     tpu_energy,
     tpu_roofline,
@@ -42,6 +43,9 @@ SECTIONS = [
      fig11_bandwidth),
     ("fig12_nt_stores", "Fig. 12: non-temporal stores (ECM vs roofline)",
      fig12_nt_stores),
+    ("stencil_sweep",
+     "Stencil LC-ECM: 2D Jacobi sweeps + blocking (arXiv:1410.5010)",
+     stencil_sweep),
     ("tpu_stream_ecm", "TPU adaptation: Pallas stream kernels + TPU-ECM",
      tpu_stream_ecm),
     ("tpu_roofline", "TPU §Roofline: per (arch x shape x mesh) ECM terms",

@@ -1,0 +1,165 @@
+"""Stencil working-set / blocking sweeps (the arXiv:1410.5010 Fig. 6 shape).
+
+Measured-vs-predicted cycles per cache-line update for the 2D 5-point
+Jacobi as the problem size sweeps the working set from L1-resident to
+memory-resident, with the layer-condition analysis switching the per-edge
+stream counts along the way; plus a spatial-blocking sweep at a fixed
+memory-resident size, ranked by the ECM autotuner, and wall-clock /
+bit-equality validation of the Pallas stencil kernels across pipeline
+depths.
+
+    PYTHONPATH=src python -m benchmarks.stencil_sweep
+    PYTHONPATH=src python -m benchmarks.stencil_sweep --json [PATH]
+
+``--json`` writes the perf-trajectory artifact (default
+``BENCH_stencil.json``) so future PRs can track the stencil path the way
+``BENCH_pipeline.json`` tracks the stream path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from .util import fmt, pred_str, table
+
+#: problem widths N (square N x N grids, two f64 arrays in the model);
+#: chosen to land working sets in L1 / L2 / L3 / Mem and to straddle the
+#: L1 (N ~ 682) and L2 (N ~ 5461) layer-condition breaks.
+SWEEP_NS = [32, 64, 128, 512, 1024, 2048, 4096, 8192]
+BLOCK_N = 8192                     # memory-resident blocking showcase
+LEVEL_NAMES = ("L1", "L2", "L3", "Mem")
+
+
+def sweep_payload(ns=SWEEP_NS) -> list[dict]:
+    """Predicted and simulated-measured cy/CL-update per problem size."""
+    from repro.simcache import stencil_sweep_batch
+
+    r = stencil_sweep_batch("jacobi2d", ns)
+    out = []
+    for i, n in enumerate(r["n"]):
+        out.append({
+            "n": int(n),
+            "ws_kib": float(r["ws_bytes"][i] / 1024),
+            "regime": LEVEL_NAMES[int(r["regime"][i])],
+            "lc_misses": [int(x) for x in r["misses"][i]],
+            "predicted_cy_per_cl": float(r["predicted"][i]),
+            "measured_cy_per_cl": float(r["measured"][i]),
+            "model_error": float(r["measured"][i] / r["predicted"][i] - 1),
+        })
+    return out
+
+
+def blocking_payload(n=BLOCK_N) -> dict:
+    """ECM-ranked spatial blockings at a memory-resident problem size."""
+    from repro.core.autotune import rank_stencil_blocks
+
+    ranked = rank_stencil_blocks("jacobi2d", (n,))
+    return {"n": n, "ranked": ranked, "best": ranked[0]}
+
+
+def kernel_payload(size=(128, 96), repeats=2) -> dict:
+    """Bit-equality + wall-clock of the Pallas 2D Jacobi across depths."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.stencil import ops, ref
+
+    a = jax.random.normal(jax.random.key(0), size, jnp.float32)
+    want = np.asarray(ref.jacobi2d(a))
+    out: dict = {"shape": list(size), "stages": {}}
+    for ns in (None, 1, 2, 3):
+        fn = lambda: ops.jacobi2d(a, num_stages=ns, interpret=True)
+        got = np.asarray(jax.block_until_ready(fn()))        # compile+check
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
+        out["stages"][str(ns)] = {
+            "bit_identical_to_ref": bool(np.array_equal(got, want)),
+            "wall_s": best,
+        }
+    return out
+
+
+def emit_json(path: str) -> None:
+    payload = {
+        "sweep": sweep_payload(),
+        "blocking": blocking_payload(),
+        "kernels": kernel_payload(),
+        "schema": 1,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    regimes = sorted({p["regime"] for p in payload["sweep"]})
+    ok = all(s["bit_identical_to_ref"]
+             for s in payload["kernels"]["stages"].values())
+    print(f"[bench] wrote {path}: {len(payload['sweep'])} sweep points over "
+          f"regimes {regimes}, best block "
+          f"{payload['blocking']['best']['block']} "
+          f"({payload['blocking']['best']['speedup_vs_unblocked']:.2f}x), "
+          f"kernels bit-identical: {ok}")
+
+
+def run() -> str:
+    from repro.core import stencil_ecm
+
+    out = []
+    rows = []
+    for p in sweep_payload():
+        rows.append([p["n"], fmt(p["ws_kib"], 0) + " KiB", p["regime"],
+                     "/".join(str(m) for m in p["lc_misses"]),
+                     fmt(p["predicted_cy_per_cl"], 1),
+                     fmt(p["measured_cy_per_cl"], 1),
+                     f"{p['model_error']:+.1%}"])
+    out.append(table(
+        ["N", "working set", "regime", "LC misses L1/L2/L3",
+         "ECM cy/CL", "sim cy/CL", "err"], rows))
+
+    m_small = stencil_ecm("jacobi2d", widths=(SWEEP_NS[0],))
+    m_big = stencil_ecm("jacobi2d", widths=(BLOCK_N,))
+    out.append(
+        f"\nlayer conditions move the model inputs, not just the residence "
+        f"level:\n  N={SWEEP_NS[0]:>5}: {m_small.notation()} -> "
+        f"{pred_str(m_small.predictions())}\n  N={BLOCK_N:>5}: "
+        f"{m_big.notation()} -> {pred_str(m_big.predictions())}")
+
+    b = blocking_payload()
+    brows = [[str(r["block"][0]), r["misses_l1"], fmt(r["t_ecm"], 1),
+              fmt(r["speedup_vs_unblocked"], 2) + "x"]
+             for r in sorted(b["ranked"], key=lambda r: r["block"])]
+    out.append(f"\n== spatial blocking at N={b['n']} (memory-resident), "
+               "ECM-ranked ==")
+    out.append(table(["block width", "L1 misses", "T_ECM(Mem) cy/CL",
+                      "speedup"], brows))
+    out.append(f"autotuner pick: block {b['best']['block']} "
+               f"({b['best']['speedup_vs_unblocked']:.2f}x predicted)")
+
+    k = kernel_payload()
+    krows = [[ns, "yes" if v["bit_identical_to_ref"] else "NO",
+              fmt(v["wall_s"] * 1e3, 1)]
+             for ns, v in k["stages"].items()]
+    out.append(f"\n== Pallas 2D Jacobi {tuple(k['shape'])} vs ref.py "
+               "(interpret mode) ==")
+    out.append(table(["num_stages", "bit-identical", "wall ms"], krows))
+    return "\n".join(out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const="BENCH_stencil.json",
+                    default=None, metavar="PATH",
+                    help="emit the stencil perf-trajectory JSON")
+    args = ap.parse_args()
+    if args.json:
+        emit_json(args.json)
+        return 0
+    print(run())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

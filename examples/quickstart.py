@@ -2,7 +2,10 @@
 
 1. Paper mode — build the ECM model for a streaming kernel on Haswell-EP
    from first principles and compare with the paper's Table I.
-2. TPU mode — jit a small training step, pull FLOPs/bytes/collectives out
+2. Stencil mode — layer-condition-aware ECM for the 2D Jacobi: the model
+   inputs change with problem width, and spatial blocking is ranked by
+   predicted T_ECM (see docs/ecm-model.md).
+3. TPU mode — jit a small training step, pull FLOPs/bytes/collectives out
    of the compiled artifact and build the three-term TPU-ECM model that
    drives the framework's §Roofline analysis.
 
@@ -24,7 +27,20 @@ for name in ("ddot", "striad", "schoenauer"):
           f"{PAPER_TABLE1_PREDICTIONS[name]}), saturates at "
           f"{sat.n_saturation} cores/domain (Eq. 2)")
 
-# --- 2. TPU mode -----------------------------------------------------------
+# --- 2. stencil mode (layer conditions, arXiv:1410.5010) -------------------
+from repro.core import JACOBI2D, stencil_ecm
+from repro.core.autotune import rank_stencil_blocks
+
+print("\n== Layer-condition ECM: 2D 5-point Jacobi ==")
+for n in (512, 8192):
+    ecm = stencil_ecm("jacobi2d", widths=(n,))
+    print(f"N={n:<6d} L1/L2/L3 misses {JACOBI2D.misses_per_level((n,))} "
+          f"input {ecm.notation():26s} -> {ecm.prediction_notation()}")
+best = rank_stencil_blocks("jacobi2d", (8192,))[0]
+print(f"autotuned blocking at N=8192: block {best['block']} "
+      f"({best['speedup_vs_unblocked']:.2f}x predicted vs unblocked)")
+
+# --- 3. TPU mode -----------------------------------------------------------
 from repro.configs import get_arch
 from repro.configs.base import ShapeSpec
 from repro.core import hlo

@@ -5,6 +5,9 @@ Paper-faithful pieces: :mod:`.ecm` (model + Eq. 1 overlap rule + notation),
 (§IV-C construction recipe + Table I benchmarks), :mod:`.saturation`
 (Eq. 2 multicore scaling) and :mod:`.energy` (§III-D energy/EDP analysis).
 
+Beyond the paper's streaming kernels: :mod:`.layer_condition` (stencil
+layer-condition analysis, arXiv:1410.5010) with LC-aware ECM construction.
+
 TPU adaptation: :mod:`.hlo` (compiled-HLO resource extraction) and
 :mod:`.tpu_ecm` (three-term compute/HBM/ICI ECM for JAX programs).
 """
@@ -17,6 +20,19 @@ from .kernel_spec import (
     StreamKernelSpec,
     benchmark_batch,
     haswell_ecm,
+)
+from .layer_condition import (
+    HASWELL_CAPACITIES,
+    JACOBI2D,
+    JACOBI3D,
+    LC_SAFETY,
+    STENCIL_MEASURED_BW,
+    STENCILS,
+    LayerCondition,
+    StencilSpec,
+    misses_batch,
+    stencil_block_batch,
+    stencil_ecm,
 )
 from .machine import (
     HASWELL_EP,
@@ -40,6 +56,17 @@ __all__ = [
     "StreamKernelSpec",
     "benchmark_batch",
     "haswell_ecm",
+    "HASWELL_CAPACITIES",
+    "JACOBI2D",
+    "JACOBI3D",
+    "LC_SAFETY",
+    "STENCIL_MEASURED_BW",
+    "STENCILS",
+    "LayerCondition",
+    "StencilSpec",
+    "misses_batch",
+    "stencil_block_batch",
+    "stencil_ecm",
     "batch_curve",
     "batch_saturation",
     "HASWELL_EP",

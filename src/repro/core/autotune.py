@@ -193,3 +193,76 @@ def rank(w: WorkloadSpec, n_chips: int = 256,
 def recommend(w: WorkloadSpec, n_chips: int = 256,
               m: TPUMachineModel = TPU_V5E) -> Estimate:
     return rank(w, n_chips, m)[0]
+
+
+# ---------------------------------------------------------------------------
+# Stencil spatial-blocking autotuner (layer-condition ECM)
+# ---------------------------------------------------------------------------
+
+
+def stencil_block_candidates(widths: tuple[int, ...],
+                             min_block: int = 16) -> list[tuple[int, ...]]:
+    """Power-of-two inner-width cappings up to the full problem width.
+
+    Only the innermost (contiguous) dimension is tiled — that is the knob
+    that moves the layer condition; outer widths are kept whole."""
+    inner = widths[-1]
+    blocks, b = [], min_block
+    while b < inner:
+        blocks.append(widths[:-1] + (b,))
+        b *= 2
+    blocks.append(tuple(widths))          # no blocking
+    return blocks
+
+
+def rank_stencil_blocks(spec_or_name, widths: tuple[int, ...],
+                        blocks: "list[tuple[int, ...]] | None" = None,
+                        *, level: "int | str" = "Mem",
+                        machine=None, sustained_bw: float | None = None,
+                        capacities: tuple[int, ...] | None = None
+                        ) -> list[dict]:
+    """Rank spatial blockings of a stencil by predicted ``T_ECM``.
+
+    Same structure as :func:`rank` (the mesh autotuner): one vectorized
+    :func:`~repro.core.layer_condition.stencil_block_batch` evaluation
+    over every candidate, then an argsort — no per-candidate model
+    builds.  ``level`` picks the residence level the ranking optimizes
+    for (``"Mem"``: large working sets, where blocking matters).
+
+    Returns dicts ``{"block", "t_ecm", "misses_l1", "speedup_vs_unblocked"}``
+    best-first.  Ties on ``t_ecm`` (every block already satisfying the
+    binding layer condition) are broken toward the *largest* block: equal
+    predicted cycles, but fewer strips and less halo re-reading the
+    first-order model does not charge for.
+    """
+    from .layer_condition import (
+        HASWELL_CAPACITIES,
+        STENCIL_MEASURED_BW,
+        STENCILS,
+        misses_batch,
+        stencil_block_batch,
+    )
+    from .machine import HASWELL_EP
+
+    spec = (spec_or_name if not isinstance(spec_or_name, str)
+            else STENCILS[spec_or_name])
+    m = machine or HASWELL_EP
+    caps = capacities or HASWELL_CAPACITIES
+    bw = sustained_bw or STENCIL_MEASURED_BW.get(spec.name, 24.1e9)
+    cands = blocks or stencil_block_candidates(widths)
+    batch = stencil_block_batch(spec, widths, cands, machine=m,
+                                sustained_bw=bw, capacities=caps)
+    t = batch.prediction(level)                               # (C,)
+    eff = np.minimum(np.asarray([tuple(b) for b in cands], float),
+                     np.asarray(widths, float)[None, :])
+    mis = misses_batch(spec, eff, caps)
+    # baseline: the truly unblocked model, independent of the candidate set
+    base = float(spec.ecm(m, bw, widths=widths,
+                          capacities=caps).prediction(level))
+    # primary key t_ecm ascending, secondary key inner block descending
+    order = np.lexsort((-eff[:, -1], t))
+    return [{"block": tuple(int(x) for x in cands[i]),
+             "t_ecm": float(t[i]),
+             "misses_l1": int(mis[i, 0]),
+             "speedup_vs_unblocked": float(base / t[i])}
+            for i in order]

@@ -1,0 +1,350 @@
+"""Layer-condition analysis and ECM construction for stencil kernels.
+
+The paper validates the ECM model on streaming kernels whose cache-line
+traffic is a *constant* per unit of work (Table I).  Stencils break that
+assumption: the companion work "Quantifying performance bottlenecks of
+stencil computations using the Execution-Cache-Memory model" (Stengel,
+Treibig, Hager & Wellein, arXiv:1410.5010, §III) shows that the number of
+load streams that miss a given cache level depends on whether that level
+can hold the *reuse set* of the stencil — the "layer condition" (LC).
+
+For the 2D 5-point Jacobi ``b[j,i] = c0*a[j,i] + c1*(a[j-1,i] + a[j+1,i]
++ a[j,i-1] + a[j,i+1])`` the kernel touches ``2r+1 = 3`` consecutive rows
+of ``a`` per sweep position.  A cache of capacity ``C`` holds them all iff
+
+    (2r+1) * W * elem_bytes  <=  C / safety        (safety = 2)
+
+where ``W`` is the width of the inner (contiguous) loop — the *problem*
+width, or the *block* width under spatial blocking.  If the condition
+holds, only the leading row of ``a`` misses: 1 load stream per cache line
+of work, and with the write-allocate + write-back pair of ``b`` the edge
+below carries 3 CLs/CL (24 B/LUP in the reference's units).  If it is
+violated, all ``2r+1`` rows miss: 5 CLs/CL (40 B/LUP) — the §III
+hand-derived values that ``tests/test_layer_condition.py`` pins.
+
+For the 3D 7-point stencil the hierarchy has two conditions (misses per
+CL of work in {1, 3, 5} + the store pair):
+
+* *layer* condition — ``2r+1`` layers fit: only the leading stream misses;
+* *row* condition — the ``4r+1`` in-flight rows fit: one row stream per
+  layer misses (``2r+1``);
+* neither — every distinct row stream misses (``4r+1``).
+
+:func:`stencil_ecm` turns the per-level miss counts into a full
+:class:`~repro.core.ecm.ECMModel` exactly the way
+``StreamKernelSpec.ecm`` does for streaming kernels (§IV-C recipe: port
+model for T_OL/T_nOL, per-level bandwidths for the transfer terms);
+:func:`stencil_block_batch` evaluates whole candidate grids (block widths
+x problem widths) in one :class:`~repro.core.ecm.ECMBatch`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .ecm import ECMBatch, ECMModel
+from .machine import HASWELL_EP, MachineModel
+
+#: Haswell-EP cache capacities (Table II), innermost first.  The L3 entry is
+#: the Cluster-on-Die affinity-domain slice (7 x 2.5 MB), matching the CoD
+#: sustained bandwidths of ``machine.HASWELL_MEASURED_BW``; it equals
+#: ``simcache.HASWELL_CACHES_COD.capacities()``.
+HASWELL_CAPACITIES: tuple[int, ...] = (
+    32 * 1024, 256 * 1024, 35 * 1024 * 1024 // 2)
+
+#: Rule-of-thumb safety factor of the LC literature: require the reuse set
+#: to fit in *half* the cache (associativity conflicts, other data).
+LC_SAFETY = 2.0
+
+
+@dataclass(frozen=True)
+class LayerCondition:
+    """One reuse condition: if ``nbytes <= capacity / safety`` then only
+    ``misses_if_held`` load streams miss in that cache level."""
+
+    name: str
+    nbytes: float
+    misses_if_held: int
+
+    def holds(self, capacity_bytes: float, safety: float = LC_SAFETY) -> bool:
+        return self.nbytes * safety <= capacity_bytes
+
+
+@dataclass(frozen=True)
+class StencilSpec:
+    """A Jacobi-style star stencil of radius ``radius`` in ``dim`` dims.
+
+    The spec plays the role :class:`~repro.core.kernel_spec.StreamKernelSpec`
+    plays for streaming kernels, except the stream counts are functions of
+    the layer conditions instead of constants.  uop counts are per cache
+    line of work (one CL of updates = ``line_bytes/elem_bytes`` LUPs) with
+    AVX registers, mirroring Table I's accounting.
+
+    The store side is LC-independent: the output array is streamed, so one
+    write-allocate (RFO) and one write-back stream cross every edge.
+    """
+
+    name: str
+    dim: int                    # 2 or 3
+    radius: int = 1
+    elem_bytes: int = 8         # double precision
+    write_allocate: bool = True
+    flops_per_elem: int = 6
+    updates_per_elem: int = 1
+    # micro-op mix per CL of work (AVX: one 64 B line = 2 vector iterations)
+    uop_loads: int = 8
+    uop_stores: int = 2
+    uop_fma: int = 0
+    uop_mul: int = 4
+    uop_add: int = 6
+
+    def __post_init__(self) -> None:
+        if self.dim not in (2, 3):
+            raise ValueError(f"dim must be 2 or 3, got {self.dim}")
+        if self.radius < 1:
+            raise ValueError("radius must be >= 1")
+
+    # ------------------------------------------------------------------
+    # Stream structure
+    # ------------------------------------------------------------------
+    @property
+    def row_streams(self) -> int:
+        """Distinct rows of the input touched per sweep position: ``2r+1``
+        in 2D, ``4r+1`` in 3D (``2r+1`` rows in the centre layer plus one
+        per outer layer)."""
+        return (2 * self.radius + 1 if self.dim == 2
+                else 4 * self.radius + 1)
+
+    @property
+    def rfo_streams(self) -> int:
+        return 1 if self.write_allocate else 0
+
+    @property
+    def wb_streams(self) -> int:
+        return 1
+
+    def conditions(self, widths: tuple[int, ...],
+                   block: tuple[int, ...] | None = None
+                   ) -> tuple[LayerCondition, ...]:
+        """Reuse conditions, strongest (fewest misses) first.
+
+        ``widths`` are the inner problem dimensions, outermost sweep dim
+        excluded: ``(W,)`` for 2D arrays of shape (H, W), ``(H, W)`` for 3D
+        arrays of shape (D, H, W).  ``block`` optionally caps each width
+        (spatial blocking tiles the inner loops, shrinking the reuse set).
+        """
+        if len(widths) != self.dim - 1:
+            raise ValueError(
+                f"{self.dim}D stencil needs {self.dim - 1} inner widths, "
+                f"got {widths!r}")
+        w = [min(x, b) for x, b in zip(widths, block)] if block else \
+            list(widths)
+        r, eb = self.radius, self.elem_bytes
+        if self.dim == 2:
+            return (LayerCondition(
+                "rows", (2 * r + 1) * w[0] * eb, misses_if_held=1),)
+        return (
+            LayerCondition(
+                "layers", (2 * r + 1) * w[0] * w[1] * eb, misses_if_held=1),
+            LayerCondition(
+                "rows", (4 * r + 1) * w[1] * eb, misses_if_held=2 * r + 1),
+        )
+
+    def load_misses(self, capacity_bytes: float, widths: tuple[int, ...],
+                    *, block: tuple[int, ...] | None = None,
+                    safety: float = LC_SAFETY) -> int:
+        """Input load streams missing a cache of ``capacity_bytes``."""
+        for cond in self.conditions(widths, block):
+            if cond.holds(capacity_bytes, safety):
+                return cond.misses_if_held
+        return self.row_streams
+
+    def misses_per_level(self, widths: tuple[int, ...],
+                         capacities: tuple[int, ...] = HASWELL_CAPACITIES,
+                         *, block: tuple[int, ...] | None = None,
+                         safety: float = LC_SAFETY) -> tuple[int, ...]:
+        """Load-stream misses per cache level (L1, L2, ...): the inward
+        load traffic on the edge *below* each level."""
+        return tuple(self.load_misses(c, widths, block=block, safety=safety)
+                     for c in capacities)
+
+    def elems_per_line(self, line_bytes: int) -> int:
+        return line_bytes // self.elem_bytes
+
+    # ------------------------------------------------------------------
+    # §IV-C model construction, LC-aware
+    # ------------------------------------------------------------------
+    def ecm(self, machine: MachineModel, sustained_bw: float, *,
+            widths: tuple[int, ...],
+            capacities: tuple[int, ...] = HASWELL_CAPACITIES,
+            block: tuple[int, ...] | None = None,
+            safety: float = LC_SAFETY,
+            optimized_agu: bool = False) -> ECMModel:
+        """Build the ECM model for one (problem size, blocking) point.
+
+        Identical recipe to ``StreamKernelSpec.ecm`` except the inward load
+        stream count on each edge comes from the layer condition of the
+        cache level above it.  Scalar view of
+        :func:`stencil_batch_from_misses`."""
+        misses = self.misses_per_level(widths, capacities, block=block,
+                                       safety=safety)
+        batch = stencil_batch_from_misses(
+            self, np.asarray([misses], float), machine=machine,
+            sustained_bw=sustained_bw, names=(self.name,),
+            optimized_agu=optimized_agu)
+        return batch.scalar(0)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized evaluation (ECMBatch over candidate grids)
+# ---------------------------------------------------------------------------
+
+
+def misses_batch(spec: StencilSpec, widths_arr: np.ndarray,
+                 capacities: tuple[int, ...] = HASWELL_CAPACITIES,
+                 *, safety: float = LC_SAFETY) -> np.ndarray:
+    """Load-miss table for a batch of effective inner widths: ``(B, L)``.
+
+    ``widths_arr`` has shape ``(B, dim-1)`` (or ``(B,)`` for 2D) and holds
+    the *effective* widths (problem width already capped by any blocking).
+    One set of array comparisons regardless of B — the LC analogue of
+    :func:`~repro.core.kernel_spec.benchmark_batch`.
+    """
+    w = np.asarray(widths_arr, float)
+    if w.ndim == 1:
+        w = w[:, None]
+    if w.shape[-1] != spec.dim - 1:
+        raise ValueError(
+            f"widths_arr last dim must be {spec.dim - 1}, got {w.shape}")
+    r, eb = spec.radius, spec.elem_bytes
+    caps = np.asarray(capacities, float)                     # (L,)
+    if spec.dim == 2:
+        nbytes = [(2 * r + 1) * w[:, 0] * eb]                # one condition
+        held_misses = [1]
+    else:
+        nbytes = [(2 * r + 1) * w[:, 0] * w[:, 1] * eb,
+                  (4 * r + 1) * w[:, 1] * eb]
+        held_misses = [1, 2 * r + 1]
+    out = np.full((w.shape[0], caps.size), spec.row_streams, float)
+    # weakest condition first so stronger ones overwrite
+    for nb, m in list(zip(nbytes, held_misses))[::-1]:
+        holds = nb[:, None] * safety <= caps[None, :]        # (B, L)
+        out = np.where(holds, m, out)
+    return out
+
+
+def stencil_batch_from_misses(
+    spec: StencilSpec,
+    misses: np.ndarray,
+    *,
+    machine: MachineModel = HASWELL_EP,
+    sustained_bw: float,
+    names: tuple[str, ...] = (),
+    optimized_agu: bool = False,
+) -> ECMBatch:
+    """The single light-speed §IV-C construction every stencil path uses.
+
+    ``misses`` is a ``(B, L)`` per-level load-miss table (from
+    :func:`misses_batch` or :meth:`StencilSpec.misses_per_level`); the
+    store side adds the LC-independent write-allocate + write-back pair.
+    :meth:`StencilSpec.ecm`, :func:`stencil_block_batch` and the simulator
+    paths in ``repro.simcache`` are all views of this one builder, so the
+    edge accounting lives in exactly one place.
+    """
+    misses = np.asarray(misses, float)
+    t_nol, t_ol = machine.ports.core_cycles(
+        loads=spec.uop_loads, stores=spec.uop_stores, fma=spec.uop_fma,
+        mul=spec.uop_mul, add=spec.uop_add, optimized_agu=optimized_agu)
+    lb = machine.line_bytes
+    edges = []
+    for i, lvl in enumerate(machine.levels):
+        edges.append((misses[:, i] + spec.rfo_streams) * lb / lvl.load_bpc
+                     + spec.wb_streams * lb / lvl.evict_bpc)
+    mem_lines = misses[:, -1] + spec.rfo_streams + spec.wb_streams
+    edges.append(machine.mem_cycles_per_line(sustained_bw) * mem_lines)
+    n = misses.shape[0]
+    return ECMBatch(
+        t_ol=np.full(n, t_ol), t_nol=np.full(n, t_nol),
+        transfers=np.stack(edges, axis=-1),
+        levels=machine.level_names(), names=names, unit="cy/CL")
+
+
+def stencil_block_batch(
+    spec: StencilSpec,
+    widths: tuple[int, ...],
+    blocks: "list[tuple[int, ...]] | np.ndarray | list[int]",
+    *,
+    machine: MachineModel = HASWELL_EP,
+    sustained_bw: float,
+    capacities: tuple[int, ...] = HASWELL_CAPACITIES,
+    safety: float = LC_SAFETY,
+    optimized_agu: bool = False,
+) -> ECMBatch:
+    """One :class:`ECMBatch` over spatial-blocking candidates.
+
+    ``blocks`` is a sequence of block-width tuples (ints accepted for 2D).
+    Agrees element-for-element with :meth:`StencilSpec.ecm` (both are
+    views of :func:`stencil_batch_from_misses`) but builds the whole
+    candidate set in a handful of array ops so the autotuner can rank
+    thousands of blockings per Python call.
+    """
+    blk = np.asarray([(b,) if np.ndim(b) == 0 else tuple(b)
+                      for b in blocks], float)               # (B, dim-1)
+    eff = np.minimum(blk, np.asarray(widths, float)[None, :])
+    misses = misses_batch(spec, eff, capacities, safety=safety)  # (B, L)
+    return stencil_batch_from_misses(
+        spec, misses, machine=machine, sustained_bw=sustained_bw,
+        names=tuple(f"{spec.name}@blk{tuple(int(x) for x in b)}"
+                    for b in blk),
+        optimized_agu=optimized_agu)
+
+
+# ---------------------------------------------------------------------------
+# The stencil registry (the Table-I analogue for this kernel family)
+# ---------------------------------------------------------------------------
+
+# 2D 5-point star, r=1: per AVX iteration 4 neighbour loads + 1 centre load
+# covered by the neighbour reuse (we count 4), 1 store; 2 iterations per CL.
+# flops/LUP: 3 adds (neighbour sums) + 1 add + 2 muls (c0*c + c1*s) = 6.
+JACOBI2D = StencilSpec(
+    name="jacobi2d", dim=2, radius=1,
+    flops_per_elem=6,
+    uop_loads=8, uop_stores=2, uop_mul=4, uop_add=6,
+)
+
+# 3D 7-point star, r=1: 6 neighbour loads + centre per AVX iteration (the
+# centre row covers a[j][i+-1] spatially) -> 6 loads counted, 1 store.
+# flops/LUP: 5 adds + 1 add + 2 muls = 8.
+JACOBI3D = StencilSpec(
+    name="jacobi3d", dim=3, radius=1,
+    flops_per_elem=8,
+    uop_loads=12, uop_stores=2, uop_mul=4, uop_add=10,
+)
+
+STENCILS: dict[str, StencilSpec] = {s.name: s for s in (JACOBI2D, JACOBI3D)}
+
+#: Sustained memory-domain bandwidth used for the stencil Mem edge.  The
+#: store/update class (write-allocate + write-back present) is the right
+#: analogue; likwid-style stencil measurements on the paper's testbed land
+#: in the same range.  A *calibration input*, not a prediction.
+STENCIL_MEASURED_BW: dict[str, float] = {
+    "jacobi2d": 24.1e9,
+    "jacobi3d": 24.1e9,
+}
+
+
+def stencil_ecm(name_or_spec: "str | StencilSpec", *,
+                widths: tuple[int, ...],
+                machine: MachineModel = HASWELL_EP,
+                sustained_bw: float | None = None,
+                capacities: tuple[int, ...] = HASWELL_CAPACITIES,
+                block: tuple[int, ...] | None = None,
+                safety: float = LC_SAFETY,
+                optimized_agu: bool = False) -> ECMModel:
+    """LC-aware ECM model for a registered (or custom) stencil spec."""
+    spec = (name_or_spec if isinstance(name_or_spec, StencilSpec)
+            else STENCILS[name_or_spec])
+    bw = sustained_bw or STENCIL_MEASURED_BW.get(spec.name, 24.1e9)
+    return spec.ecm(machine, bw, widths=widths, capacities=capacities,
+                    block=block, safety=safety, optimized_agu=optimized_agu)

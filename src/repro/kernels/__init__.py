@@ -1,14 +1,21 @@
 """Pallas TPU kernels for the performance-critical compute layers.
 
-Each kernel family ships three files (see EXAMPLE.md): ``kernel.py`` with the
-``pl.pallas_call`` + explicit ``BlockSpec`` VMEM tiling, ``ops.py`` with the
-jitted public wrapper, and ``ref.py`` with the pure-jnp oracle used by the
-allclose test sweeps.
+Each kernel family ships three files (walkthrough in
+``docs/kernel-authoring.md``): ``kernel.py`` with the ``pl.pallas_call``
+bodies and builders, ``ops.py`` with the jitted public wrapper, and
+``ref.py`` with the pure-jnp oracle the test sweeps compare against.
 
 * ``stream``    -- the paper's Table I streaming microbenchmarks, TPU-native
+* ``stencil``   -- Jacobi 2D 5-point / 3D 7-point (layer-condition ECM,
+  halo-aware DMA pipeline)
 * ``matmul``    -- MXU-tiled blocked matmul (compute microbenchmark)
 * ``attention`` -- blockwise flash attention (VMEM-resident score tiles)
+
+The multi-buffered HBM->VMEM DMA engine the stream and stencil families
+share lives in ``pipeline.py`` — see its docstring for the block-shape /
+halo / ``num_stages`` contract.
 """
 from . import stream
+from . import stencil
 from . import matmul
 from . import attention

@@ -1,24 +1,51 @@
-"""Multi-buffered HBM->VMEM stream pipeline (the ECM overlap engine).
+"""Multi-buffered HBM->VMEM DMA pipeline (the ECM overlap engine).
 
-The ECM model's central claim (Eq. 1) is ``T = max(T_nOL + T_data, T_OL)``:
-in-core work can hide data transfers when the hardware overlaps them.  The
-default one-block-per-grid-step Pallas kernels leave that overlap to the
-implicit two-deep pallas_call pipeline; this module makes it *explicit and
-tunable*: inputs and outputs live in HBM (``memory_space=ANY``) and the
-kernel itself runs an ``emit_pipeline``-style software pipeline with
-``num_stages`` VMEM buffers per stream and per-slot DMA semaphores:
+This module is the *shared* pipeline engine for every kernel family —
+stream ops, fused chains and the halo-carrying stencils all route through
+it; their ``ops.py`` wrappers only choose a compute function and a
+builder.  The ECM model's central claim (Eq. 1) is
+``T = max(T_nOL + T_data, T_OL)``: in-core work can hide data transfers
+when the hardware overlaps them.  The default one-block-per-grid-step
+Pallas kernels leave that overlap to the implicit two-deep pallas_call
+pipeline; this module makes it *explicit and tunable*: inputs and outputs
+live in HBM (``memory_space=ANY``) and the kernel itself runs an
+``emit_pipeline``-style software pipeline with ``num_stages`` VMEM
+buffers per stream and per-slot DMA semaphores:
 
     warm-up:  start DMAs for chunks 0..num_stages-2
     steady:   start chunk ``i+num_stages-1`` | wait chunk ``i`` | compute |
               start the output DMA for chunk ``i``
     drain:    wait the last in-flight output DMAs
 
-``num_stages=1`` degenerates to a fully serial fetch->compute->store loop
-(the *no-overlap* bound, T_nOL + T_data); ``num_stages>=2`` overlaps the
-next chunk's HBM reads and the previous chunk's write-back with compute
-(the *full-overlap* bound, max(T_data, T_OL)).  Measuring both and placing
-the measured runtime between the two bounds yields the machine's overlap
-coefficient — see ``repro.core.tpu_ecm.overlap_coefficient``.
+The pipeline contract, common to all three builders:
+
+* **Block shapes.**  Work is chunked along axis 0.  The requested
+  ``block_rows`` is shrunk by :func:`_fit_block` to the largest divisor of
+  the array's rows, so odd/prime sizes stay exact; ``n_chunks = rows //
+  block_rows``.  Streaming kernels use flat ``(rows, 128)`` layouts;
+  :func:`halo_pipeline_call` accepts arbitrary trailing dims (2D/3D
+  stencil tiles).
+* **``num_stages`` semantics.**  VMEM buffers per stream = pipeline
+  depth, capped at ``n_chunks``.  ``1`` is a fully serial
+  fetch->compute->store loop (the *no-overlap* bound, T_nOL + T_data);
+  ``>= 2`` overlaps the next chunk's HBM reads and the previous chunk's
+  write-back with compute (the *full-overlap* bound, max(T_data, T_OL)).
+  Depth is a pure performance knob: outputs are bit-identical across
+  ``num_stages`` (reductions accumulate in chunk order regardless of
+  depth) — enforced by ``tests/test_pipeline.py`` and
+  ``tests/test_stencil.py``.
+* **Halo handling.**  Stencil chunks need ``halo`` extra rows on both
+  sides.  :func:`halo_pipeline_call` takes a *pre-padded* input (axis 0
+  length ``rows + 2*halo``; the wrapper pads, so every chunk's fetch
+  window ``[c*block_rows, c*block_rows + block_rows + 2*halo)`` is in
+  bounds without clamping) and fetches overlapping windows while writing
+  disjoint ``block_rows``-sized outputs.  The compute callback receives
+  the fetched tile plus the chunk's global row offset so it can mask
+  physical-boundary rows.
+
+Measuring one kernel at ``num_stages=1`` and ``>=2`` and placing the
+runtime between the two bounds yields the machine's overlap coefficient —
+see ``repro.core.tpu_ecm.overlap_coefficient``.
 
 Everything here runs bit-identically under ``interpret=True`` (CPU) and
 lowers to Mosaic DMA on a real TPU backend.
@@ -246,6 +273,114 @@ def reduce_pipeline_call(compute, n_in: int, *, x_shape, dtype,
         in_specs=[_hbm_spec()] * n_in,
         out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((1, 1), acc_dtype),
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Halo pipeline (stencil kernels)
+# ---------------------------------------------------------------------------
+
+
+def _halo_pipeline_kernel(compute, *, n_chunks: int, stages: int,
+                          block0: int, halo: int, in_rest: tuple,
+                          out_rest: tuple, dtype):
+    """Overlapping-fetch pipeline: chunk ``c`` fetches the padded rows
+    ``[c*block0, c*block0 + block0 + 2*halo)`` and writes the disjoint
+    output rows ``[c*block0, (c+1)*block0)``.
+
+    ``compute(tile, g0)`` maps a ``(block0 + 2*halo, *in_rest)`` tile plus
+    the chunk's global first output row to a ``(block0, *out_rest)``
+    block.  Same warm-up/steady/drain schedule as the map pipeline;
+    overlapping *reads* are safe (each input row may be fetched by up to
+    two chunks) and writes never overlap.
+    """
+    fetch = block0 + 2 * halo
+    in_tail = (slice(None),) * len(in_rest)
+    out_tail = (slice(None),) * len(out_rest)
+
+    def kernel(in_ref, out_ref):
+        def body(in_scr, out_scr, in_sem, out_sem):
+            def in_dma(slot, chunk):
+                return pltpu.make_async_copy(
+                    in_ref.at[(pl.ds(chunk * block0, fetch),) + in_tail],
+                    in_scr.at[slot],
+                    in_sem.at[slot],
+                )
+
+            def out_dma(slot, chunk):
+                return pltpu.make_async_copy(
+                    out_scr.at[slot],
+                    out_ref.at[(pl.ds(chunk * block0, block0),) + out_tail],
+                    out_sem.at[slot],
+                )
+
+            for k in range(stages - 1):                      # warm-up
+                in_dma(k, k).start()
+
+            def loop(chunk, _):
+                slot = jax.lax.rem(chunk, stages)
+                ahead = chunk + stages - 1
+
+                @pl.when(ahead < n_chunks)
+                def _():
+                    in_dma(jax.lax.rem(ahead, stages), ahead).start()
+
+                in_dma(slot, chunk).wait()
+
+                @pl.when(chunk >= stages)
+                def _():
+                    out_dma(slot, chunk - stages).wait()
+
+                out_scr[slot] = compute(in_scr[slot],
+                                        chunk * block0).astype(dtype)
+                out_dma(slot, chunk).start()
+                return ()
+
+            jax.lax.fori_loop(0, n_chunks, loop, ())
+
+            for k in range(min(stages, n_chunks)):           # drain
+                chunk = n_chunks - 1 - k
+                out_dma(chunk % stages, chunk).wait()
+
+        pl.run_scoped(
+            body,
+            in_scr=pltpu.VMEM((stages, fetch) + in_rest, dtype),
+            out_scr=pltpu.VMEM((stages, block0) + out_rest, dtype),
+            in_sem=pltpu.SemaphoreType.DMA((stages,)),
+            out_sem=pltpu.SemaphoreType.DMA((stages,)),
+        )
+
+    return kernel
+
+
+def halo_pipeline_call(compute, *, out_shape, in_shape, dtype, halo: int = 1,
+                       num_stages: int = 2, block_rows: int = 8,
+                       interpret: bool = False):
+    """Build a pipelined halo-exchange ``pallas_call`` (stencil engine).
+
+    ``in_shape`` is the *pre-padded* input: axis 0 must be
+    ``out_shape[0] + 2*halo`` (trailing dims are free — the caller decides
+    how much spatial padding the compute callback expects).  See the
+    module docstring for the full pipeline contract.
+    """
+    rows = out_shape[0]
+    if in_shape[0] != rows + 2 * halo:
+        raise ValueError(
+            f"padded input axis 0 must be rows + 2*halo = {rows + 2*halo}, "
+            f"got {in_shape[0]}")
+    block0 = _fit_block(rows, block_rows)
+    n_chunks = rows // block0
+    stages = max(1, min(num_stages, n_chunks))
+    kernel = _halo_pipeline_kernel(
+        compute, n_chunks=n_chunks, stages=stages, block0=block0, halo=halo,
+        in_rest=tuple(in_shape[1:]), out_rest=tuple(out_shape[1:]),
+        dtype=dtype)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[_hbm_spec()],
+        out_specs=_hbm_spec(),
+        out_shape=jax.ShapeDtypeStruct(tuple(out_shape), dtype),
         interpret=interpret,
     )
 

@@ -1,0 +1,117 @@
+"""Pallas TPU kernels for the Jacobi stencils (2D 5-point, 3D 7-point).
+
+Two execution paths share the tile compute functions below:
+
+* ``jacobi2d_call`` / ``jacobi3d_call`` — single-step whole-array kernels
+  (the ``num_stages=None`` baseline: the padded array lands in VMEM in
+  one block, validation-sized problems only);
+* the halo pipeline — ``ops.py`` routes ``num_stages=k`` through
+  :func:`repro.kernels.pipeline.halo_pipeline_call`, which streams
+  overlapping ``(block_rows + 2, ...)`` tiles of the padded array
+  HBM->VMEM with ``k`` buffers and writes disjoint ``block_rows`` output
+  chunks (see the pipeline-contract docstring there).
+
+Inputs are pre-padded with one zero ring (``jnp.pad(a, 1)``) by the
+``ops.py`` wrappers, so every tile fetch is in bounds without clamping;
+the compute functions mask physical-boundary points back to the centre
+value (Dirichlet copy), which makes the result independent of the pad
+contents and bit-identical to ``ref.py``.
+
+Shapes are unconstrained in interpret mode; on a Mosaic backend the
+trailing dim is padded to the 128-lane tile by the compiler (stencil
+widths are arbitrary, unlike the lane-aligned stream kernels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: default pipeline chunk: 8 rows (2D) / 8 layers (3D) per DMA.
+BLOCK_ROWS = 8
+
+
+# ---------------------------------------------------------------------------
+# tile compute (shared by the whole-array kernels and the halo pipeline)
+# ---------------------------------------------------------------------------
+
+
+def five_point_block(tile, g0, *, H: int, W: int, c0: float, c1: float):
+    """5-point stencil on a padded row tile.
+
+    ``tile``: ``(n + 2, W + 2)`` slice of the padded array whose first row
+    is padded row ``g0``; returns the ``(n, W)`` output rows ``g0 ..
+    g0+n-1``.  ``g0`` may be traced (the pipeline's chunk offset).
+    """
+    n = tile.shape[0] - 2
+    c = tile[1:1 + n, 1:W + 1]
+    up = tile[0:n, 1:W + 1]
+    dn = tile[2:2 + n, 1:W + 1]
+    lf = tile[1:1 + n, 0:W]
+    rt = tile[1:1 + n, 2:W + 2]
+    val = c0 * c + c1 * ((up + dn) + (lf + rt))
+    rows = g0 + jax.lax.broadcasted_iota(jnp.int32, (n, W), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, W), 1)
+    edge = (rows == 0) | (rows == H - 1) | (cols == 0) | (cols == W - 1)
+    return jnp.where(edge, c, val)
+
+
+def seven_point_block(tile, g0, *, D: int, H: int, W: int,
+                      c0: float, c1: float):
+    """7-point stencil on a padded layer tile: ``(n + 2, H + 2, W + 2)``
+    -> output layers ``g0 .. g0+n-1`` of shape ``(n, H, W)``."""
+    n = tile.shape[0] - 2
+    c = tile[1:1 + n, 1:H + 1, 1:W + 1]
+    kd = tile[0:n, 1:H + 1, 1:W + 1]
+    ku = tile[2:2 + n, 1:H + 1, 1:W + 1]
+    jn_ = tile[1:1 + n, 0:H, 1:W + 1]
+    js = tile[1:1 + n, 2:H + 2, 1:W + 1]
+    iw = tile[1:1 + n, 1:H + 1, 0:W]
+    ie = tile[1:1 + n, 1:H + 1, 2:W + 2]
+    val = c0 * c + c1 * (((kd + ku) + (jn_ + js)) + (iw + ie))
+    ks = g0 + jax.lax.broadcasted_iota(jnp.int32, (n, H, W), 0)
+    js_i = jax.lax.broadcasted_iota(jnp.int32, (n, H, W), 1)
+    is_i = jax.lax.broadcasted_iota(jnp.int32, (n, H, W), 2)
+    edge = ((ks == 0) | (ks == D - 1) | (js_i == 0) | (js_i == H - 1)
+            | (is_i == 0) | (is_i == W - 1))
+    return jnp.where(edge, c, val)
+
+
+# ---------------------------------------------------------------------------
+# whole-array pallas_call builders (num_stages=None baseline)
+# ---------------------------------------------------------------------------
+
+
+def _jacobi2d_kernel(p_ref, o_ref, *, H, W, c0, c1):
+    o_ref[...] = five_point_block(
+        p_ref[...], 0, H=H, W=W, c0=c0, c1=c1).astype(o_ref.dtype)
+
+
+def _jacobi3d_kernel(p_ref, o_ref, *, D, H, W, c0, c1):
+    o_ref[...] = seven_point_block(
+        p_ref[...], 0, D=D, H=H, W=W, c0=c0, c1=c1).astype(o_ref.dtype)
+
+
+def jacobi2d_call(shape, dtype, *, c0: float, c1: float,
+                  interpret: bool = False):
+    """Single-step kernel over the whole padded array: (H+2, W+2) -> (H, W)."""
+    H, W = shape
+    return pl.pallas_call(
+        functools.partial(_jacobi2d_kernel, H=H, W=W, c0=c0, c1=c1),
+        out_shape=jax.ShapeDtypeStruct((H, W), dtype),
+        interpret=interpret,
+    )
+
+
+def jacobi3d_call(shape, dtype, *, c0: float, c1: float,
+                  interpret: bool = False):
+    """Single-step kernel over the whole padded array: (D+2, H+2, W+2) ->
+    (D, H, W)."""
+    D, H, W = shape
+    return pl.pallas_call(
+        functools.partial(_jacobi3d_kernel, D=D, H=H, W=W, c0=c0, c1=c1),
+        out_shape=jax.ShapeDtypeStruct((D, H, W), dtype),
+        interpret=interpret,
+    )

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Jacobi stencil kernels.
+
+Semantics (shared with ``kernel.py`` / ``ops.py``, bit-for-bit):
+
+* interior: ``out = c0*a + c1*(sum of the 2*dim nearest neighbours)``,
+  with the neighbour sum associated per axis, outermost axis first:
+  2D ``(n+s) + (w+e)``, 3D ``((d+u) + (n+s)) + (w+e)``;
+* physical boundary (any index at 0 or the last position of its axis):
+  ``out = a`` (Dirichlet copy — the classic Jacobi sweep keeps boundary
+  values fixed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _edge_mask(shape) -> jnp.ndarray:
+    masks = []
+    for ax, n in enumerate(shape):
+        idx = jax.lax.broadcasted_iota(jnp.int32, shape, ax)
+        masks.append((idx == 0) | (idx == n - 1))
+    out = masks[0]
+    for m in masks[1:]:
+        out = out | m
+    return out
+
+
+def jacobi2d(a, c0=0.0, c1=0.25):
+    """b[j,i] = c0*a[j,i] + c1*(a[j-1,i] + a[j+1,i] + a[j,i-1] + a[j,i+1])
+    on the interior; b = a on the boundary."""
+    p = jnp.pad(a, 1)
+    val = c0 * a + c1 * ((p[:-2, 1:-1] + p[2:, 1:-1])
+                         + (p[1:-1, :-2] + p[1:-1, 2:]))
+    return jnp.where(_edge_mask(a.shape), a, val).astype(a.dtype)
+
+
+def jacobi3d(a, c0=0.0, c1=1.0 / 6.0):
+    """b[k,j,i] = c0*a[k,j,i] + c1*(sum of the 6 nearest neighbours) on the
+    interior; b = a on the boundary."""
+    p = jnp.pad(a, 1)
+    val = c0 * a + c1 * (
+        ((p[:-2, 1:-1, 1:-1] + p[2:, 1:-1, 1:-1])
+         + (p[1:-1, :-2, 1:-1] + p[1:-1, 2:, 1:-1]))
+        + (p[1:-1, 1:-1, :-2] + p[1:-1, 1:-1, 2:]))
+    return jnp.where(_edge_mask(a.shape), a, val).astype(a.dtype)

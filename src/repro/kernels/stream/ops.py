@@ -6,9 +6,14 @@ backend the same code lowers to Mosaic.
 
 Every op takes ``num_stages``: ``None`` uses the classic one-block-per-
 grid-step kernels (the implicit pallas_call pipeline); an integer routes
-through the explicit multi-buffered DMA pipeline of
-``repro.kernels.pipeline`` with that many VMEM buffers per stream
-(1 = serial / no overlap, 2 = double buffering, 3 = triple buffering).
+through the shared multi-buffered DMA pipeline engine with that many VMEM
+buffers per stream.  The pipeline contract — block-shape fitting,
+``num_stages`` semantics (1 = serial / no overlap, 2 = double buffering,
+...), bit-identity across depths, and the halo handling used by the
+stencil family — is documented once, in :mod:`repro.kernels.pipeline`
+where the engine lives; these wrappers only pick a compute function and
+one of its builders (``map_pipeline_call`` for elementwise streams,
+``reduce_pipeline_call`` for ``load``/``ddot``).
 """
 from __future__ import annotations
 

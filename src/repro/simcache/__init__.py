@@ -14,9 +14,12 @@ from .sim import (
     scaling_batch,
     simulate_level,
     simulate_levels_batch,
+    simulate_stencil_level,
+    simulate_stencil_levels_batch,
     simulate_table,
     simulate_working_set,
     simulate_scaling,
+    stencil_sweep_batch,
     sweep,
     sweep_batch,
 )
@@ -31,9 +34,12 @@ __all__ = [
     "scaling_batch",
     "simulate_level",
     "simulate_levels_batch",
+    "simulate_stencil_level",
+    "simulate_stencil_levels_batch",
     "simulate_table",
     "simulate_working_set",
     "simulate_scaling",
+    "stencil_sweep_batch",
     "sweep",
     "sweep_batch",
 ]

@@ -52,6 +52,14 @@ from repro.core.kernel_spec import (
     StreamKernelSpec,
     benchmark_batch,
 )
+from repro.core.layer_condition import (
+    LC_SAFETY,
+    STENCIL_MEASURED_BW,
+    STENCILS,
+    StencilSpec,
+    misses_batch,
+    stencil_batch_from_misses,
+)
 from repro.core.machine import HASWELL_EP, HASWELL_MEASURED_BW, MachineModel
 
 #: batch_array_evals counts vectorized evaluations (one per grid, however
@@ -368,3 +376,130 @@ def simulate_scaling(
                          n_domains=n_domains, params=params,
                          fill_domains_first=fill_domains_first)
     return [float(x) for x in p[0]]
+
+
+# ---------------------------------------------------------------------------
+# Stencil kernels (layer-condition-driven traffic, arXiv:1410.5010)
+# ---------------------------------------------------------------------------
+
+
+def _as_stencil(name_or_spec) -> StencilSpec:
+    return (name_or_spec if isinstance(name_or_spec, StencilSpec)
+            else STENCILS[name_or_spec])
+
+
+def simulate_stencil_levels_batch(
+    name_or_spec: "str | StencilSpec",
+    widths_arr,
+    *,
+    machine: MachineModel = HASWELL_EP,
+    caches: CacheHierarchy = HASWELL_CACHES_COD,
+    sustained_bw: float | None = None,
+    params: SimParams = DEFAULT_PARAMS,
+    safety: float = LC_SAFETY,
+    misses: "np.ndarray | None" = None,
+) -> np.ndarray:
+    """Simulated ("measured") cy/CL for a stencil: ``(B, 4)`` over a batch
+    of effective inner widths.
+
+    Unlike the streaming kernels, the light-speed transfer terms are not
+    constants: the inward load count on every edge comes from the layer
+    condition of the cache above it (:func:`repro.core.layer_condition.
+    misses_batch`; pass a precomputed ``misses`` table to share it with a
+    caller that already built the predicted side).  The light-speed base
+    is the shared :func:`repro.core.layer_condition.
+    stencil_batch_from_misses` builder; the non-light-speed effects are
+    the same four calibrated mechanisms as :func:`simulate_levels_batch`,
+    applied with the per-level (LC-dependent) stream counts.
+    """
+    spec = _as_stencil(name_or_spec)
+    bw = sustained_bw or STENCIL_MEASURED_BW.get(spec.name, 24.1e9)
+    if misses is None:
+        misses = misses_batch(spec, widths_arr, caches.capacities(),
+                              safety=safety)                   # (B, L)
+    rfo, wb = float(spec.rfo_streams), float(spec.wb_streams)
+    mem_cy = machine.mem_cycles_per_line(bw)
+    batch = stencil_batch_from_misses(spec, misses, machine=machine,
+                                      sustained_bw=bw)
+    pred = batch.predictions()                                 # (B, 4)
+    p = params
+
+    # per-residence-level inward load streams (edge feeding that level)
+    loads_l2 = misses[:, 0] + rfo
+    loads_l3 = misses[:, 1] + rfo
+    loads_mem = misses[:, 2] + rfo
+    share = wb / np.maximum(misses[:, 2] + rfo + wb, 1.0)
+    l1_uops = spec.uop_loads + spec.uop_stores
+
+    eff = np.zeros_like(pred)
+    eff[:, 0] = p.frontend_jitter if l1_uops >= 4 else 0.0
+    eff[:, 1] = p.l2_load_penalty * loads_l2 + p.l2_evict_interference * wb
+    h3 = np.maximum(0.0, 1.0 - pred[:, 2] / p.hide_scale_l3)
+    eff[:, 2] = (p.offcore_load_penalty * loads_l3 * h3
+                 - p.evict_credit_l3 * share)
+    hm = np.maximum(0.0, 1.0 - pred[:, 3] / p.hide_scale_mem)
+    eff[:, 3] = p.mem_load_penalty * loads_mem * hm
+
+    out = pred + eff
+    hmc = np.maximum(0.0, 1.0 - pred[:, 3] / p.evict_credit_mem_scale)
+    out[:, 3] = out[:, 3] - wb * mem_cy * hmc
+    out = np.maximum(out, batch.t_core[:, None])
+    EVAL_COUNTERS["batch_array_evals"] += 1
+    EVAL_COUNTERS["scalar_points"] += out.size
+    return out
+
+
+def simulate_stencil_level(name_or_spec, level: int, *,
+                           widths: tuple[int, ...], **kw) -> float:
+    """Scalar view of :func:`simulate_stencil_levels_batch`."""
+    table = simulate_stencil_levels_batch(
+        name_or_spec, np.asarray([widths], float), **kw)
+    return float(table[0, level])
+
+
+def stencil_sweep_batch(
+    name_or_spec: "str | StencilSpec",
+    problem_ns,
+    *,
+    machine: MachineModel = HASWELL_EP,
+    caches: CacheHierarchy = HASWELL_CACHES_COD,
+    sustained_bw: float | None = None,
+    params: SimParams = DEFAULT_PARAMS,
+    safety: float = LC_SAFETY,
+    n_arrays: int = 2,
+) -> dict[str, np.ndarray]:
+    """Measured-vs-predicted cy/CL curves over square problem sizes.
+
+    ``problem_ns`` are inner widths N of square 2D (N x N) or cubic 3D
+    (N x N x N) problems.  The working set (``n_arrays`` = input + output
+    arrays) sets the residence blend; N itself sets the layer conditions —
+    both vary along the sweep, which is exactly the 1410.5010 Fig. 6
+    structure.  Returns per-N arrays: ``predicted`` / ``measured`` (cy per
+    CL of updates), ``ws_bytes``, ``misses`` (B, 3) and ``regime`` (the
+    dominant residence level index).
+    """
+    spec = _as_stencil(name_or_spec)
+    ns = np.asarray(problem_ns, float)
+    widths = (ns[:, None] if spec.dim == 2
+              else np.stack([ns, ns], axis=-1))
+    ws = n_arrays * ns ** spec.dim * spec.elem_bytes
+    misses = misses_batch(spec, widths, caches.capacities(), safety=safety)
+
+    bw = sustained_bw or STENCIL_MEASURED_BW.get(spec.name, 24.1e9)
+    batch = stencil_batch_from_misses(spec, misses, machine=machine,
+                                      sustained_bw=bw)
+    pred_levels = batch.predictions()                          # (B, 4)
+    meas_levels = simulate_stencil_levels_batch(
+        spec, widths, machine=machine, caches=caches, sustained_bw=bw,
+        params=params, safety=safety, misses=misses)
+    weights = residence_weights_batch(ws, caches)              # (B, 4)
+    EVAL_COUNTERS["batch_array_evals"] += 1
+    predicted = np.sum(pred_levels * weights, axis=-1)
+    measured = np.sum(meas_levels * weights, axis=-1)
+    EVAL_COUNTERS["scalar_points"] += predicted.size + measured.size
+    return {
+        "n": ns, "ws_bytes": ws, "misses": misses,
+        "predicted": predicted, "measured": measured,
+        "predicted_levels": pred_levels, "measured_levels": meas_levels,
+        "regime": np.argmax(weights, axis=-1),
+    }

@@ -1,0 +1,187 @@
+"""Layer-condition analysis pinned to the hand-derived values of
+Stengel et al., arXiv:1410.5010 §III (2D 5-point Jacobi, double precision),
+plus batch-vs-scalar equivalence of the LC-aware ECM construction."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    HASWELL_CAPACITIES,
+    HASWELL_EP,
+    JACOBI2D,
+    JACOBI3D,
+    StencilSpec,
+    misses_batch,
+    stencil_block_batch,
+    stencil_ecm,
+)
+from repro.core.autotune import rank_stencil_blocks, stencil_block_candidates
+
+L1, L2, L3 = HASWELL_CAPACITIES
+
+
+# ---------------------------------------------------------------------------
+# 1410.5010 §III hand-derived traffic for the 2D 5-point stencil
+# ---------------------------------------------------------------------------
+
+
+def test_lc_held_edge_traffic_is_3_lines():
+    """LC satisfied: only the leading row misses -> 1 load + 1 RFO + 1 WB
+    = 3 CLs per CL of work = 24 B/LUP (the paper's §III value)."""
+    misses = JACOBI2D.load_misses(L1, (512,))
+    assert misses == 1
+    lines = misses + JACOBI2D.rfo_streams + JACOBI2D.wb_streams
+    assert lines == 3
+    bytes_per_lup = lines * 64 / JACOBI2D.elems_per_line(64)
+    assert bytes_per_lup == 24.0
+
+
+def test_lc_broken_edge_traffic_is_5_lines():
+    """LC violated: all 2r+1 = 3 rows miss -> 3 loads + RFO + WB = 5 CLs
+    per CL of work = 40 B/LUP."""
+    misses = JACOBI2D.load_misses(L1, (4096,))
+    assert misses == 3 == JACOBI2D.row_streams
+    lines = misses + JACOBI2D.rfo_streams + JACOBI2D.wb_streams
+    assert lines == 5
+    assert lines * 64 / 8 == 40.0
+
+
+def test_lc_threshold_exact():
+    """The L1 break sits exactly at 3*N*8*safety = 32 KiB -> N = 682."""
+    assert JACOBI2D.load_misses(L1, (682,)) == 1
+    assert JACOBI2D.load_misses(L1, (683,)) == 3
+
+
+@pytest.mark.parametrize("width,expected", [
+    (512, (1, 1, 1)),       # LC holds everywhere
+    (1024, (3, 1, 1)),      # broken in L1 only
+    (8192, (3, 3, 1)),      # broken in L1 and L2
+    (2 ** 21, (3, 3, 3)),   # broken everywhere (3 rows > L3/2)
+])
+def test_misses_per_level_2d(width, expected):
+    assert JACOBI2D.misses_per_level((width,)) == expected
+
+
+def test_blocking_restores_layer_condition():
+    """Spatial blocking caps the effective width: a 256-wide block makes
+    an 8192-wide problem L1-resident again (1410.5010 §V)."""
+    assert JACOBI2D.misses_per_level((8192,)) == (3, 3, 1)
+    assert JACOBI2D.misses_per_level((8192,), block=(256,)) == (1, 1, 1)
+
+
+# ---------------------------------------------------------------------------
+# 3D 7-point: the {1, 3, 5} miss hierarchy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("widths,l1_misses", [
+    ((20, 20), 1),      # 3 layers fit in L1: leading stream only
+    ((100, 100), 3),    # layers broken, 5 rows fit: one per layer
+    ((100, 500), 5),    # neither: all 4r+1 row streams miss
+])
+def test_misses_3d_hierarchy(widths, l1_misses):
+    assert JACOBI3D.load_misses(L1, widths) == l1_misses
+
+
+def test_3d_row_streams():
+    assert JACOBI3D.row_streams == 5
+    assert StencilSpec(name="r2", dim=3, radius=2).row_streams == 9
+
+
+# ---------------------------------------------------------------------------
+# LC-aware ECM construction
+# ---------------------------------------------------------------------------
+
+
+def test_stencil_ecm_levels_and_monotonicity():
+    m = stencil_ecm("jacobi2d", widths=(8192,))
+    assert m.levels == HASWELL_EP.level_names()
+    preds = m.predictions()
+    assert all(b >= a for a, b in zip(preds, preds[1:]))
+
+
+def test_lc_changes_model_inputs_not_just_residence():
+    """The broken-LC model has strictly larger transfer terms on the
+    broken edges and a strictly larger Mem prediction."""
+    held = stencil_ecm("jacobi2d", widths=(512,))
+    broken = stencil_ecm("jacobi2d", widths=(8192,))
+    assert broken.transfers[0] > held.transfers[0]        # L1<->L2 edge
+    assert broken.prediction("Mem") > held.prediction("Mem")
+    assert broken.t_ol == held.t_ol                       # in-core unchanged
+    assert broken.t_nol == held.t_nol
+
+
+def test_block_batch_agrees_with_scalar():
+    """stencil_block_batch == per-candidate StencilSpec.ecm, exactly."""
+    widths, bw = (8192,), 24.1e9
+    blocks = [(64,), (512,), (1024,), (8192,)]
+    batch = stencil_block_batch(JACOBI2D, widths, blocks, sustained_bw=bw)
+    for i, b in enumerate(blocks):
+        scalar = JACOBI2D.ecm(HASWELL_EP, bw, widths=widths, block=b)
+        np.testing.assert_allclose(batch.scalar(i).predictions(),
+                                   scalar.predictions(), rtol=0, atol=0)
+
+
+def test_misses_batch_matches_scalar():
+    widths = np.array([64, 682, 683, 5461, 5462, 2 ** 21], float)
+    tab = misses_batch(JACOBI2D, widths)
+    for i, w in enumerate(widths):
+        assert tuple(tab[i]) == JACOBI2D.misses_per_level((int(w),))
+
+
+# ---------------------------------------------------------------------------
+# Autotuner integration
+# ---------------------------------------------------------------------------
+
+
+def test_rank_stencil_blocks_prefers_lc_restoring_block():
+    ranked = rank_stencil_blocks("jacobi2d", (8192,))
+    assert ranked[0]["misses_l1"] == 1
+    assert ranked[0]["t_ecm"] <= ranked[-1]["t_ecm"]
+    ts = [r["t_ecm"] for r in ranked]
+    assert ts == sorted(ts)
+    unblocked = next(r for r in ranked if r["block"] == (8192,))
+    assert ranked[0]["speedup_vs_unblocked"] == pytest.approx(
+        unblocked["t_ecm"] / ranked[0]["t_ecm"])
+    assert ranked[0]["speedup_vs_unblocked"] > 1.1
+
+
+def test_block_candidates_cover_problem():
+    cands = stencil_block_candidates((8192,))
+    assert cands[0] == (16,)
+    assert cands[-1] == (8192,)
+    cands3 = stencil_block_candidates((400, 400))
+    assert all(c[0] == 400 for c in cands3)   # only inner dim tiled
+
+
+# ---------------------------------------------------------------------------
+# Simulator ("measured") side
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_batch_regimes_and_lc_divergence():
+    """The acceptance-criterion property: >= 3 residence regimes, with
+    layer-condition-driven predictions differing between them."""
+    from repro.simcache import stencil_sweep_batch
+
+    r = stencil_sweep_batch("jacobi2d", [32, 64, 512, 1024, 2048, 8192])
+    regimes = set(int(x) for x in r["regime"])
+    assert {0, 3}.issubset(regimes) and len(regimes) >= 3
+    # LC breaks between N=512 and N=1024 change the *model*, not just the
+    # residence blend: the per-level prediction tables differ.
+    assert not np.allclose(r["predicted_levels"][2],
+                           r["predicted_levels"][3])
+    # measured tracks predicted within the simulator's calibration band
+    err = np.abs(r["measured"] / r["predicted"] - 1)
+    assert float(err.max()) < 0.2
+
+
+def test_simulate_stencil_scalar_view():
+    from repro.simcache import (
+        simulate_stencil_level,
+        simulate_stencil_levels_batch,
+    )
+
+    tab = simulate_stencil_levels_batch("jacobi2d", np.array([[1024.0]]))
+    for lv in range(4):
+        assert simulate_stencil_level("jacobi2d", lv, widths=(1024,)) \
+            == pytest.approx(float(tab[0, lv]), abs=0)

@@ -1,0 +1,96 @@
+"""Stencil Pallas kernels: bit-identical to the jnp oracles at every
+pipeline depth (num_stages None/1/2/3), including odd/prime sizes where
+the halo pipeline's block fit shrinks, plus halo-contract errors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import pipeline as P
+from repro.kernels.stencil import kernel as K
+from repro.kernels.stencil import ops, ref
+
+KEY = jax.random.key(11)
+STAGES = [None, 1, 2, 3]
+
+SHAPES_2D = [(24, 33), (40, 128), (23, 17)]      # even, lane-wide, prime
+SHAPES_3D = [(12, 10, 17), (7, 9, 11)]           # even, prime
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("ns", STAGES)
+def test_jacobi2d_bit_identical_to_ref(shape, ns):
+    a = jax.random.normal(jax.random.fold_in(KEY, shape[0]), shape,
+                          jnp.float32)
+    got = np.asarray(ops.jacobi2d(a, num_stages=ns, interpret=True))
+    want = np.asarray(ref.jacobi2d(a))
+    assert np.array_equal(got, want), (shape, ns)
+
+
+@pytest.mark.parametrize("shape", SHAPES_3D)
+@pytest.mark.parametrize("ns", STAGES)
+def test_jacobi3d_bit_identical_to_ref(shape, ns):
+    a = jax.random.normal(jax.random.fold_in(KEY, shape[0]), shape,
+                          jnp.float32)
+    got = np.asarray(ops.jacobi3d(a, num_stages=ns, interpret=True))
+    want = np.asarray(ref.jacobi3d(a))
+    assert np.array_equal(got, want), (shape, ns)
+
+
+def test_jacobi2d_bit_identical_across_depths_nonzero_c0():
+    a = jax.random.normal(jax.random.fold_in(KEY, 5), (40, 56), jnp.float32)
+    kw = dict(c0=0.5, c1=0.125, interpret=True)
+    base = np.asarray(ops.jacobi2d(a, num_stages=1, **kw))
+    for ns in (None, 2, 3):
+        got = np.asarray(ops.jacobi2d(a, num_stages=ns, **kw))
+        assert np.array_equal(got, base), ns
+    assert np.array_equal(base, np.asarray(ref.jacobi2d(a, 0.5, 0.125)))
+
+
+def test_jacobi2d_bf16():
+    a = jax.random.normal(jax.random.fold_in(KEY, 6), (32, 48), jnp.bfloat16)
+    got = ops.jacobi2d(a, num_stages=2, interpret=True)
+    want = ref.jacobi2d(a)
+    assert got.dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32))
+
+
+def test_boundary_is_dirichlet_copy():
+    a = jax.random.normal(jax.random.fold_in(KEY, 7), (16, 20), jnp.float32)
+    out = np.asarray(ops.jacobi2d(a, num_stages=2, interpret=True))
+    an = np.asarray(a)
+    for sl in (np.s_[0, :], np.s_[-1, :], np.s_[:, 0], np.s_[:, -1]):
+        assert np.array_equal(out[sl], an[sl])
+
+
+def test_fixed_point_constant_field():
+    """With c0 + 4*c1 = 1 a constant field is a fixed point of the sweep."""
+    a = jnp.full((24, 40), 3.25, jnp.float32)
+    out = np.asarray(ops.jacobi2d(a, c0=0.0, c1=0.25, num_stages=3,
+                                  interpret=True))
+    assert np.array_equal(out, np.asarray(a))
+
+
+def test_num_stages_exceeding_chunks_degrades_gracefully():
+    a = jax.random.normal(jax.random.fold_in(KEY, 8), (8, 12), jnp.float32)
+    got = np.asarray(ops.jacobi2d(a, num_stages=5, block_rows=4,
+                                  interpret=True))
+    assert np.array_equal(got, np.asarray(ref.jacobi2d(a)))
+
+
+def test_halo_pipeline_rejects_unpadded_input():
+    with pytest.raises(ValueError, match="padded input"):
+        P.halo_pipeline_call(lambda t, g0: t, out_shape=(8, 4),
+                             in_shape=(8, 6), dtype=jnp.float32, halo=1)
+
+
+def test_five_point_block_matches_ref_interior():
+    """The shared tile compute (used by both execution paths) equals the
+    oracle on an interior tile with a traced-style offset."""
+    a = jax.random.normal(jax.random.fold_in(KEY, 9), (20, 15), jnp.float32)
+    p = jnp.pad(a, 1)
+    tile = p[4:4 + 6, :]          # padded rows for output rows 4..7
+    got = K.five_point_block(tile, 4, H=20, W=15, c0=0.0, c1=0.25)
+    want = ref.jacobi2d(a)[4:8]
+    assert np.array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Docs build check: lightweight markdown lint + dead-link check.
+
+Stdlib-only so it runs identically in CI and in this container:
+
+    python tools/check_docs.py [files...]       # default: README.md docs/*.md
+
+Checks, per file:
+
+* **lint** — balanced code fences; no trailing whitespace; ATX headings
+  start at column 0 and have a space after the hashes; exactly one H1;
+* **links** — every relative markdown link/image target resolves on disk
+  (anchors like ``#section`` are checked against the target file's
+  headings; bare in-page anchors against the current file); external
+  ``http(s)``/``mailto`` links are not fetched (no network in CI).
+
+Exit code 0 when clean, 1 with a per-finding report otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"!?\[(?:[^\]\[]|\[[^\]]*\])*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^(#{1,6})(.*)$")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (good enough for our headings)."""
+    s = re.sub(r"[`*_]", "", heading.strip().lower())
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def heading_slugs(path: Path) -> set[str]:
+    slugs: set[str] = set()
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        m = HEADING_RE.match(line)
+        if m and not in_fence:
+            slugs.add(slugify(m.group(2)))
+    return slugs
+
+
+def check_file(path: Path) -> list[str]:
+    problems: list[str] = []
+    rel = path.relative_to(ROOT)
+    text = path.read_text(encoding="utf-8")
+    lines = text.splitlines()
+
+    # ---- lint ----
+    fence_opens = 0
+    in_fence = False
+    h1s = 0
+    for i, line in enumerate(lines, 1):
+        stripped = line.rstrip("\n")
+        if stripped != stripped.rstrip():
+            problems.append(f"{rel}:{i}: trailing whitespace")
+        if line.lstrip().startswith("```"):
+            fence_opens += 1
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            if m.group(2) and not m.group(2).startswith(" "):
+                problems.append(f"{rel}:{i}: heading missing space after '#'")
+            if len(m.group(1)) == 1:
+                h1s += 1
+        elif re.match(r"^\s+#{1,6}\s", line):
+            problems.append(f"{rel}:{i}: indented heading")
+    if fence_opens % 2:
+        problems.append(f"{rel}: unbalanced code fences")
+    if h1s != 1:
+        problems.append(f"{rel}: expected exactly one H1, found {h1s}")
+
+    # ---- links ----
+    in_fence = False
+    for i, line in enumerate(lines, 1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if target.startswith("#"):
+                if slugify(target[1:]) not in heading_slugs(path):
+                    problems.append(
+                        f"{rel}:{i}: dead in-page anchor {target!r}")
+                continue
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            dest = (path.parent / target).resolve()
+            if not dest.exists():
+                problems.append(f"{rel}:{i}: dead link {m.group(1)!r}")
+                continue
+            if frag and dest.suffix == ".md":
+                if slugify(frag) not in heading_slugs(dest):
+                    problems.append(
+                        f"{rel}:{i}: dead anchor {m.group(1)!r}")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [Path(a).resolve() for a in argv]
+    else:
+        files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        for f in missing:
+            print(f"missing file: {f}", file=sys.stderr)
+        return 1
+    problems: list[str] = []
+    for f in files:
+        problems += check_file(f)
+    if problems:
+        print("\n".join(problems), file=sys.stderr)
+        print(f"\ncheck_docs: {len(problems)} problem(s) in "
+              f"{len(files)} file(s)", file=sys.stderr)
+        return 1
+    print(f"check_docs: {len(files)} file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
