@@ -1,0 +1,69 @@
+"""Cross-generation prediction tables: every registered workload on every
+registered machine through the one unified engine (the arXiv:1702.07554
+structure — same workload inputs, many machines — applied to the whole
+workload registry).
+
+    PYTHONPATH=src python -m benchmarks.run --only machine_zoo
+    PYTHONPATH=src python -m benchmarks.run --only machine_zoo --machine skylake-sp
+
+The memory-level ``T_ECM`` column is the headline (cy per unit of work:
+cache line on the CPUs, 128-lane row on the TPU); the full per-level
+prediction notation is shown per machine.  Note how the Skylake-SP victim
+L3 and the TPU's no-write-allocate hierarchy change the *traffic routing*
+of the same logical workload, not just the bandwidth numbers.
+"""
+from __future__ import annotations
+
+from .util import fmt, pred_str, table
+
+
+def zoo_payload(machines=None) -> dict:
+    """{machine: {workload: {"levels", "predictions", "t_ecm_mem"}}}."""
+    from repro.core import zoo_predictions
+
+    out: dict = {}
+    for mach, rows in zoo_predictions(machines=machines).items():
+        out[mach] = {
+            name: {
+                "levels": list(levels),
+                "predictions": [float(x) for x in preds],
+                "t_ecm_mem": float(preds[-1]),
+            }
+            for name, (levels, preds) in rows.items()
+        }
+    return out
+
+
+def run(machine: str | None = None) -> str:
+    from repro.core import get_machine, machine_names
+
+    machines = [machine] if machine else list(machine_names())
+    payload = zoo_payload(machines)
+    out = []
+
+    # headline grid: workloads x machines, memory-level T_ECM
+    names = list(next(iter(payload.values())))
+    rows = []
+    for n in names:
+        rows.append([n] + [fmt(payload[m][n]["t_ecm_mem"], 1)
+                           for m in machines])
+    out.append("== T_ECM at the memory level (cy per unit of work) ==")
+    out.append(table(["workload"] + machines, rows))
+
+    # per-machine detail: full prediction notation
+    for m in machines:
+        mm = get_machine(m)
+        out.append(f"\n== {m}: {{{' ] '.join(mm.level_names())}}} "
+                   f"predictions ==")
+        rows = [[n, pred_str(payload[m][n]["predictions"])] for n in names]
+        out.append(table(["workload", "T_ECM"], rows))
+    return "\n".join(out)
+
+
+def main() -> int:
+    print(run())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,18 +1,31 @@
-"""Run every benchmark: one section per paper table/figure, plus the TPU
-adaptation (stream kernels + §Roofline table from the dry-run artifacts).
+"""Run every benchmark: one section per paper table/figure, the TPU
+adaptation, and the cross-generation machine-zoo tables — one suite-driven
+runner for all kernel families.
 
-    PYTHONPATH=src python -m benchmarks.run [--only <name>]
-    PYTHONPATH=src python -m benchmarks.run --json [BENCH_pipeline.json]
+    PYTHONPATH=src python -m benchmarks.run [--only <name>] [--suite <s>]
+    PYTHONPATH=src python -m benchmarks.run --json [PATH] --suite stream
+    PYTHONPATH=src python -m benchmarks.run --json --suite stencil
+    PYTHONPATH=src python -m benchmarks.run --only machine_zoo --machine skylake-sp
+
+``--suite {stream,stencil,tpu}`` selects a kernel family (default: all
+sections); ``--machine`` picks a registry machine for the sections and
+artifacts that are machine-parameterized (the zoo table, the stencil
+sweep, the model-eval throughput grid).
 
 ``--json`` skips the report sections and emits the perf-trajectory
-artifact instead: per-kernel pipelined wall-clock (num_stages 1/2/3, the
-fused triad->update chain) and model-eval throughput of the vectorized
-``ECMBatch`` path vs the per-point scalar API, so future PRs can track
-both hot paths.
+artifact for the selected suite instead, in one shared BENCH schema
+(validated by ``tools/check_bench.py``): a common envelope
+(``schema``/``suite``/``machine``) plus the suite payload —
+``BENCH_pipeline.json`` (stream: pipelined wall-clock + model-eval
+throughput), ``BENCH_stencil.json`` (stencil: LC sweep + blocking +
+kernel equality) and ``BENCH_tpu.json`` (TPU: pipeline timings + the
+tpu-v5e zoo predictions).  Field names are stable across schema bumps so
+trajectories remain comparable.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import time
 
@@ -22,6 +35,7 @@ from . import (
     fig12_nt_stores,
     fig56_energy,
     fig789_sweeps,
+    machine_zoo,
     stencil_sweep,
     table1_ecm,
     tpu_energy,
@@ -46,6 +60,9 @@ SECTIONS = [
     ("stencil_sweep",
      "Stencil LC-ECM: 2D Jacobi sweeps + blocking (arXiv:1410.5010)",
      stencil_sweep),
+    ("machine_zoo",
+     "Machine zoo: every workload x every machine (arXiv:1702.07554)",
+     machine_zoo),
     ("tpu_stream_ecm", "TPU adaptation: Pallas stream kernels + TPU-ECM",
      tpu_stream_ecm),
     ("tpu_roofline", "TPU §Roofline: per (arch x shape x mesh) ECM terms",
@@ -56,8 +73,28 @@ SECTIONS = [
      tpu_scaling),
 ]
 
+#: section names per kernel-family suite (the zoo rides with every suite)
+SUITES = {
+    "stream": ["table1_ecm", "fig789_sweeps", "fig10_scaling",
+               "fig56_energy", "fig11_bandwidth", "fig12_nt_stores",
+               "machine_zoo"],
+    "stencil": ["stencil_sweep", "machine_zoo"],
+    "tpu": ["tpu_stream_ecm", "tpu_roofline", "tpu_energy", "tpu_scaling",
+            "machine_zoo"],
+}
 
-def model_eval_benchmark(n_sizes: int = 2000, n_cores: int = 64) -> dict:
+#: default artifact path per suite (schema: tools/check_bench.py)
+BENCH_PATHS = {
+    "stream": "BENCH_pipeline.json",
+    "stencil": "BENCH_stencil.json",
+    "tpu": "BENCH_tpu.json",
+}
+
+BENCH_SCHEMA_VERSION = 2
+
+
+def model_eval_benchmark(n_sizes: int = 2000, n_cores: int = 64,
+                         machine: str = "haswell-ep") -> dict:
     """Model-eval throughput: vectorized batch path vs per-point API calls.
 
     The batch path evaluates the full (9 kernels x n_sizes) working-set
@@ -83,8 +120,8 @@ def model_eval_benchmark(n_sizes: int = 2000, n_cores: int = 64) -> dict:
 
     reset_counters()
     t0 = time.perf_counter()
-    _, surface = sweep_batch(names, sizes)
-    _, scaling = scaling_batch(names, n_cores)
+    _, surface = sweep_batch(names, sizes, machine=machine)
+    _, scaling = scaling_batch(names, n_cores, machine=machine)
     dt_batch = time.perf_counter() - t0
     batch_points = int(surface.size + scaling.size)
     batch_array_evals = EVAL_COUNTERS["batch_array_evals"]
@@ -95,9 +132,9 @@ def model_eval_benchmark(n_sizes: int = 2000, n_cores: int = 64) -> dict:
     t0 = time.perf_counter()
     for n in names:
         for s_ in sub:
-            simulate_working_set(n, s_)
+            simulate_working_set(n, s_, machine=machine)
         for lv in range(4):
-            simulate_level(n, lv)
+            simulate_level(n, lv, machine=machine)
     dt_sub = time.perf_counter() - t0
     scalar_points = len(names) * (len(sub) + 4)
     scalar_rate = scalar_points / dt_sub
@@ -137,44 +174,105 @@ def autotune_rank_benchmark(n_chips: int = 4096) -> dict:
     }
 
 
-def emit_json(path: str) -> None:
-    from . import tpu_stream_ecm
+def _envelope(suite: str, machine: str) -> dict:
+    return {"schema": BENCH_SCHEMA_VERSION, "suite": suite,
+            "machine": machine}
 
-    payload = {
+
+def stream_payload(machine: str = "haswell-ep") -> dict:
+    return {
+        **_envelope("stream", machine),
         "pipeline": tpu_stream_ecm.pipeline_timings(rows=256, repeats=3),
-        "model_eval": model_eval_benchmark(),
+        "model_eval": model_eval_benchmark(machine=machine),
         "autotune": autotune_rank_benchmark(),
-        "schema": 1,
     }
+
+
+def stencil_payload(machine: str = "haswell-ep") -> dict:
+    return {
+        **_envelope("stencil", machine),
+        "sweep": stencil_sweep.sweep_payload(machine=machine),
+        "blocking": stencil_sweep.blocking_payload(machine=machine),
+        "kernels": stencil_sweep.kernel_payload(),
+    }
+
+
+def tpu_payload(machine: str = "tpu-v5e") -> dict:
+    return {
+        **_envelope("tpu", machine),
+        "pipeline": tpu_stream_ecm.pipeline_timings(rows=128, repeats=1),
+        "zoo": machine_zoo.zoo_payload([machine]),
+    }
+
+
+def emit_json(path: str | None, suite: str = "stream",
+              machine: str | None = None) -> str:
+    """Write the suite's BENCH artifact; returns the path written."""
+    builders = {"stream": stream_payload, "stencil": stencil_payload,
+                "tpu": tpu_payload}
+    if machine is None:
+        machine = "tpu-v5e" if suite == "tpu" else "haswell-ep"
+    payload = builders[suite](machine=machine)
+    path = path or BENCH_PATHS[suite]
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
-    me = payload["model_eval"]
-    print(f"[bench] wrote {path}: "
-          f"{me['batch_points_per_s']:.0f} model points/s batch vs "
-          f"{me['scalar_points_per_s']:.0f} scalar "
-          f"({me['throughput_ratio']:.0f}x), "
-          f"{me['per_point_call_reduction']:.0f}x fewer Python-level calls "
-          f"per point")
+    if suite == "stream":
+        me = payload["model_eval"]
+        print(f"[bench] wrote {path}: "
+              f"{me['batch_points_per_s']:.0f} model points/s batch vs "
+              f"{me['scalar_points_per_s']:.0f} scalar "
+              f"({me['throughput_ratio']:.0f}x), "
+              f"{me['per_point_call_reduction']:.0f}x fewer Python-level "
+              f"calls per point")
+    elif suite == "stencil":
+        regimes = sorted({p["regime"] for p in payload["sweep"]})
+        ok = all(s["bit_identical_to_ref"]
+                 for s in payload["kernels"]["stages"].values())
+        print(f"[bench] wrote {path}: {len(payload['sweep'])} sweep points "
+              f"over regimes {regimes}, best block "
+              f"{payload['blocking']['best']['block']} "
+              f"({payload['blocking']['best']['speedup_vs_unblocked']:.2f}x),"
+              f" kernels bit-identical: {ok}")
+    else:
+        n = len(payload["zoo"].get(machine, {}))
+        print(f"[bench] wrote {path}: {n} workloads predicted on {machine}")
+    return path
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[s[0] for s in SECTIONS])
-    ap.add_argument("--json", nargs="?", const="BENCH_pipeline.json",
-                    default=None, metavar="PATH",
-                    help="emit the perf-trajectory JSON instead of the "
-                         "report sections")
+    ap.add_argument("--suite", default=None,
+                    choices=sorted(SUITES),
+                    help="kernel-family suite; filters report sections and "
+                         "selects the --json payload (default: all sections"
+                         " / the stream artifact)")
+    ap.add_argument("--machine", default=None,
+                    help="registry machine for machine-parameterized "
+                         "sections and artifacts (see repro.core.MACHINES)")
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="emit the suite's perf-trajectory JSON instead of "
+                         "the report sections")
     args = ap.parse_args()
-    if args.json:
-        emit_json(args.json)
+    if args.json is not None:
+        emit_json(args.json or None, suite=args.suite or "stream",
+                  machine=args.machine)
         return 0
+    keep = set(SUITES[args.suite]) if args.suite else None
     for name, title, mod in SECTIONS:
         if args.only and name != args.only:
             continue
+        if keep is not None and name not in keep:
+            continue
         t0 = time.time()
         print(f"\n{'=' * 78}\n== {title}\n{'=' * 78}")
-        print(mod.run())
+        # machine-parameterized sections accept the --machine flag
+        if "machine" in inspect.signature(mod.run).parameters:
+            print(mod.run(machine=args.machine))
+        else:
+            print(mod.run())
         print(f"[{name}: {time.time() - t0:.1f}s]")
     return 0
 

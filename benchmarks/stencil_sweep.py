@@ -6,19 +6,21 @@ memory-resident, with the layer-condition analysis switching the per-edge
 stream counts along the way; plus a spatial-blocking sweep at a fixed
 memory-resident size, ranked by the ECM autotuner, and wall-clock /
 bit-equality validation of the Pallas stencil kernels across pipeline
-depths.
+depths.  Every payload accepts a registry ``machine`` (layer conditions
+move with the machine's capacities; bandwidths with its calibration).
 
-    PYTHONPATH=src python -m benchmarks.stencil_sweep
-    PYTHONPATH=src python -m benchmarks.stencil_sweep --json [PATH]
+This module is a *section* of the merged suite runner — registration and
+artifact emission live in ``benchmarks/run.py``:
 
-``--json`` writes the perf-trajectory artifact (default
-``BENCH_stencil.json``) so future PRs can track the stencil path the way
-``BENCH_pipeline.json`` tracks the stream path.
+    PYTHONPATH=src python -m benchmarks.run --suite stencil [--machine M]
+    PYTHONPATH=src python -m benchmarks.run --json --suite stencil
+
+The legacy CLI (``python -m benchmarks.stencil_sweep [--json]``) keeps
+working and delegates to the merged runner.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
@@ -33,11 +35,12 @@ BLOCK_N = 8192                     # memory-resident blocking showcase
 LEVEL_NAMES = ("L1", "L2", "L3", "Mem")
 
 
-def sweep_payload(ns=SWEEP_NS) -> list[dict]:
+def sweep_payload(ns=SWEEP_NS, machine: str | None = None) -> list[dict]:
     """Predicted and simulated-measured cy/CL-update per problem size."""
     from repro.simcache import stencil_sweep_batch
 
-    r = stencil_sweep_batch("jacobi2d", ns)
+    machine = machine or "haswell-ep"
+    r = stencil_sweep_batch("jacobi2d", ns, machine=machine)
     out = []
     for i, n in enumerate(r["n"]):
         out.append({
@@ -52,11 +55,13 @@ def sweep_payload(ns=SWEEP_NS) -> list[dict]:
     return out
 
 
-def blocking_payload(n=BLOCK_N) -> dict:
+def blocking_payload(n=BLOCK_N, machine: str | None = None) -> dict:
     """ECM-ranked spatial blockings at a memory-resident problem size."""
+    from repro.core import get_machine
     from repro.core.autotune import rank_stencil_blocks
 
-    ranked = rank_stencil_blocks("jacobi2d", (n,))
+    ranked = rank_stencil_blocks(
+        "jacobi2d", (n,), machine=get_machine(machine or "haswell-ep"))
     return {"n": n, "ranked": ranked, "best": ranked[0]}
 
 
@@ -85,31 +90,13 @@ def kernel_payload(size=(128, 96), repeats=2) -> dict:
     return out
 
 
-def emit_json(path: str) -> None:
-    payload = {
-        "sweep": sweep_payload(),
-        "blocking": blocking_payload(),
-        "kernels": kernel_payload(),
-        "schema": 1,
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1)
-    regimes = sorted({p["regime"] for p in payload["sweep"]})
-    ok = all(s["bit_identical_to_ref"]
-             for s in payload["kernels"]["stages"].values())
-    print(f"[bench] wrote {path}: {len(payload['sweep'])} sweep points over "
-          f"regimes {regimes}, best block "
-          f"{payload['blocking']['best']['block']} "
-          f"({payload['blocking']['best']['speedup_vs_unblocked']:.2f}x), "
-          f"kernels bit-identical: {ok}")
+def run(machine: str | None = None) -> str:
+    from repro.core import get_machine, stencil_ecm
 
-
-def run() -> str:
-    from repro.core import stencil_ecm
-
+    m = get_machine(machine or "haswell-ep")
     out = []
     rows = []
-    for p in sweep_payload():
+    for p in sweep_payload(machine=m.name):
         rows.append([p["n"], fmt(p["ws_kib"], 0) + " KiB", p["regime"],
                      "/".join(str(m) for m in p["lc_misses"]),
                      fmt(p["predicted_cy_per_cl"], 1),
@@ -119,15 +106,15 @@ def run() -> str:
         ["N", "working set", "regime", "LC misses L1/L2/L3",
          "ECM cy/CL", "sim cy/CL", "err"], rows))
 
-    m_small = stencil_ecm("jacobi2d", widths=(SWEEP_NS[0],))
-    m_big = stencil_ecm("jacobi2d", widths=(BLOCK_N,))
+    m_small = stencil_ecm("jacobi2d", widths=(SWEEP_NS[0],), machine=m)
+    m_big = stencil_ecm("jacobi2d", widths=(BLOCK_N,), machine=m)
     out.append(
         f"\nlayer conditions move the model inputs, not just the residence "
         f"level:\n  N={SWEEP_NS[0]:>5}: {m_small.notation()} -> "
         f"{pred_str(m_small.predictions())}\n  N={BLOCK_N:>5}: "
         f"{m_big.notation()} -> {pred_str(m_big.predictions())}")
 
-    b = blocking_payload()
+    b = blocking_payload(machine=m.name)
     brows = [[str(r["block"][0]), r["misses_l1"], fmt(r["t_ecm"], 1),
               fmt(r["speedup_vs_unblocked"], 2) + "x"]
              for r in sorted(b["ranked"], key=lambda r: r["block"])]
@@ -152,12 +139,17 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", nargs="?", const="BENCH_stencil.json",
                     default=None, metavar="PATH",
-                    help="emit the stencil perf-trajectory JSON")
+                    help="emit the stencil perf-trajectory JSON (delegates "
+                         "to benchmarks.run --suite stencil)")
+    ap.add_argument("--machine", default=None,
+                    help="registry machine (see repro.core.MACHINES)")
     args = ap.parse_args()
     if args.json:
-        emit_json(args.json)
+        from . import run as run_mod
+
+        run_mod.emit_json(args.json, suite="stencil", machine=args.machine)
         return 0
-    print(run())
+    print(run(machine=args.machine))
     return 0
 
 

@@ -70,3 +70,20 @@ print(f"paper notation: {ecm.as_ecm_model()}")
 # the step still runs for real:
 state2, metrics = jax.jit(make_train_step(arch, opt))(state, batch)
 print(f"one real step: loss = {float(metrics['loss']):.3f}")
+
+
+# --- 4. One model, many machines -------------------------------------------
+from repro.core import get_machine, zoo_predictions
+
+print("\n== Cross-generation zoo: striad on every registered machine ==")
+for mach, rows in zoo_predictions().items():
+    levels, preds = rows["striad"]
+    notes = []
+    m = get_machine(mach)
+    if m.victim_l3:
+        notes.append("victim L3")
+    if not m.write_allocate:
+        notes.append("no write-allocate")
+    tag = f"  ({', '.join(notes)})" if notes else ""
+    print(f"  {mach:>16}: " + " ] ".join(
+        f"{lv}={p:.1f}" for lv, p in zip(levels, preds)) + tag)

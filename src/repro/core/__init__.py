@@ -1,9 +1,15 @@
 """ECM performance-model core (the paper's contribution).
 
 Paper-faithful pieces: :mod:`.ecm` (model + Eq. 1 overlap rule + notation),
-:mod:`.machine` (Haswell-EP port/bandwidth model), :mod:`.kernel_spec`
-(§IV-C construction recipe + Table I benchmarks), :mod:`.saturation`
-(Eq. 2 multicore scaling) and :mod:`.energy` (§III-D energy/EDP analysis).
+:mod:`.machine` (machine registry: Haswell-EP and the cross-generation
+zoo, with per-machine bandwidth/issue tables and calibration data),
+:mod:`.kernel_spec` (§IV-C construction recipe + Table I benchmarks),
+:mod:`.saturation` (Eq. 2 multicore scaling) and :mod:`.energy` (§III-D
+energy/EDP analysis).
+
+Unified construction: :mod:`.workload` — every kernel family reduces to
+one canonical record (uop mix + per-level line traffic) and one batched
+engine evaluates any workload on any registered machine.
 
 Beyond the paper's streaming kernels: :mod:`.layer_condition` (stencil
 layer-condition analysis, arXiv:1410.5010) with LC-aware ECM construction.
@@ -17,8 +23,10 @@ from .kernel_spec import (
     PAPER_TABLE1_INPUTS,
     PAPER_TABLE1_MEASUREMENTS,
     PAPER_TABLE1_PREDICTIONS,
+    TRIAD_UPDATE,
     StreamKernelSpec,
     benchmark_batch,
+    fuse_chain,
     haswell_ecm,
 )
 from .layer_condition import (
@@ -35,15 +43,40 @@ from .layer_condition import (
     stencil_ecm,
 )
 from .machine import (
+    BROADWELL_EP,
     HASWELL_EP,
     HASWELL_MEASURED_BW,
+    MACHINES,
+    SANDY_BRIDGE_EP,
+    SKYLAKE_SP,
     TPU_V5E,
+    TPU_V5E_HIERARCHY,
     MachineModel,
     PortModel,
     TPUMachineModel,
     TransferLevel,
+    get_machine,
+    machine_names,
+    register_machine,
 )
 from .saturation import ScalingModel, batch_curve, batch_saturation, domain_scaling
+from .workload import (
+    WORKLOADS,
+    LineTraffic,
+    RawWorkload,
+    StencilWorkload,
+    StreamWorkload,
+    UopMix,
+    Workload,
+    lower,
+    lower_many,
+    register_workload,
+    route_traffic,
+    workload_batch,
+    workload_ecm,
+    workload_registry,
+    zoo_predictions,
+)
 
 __all__ = [
     "ECMBatch",
@@ -69,13 +102,38 @@ __all__ = [
     "stencil_ecm",
     "batch_curve",
     "batch_saturation",
+    "BROADWELL_EP",
     "HASWELL_EP",
     "HASWELL_MEASURED_BW",
+    "MACHINES",
+    "SANDY_BRIDGE_EP",
+    "SKYLAKE_SP",
     "TPU_V5E",
+    "TPU_V5E_HIERARCHY",
+    "TRIAD_UPDATE",
     "MachineModel",
     "PortModel",
     "TPUMachineModel",
     "TransferLevel",
+    "get_machine",
+    "machine_names",
+    "register_machine",
+    "fuse_chain",
     "ScalingModel",
     "domain_scaling",
+    "WORKLOADS",
+    "LineTraffic",
+    "RawWorkload",
+    "StencilWorkload",
+    "StreamWorkload",
+    "UopMix",
+    "Workload",
+    "lower",
+    "lower_many",
+    "register_workload",
+    "route_traffic",
+    "workload_batch",
+    "workload_ecm",
+    "workload_registry",
+    "zoo_predictions",
 ]

@@ -1,16 +1,26 @@
 """ECM-guided configuration selection (beyond-paper use of the model).
 
 The paper's workflow is: build the light-speed model from resource counts,
-find the dominant term, act on it.  This module automates that loop over
-*distribution configs*: for a transformer-like workload it estimates the
-three TPU-ECM terms analytically for every candidate (data, model) mesh
-factorization and gradient-accumulation depth, rejects configs whose
+find the dominant term, act on it.  This module automates that loop.
+
+**Generic path** — :func:`rank_workloads`: any set of
+``repro.core.workload`` candidates (streams, stencils at different
+blockings, fused chains, pre-lowered TPU steps) is lowered on any registry
+machine through the unified engine and argsorted by predicted ``T_ECM`` at
+a chosen residence level — one code path regardless of family.
+:func:`rank_stencil_blocks` is a convenience that builds the
+spatial-blocking candidate set and routes it through that path.
+
+**Mesh path** — :func:`rank`: for a transformer-like workload it estimates
+the three TPU-ECM terms analytically for every candidate (data, model)
+mesh factorization and gradient-accumulation depth, rejects configs whose
 working set exceeds HBM, and ranks the rest by the ECM-bound step time.
 
-The estimator is deliberately first-order (the same spirit as the paper's
-stream counting): weights/activations/collectives are counted from model
-dimensions, not from a compile.  `repro.launch.dryrun` remains the ground
-truth; the autotuner prunes the candidate set before any compile happens.
+The estimators are deliberately first-order (the same spirit as the
+paper's stream counting): weights/activations/collectives are counted from
+model dimensions, not from a compile.  `repro.launch.dryrun` remains the
+ground truth; the autotuner prunes the candidate set before any compile
+happens.
 """
 from __future__ import annotations
 
@@ -196,6 +206,51 @@ def recommend(w: WorkloadSpec, n_chips: int = 256,
 
 
 # ---------------------------------------------------------------------------
+# Generic ECM workload ranking (the single code path every family uses)
+# ---------------------------------------------------------------------------
+
+
+def rank_workloads(workloads, machine=None, *,
+                   level: "int | str" = -1,
+                   sustained_bw=None,
+                   tiebreak=None) -> list[dict]:
+    """Rank any workloads on any machine by predicted ``T_ECM``.
+
+    One vectorized lowering through the unified engine
+    (``repro.core.workload.lower_many``), one argsort — no per-candidate
+    model builds and no family-specific code: candidates may be stream
+    kernels, stencils at different blockings, fused chains or pre-lowered
+    (``RawWorkload``) records — any mix that lowers to one level
+    hierarchy (pre-lowered records keep their own levels, so rank them
+    against peers of the same hierarchy).  ``level`` picks the
+    residence level the ranking optimizes for (default: the machine's
+    memory level, whatever the hierarchy calls it); ``tiebreak`` is an
+    optional
+    secondary sort key array (ascending), e.g. preferring larger blocks
+    among equal predictions.
+
+    Returns dicts ``{"name", "index", "t_ecm", "predictions"}``
+    best-first (``index`` is the position in the lowered batch, i.e. the
+    candidate order).
+    """
+    from .machine import HASWELL_EP
+    from .workload import lower_many
+
+    lowered = lower_many(workloads, machine or HASWELL_EP,
+                         sustained_bw=sustained_bw)
+    batch = lowered.batch
+    t = batch.prediction(level)                               # (C,)
+    order = (np.argsort(t, kind="stable") if tiebreak is None
+             else np.lexsort((np.asarray(tiebreak), t)))
+    preds = batch.predictions()
+    return [{"name": batch.names[i] if batch.names else str(i),
+             "index": int(i),
+             "t_ecm": float(t[i]),
+             "predictions": tuple(float(x) for x in preds[i])}
+            for i in order]
+
+
+# ---------------------------------------------------------------------------
 # Stencil spatial-blocking autotuner (layer-condition ECM)
 # ---------------------------------------------------------------------------
 
@@ -235,34 +290,34 @@ def rank_stencil_blocks(spec_or_name, widths: tuple[int, ...],
     predicted cycles, but fewer strips and less halo re-reading the
     first-order model does not charge for.
     """
-    from .layer_condition import (
-        HASWELL_CAPACITIES,
-        STENCIL_MEASURED_BW,
-        STENCILS,
-        misses_batch,
-        stencil_block_batch,
-    )
-    from .machine import HASWELL_EP
+    from .layer_condition import STENCILS, misses_batch
+    from .machine import HASWELL_EP, get_machine
+    from .workload import StencilWorkload
 
-    spec = (spec_or_name if not isinstance(spec_or_name, str)
-            else STENCILS[spec_or_name])
-    m = machine or HASWELL_EP
-    caps = capacities or HASWELL_CAPACITIES
-    bw = sustained_bw or STENCIL_MEASURED_BW.get(spec.name, 24.1e9)
+    spec = STENCILS.get(spec_or_name, spec_or_name)
+    if not hasattr(spec, "row_streams"):
+        raise KeyError(f"unknown stencil {spec_or_name!r}; "
+                       f"registered: {sorted(STENCILS)}")
+    m = get_machine(machine or HASWELL_EP)
+    caps = capacities or m.capacities
+    bw = sustained_bw or m.sustained_bw(spec.name, "_stencil",
+                                        default=24.1e9)
     cands = blocks or stencil_block_candidates(widths)
-    batch = stencil_block_batch(spec, widths, cands, machine=m,
-                                sustained_bw=bw, capacities=caps)
-    t = batch.prediction(level)                               # (C,)
     eff = np.minimum(np.asarray([tuple(b) for b in cands], float),
                      np.asarray(widths, float)[None, :])
     mis = misses_batch(spec, eff, caps)
-    # baseline: the truly unblocked model, independent of the candidate set
-    base = float(spec.ecm(m, bw, widths=widths,
-                          capacities=caps).prediction(level))
-    # primary key t_ecm ascending, secondary key inner block descending
-    order = np.lexsort((-eff[:, -1], t))
-    return [{"block": tuple(int(x) for x in cands[i]),
-             "t_ecm": float(t[i]),
-             "misses_l1": int(mis[i, 0]),
-             "speedup_vs_unblocked": float(base / t[i])}
-            for i in order]
+    point = StencilWorkload(spec, widths=tuple(widths), capacities=caps)
+    # one generic ranking pass over blocking candidates + the truly
+    # unblocked baseline (appended last, independent of the candidate set)
+    ranked = rank_workloads(
+        [point.with_block(b) for b in cands] + [point], m, level=level,
+        sustained_bw=bw,
+        # primary key t_ecm ascending, secondary key inner block descending
+        tiebreak=np.concatenate([-eff[:, -1],
+                                 [-float(np.asarray(widths)[-1])]]))
+    base = next(r["t_ecm"] for r in ranked if r["index"] == len(cands))
+    return [{"block": tuple(int(x) for x in cands[r["index"]]),
+             "t_ecm": r["t_ecm"],
+             "misses_l1": int(mis[r["index"], 0]),
+             "speedup_vs_unblocked": base / r["t_ecm"]}
+            for r in ranked if r["index"] < len(cands)]

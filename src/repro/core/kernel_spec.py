@@ -10,7 +10,16 @@ This module implements the paper's model-construction recipe (§IV-C):
 3. compose everything into an :class:`~repro.core.ecm.ECMModel`.
 
 The seven microbenchmarks of the paper's Table I (plus the two
-non-temporal-store variants of §VII-E) ship as :data:`BENCHMARKS`.
+non-temporal-store variants of §VII-E) ship as :data:`BENCHMARKS`;
+:data:`TRIAD_UPDATE`, the fused chain built by :func:`fuse_chain`, ships
+separately (it is not a Table I kernel) and is registered in the
+workload registry alongside them.
+
+Both builders here (:meth:`StreamKernelSpec.ecm` and
+:func:`benchmark_batch`) are thin views of the unified workload engine
+(``repro.core.workload``): a spec is wrapped in a ``StreamWorkload`` and
+lowered on the target machine — the same single code path that evaluates
+stencils and TPU steps, on any machine in the registry.
 """
 from __future__ import annotations
 
@@ -94,40 +103,14 @@ class StreamKernelSpec:
         *,
         optimized_agu: bool = False,
     ) -> ECMModel:
-        t_nol, t_ol = machine.ports.core_cycles(
-            loads=self.uop_loads,
-            stores=self.uop_stores,
-            fma=self.uop_fma,
-            mul=self.uop_mul,
-            add=self.uop_add,
-            optimized_agu=optimized_agu,
-        )
-        lb = machine.line_bytes
-        transfers: list[float] = []
-        # inner cache edges (L1<->L2, L2<->L3 on Haswell)
-        for i, lvl in enumerate(machine.levels):
-            if i == 0:
-                # L1<->L2 interface: loads + RFO inward; write-backs AND NT
-                # stores outward (see the stream-accounting note above).
-                cyc = lvl.load_cycles(self.load_streams, lb)
-                cyc += lvl.evict_cycles(self.l1_evict_streams, lb)
-            else:
-                # deeper edges: NT stores bypass (LFB -> memory directly),
-                # so only l2_streams cross here.
-                cyc = lvl.load_cycles(self.load_streams, lb)
-                cyc += lvl.evict_cycles(self.l2_streams - self.load_streams,
-                                        lb)
-            transfers.append(cyc)
-        # final edge: sustained-bandwidth-derived cycles per line x lines
-        mem_cy = machine.mem_cycles_per_line(sustained_bw) * self.mem_streams
-        transfers.append(mem_cy)
-        return ECMModel(
-            t_ol=t_ol,
-            t_nol=t_nol,
-            transfers=tuple(transfers),
-            levels=machine.level_names(),
-            name=self.name,
-        )
+        """Scalar view of the unified engine (the §IV-C recipe applied by
+        ``workload.lower``; the stream-accounting note above describes the
+        inclusive-hierarchy routing it performs)."""
+        from .workload import StreamWorkload, workload_ecm
+
+        return workload_ecm(StreamWorkload(self), machine,
+                            sustained_bw=sustained_bw,
+                            optimized_agu=optimized_agu)
 
 
 # ---------------------------------------------------------------------------
@@ -195,64 +178,92 @@ BENCHMARKS: dict[str, StreamKernelSpec] = {
 }
 
 
+def fuse_chain(name: str, parts: "tuple | list", *, internal: int,
+               expr: str = "") -> StreamKernelSpec:
+    """Build the spec of a fused pipeline chain (§VII-E logic applied to
+    kernel fusion, see ``kernels/stream/ops.triad_update``): uops of all
+    stages are summed; ``internal`` intermediate arrays stay resident
+    between stages, eliding one store + one load stream (and their uops)
+    per fused link.  Returns an ordinary :class:`StreamKernelSpec`.
+
+    RFO accounting per fused link (the write-allocate stream follows the
+    arrays, not the stages): the elided intermediate is never allocated,
+    so the upstream stage's RFO for it disappears; an in-place downstream
+    stage (``rfo == 0``: its store targeted the array it loaded) loses
+    that covering load, so its store becomes write-allocating.
+    """
+    if internal and any(p.nt_stores for p in parts[:-1]):
+        raise ValueError(
+            f"chain {name!r}: a non-final stage writes non-temporally; an "
+            f"NT intermediate cannot stay resident for fusion")
+    loads = sum(p.loads_explicit for p in parts) - internal
+    stores = sum(p.stores for p in parts) - internal
+    rfo = sum(p.rfo for p in parts)
+    for up, down in list(zip(parts, parts[1:]))[:internal]:
+        if up.rfo:
+            rfo -= 1                  # intermediate no longer allocated
+        if down.rfo == 0 and down.stores:
+            rfo += 1                  # in-place store now write-allocates
+    if loads < 0 or stores < 0 or rfo < 0:
+        raise ValueError(f"chain {name!r} elides more streams than exist")
+    return StreamKernelSpec(
+        name=name,
+        expr=expr or " -> ".join(p.name for p in parts),
+        loads_explicit=loads,
+        rfo=rfo,
+        stores=stores,
+        nt_stores=sum(p.nt_stores for p in parts),
+        flops_per_elem=sum(p.flops_per_elem for p in parts),
+        uop_loads=sum(p.uop_loads for p in parts) - 2 * internal,
+        uop_stores=sum(p.uop_stores for p in parts) - 2 * internal,
+        uop_fma=sum(p.uop_fma for p in parts),
+        uop_mul=sum(p.uop_mul for p in parts),
+        uop_add=sum(p.uop_add for p in parts),
+    )
+
+
+#: The fused triad->update chain of ``kernels/stream/ops.triad_update``:
+#: the triad result stays in cache/VMEM instead of round-tripping memory —
+#: 3 memory streams instead of 5, the 5/3 speedup the ECM stream count
+#: predicts for the memory-bound limit.
+TRIAD_UPDATE = fuse_chain(
+    "triad_update", (BENCHMARKS["striad"], BENCHMARKS["update"]),
+    internal=1, expr="A[i] = t*(B[i] + s*C[i])  (fused, triad result resident)")
+
+
 def benchmark_batch(names: "list | tuple | None" = None, *,
                     machine: MachineModel | None = None,
                     sustained_bw: dict[str, float] | None = None,
                     optimized_agu: bool = False) -> "ECMBatch":
     """Vectorized §IV-C model construction for a set of benchmarks.
 
-    Builds every per-kernel ECM model in one set of NumPy array ops
-    (streams x per-level bandwidths) instead of per-kernel Python loops;
-    agrees with :func:`haswell_ecm` / ``StreamKernelSpec.ecm`` exactly.
-    ``names`` entries may be registry keys or :class:`StreamKernelSpec`
-    objects (custom kernels); bandwidths are looked up by spec name, so a
-    custom spec needs a ``sustained_bw`` entry under its name (the
-    simulator layer, ``simulate_levels_batch``, supplies defaults).
+    One call into the unified workload engine
+    (:func:`repro.core.workload.lower_many`); agrees with
+    :func:`haswell_ecm` / ``StreamKernelSpec.ecm`` exactly.  ``names``
+    entries may be registry keys or :class:`StreamKernelSpec` objects
+    (custom kernels); bandwidths are looked up by spec name, so a custom
+    spec needs a ``sustained_bw`` entry under its name (the simulator
+    layer, ``simulate_levels_batch``, supplies defaults).
     """
-    import numpy as np
-
-    from .ecm import ECMBatch
     from .machine import HASWELL_EP
+    from .workload import StreamWorkload, workload_batch
 
     m = machine or HASWELL_EP
-    bws = sustained_bw or HASWELL_MEASURED_BW
     specs = [n if isinstance(n, StreamKernelSpec) else BENCHMARKS[n]
              for n in (names or BENCHMARKS)]
-    names = tuple(s.name for s in specs)
-    lb = m.line_bytes
-
-    # in-core times still go through the (cheap, K-sized) port model
-    core = np.array([
-        m.ports.core_cycles(loads=s.uop_loads, stores=s.uop_stores,
-                            fma=s.uop_fma, mul=s.uop_mul, add=s.uop_add,
-                            optimized_agu=optimized_agu)
-        for s in specs
-    ])
-    t_nol, t_ol = core[:, 0], core[:, 1]
-
-    loads = np.array([s.load_streams for s in specs], float)
-    l1_evicts = np.array([s.l1_evict_streams for s in specs], float)
-    l2_evicts = np.array([s.l2_streams - s.load_streams for s in specs],
-                         float)
-    mem = np.array([s.mem_streams for s in specs], float)
-    try:
-        bw = np.array([bws[n] for n in names], float)
-    except KeyError as e:
+    if sustained_bw is not None:
+        bws = sustained_bw
+    else:
+        bws = {k: v for k, v in m.measured_bw.items()
+               if not k.startswith("_")}
+    missing = [s.name for s in specs if s.name not in bws]
+    if missing:
         raise KeyError(
-            f"no sustained bandwidth for kernel {e.args[0]!r}: pass "
-            f"sustained_bw={{{e.args[0]!r}: <bytes/s>}} for custom specs"
-        ) from None
-
-    edges = []
-    for i, lvl in enumerate(m.levels):
-        evicts = l1_evicts if i == 0 else l2_evicts
-        edges.append(loads * lb / lvl.load_bpc + evicts * lb / lvl.evict_bpc)
-    # same association order as MachineModel.mem_cycles_per_line so the
-    # batch agrees with the scalar builder to the last ulp
-    edges.append((lb * m.clock_hz / bw) * mem)
-    return ECMBatch(
-        t_ol=t_ol, t_nol=t_nol, transfers=np.stack(edges, axis=-1),
-        levels=m.level_names(), names=names, unit="cy/CL")
+            f"no sustained bandwidth for kernel {missing[0]!r}: pass "
+            f"sustained_bw={{{missing[0]!r}: <bytes/s>}} for custom specs")
+    return workload_batch([StreamWorkload(s) for s in specs], m,
+                          sustained_bw=dict(bws),
+                          optimized_agu=optimized_agu)
 
 
 def haswell_ecm(name: str, *, optimized_agu: bool = False,

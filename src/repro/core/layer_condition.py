@@ -46,12 +46,11 @@ import numpy as np
 from .ecm import ECMBatch, ECMModel
 from .machine import HASWELL_EP, MachineModel
 
-#: Haswell-EP cache capacities (Table II), innermost first.  The L3 entry is
-#: the Cluster-on-Die affinity-domain slice (7 x 2.5 MB), matching the CoD
-#: sustained bandwidths of ``machine.HASWELL_MEASURED_BW``; it equals
-#: ``simcache.HASWELL_CACHES_COD.capacities()``.
-HASWELL_CAPACITIES: tuple[int, ...] = (
-    32 * 1024, 256 * 1024, 35 * 1024 * 1024 // 2)
+#: Deprecated alias — capacities now live on the machine
+#: (``MachineModel.capacities``; the Haswell L3 entry is the Cluster-on-Die
+#: affinity-domain slice, 7 x 2.5 MB, matching the CoD sustained-bandwidth
+#: calibration and ``simcache.HASWELL_CACHES_COD.capacities()``).
+HASWELL_CAPACITIES: tuple[int, ...] = HASWELL_EP.capacities
 
 #: Rule-of-thumb safety factor of the LC literature: require the reuse set
 #: to fit in *half* the cache (associativity conflicts, other data).
@@ -161,13 +160,16 @@ class StencilSpec:
         return self.row_streams
 
     def misses_per_level(self, widths: tuple[int, ...],
-                         capacities: tuple[int, ...] = HASWELL_CAPACITIES,
+                         capacities: tuple[int, ...] | None = None,
                          *, block: tuple[int, ...] | None = None,
                          safety: float = LC_SAFETY) -> tuple[int, ...]:
         """Load-stream misses per cache level (L1, L2, ...): the inward
-        load traffic on the edge *below* each level."""
+        load traffic on the edge *below* each level.  Defaults to the
+        Haswell-EP capacities; pass ``machine.capacities`` for any other
+        registry machine."""
+        caps = capacities if capacities is not None else HASWELL_CAPACITIES
         return tuple(self.load_misses(c, widths, block=block, safety=safety)
-                     for c in capacities)
+                     for c in caps)
 
     def elems_per_line(self, line_bytes: int) -> int:
         return line_bytes // self.elem_bytes
@@ -177,7 +179,7 @@ class StencilSpec:
     # ------------------------------------------------------------------
     def ecm(self, machine: MachineModel, sustained_bw: float, *,
             widths: tuple[int, ...],
-            capacities: tuple[int, ...] = HASWELL_CAPACITIES,
+            capacities: tuple[int, ...] | None = None,
             block: tuple[int, ...] | None = None,
             safety: float = LC_SAFETY,
             optimized_agu: bool = False) -> ECMModel:
@@ -185,15 +187,15 @@ class StencilSpec:
 
         Identical recipe to ``StreamKernelSpec.ecm`` except the inward load
         stream count on each edge comes from the layer condition of the
-        cache level above it.  Scalar view of
+        cache level above it (evaluated against the machine's capacities
+        unless overridden).  Scalar view of
         :func:`stencil_batch_from_misses`."""
-        misses = self.misses_per_level(widths, capacities, block=block,
-                                       safety=safety)
-        batch = stencil_batch_from_misses(
-            self, np.asarray([misses], float), machine=machine,
-            sustained_bw=sustained_bw, names=(self.name,),
-            optimized_agu=optimized_agu)
-        return batch.scalar(0)
+        from .workload import StencilWorkload, workload_ecm
+
+        return workload_ecm(
+            StencilWorkload(self, widths=tuple(widths), block=block,
+                            safety=safety, capacities=capacities),
+            machine, sustained_bw=sustained_bw, optimized_agu=optimized_agu)
 
 
 # ---------------------------------------------------------------------------
@@ -202,7 +204,7 @@ class StencilSpec:
 
 
 def misses_batch(spec: StencilSpec, widths_arr: np.ndarray,
-                 capacities: tuple[int, ...] = HASWELL_CAPACITIES,
+                 capacities: tuple[int, ...] | None = None,
                  *, safety: float = LC_SAFETY) -> np.ndarray:
     """Load-miss table for a batch of effective inner widths: ``(B, L)``.
 
@@ -218,7 +220,8 @@ def misses_batch(spec: StencilSpec, widths_arr: np.ndarray,
         raise ValueError(
             f"widths_arr last dim must be {spec.dim - 1}, got {w.shape}")
     r, eb = spec.radius, spec.elem_bytes
-    caps = np.asarray(capacities, float)                     # (L,)
+    caps = np.asarray(capacities if capacities is not None
+                      else HASWELL_CAPACITIES, float)        # (L,)
     if spec.dim == 2:
         nbytes = [(2 * r + 1) * w[:, 0] * eb]                # one condition
         held_misses = [1]
@@ -249,25 +252,18 @@ def stencil_batch_from_misses(
     :func:`misses_batch` or :meth:`StencilSpec.misses_per_level`); the
     store side adds the LC-independent write-allocate + write-back pair.
     :meth:`StencilSpec.ecm`, :func:`stencil_block_batch` and the simulator
-    paths in ``repro.simcache`` are all views of this one builder, so the
-    edge accounting lives in exactly one place.
+    paths in ``repro.simcache`` are all views of the unified engine
+    (``repro.core.workload``), so the edge accounting lives in exactly
+    one place.
     """
-    misses = np.asarray(misses, float)
-    t_nol, t_ol = machine.ports.core_cycles(
-        loads=spec.uop_loads, stores=spec.uop_stores, fma=spec.uop_fma,
-        mul=spec.uop_mul, add=spec.uop_add, optimized_agu=optimized_agu)
-    lb = machine.line_bytes
-    edges = []
-    for i, lvl in enumerate(machine.levels):
-        edges.append((misses[:, i] + spec.rfo_streams) * lb / lvl.load_bpc
-                     + spec.wb_streams * lb / lvl.evict_bpc)
-    mem_lines = misses[:, -1] + spec.rfo_streams + spec.wb_streams
-    edges.append(machine.mem_cycles_per_line(sustained_bw) * mem_lines)
-    n = misses.shape[0]
-    return ECMBatch(
-        t_ol=np.full(n, t_ol), t_nol=np.full(n, t_nol),
-        transfers=np.stack(edges, axis=-1),
-        levels=machine.level_names(), names=names, unit="cy/CL")
+    from .workload import StencilWorkload, lower
+
+    misses = np.atleast_2d(np.asarray(misses, float))
+    return lower(
+        StencilWorkload(spec, misses=misses,
+                        names=names or (spec.name,) * misses.shape[0]),
+        machine, sustained_bw=sustained_bw,
+        optimized_agu=optimized_agu).batch
 
 
 def stencil_block_batch(
@@ -277,7 +273,7 @@ def stencil_block_batch(
     *,
     machine: MachineModel = HASWELL_EP,
     sustained_bw: float,
-    capacities: tuple[int, ...] = HASWELL_CAPACITIES,
+    capacities: tuple[int, ...] | None = None,
     safety: float = LC_SAFETY,
     optimized_agu: bool = False,
 ) -> ECMBatch:
@@ -292,7 +288,8 @@ def stencil_block_batch(
     blk = np.asarray([(b,) if np.ndim(b) == 0 else tuple(b)
                       for b in blocks], float)               # (B, dim-1)
     eff = np.minimum(blk, np.asarray(widths, float)[None, :])
-    misses = misses_batch(spec, eff, capacities, safety=safety)  # (B, L)
+    caps = capacities if capacities is not None else machine.capacities
+    misses = misses_batch(spec, eff, caps, safety=safety)    # (B, L)
     return stencil_batch_from_misses(
         spec, misses, machine=machine, sustained_bw=sustained_bw,
         names=tuple(f"{spec.name}@blk{tuple(int(x) for x in b)}"
@@ -324,13 +321,11 @@ JACOBI3D = StencilSpec(
 
 STENCILS: dict[str, StencilSpec] = {s.name: s for s in (JACOBI2D, JACOBI3D)}
 
-#: Sustained memory-domain bandwidth used for the stencil Mem edge.  The
-#: store/update class (write-allocate + write-back present) is the right
-#: analogue; likwid-style stencil measurements on the paper's testbed land
-#: in the same range.  A *calibration input*, not a prediction.
+#: Deprecated alias — the stencil sustained-bandwidth calibration now
+#: lives on the machine (``MachineModel.measured_bw``, with the
+#: ``_stencil`` family fallback); kept for API compatibility.
 STENCIL_MEASURED_BW: dict[str, float] = {
-    "jacobi2d": 24.1e9,
-    "jacobi3d": 24.1e9,
+    k: HASWELL_EP.measured_bw[k] for k in ("jacobi2d", "jacobi3d")
 }
 
 
@@ -338,13 +333,16 @@ def stencil_ecm(name_or_spec: "str | StencilSpec", *,
                 widths: tuple[int, ...],
                 machine: MachineModel = HASWELL_EP,
                 sustained_bw: float | None = None,
-                capacities: tuple[int, ...] = HASWELL_CAPACITIES,
+                capacities: tuple[int, ...] | None = None,
                 block: tuple[int, ...] | None = None,
                 safety: float = LC_SAFETY,
                 optimized_agu: bool = False) -> ECMModel:
-    """LC-aware ECM model for a registered (or custom) stencil spec."""
+    """LC-aware ECM model for a registered (or custom) stencil spec, on
+    any machine in the registry (bandwidth/capacities default to the
+    machine's calibration data)."""
     spec = (name_or_spec if isinstance(name_or_spec, StencilSpec)
             else STENCILS[name_or_spec])
-    bw = sustained_bw or STENCIL_MEASURED_BW.get(spec.name, 24.1e9)
+    bw = sustained_bw or machine.sustained_bw(spec.name, "_stencil",
+                                              default=24.1e9)
     return spec.ecm(machine, bw, widths=widths, capacities=capacities,
                     block=block, safety=safety, optimized_agu=optimized_agu)

@@ -1,23 +1,43 @@
-"""Machine models for the ECM performance model.
+"""Machine models and the machine registry for the ECM performance model.
 
 A :class:`MachineModel` captures everything the ECM model needs to know about
 a processor: clock, unit-of-work granularity (cache line / VMEM block), the
-per-level transfer bandwidths of the memory hierarchy, and an in-core issue
-model (ports for the CPU, MXU/VPU/DMA occupancy for the TPU).
+per-level transfer bandwidths of the memory hierarchy, per-level cache
+capacities (for layer-condition / residence analysis), an in-core issue
+model (ports for the CPU, VPU occupancy for the TPU), and the machine's
+*calibration data* — the measured sustained memory bandwidths that the
+paper (§IV-A) feeds the model as inputs, keyed by kernel class.
 
-Two concrete machines ship with the library:
+Machines are **declarative**: a new generation is a single ``MachineModel``
+literal (bandwidth/issue tables + calibration dict) registered with
+:func:`register_machine`; no per-machine code exists anywhere downstream —
+the unified workload engine (``repro.core.workload``) evaluates any
+registered workload on any registered machine.
 
-* ``HASWELL_EP`` — the paper's testbed (Xeon E5-2695 v3, Table II), used to
-  reproduce the paper's Table I / Figs. 7-12 numbers exactly.
-* ``TPU_V5E`` — the adaptation target for the JAX/Pallas framework.  The
-  hierarchy becomes VREG <- VMEM <- HBM <- ICI <- DCN and the port model is
-  replaced by MXU/VPU issue throughput.
+The shipped zoo (see ``docs/machines.md``):
+
+* ``haswell-ep`` — the paper's testbed (Xeon E5-2695 v3, Table II); every
+  Table I / Figs. 7-12 number is pinned bit-identical against it.
+* ``sandy-bridge-ep`` — Xeon E5-2680: half-width (16 B) L1 data paths, no
+  FMA, 32 B/cy L2 bandwidth (arXiv:1702.07554 generation study).
+* ``broadwell-ep`` — Xeon E5-2699 v4: Haswell-like hierarchy, DDR4-2400.
+* ``skylake-sp`` — Xeon Gold 6148: AVX-512, 1 MiB private L2 and a
+  **non-inclusive victim L3** — loads stream from memory directly into L2
+  and the L2<->L3 edge carries victim/write-back traffic only, so the
+  per-level traffic of the same workload genuinely differs from the
+  inclusive-L3 machines (arXiv:1702.07554 / the SKX follow-up).
+* ``tpu-v5e`` — hierarchy view of the TPU adaptation target: VREG <- VMEM
+  <- HBM, software-managed (no write-allocate: stores are non-temporal by
+  construction, the §VII-E observation as a machine property).
+
+``TPU_V5E`` (a :class:`TPUMachineModel`) additionally carries the
+three-term step-model constants (MXU/ICI/DCN) used by ``core.tpu_ecm``.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 
 # ---------------------------------------------------------------------------
@@ -59,7 +79,12 @@ class PortModel:
     * ``n_simple_agu``  — the Haswell port-7 simple AGU; usable for streaming
       kernels only with the LEA pre-computation trick (§VII-C), enabled via
       ``optimized_agu=True``
-    * ``n_fma`` / ``n_mul`` (ports 0/1) and ``n_add`` (port 1 only)
+    * ``n_fma`` / ``n_mul`` (ports 0/1) and ``n_add`` (port 1 only).  A
+      machine without FMA units (``n_fma=0``, e.g. Sandy Bridge) executes
+      each FMA as a separate multiply and add uop.
+    * ``load_issue_cycles`` / ``store_issue_cycles`` — cycles one
+      full-width vector op occupies its port (2.0 on Sandy Bridge: 16 B
+      data paths moving 32 B AVX registers).
     """
 
     n_load_ports: int = 2
@@ -70,15 +95,17 @@ class PortModel:
     n_mul: int = 2
     n_add: int = 1
     retire_width: int = 4
+    load_issue_cycles: float = 1.0
+    store_issue_cycles: float = 1.0
 
     def core_cycles(
         self,
         *,
-        loads: int = 0,
-        stores: int = 0,
-        fma: int = 0,
-        mul: int = 0,
-        add: int = 0,
+        loads: float = 0,
+        stores: float = 0,
+        fma: float = 0,
+        mul: float = 0,
+        add: float = 0,
         optimized_agu: bool = False,
     ) -> tuple[float, float]:
         """Return ``(t_nol, t_ol)`` in cycles for one unit of work.
@@ -87,11 +114,17 @@ class PortModel:
         assumption (i) these do not overlap with any transfer in the
         hierarchy.  ``t_ol`` — everything else (arithmetic), which does.
         """
+        if not self.n_fma:                      # no FMA units: mul + add uops
+            mul = mul + fma
+            add = add + fma
+            fma = 0
         agus = self.n_full_agu + (self.n_simple_agu if optimized_agu else 0)
+        lc = loads * self.load_issue_cycles
+        sc = stores * self.store_issue_cycles
         t_nol = max(
-            math.ceil(loads / self.n_load_ports) if loads else 0,
-            math.ceil(stores / self.n_store_ports) if stores else 0,
-            math.ceil((loads + stores) / agus) if (loads + stores) else 0,
+            math.ceil(lc / self.n_load_ports) if loads else 0,
+            math.ceil(sc / self.n_store_ports) if stores else 0,
+            math.ceil((lc + sc) / agus) if (loads + stores) else 0,
         )
         t_ol = max(
             math.ceil(fma / self.n_fma) if fma else 0,
@@ -99,6 +132,25 @@ class PortModel:
             math.ceil(add / self.n_add) if add else 0,
         )
         return float(t_nol), float(t_ol)
+
+
+@dataclass(frozen=True)
+class VPUIssueModel:
+    """TPU in-core issue model: a ``lanes_per_cycle``-wide vector unit.
+
+    All vector arithmetic overlaps with DMA (``t_ol``); there is no
+    non-overlapping load/store retirement phase — data movement is the
+    explicit DMA modelled by the transfer edges, so ``t_nol = 0``.  Duck-
+    types :meth:`PortModel.core_cycles`.
+    """
+
+    vectors_per_cycle: float = 8.0      # 8 x 128-lane VPU sub-units
+
+    def core_cycles(self, *, loads: float = 0, stores: float = 0,
+                    fma: float = 0, mul: float = 0, add: float = 0,
+                    optimized_agu: bool = False) -> tuple[float, float]:
+        vec_ops = max(fma + mul + add, 1.0)
+        return 0.0, vec_ops / self.vectors_per_cycle
 
 
 # ---------------------------------------------------------------------------
@@ -116,7 +168,7 @@ class MachineModel:
     simd_bytes: int                      # register width for load/store ops
     levels: tuple[TransferLevel, ...]    # in-cache hierarchy edges, inner->outer
     mem_level_name: str                  # name of the final (measured-bw) edge
-    ports: PortModel
+    ports: PortModel | VPUIssueModel
     cores: int = 1
     # peak compute, for roofline-style cross-checks
     flops_per_cycle_dp: float = 16.0
@@ -124,6 +176,35 @@ class MachineModel:
     # empirical off-core latency penalty (paper §VII-A): cycles per load
     # stream per cache level beyond L2, for kernels with low cy/CL counts
     offcore_penalty_cy: float = 1.0
+    # ---- hierarchy / traffic semantics --------------------------------
+    #: capacity in bytes of cache level i (innermost first; one entry per
+    #: prediction level short of the memory level).  For machines with a
+    #: segmented LLC (CoD / SNC) this is the per-affinity-domain slice,
+    #: matching the per-domain ``measured_bw`` calibration.
+    capacities: tuple[int, ...] = ()
+    #: non-inclusive victim LLC (Skylake-SP): loads stream from memory
+    #: directly into L2; the LLC edge carries victim + write-back traffic
+    #: only.  Consumed by ``workload.route_traffic`` — the single place
+    #: hierarchy semantics turn logical streams into per-edge lines.
+    victim_l3: bool = False
+    #: hardware write-allocate on store miss.  ``False`` for software-
+    #: managed hierarchies (TPU): RFO streams vanish and write-backs become
+    #: non-temporal streams (whole-block ``out_specs`` writes, §VII-E).
+    write_allocate: bool = True
+    first_level_name: str = "L1"
+    # ---- calibration data ---------------------------------------------
+    #: measured sustained memory-domain bandwidths in bytes/s, keyed by
+    #: kernel name, with ``_stream`` / ``_stencil`` / ``_default`` family
+    #: fallbacks.  These are *calibration inputs* of the model (the paper
+    #: measures them with likwid-bench); they are not predictions.
+    measured_bw: dict = field(default_factory=dict)
+    #: explicit uop scale; 0.0 = auto (``line_bytes / simd_bytes / 2``,
+    #: i.e. workload uop counts are canonical per 32 B vector on a 64 B
+    #: line and shrink on wider SIMD).
+    uop_scale: float = 0.0
+    # ---- multi-core topology ------------------------------------------
+    cores_per_domain: int = 0            # 0 = all cores in one domain
+    n_domains: int = 1
 
     # ------------------------------------------------------------------
     def mem_cycles_per_line(self, sustained_bw_bytes_per_s: float) -> float:
@@ -133,7 +214,7 @@ class MachineModel:
 
     def level_names(self) -> tuple[str, ...]:
         """Prediction-level names, innermost first (e.g. L1, L2, L3, Mem)."""
-        names = ["L1"]
+        names = [self.first_level_name]
         for lvl in self.levels:
             names.append(lvl.name.split("<->")[-1].split("->")[-1])
         names.append(self.mem_level_name)
@@ -142,13 +223,109 @@ class MachineModel:
     def with_cores(self, n: int) -> "MachineModel":
         return dataclasses.replace(self, cores=n)
 
+    # ------------------------------------------------------------------
+    # Calibration lookup + in-core issue (the two machine-specific hooks
+    # of the unified workload engine)
+    # ------------------------------------------------------------------
+    def sustained_bw(self, *keys: str, default: float | None = None) -> float:
+        """Walk a calibration-key chain (kernel name, then family fallback,
+        then ``_default``) through :attr:`measured_bw`."""
+        for k in (*keys, "_default"):
+            if k in self.measured_bw:
+                return self.measured_bw[k]
+        if default is not None:
+            return default
+        raise KeyError(
+            f"no sustained-bandwidth calibration for {keys!r} on machine "
+            f"{self.name!r}: add an entry to measured_bw or pass "
+            f"sustained_bw explicitly")
+
+    @property
+    def effective_uop_scale(self) -> float:
+        """Workload uop counts are canonical per cache line with 32 B SIMD
+        (Table I's accounting); wider registers need fewer uops."""
+        if self.uop_scale:
+            return self.uop_scale
+        return self.line_bytes / self.simd_bytes / 2.0
+
+    def core_cycles(self, *, loads: float = 0, stores: float = 0,
+                    fma: float = 0, mul: float = 0, add: float = 0,
+                    optimized_agu: bool = False) -> tuple[float, float]:
+        """SIMD-width-scaled in-core times; the unified engine's entry to
+        the machine's issue model."""
+        s = self.effective_uop_scale
+        return self.ports.core_cycles(
+            loads=loads * s, stores=stores * s, fma=fma * s, mul=mul * s,
+            add=add * s, optimized_agu=optimized_agu)
+
+
+# ---------------------------------------------------------------------------
+# Machine registry
+# ---------------------------------------------------------------------------
+
+MACHINES: dict[str, MachineModel] = {}
+_ALIASES: dict[str, str] = {}
+
+
+def register_machine(machine: MachineModel, *aliases: str) -> MachineModel:
+    """Register a machine (and optional aliases) for name-based lookup."""
+    MACHINES[machine.name] = machine
+    for a in aliases:
+        _ALIASES[a] = machine.name
+    return machine
+
+
+def get_machine(name_or_model: "str | MachineModel") -> MachineModel:
+    """Resolve a machine by registry name/alias; models pass through."""
+    if isinstance(name_or_model, MachineModel):
+        return name_or_model
+    key = _ALIASES.get(name_or_model, name_or_model)
+    try:
+        return MACHINES[key]
+    except KeyError:
+        raise KeyError(
+            f"unknown machine {name_or_model!r}; registered: "
+            f"{sorted(MACHINES)}") from None
+
+
+def machine_names() -> tuple[str, ...]:
+    return tuple(sorted(MACHINES))
+
 
 # ---------------------------------------------------------------------------
 # The paper's testbed: Xeon E5-2695 v3 (Haswell-EP), Table II
 # ---------------------------------------------------------------------------
 
-HASWELL_EP = MachineModel(
-    name="haswell-ep-2695v3",
+#: Sustained single-memory-domain (CoD) bandwidths measured in the paper, in
+#: bytes/s, keyed by benchmark (§IV-A calibration inputs, measured with
+#: likwid-bench).  ``_stream`` / ``_stencil`` are the family fallbacks for
+#: custom specs; ``triad_update`` is the fused chain (striad-class streams).
+_HASWELL_BW = {
+    "ddot": 32.4e9,
+    "load": 32.4e9,          # footnote 2: identical to ddot
+    "store": 23.6e9,
+    "update": 23.6e9,        # "almost identical to that of the store kernel"
+    "copy": 26.3e9,
+    "striad": 27.1e9,
+    "schoenauer": 27.8e9,
+    "striad_nt": 28.3e9,
+    "schoenauer_nt": 29.0e9,
+    "triad_update": 27.1e9,
+    "jacobi2d": 24.1e9,
+    "jacobi3d": 24.1e9,
+    "_stream": 27e9,
+    "_stencil": 24.1e9,
+}
+
+
+def _scaled_bw(table: dict, factor: float) -> dict:
+    """Declarative calibration helper: scale a per-kernel-class bandwidth
+    table by a machine-to-machine sustained-bandwidth ratio."""
+    return {k: v * factor for k, v in table.items()}
+
+
+HASWELL_EP = register_machine(MachineModel(
+    name="haswell-ep",
     clock_hz=2.3e9,
     line_bytes=64,
     simd_bytes=32,                       # AVX
@@ -162,27 +339,101 @@ HASWELL_EP = MachineModel(
     cores=14,
     flops_per_cycle_dp=16.0,
     flops_per_cycle_sp=32.0,
-)
+    # Table II capacities; the L3 entry is the Cluster-on-Die affinity-
+    # domain slice (7 x 2.5 MB), matching the CoD measured_bw calibration.
+    capacities=(32 * 1024, 256 * 1024, 35 * 1024 * 1024 // 2),
+    measured_bw=dict(_HASWELL_BW),
+    cores_per_domain=7,
+    n_domains=2,
+), "haswell", "haswell-ep-2695v3", "hsw")
 
-#: Sustained single-memory-domain (CoD) bandwidths measured in the paper, in
-#: bytes/s, keyed by benchmark.  These are *calibration inputs* of the model
-#: (the paper measures them with likwid-bench); they are not predictions.
+#: Deprecated alias — the calibration table now lives on the machine
+#: (``HASWELL_EP.measured_bw``); this name is kept for API compatibility.
 HASWELL_MEASURED_BW = {
-    "ddot": 32.4e9,
-    "load": 32.4e9,          # footnote 2: identical to ddot
-    "store": 23.6e9,
-    "update": 23.6e9,        # "almost identical to that of the store kernel"
-    "copy": 26.3e9,
-    "striad": 27.1e9,
-    "schoenauer": 27.8e9,
-    "striad_nt": 28.3e9,
-    "schoenauer_nt": 29.0e9,
+    k: v for k, v in HASWELL_EP.measured_bw.items() if not k.startswith("_")
+    and k not in ("triad_update", "jacobi2d", "jacobi3d")
 }
 
 #: Non-CoD sustained chip bandwidths (both memory controllers, Fig. 10/11).
 #: The paper gives CoD ~= 1.08x non-CoD for most kernels; we use the chip
 #: bandwidth ~= 52.3 GB/s stream-triad figure scaled per kernel class.
 HASWELL_CHIP_BW_NONCOD = {k: 1.85 * v for k, v in HASWELL_MEASURED_BW.items()}
+
+
+# ---------------------------------------------------------------------------
+# The generation zoo (arXiv:1702.07554 study; first-order calibration)
+# ---------------------------------------------------------------------------
+
+SANDY_BRIDGE_EP = register_machine(MachineModel(
+    name="sandy-bridge-ep",
+    clock_hz=2.7e9,
+    line_bytes=64,
+    simd_bytes=32,                       # AVX, but 16 B L1 data paths
+    levels=(
+        TransferLevel("L1<->L2", load_bpc=32.0, evict_bpc=32.0),
+        TransferLevel("L2<->L3", load_bpc=32.0, evict_bpc=32.0),
+    ),
+    mem_level_name="Mem",
+    # no FMA; both L1 ports move 16 B/cy, so one 32 B AVX op holds its
+    # port for two cycles
+    ports=PortModel(n_fma=0, n_simple_agu=0,
+                    load_issue_cycles=2.0, store_issue_cycles=2.0),
+    cores=8,
+    flops_per_cycle_dp=8.0,
+    flops_per_cycle_sp=16.0,
+    capacities=(32 * 1024, 256 * 1024, 20 * 1024 * 1024),
+    # single memory domain, DDR3-1600: ~1.35x the Haswell CoD domain
+    measured_bw=_scaled_bw(_HASWELL_BW, 1.35),
+    cores_per_domain=8,
+    n_domains=1,
+), "sandy-bridge", "snb")
+
+BROADWELL_EP = register_machine(MachineModel(
+    name="broadwell-ep",
+    clock_hz=2.2e9,
+    line_bytes=64,
+    simd_bytes=32,                       # AVX2, Haswell-like core
+    levels=(
+        TransferLevel("L1<->L2", load_bpc=64.0, evict_bpc=32.0),
+        TransferLevel("L2<->L3", load_bpc=32.0, evict_bpc=32.0),
+    ),
+    mem_level_name="Mem",
+    ports=PortModel(),
+    cores=22,
+    flops_per_cycle_dp=16.0,
+    flops_per_cycle_sp=32.0,
+    # 55 MB L3, CoD slice of 11 x 2.5 MB
+    capacities=(32 * 1024, 256 * 1024, 55 * 1024 * 1024 // 2),
+    # DDR4-2400 vs Haswell's 2133: ~1.12x per domain
+    measured_bw=_scaled_bw(_HASWELL_BW, 1.12),
+    cores_per_domain=11,
+    n_domains=2,
+), "broadwell", "bdw")
+
+SKYLAKE_SP = register_machine(MachineModel(
+    name="skylake-sp",
+    clock_hz=2.4e9,
+    line_bytes=64,
+    simd_bytes=64,                       # AVX-512: one 64 B line per uop
+    levels=(
+        TransferLevel("L1<->L2", load_bpc=64.0, evict_bpc=64.0),
+        # victim L3: measured sustained L2<->L3 bandwidth ~16 B/cy/direction
+        TransferLevel("L2<->L3", load_bpc=16.0, evict_bpc=16.0),
+    ),
+    mem_level_name="Mem",
+    ports=PortModel(n_fma=2, n_mul=2, n_add=2),
+    cores=20,
+    flops_per_cycle_dp=32.0,
+    flops_per_cycle_sp=64.0,
+    # 32 KiB L1, 1 MiB private L2, 1.375 MB/core non-inclusive L3
+    # (SNC-2 slice of 10 cores)
+    capacities=(32 * 1024, 1024 * 1024, int(13.75 * 1024 * 1024)),
+    victim_l3=True,
+    # DDR4-2666 6ch split over two SNC domains: ~1.85x the Haswell domain
+    measured_bw=_scaled_bw(_HASWELL_BW, 1.85),
+    cores_per_domain=10,
+    n_domains=2,
+), "skylake", "skx")
 
 
 # ---------------------------------------------------------------------------
@@ -221,6 +472,15 @@ class TPUMachineModel:
     pj_per_ici_byte: float = 30.0
     idle_watts: float = 70.0
     peak_watts: float = 220.0
+    # ---- calibration data (the ECM overlap coefficients) --------------
+    #: fraction of collective / HBM transfer time serialized with compute
+    #: (the ``T_nOL`` role in Eq. 1).  These are *per-machine calibration*
+    #: values: ``exposed_hbm_fraction`` is measured by the serial-vs-
+    #: pipelined kernel pair (``tpu_ecm.measured_overlap``); the defaults
+    #: reproduce the pre-calibration model (collectives fully exposed,
+    #: HBM fully overlapped by the multi-buffered DMA pipeline).
+    exposed_ici_fraction: float = 1.0
+    exposed_hbm_fraction: float = 0.0
 
     # ------------------------------------------------------------------
     def compute_seconds(self, flops: float, dtype_peak: float | None = None) -> float:
@@ -241,3 +501,28 @@ class TPUMachineModel:
 
 
 TPU_V5E = TPUMachineModel()
+
+#: Hierarchy view of the TPU for the unified workload engine: one VMEM
+#: block row of 128 f32 lanes is the unit of work; VREG<->VMEM moves one
+#: 8x128 vector per cycle; the memory edge is HBM at the sustained rate.
+#: ``write_allocate=False`` encodes the Pallas whole-block-write semantics
+#: (every store is the paper's §VII-E non-temporal store).
+TPU_V5E_HIERARCHY = register_machine(MachineModel(
+    name="tpu-v5e",
+    clock_hz=TPU_V5E.clock_hz,
+    line_bytes=128 * 4,                  # one f32 row of 128 lanes
+    simd_bytes=128 * 4,
+    levels=(
+        TransferLevel("VREG<->VMEM", load_bpc=8 * 128 * 4.0,
+                      evict_bpc=8 * 128 * 4.0),
+    ),
+    mem_level_name="HBM",
+    first_level_name="VREG",
+    ports=VPUIssueModel(vectors_per_cycle=8.0),
+    cores=1,
+    # registers hold nothing across iterations; VMEM is the reuse level
+    capacities=(0, TPU_V5E.vmem_bytes),
+    write_allocate=False,
+    measured_bw={"_default": TPU_V5E.hbm_bytes_per_s},
+    uop_scale=1.0,                       # uop counts used as-is (VPU ops)
+), "tpu", "v5e")

@@ -124,6 +124,17 @@ class TPUStepECM:
             name=self.name,
         )
 
+    def as_workload(self):
+        """Adapter into the unified workload engine: the step model as a
+        pre-lowered :class:`~repro.core.workload.RawWorkload`, so TPU
+        steps rank/batch through the exact code path every other family
+        uses (``autotune.rank_workloads``, ``ECMBatch`` grids).  The
+        record keeps its own (VMEM/HBM/ICI/DCN, us/step) hierarchy —
+        batch it with other steps, not with cache-line workloads."""
+        from .workload import tpu_step_workload
+
+        return tpu_step_workload(self)
+
     def summary(self) -> dict:
         return {
             "name": self.name,
@@ -150,8 +161,8 @@ def from_resources(
     machine: TPUMachineModel = TPU_V5E,
     model_flops: float = 0.0,
     flops_are_global: bool = True,
-    exposed_ici_fraction: float = 1.0,
-    exposed_hbm_fraction: float = 0.0,
+    exposed_ici_fraction: float | None = None,
+    exposed_hbm_fraction: float | None = None,
     ici_axis_links: int = 1,
     dtype_peak: float | None = None,
 ) -> TPUStepECM:
@@ -163,7 +174,16 @@ def from_resources(
     already-partitioned module, so figures are per chip; set
     ``flops_are_global=False`` in that case.  collective wire bytes from
     :class:`HLOResources` are per chip already.
+
+    The exposed-fraction overlap coefficients default to the *machine's
+    calibration data* (``TPUMachineModel.exposed_hbm_fraction`` /
+    ``exposed_ici_fraction`` — measured by the serial-vs-pipelined kernel
+    pair, see :func:`measured_overlap`); pass explicit values to override.
     """
+    if exposed_ici_fraction is None:
+        exposed_ici_fraction = machine.exposed_ici_fraction
+    if exposed_hbm_fraction is None:
+        exposed_hbm_fraction = machine.exposed_hbm_fraction
     n = mesh.n_chips
     div = n if flops_are_global else 1
     flops_chip = res.flops / div

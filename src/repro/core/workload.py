@@ -1,0 +1,558 @@
+"""The unified workload protocol and the single ECM construction engine.
+
+The ECM model's whole point (paper §IV) is that *one* composition rule —
+``T_ECM = max(T_nOL + T_data, T_OL)`` — covers any kernel on any machine.
+This module makes the *construction* side equally uniform: every workload
+family (streaming loop, layer-condition stencil, fused pipeline chain, TPU
+step) reduces to one **canonical record**,
+
+* a micro-op mix (:class:`UopMix`) that the machine's issue model turns
+  into ``T_OL`` / ``T_nOL``, and
+* logical per-level line traffic (:class:`LineTraffic`): input-load lines
+  missing each cache level, write-allocate (RFO) streams, write-back
+  evictions and non-temporal stores — as a function of machine, problem
+  size and blocking,
+
+and one batched engine (:func:`lower` / :func:`workload_batch`) evaluates
+the full (workload x machine x level x size) grid through
+:class:`~repro.core.ecm.ECMBatch` with **no per-family code downstream**:
+``repro.simcache`` and ``repro.core.autotune`` consume the lowered record
+and never ask what family a workload belongs to.
+
+Hierarchy semantics live in exactly one place, :func:`route_traffic`:
+inclusive caches (Haswell-style), a non-inclusive victim LLC
+(``machine.victim_l3``, Skylake-SP) and software-managed hierarchies
+without write-allocate (``machine.write_allocate=False``, the TPU — every
+store becomes the paper's §VII-E non-temporal store) are per-machine
+*routing rules* applied to the same logical traffic.
+
+Workload families shipped here:
+
+* :class:`StreamWorkload` — wraps a §IV-C
+  :class:`~repro.core.kernel_spec.StreamKernelSpec` (constant traffic);
+* :class:`StencilWorkload` — wraps a
+  :class:`~repro.core.layer_condition.StencilSpec` bound to problem
+  widths / blocking; traffic follows the layer conditions evaluated
+  against the *machine's* cache capacities;
+* fused pipeline chains — specs built by
+  :func:`~repro.core.kernel_spec.fuse_chain` (e.g. ``triad_update``),
+  which sums stage uops and elides the intermediate streams that stay
+  resident between fused stages; they are ordinary stream workloads here;
+* :class:`RawWorkload` — a pre-lowered record (the TPU step model's
+  seconds-per-step terms enter the engine through this, see
+  :func:`tpu_step_workload`).
+
+``WORKLOADS`` is the registry: every entry evaluates on every machine in
+``repro.core.machine.MACHINES`` through the same code path (pinned by
+``tests/test_workload.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from .ecm import ECMBatch, ECMModel
+from .machine import MACHINES, MachineModel, get_machine
+
+
+# ---------------------------------------------------------------------------
+# The canonical record
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class UopMix:
+    """Micro-op mix per unit of work, canonical per 32 B vector register on
+    a 64 B line (Table I's accounting); the machine's
+    ``effective_uop_scale`` adapts it to wider/narrower SIMD."""
+
+    loads: float = 0.0
+    stores: float = 0.0
+    fma: float = 0.0
+    mul: float = 0.0
+    add: float = 0.0
+
+    @property
+    def l1_uops(self) -> float:
+        """Load/store uops hitting the L1 interface (front-end pressure)."""
+        return self.loads + self.stores
+
+
+@dataclass(frozen=True)
+class LineTraffic:
+    """Logical per-level line traffic for a batch of model points.
+
+    ``loads[b, l]`` — input-load lines per unit of work that *miss* cache
+    level ``l`` (innermost first); constant across ``l`` for streaming
+    kernels, layer-condition-driven for stencils.  ``rfo`` (write-allocate
+    reads), ``evicts`` (write-backs leaving L1) and ``nt`` (non-temporal
+    stores) are per-unit-of-work scalars per batch element.  How these
+    logical streams map onto hierarchy *edges* is the machine's business —
+    see :func:`route_traffic`.
+    """
+
+    loads: np.ndarray          # (B, L)
+    rfo: np.ndarray            # (B,)
+    evicts: np.ndarray         # (B,)
+    nt: np.ndarray             # (B,)
+
+    def __post_init__(self):
+        object.__setattr__(self, "loads",
+                           np.atleast_2d(np.asarray(self.loads, float)))
+        b = self.loads.shape[0]
+        for name in ("rfo", "evicts", "nt"):
+            v = np.broadcast_to(
+                np.asarray(getattr(self, name), float), (b,)).copy()
+            object.__setattr__(self, name, v)
+
+    @property
+    def batch(self) -> int:
+        return self.loads.shape[0]
+
+
+@dataclass(frozen=True)
+class RoutedTraffic:
+    """Per-edge line counts after hierarchy routing: edge ``e`` connects
+    prediction level ``e`` and ``e+1``; the last edge is the memory edge."""
+
+    load_lines: np.ndarray     # (B, E) inward lines per edge
+    evict_lines: np.ndarray    # (B, E) outward lines per edge
+
+    def mem_lines(self) -> np.ndarray:
+        return self.load_lines[:, -1] + self.evict_lines[:, -1]
+
+
+def route_traffic(machine: MachineModel, t: LineTraffic) -> RoutedTraffic:
+    """Map logical streams onto the machine's hierarchy edges.
+
+    This is the *single* place hierarchy semantics live:
+
+    * inclusive caches — loads + RFO travel inward on every edge down to
+      the level holding the data; write-backs travel outward on every
+      edge; NT stores leave through the L1 interface (line-fill buffers)
+      and land on the memory edge, bypassing the caches in between
+      (§VII-E accounting);
+    * ``machine.write_allocate=False`` — RFO streams do not exist and
+      write-backs *are* NT streams (software-managed hierarchy: Pallas
+      whole-block ``out_specs``);
+    * ``machine.victim_l3`` — non-inclusive LLC (Skylake-SP): loads
+      stream from memory directly into L2, so the LLC edge carries no
+      inward lines; instead every line displaced from L2 crosses it
+      outward (clean victims + dirty write-backs).
+    """
+    n_edges = len(machine.levels) + 1
+    if t.loads.shape[1] != n_edges:
+        raise ValueError(
+            f"traffic has {t.loads.shape[1]} miss levels, machine "
+            f"{machine.name!r} has {n_edges} (cache levels incl. the one "
+            f"feeding the memory edge)")
+    rfo, evicts, nt = t.rfo, t.evicts, t.nt
+    if not machine.write_allocate:
+        rfo = np.zeros_like(rfo)
+        nt = nt + evicts
+        evicts = np.zeros_like(evicts)
+    zeros = np.zeros_like(evicts)
+    load_cols, evict_cols = [], []
+    for e in range(n_edges):
+        inward = t.loads[:, e] + rfo
+        if e == 0:
+            outward = evicts + nt
+        elif e == n_edges - 1:
+            outward = evicts + nt
+        else:
+            outward = evicts
+        if machine.victim_l3 and n_edges >= 3 and e == n_edges - 2:
+            # victim LLC edge: nothing inward; clean victims (the lines
+            # fetched from memory into L2) + dirty write-backs outward.
+            outward = t.loads[:, e] + evicts
+            inward = zeros
+        load_cols.append(inward)
+        evict_cols.append(outward)
+    return RoutedTraffic(load_lines=np.stack(load_cols, axis=-1),
+                         evict_lines=np.stack(evict_cols, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# The workload protocol
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class Workload(Protocol):
+    """Anything that reduces to the canonical record on a given machine."""
+
+    name: str
+
+    def batch_names(self) -> tuple[str, ...]: ...
+
+    def uops(self) -> UopMix: ...
+
+    def traffic(self, machine: MachineModel) -> LineTraffic: ...
+
+    def bw_keys(self) -> tuple[str, ...]: ...
+
+    def work_per_elem(self) -> tuple[int, int]:
+        """(flops, updates) per scalar element, for performance
+        conversion."""
+        ...
+
+
+@dataclass(frozen=True)
+class LoweredBatch:
+    """One workload family lowered on one machine: the engine's output and
+    the simulator's input.  ``batch`` holds the light-speed ECM models;
+    the routed traffic and uop pressure are what the calibrated
+    non-light-speed effects in ``repro.simcache`` consume — so *any*
+    workload can be simulated without family-specific code.
+    """
+
+    batch: ECMBatch
+    routed: RoutedTraffic
+    l1_uops: np.ndarray            # (B,)
+    mem_cy_per_line: np.ndarray    # (B,)
+
+    def __len__(self) -> int:
+        return len(self.batch)
+
+
+def _resolve_bw(workload: Workload, machine: MachineModel,
+                sustained_bw) -> float:
+    if isinstance(sustained_bw, (int, float)):
+        return float(sustained_bw)
+    if isinstance(sustained_bw, dict):
+        for k in (workload.name, *workload.bw_keys()):
+            if k in sustained_bw:
+                return float(sustained_bw[k])
+    return machine.sustained_bw(*workload.bw_keys())
+
+
+def lower(workload: Workload, machine: "MachineModel | str", *,
+          sustained_bw: "float | dict | None" = None,
+          optimized_agu: bool = False) -> LoweredBatch:
+    """Reduce one workload on one machine: canonical record -> ECM times.
+
+    The §IV-C recipe, once, for every family: uop mix through the
+    machine's issue model -> ``T_OL``/``T_nOL``; logical traffic through
+    :func:`route_traffic` -> per-edge lines; per-level bandwidths (and the
+    machine's calibrated sustained memory bandwidth) -> transfer cycles.
+
+    Pre-lowered workloads (:class:`RawWorkload`: ``as_batch()``) skip the
+    reduction — their times are already calibrated in their own units —
+    and enter with zero residual traffic (nothing left for the simulator's
+    non-light-speed effects to act on).
+    """
+    m = get_machine(machine)
+    if hasattr(workload, "as_batch"):           # pre-lowered record
+        batch = workload.as_batch()
+        b = len(batch)
+        n_edges = len(batch.levels) - 1
+        zeros = np.zeros((b, n_edges))
+        return LoweredBatch(batch=batch,
+                            routed=RoutedTraffic(zeros, zeros.copy()),
+                            l1_uops=np.zeros(b),
+                            mem_cy_per_line=np.zeros(b))
+    u = workload.uops()
+    t_nol, t_ol = m.core_cycles(loads=u.loads, stores=u.stores, fma=u.fma,
+                                mul=u.mul, add=u.add,
+                                optimized_agu=optimized_agu)
+    traffic = workload.traffic(m)
+    routed = route_traffic(m, traffic)
+    bw = _resolve_bw(workload, m, sustained_bw)
+    lb = m.line_bytes
+    edges = []
+    for i, lvl in enumerate(m.levels):
+        edges.append(routed.load_lines[:, i] * lb / lvl.load_bpc
+                     + routed.evict_lines[:, i] * lb / lvl.evict_bpc)
+    mem_cy = m.mem_cycles_per_line(bw)
+    edges.append(mem_cy * routed.mem_lines())
+    b = traffic.batch
+    names = workload.batch_names()
+    if len(names) != b:
+        names = tuple(f"{workload.name}[{i}]" for i in range(b))
+    batch = ECMBatch(
+        t_ol=np.full(b, t_ol), t_nol=np.full(b, t_nol),
+        transfers=np.stack(edges, axis=-1),
+        levels=m.level_names(), names=names, unit="cy/CL")
+    return LoweredBatch(batch=batch, routed=routed,
+                        l1_uops=np.full(b, float(u.l1_uops)),
+                        mem_cy_per_line=np.full(b, mem_cy))
+
+
+def lower_many(workloads, machine: "MachineModel | str", *,
+               sustained_bw: "float | dict | None" = None,
+               optimized_agu: bool = False) -> LoweredBatch:
+    """Lower several workloads on one machine into one concatenated
+    :class:`LoweredBatch` (shared level hierarchy)."""
+    parts = [lower(w, machine, sustained_bw=sustained_bw,
+                   optimized_agu=optimized_agu) for w in workloads]
+    if len(parts) == 1:
+        return parts[0]
+    first = parts[0].batch
+    for p in parts[1:]:
+        if p.batch.levels != first.levels:
+            raise ValueError(
+                f"cannot batch workloads over different hierarchies: "
+                f"{p.batch.names[0]!r} lowers to levels {p.batch.levels} "
+                f"vs {first.names[0]!r} at {first.levels} (pre-lowered "
+                f"RawWorkloads keep their own hierarchy; batch them "
+                f"separately)")
+    batch = ECMBatch(
+        t_ol=np.concatenate([p.batch.t_ol for p in parts]),
+        t_nol=np.concatenate([p.batch.t_nol for p in parts]),
+        transfers=np.concatenate([p.batch.transfers for p in parts]),
+        levels=first.levels,
+        names=tuple(n for p in parts for n in p.batch.names),
+        unit=first.unit)
+    routed = RoutedTraffic(
+        load_lines=np.concatenate([p.routed.load_lines for p in parts]),
+        evict_lines=np.concatenate([p.routed.evict_lines for p in parts]))
+    return LoweredBatch(
+        batch=batch, routed=routed,
+        l1_uops=np.concatenate([p.l1_uops for p in parts]),
+        mem_cy_per_line=np.concatenate([p.mem_cy_per_line for p in parts]))
+
+
+def workload_batch(workloads, machine: "MachineModel | str" = "haswell-ep",
+                   *, sustained_bw: "float | dict | None" = None,
+                   optimized_agu: bool = False) -> ECMBatch:
+    """The one model-construction entry point: any workloads, any machine,
+    one :class:`ECMBatch`."""
+    return lower_many(workloads, machine, sustained_bw=sustained_bw,
+                      optimized_agu=optimized_agu).batch
+
+
+def workload_ecm(workload: Workload, machine: "MachineModel | str", *,
+                 sustained_bw: "float | dict | None" = None,
+                 optimized_agu: bool = False) -> ECMModel:
+    """Scalar view of :func:`workload_batch` (batch element 0)."""
+    return lower(workload, machine, sustained_bw=sustained_bw,
+                 optimized_agu=optimized_agu).batch.scalar(0)
+
+
+def zoo_predictions(workloads=None, machines=None) -> dict:
+    """The cross-generation prediction grid: ``{machine: {workload:
+    (levels, predictions)}}`` for every registered pair — the
+    arXiv:1702.07554 structure (same workload inputs, many machines)."""
+    ws = list(workloads if workloads is not None
+              else workload_registry().values())
+    ms = [get_machine(m) for m in (machines or sorted(MACHINES))]
+    out: dict = {}
+    for m in ms:
+        lowered = lower_many(ws, m)
+        preds = lowered.batch.predictions()
+        out[m.name] = {
+            n: (lowered.batch.levels, tuple(float(x) for x in preds[i]))
+            for i, n in enumerate(lowered.batch.names)
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Stream workloads (constant traffic; §IV-C Table I)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StreamWorkload:
+    """A steady-state streaming kernel: traffic is constant per unit of
+    work at every level (no reuse)."""
+
+    spec: "object"                 # StreamKernelSpec (duck-typed)
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    def batch_names(self) -> tuple[str, ...]:
+        return (self.spec.name,)
+
+    def uops(self) -> UopMix:
+        s = self.spec
+        return UopMix(loads=s.uop_loads, stores=s.uop_stores, fma=s.uop_fma,
+                      mul=s.uop_mul, add=s.uop_add)
+
+    def traffic(self, machine: MachineModel) -> LineTraffic:
+        s = self.spec
+        n_levels = len(machine.levels) + 1
+        return LineTraffic(
+            loads=np.full((1, n_levels), float(s.loads_explicit)),
+            rfo=float(s.rfo), evicts=float(s.stores),
+            nt=float(s.nt_stores))
+
+    def bw_keys(self) -> tuple[str, ...]:
+        return (self.spec.name, "_stream")
+
+    def work_per_elem(self) -> tuple[int, int]:
+        return self.spec.flops_per_elem, self.spec.updates_per_elem
+
+
+# ---------------------------------------------------------------------------
+# Stencil workloads (layer-condition traffic; arXiv:1410.5010)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StencilWorkload:
+    """A stencil spec bound to problem widths and optional blocking.
+
+    ``widths`` may be one tuple (scalar point) or a ``(B, dim-1)`` array
+    of effective inner widths (a whole sweep / candidate grid evaluated as
+    one batch).  The layer conditions are evaluated against the machine's
+    own cache capacities unless ``capacities`` overrides them; a
+    precomputed ``misses`` table short-circuits the LC analysis (shared
+    with callers that already built one).
+    """
+
+    spec: "object"                 # StencilSpec (duck-typed)
+    widths: "tuple | np.ndarray | None" = None
+    block: "tuple | None" = None
+    safety: float | None = None
+    capacities: "tuple[int, ...] | None" = None
+    misses: "np.ndarray | None" = None
+    names: tuple = ()
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    def batch_names(self) -> tuple[str, ...]:
+        if self.names:
+            return tuple(self.names)
+        b = self._effective_widths_or_none()
+        if b is None or b.shape[0] == 1:
+            return (self.spec.name,)
+        return tuple(f"{self.spec.name}[{i}]" for i in range(b.shape[0]))
+
+    def uops(self) -> UopMix:
+        s = self.spec
+        return UopMix(loads=s.uop_loads, stores=s.uop_stores, fma=s.uop_fma,
+                      mul=s.uop_mul, add=s.uop_add)
+
+    def _effective_widths_or_none(self) -> "np.ndarray | None":
+        if self.widths is None:
+            return None
+        w = np.asarray(self.widths, float)
+        if w.ndim == 1:
+            w = w[None, :] if w.shape[0] == self.spec.dim - 1 else w[:, None]
+        if self.block is not None:
+            w = np.minimum(w, np.asarray(self.block, float)[None, :]
+                           if np.ndim(self.block) else float(self.block))
+        return w
+
+    def traffic(self, machine: MachineModel) -> LineTraffic:
+        from .layer_condition import LC_SAFETY, misses_batch
+
+        s = self.spec
+        misses = self.misses
+        if misses is None:
+            w = self._effective_widths_or_none()
+            if w is None:
+                raise ValueError(
+                    f"stencil workload {s.name!r} needs widths (or a "
+                    f"precomputed misses table)")
+            caps = self.capacities or machine.capacities
+            if not caps:
+                raise ValueError(
+                    f"machine {machine.name!r} declares no cache "
+                    f"capacities; cannot evaluate layer conditions")
+            misses = misses_batch(
+                s, w, tuple(caps),
+                safety=self.safety if self.safety is not None else LC_SAFETY)
+        misses = np.atleast_2d(np.asarray(misses, float))
+        n_levels = len(machine.levels) + 1
+        if misses.shape[1] != n_levels:
+            raise ValueError(
+                f"misses table has {misses.shape[1]} levels, machine "
+                f"{machine.name!r} needs {n_levels}")
+        return LineTraffic(loads=misses, rfo=float(s.rfo_streams),
+                           evicts=float(s.wb_streams), nt=0.0)
+
+    def bw_keys(self) -> tuple[str, ...]:
+        return (self.spec.name, "_stencil")
+
+    def work_per_elem(self) -> tuple[int, int]:
+        return self.spec.flops_per_elem, self.spec.updates_per_elem
+
+    # convenience for sweeps over candidate blockings
+    def with_block(self, block) -> "StencilWorkload":
+        return replace(self, block=tuple(int(x) for x in np.atleast_1d(block)))
+
+
+# ---------------------------------------------------------------------------
+# Pre-lowered workloads (TPU step model and other direct records)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RawWorkload:
+    """A workload already expressed as ECM times (no uop/traffic
+    reduction): the adapter that lets pre-lowered models — the TPU
+    three-term step model chiefly — ride the same batched engine and
+    ranking paths as everything else."""
+
+    name: str
+    t_ol: float
+    t_nol: float
+    transfers: tuple
+    levels: tuple
+    unit: str = "cy/CL"
+
+    def batch_names(self) -> tuple[str, ...]:
+        return (self.name,)
+
+    def as_batch(self) -> ECMBatch:
+        return ECMBatch(
+            t_ol=np.asarray([self.t_ol], float),
+            t_nol=np.asarray([self.t_nol], float),
+            transfers=np.asarray([self.transfers], float),
+            levels=tuple(self.levels), names=(self.name,), unit=self.unit)
+
+
+def tpu_step_workload(step) -> RawWorkload:
+    """Adapt a :class:`~repro.core.tpu_ecm.TPUStepECM` to the unified
+    engine (times in microseconds per step, the ``as_ecm_model`` view)."""
+    m = step.as_ecm_model()
+    return RawWorkload(name=m.name or "tpu-step", t_ol=m.t_ol,
+                       t_nol=m.t_nol, transfers=m.transfers,
+                       levels=m.levels, unit=m.unit)
+
+
+# ---------------------------------------------------------------------------
+# The workload registry
+# ---------------------------------------------------------------------------
+
+WORKLOADS: "dict[str, Workload]" = {}
+
+
+def register_workload(w: Workload) -> Workload:
+    WORKLOADS[w.name] = w
+    return w
+
+
+_REGISTRY_SEEDED = False
+
+
+def workload_registry() -> "dict[str, Workload]":
+    """The shipped families, seeded lazily on first access (avoids import
+    cycles with the spec modules): Table I streams (+NT variants), the
+    fused triad->update chain, and the two Jacobi stencils bound to
+    memory-resident problem sizes.  User entries added via
+    :func:`register_workload` coexist with the shipped set.  Every entry
+    evaluates on every machine in ``MACHINES`` through
+    :func:`workload_batch`."""
+    global _REGISTRY_SEEDED
+    if not _REGISTRY_SEEDED:
+        _REGISTRY_SEEDED = True
+        from .kernel_spec import BENCHMARKS, TRIAD_UPDATE
+        from .layer_condition import JACOBI2D, JACOBI3D
+
+        for spec in BENCHMARKS.values():
+            WORKLOADS.setdefault(spec.name, StreamWorkload(spec))
+        WORKLOADS.setdefault(TRIAD_UPDATE.name, StreamWorkload(TRIAD_UPDATE))
+        WORKLOADS.setdefault("jacobi2d",
+                             StencilWorkload(JACOBI2D, widths=(8192,)))
+        WORKLOADS.setdefault("jacobi3d",
+                             StencilWorkload(JACOBI3D, widths=(480, 480)))
+    return WORKLOADS

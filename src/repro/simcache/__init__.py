@@ -10,14 +10,17 @@ from .sim import (
     CacheHierarchy,
     HASWELL_CACHES,
     HASWELL_CACHES_COD,
+    machine_caches,
     reset_counters,
     scaling_batch,
     simulate_level,
     simulate_levels_batch,
+    simulate_lowered,
     simulate_stencil_level,
     simulate_stencil_levels_batch,
     simulate_table,
     simulate_working_set,
+    simulate_workloads_batch,
     simulate_scaling,
     stencil_sweep_batch,
     sweep,
@@ -30,14 +33,17 @@ __all__ = [
     "CacheHierarchy",
     "HASWELL_CACHES",
     "HASWELL_CACHES_COD",
+    "machine_caches",
     "reset_counters",
     "scaling_batch",
     "simulate_level",
     "simulate_levels_batch",
+    "simulate_lowered",
     "simulate_stencil_level",
     "simulate_stencil_levels_batch",
     "simulate_table",
     "simulate_working_set",
+    "simulate_workloads_batch",
     "simulate_scaling",
     "stencil_sweep_batch",
     "sweep",

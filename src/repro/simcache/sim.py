@@ -1,4 +1,4 @@
-"""Calibrated memory-hierarchy simulator for streaming kernels.
+"""Calibrated memory-hierarchy simulator for any workload family.
 
 The ECM model (``repro.core``) is a *light-speed* model: it neglects
 latencies, clock-domain crossings and end-of-benchmark eviction effects by
@@ -29,38 +29,43 @@ LRU-streaming residence: a cyclically streamed working set larger than a
 level thrashes it) and multi-core scaling with shared-bandwidth saturation
 (Fig. 10).
 
-**Evaluation path.**  Everything is evaluated through the vectorized
-:class:`repro.core.ecm.ECMBatch` core: :func:`simulate_levels_batch`
-produces the full (kernels x levels) table in one set of array ops, and
-:func:`sweep_batch` / :func:`scaling_batch` evaluate whole (kernel x
-working-set) / (kernel x cores) grids the same way.  The scalar functions
-(:func:`simulate_level`, :func:`simulate_working_set`, ...) are thin views
-over the batch path and agree with it bit-for-bit.  ``EVAL_COUNTERS``
-tracks how many Python-level evaluations happen per batch call — the
+**Evaluation path.**  There is exactly one simulation core,
+:func:`simulate_lowered`: any workload (stream kernel, stencil, fused
+chain, ...) is lowered by the unified engine
+(``repro.core.workload.lower_many``) into per-edge line traffic + ECM
+times, and the four calibrated effects are applied to that routed record —
+no stream-vs-stencil forks, no per-family branches.
+:func:`simulate_workloads_batch` is the generic entry point;
+:func:`simulate_levels_batch` (streams) and
+:func:`simulate_stencil_levels_batch` (stencils) are thin wrappers that
+build the workload objects, and the scalar functions
+(:func:`simulate_level`, :func:`simulate_working_set`, ...) are views over
+the batch path that agree with it bit-for-bit.  ``EVAL_COUNTERS`` tracks
+how many Python-level evaluations happen per batch call — the
 ``benchmarks/run.py --json`` model-eval throughput numbers come from it.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.ecm import ECMBatch, ECMModel
-from repro.core.kernel_spec import (
-    BENCHMARKS,
-    StreamKernelSpec,
-    benchmark_batch,
-)
+from repro.core.kernel_spec import BENCHMARKS, StreamKernelSpec
 from repro.core.layer_condition import (
     LC_SAFETY,
-    STENCIL_MEASURED_BW,
     STENCILS,
     StencilSpec,
     misses_batch,
     stencil_batch_from_misses,
 )
-from repro.core.machine import HASWELL_EP, HASWELL_MEASURED_BW, MachineModel
+from repro.core.machine import HASWELL_EP, MachineModel
+from repro.core.workload import (
+    LoweredBatch,
+    StencilWorkload,
+    StreamWorkload,
+    get_machine,
+    lower_many,
+)
 
 #: batch_array_evals counts vectorized evaluations (one per grid, however
 #: large); scalar_points counts individual (kernel, level/size/core) points
@@ -111,89 +116,141 @@ HASWELL_CACHES = CacheHierarchy()
 HASWELL_CACHES_COD = CacheHierarchy(l3_bytes=35 * 1024 * 1024 // 2)
 
 
+def machine_caches(machine: "MachineModel | str") -> CacheHierarchy:
+    """Residence capacities of a registry machine (affinity-domain LLC)."""
+    m = get_machine(machine)
+    caps = m.capacities
+    if len(caps) != 3:
+        raise ValueError(
+            f"machine {m.name!r} has {len(caps)} cache levels; the "
+            f"residence blend expects 3 (+Mem)")
+    return CacheHierarchy(*caps)
+
+
 # ---------------------------------------------------------------------------
-# Vectorized core: (kernels x levels) in one shot
+# The single simulation core: calibrated effects on a lowered record
+# ---------------------------------------------------------------------------
+
+
+def simulate_lowered(lowered: LoweredBatch,
+                     params: SimParams = DEFAULT_PARAMS) -> np.ndarray:
+    """Simulated ("measured") cy/CL for every batch element x residence
+    level: ``(B, L)``.
+
+    Input is the unified engine's :class:`~repro.core.workload.
+    LoweredBatch` — light-speed ECM times plus the routed per-edge line
+    traffic — so the four calibrated effects apply identically to any
+    workload family on any machine; nothing here asks what kind of kernel
+    produced the record.
+    """
+    batch = lowered.batch
+    pred = batch.predictions()                              # (B, L)
+    n_levels = pred.shape[-1]
+    loads = lowered.routed.load_lines                       # (B, E)
+    ev0 = lowered.routed.evict_lines[:, 0]                  # L1<->L2 outward
+    ev_mem = lowered.routed.evict_lines[:, -1]              # mem-edge outward
+    share = ev_mem / np.maximum(lowered.routed.mem_lines(), 1.0)
+    p = params
+
+    eff = np.zeros_like(pred)
+    # L1: front-end jitter only
+    eff[:, 0] = np.where(lowered.l1_uops >= 4, p.frontend_jitter, 0.0)
+    for lv in range(1, n_levels):
+        lo = loads[:, lv - 1]         # inward lines on the edge feeding lv
+        if lv == 1:
+            # L2: sub-spec sustained load bandwidth + eviction interference
+            eff[:, lv] = (p.l2_load_penalty * lo
+                          + p.l2_evict_interference * ev0)
+        elif lv < n_levels - 1:
+            # off-core caches: latency penalty, hidden with growing per-CL
+            # cycles; async-eviction credit
+            h = np.maximum(0.0, 1.0 - pred[:, lv] / p.hide_scale_l3)
+            eff[:, lv] = (p.offcore_load_penalty * lo * h
+                          - p.evict_credit_l3 * share)
+        else:
+            # Mem: one more clock-domain crossing
+            hm = np.maximum(0.0, 1.0 - pred[:, lv] / p.hide_scale_mem)
+            eff[:, lv] = p.mem_load_penalty * lo * hm
+
+    out = pred + eff
+    # async-eviction credit: evictions still in flight at benchmark end
+    hmc = np.maximum(0.0, 1.0 - pred[:, -1] / p.evict_credit_mem_scale)
+    out[:, -1] = out[:, -1] - np.where(
+        ev_mem > 0, ev_mem * lowered.mem_cy_per_line * hmc, 0.0)
+    out = np.maximum(out, batch.t_core[:, None])
+    EVAL_COUNTERS["batch_array_evals"] += 1
+    EVAL_COUNTERS["scalar_points"] += out.size
+    return out
+
+
+def simulate_workloads_batch(
+    workloads,
+    machine: "MachineModel | str" = HASWELL_EP,
+    *,
+    sustained_bw: "dict | float | None" = None,
+    params: SimParams = DEFAULT_PARAMS,
+    optimized_agu: bool = False,
+) -> tuple[tuple[str, ...], np.ndarray]:
+    """Simulated cy/CL table for any workloads on any machine: the generic
+    entry point every family-specific wrapper routes through."""
+    lowered = lower_many(workloads, machine, sustained_bw=sustained_bw,
+                         optimized_agu=optimized_agu)
+    return lowered.batch.names, simulate_lowered(lowered, params)
+
+
+# ---------------------------------------------------------------------------
+# Stream wrappers (Table I's measurement columns)
 # ---------------------------------------------------------------------------
 
 
 def _as_spec(name_or_spec) -> StreamKernelSpec:
-    return (name_or_spec if isinstance(name_or_spec, StreamKernelSpec)
-            else BENCHMARKS[name_or_spec])
+    """Registry-key-or-spec coercion (specs are hashable non-keys)."""
+    spec = BENCHMARKS.get(name_or_spec, name_or_spec)
+    if not hasattr(spec, "load_streams"):
+        raise KeyError(f"unknown stream kernel {name_or_spec!r}; "
+                       f"registered: {sorted(BENCHMARKS)}")
+    return spec
 
 
-def _spec_arrays(specs: list[StreamKernelSpec]) -> dict[str, np.ndarray]:
-    return {
-        "loads": np.array([s.load_streams for s in specs], float),
-        "evicts": np.array([s.stores + s.nt_stores for s in specs], float),
-        "mem_streams": np.array([s.mem_streams for s in specs], float),
-        "l1_uops": np.array([s.uop_loads + s.uop_stores for s in specs],
-                            float),
-    }
+def _stream_bws(names, machine: MachineModel, sustained_bw) -> dict:
+    if sustained_bw is None:
+        return {n: machine.sustained_bw(n, "_stream", default=27e9)
+                for n in names}
+    if hasattr(sustained_bw, "items"):          # per-kernel overrides
+        base = {n: machine.sustained_bw(n, "_stream", default=27e9)
+                for n in names}
+        return {**base, **sustained_bw}
+    return {n: float(sustained_bw) for n in names}
 
 
 def simulate_levels_batch(
     names: "list | tuple | None" = None,
     *,
-    machine: MachineModel = HASWELL_EP,
+    machine: "MachineModel | str" = HASWELL_EP,
     sustained_bw: "dict[str, float] | float | None" = None,
     params: SimParams = DEFAULT_PARAMS,
     optimized_agu: bool = False,
 ) -> tuple[tuple[str, ...], np.ndarray]:
     """Simulated ("measured") cy/CL for every kernel x residence level.
 
-    Returns ``(names, table)`` with ``table`` of shape (K, 4).  One
+    Returns ``(names, table)`` with ``table`` of shape (K, L).  One
     vectorized evaluation regardless of K.  ``names`` entries may be
     registry keys or :class:`StreamKernelSpec` objects.
     """
+    m = get_machine(machine)
     specs = [_as_spec(n) for n in (names or BENCHMARKS)]
     names = tuple(s.name for s in specs)
-    if isinstance(sustained_bw, (int, float)):
-        bws = {n: float(sustained_bw) for n in names}
-    else:
-        base = {n: HASWELL_MEASURED_BW.get(n, 27e9) for n in names}
-        bws = {**base, **(sustained_bw or {})}
-    batch = benchmark_batch(specs, machine=machine, sustained_bw=bws,
-                            optimized_agu=optimized_agu)
-    pred = batch.predictions()                              # (K, 4)
-    arr = _spec_arrays(specs)
-    loads, evicts = arr["loads"], arr["evicts"]
-    share = evicts / np.maximum(arr["mem_streams"], 1.0)
-    p = params
-
-    eff = np.zeros_like(pred)
-    # L1: front-end jitter only
-    eff[:, 0] = np.where(arr["l1_uops"] >= 4, p.frontend_jitter, 0.0)
-    # L2: sub-spec sustained load bandwidth + eviction interference
-    eff[:, 1] = p.l2_load_penalty * loads + p.l2_evict_interference * evicts
-    # L3: off-core latency, hidden with growing per-CL cycles; async credit
-    h3 = np.maximum(0.0, 1.0 - pred[:, 2] / p.hide_scale_l3)
-    eff[:, 2] = p.offcore_load_penalty * loads * h3 - p.evict_credit_l3 * share
-    # Mem: one more clock-domain crossing
-    hm = np.maximum(0.0, 1.0 - pred[:, 3] / p.hide_scale_mem)
-    eff[:, 3] = p.mem_load_penalty * loads * hm
-
-    out = pred + eff
-    # async-eviction credit: evictions still in flight at benchmark end
-    bw_arr = np.array([bws[n] for n in names], float)
-    mem_cy = machine.line_bytes * machine.clock_hz / bw_arr
-    hmc = np.maximum(0.0, 1.0 - pred[:, 3] / p.evict_credit_mem_scale)
-    out[:, 3] = out[:, 3] - np.where(evicts > 0, evicts * mem_cy * hmc, 0.0)
-    out = np.maximum(out, batch.t_core[:, None])
-    EVAL_COUNTERS["batch_array_evals"] += 1
-    EVAL_COUNTERS["scalar_points"] += out.size
-    return names, out
-
-
-# ---------------------------------------------------------------------------
-# Level-resident simulation (Table I's measurement columns)
-# ---------------------------------------------------------------------------
+    bws = _stream_bws(names, m, sustained_bw)
+    return simulate_workloads_batch(
+        [StreamWorkload(s) for s in specs], m, sustained_bw=bws,
+        params=params, optimized_agu=optimized_agu)
 
 
 def simulate_level(
     name_or_spec: str | StreamKernelSpec,
     level: int,
     *,
-    machine: MachineModel = HASWELL_EP,
+    machine: "MachineModel | str" = HASWELL_EP,
     sustained_bw: float | None = None,
     params: SimParams = DEFAULT_PARAMS,
     optimized_agu: bool = False,
@@ -251,8 +308,8 @@ def sweep_batch(
     names: "list[str] | tuple[str, ...] | None",
     sizes_bytes,
     *,
-    machine: MachineModel = HASWELL_EP,
-    caches: CacheHierarchy = HASWELL_CACHES_COD,
+    machine: "MachineModel | str" = HASWELL_EP,
+    caches: CacheHierarchy | None = None,
     params: SimParams = DEFAULT_PARAMS,
     sustained_bw: "dict[str, float] | float | None" = None,
 ) -> tuple[tuple[str, ...], np.ndarray]:
@@ -260,8 +317,11 @@ def sweep_batch(
 
     This is the Fig. 7-9 grid: the per-level table is built once (one
     batch call) and the residence blend is a (S,4) x (K,4) -> (K,S)
-    matrix product — no per-point Python.
+    matrix product — no per-point Python.  Residence capacities default
+    to the machine's own (:func:`machine_caches`).
     """
+    if caches is None:
+        caches = machine_caches(machine)
     names_t, table = simulate_levels_batch(
         names, machine=machine, sustained_bw=sustained_bw, params=params)
     weights = residence_weights_batch(sizes_bytes, caches)       # (S, 4)
@@ -275,8 +335,8 @@ def simulate_working_set(
     name: str,
     ws_bytes: float,
     *,
-    machine: MachineModel = HASWELL_EP,
-    caches: CacheHierarchy = HASWELL_CACHES_COD,
+    machine: "MachineModel | str" = HASWELL_EP,
+    caches: CacheHierarchy | None = None,
     params: SimParams = DEFAULT_PARAMS,
     sustained_bw: float | None = None,
 ) -> float:
@@ -306,10 +366,10 @@ def scaling_batch(
     names: "list[str] | tuple[str, ...] | None",
     n_cores: int,
     *,
-    machine: MachineModel = HASWELL_EP,
+    machine: "MachineModel | str" = HASWELL_EP,
     domain_bw: "dict[str, float] | float | None" = None,
-    cores_per_domain: int = 7,
-    n_domains: int = 2,
+    cores_per_domain: int | None = None,
+    n_domains: int | None = None,
     params: SimParams = DEFAULT_PARAMS,
     fill_domains_first: bool = True,
 ) -> tuple[tuple[str, ...], np.ndarray]:
@@ -318,25 +378,27 @@ def scaling_batch(
     Each affinity domain saturates at its sustained bandwidth; cores fill
     one domain after the other (CoD) or round-robin (non-CoD, which behaves
     like one big domain with the chip bandwidth).  Vectorized over kernels
-    AND core counts.
+    AND core counts.  Domain topology defaults to the machine's
+    (``cores_per_domain`` / ``n_domains``).
     """
-    names_t = tuple(names or BENCHMARKS)
-    if isinstance(domain_bw, (int, float)):
-        bws = {n: float(domain_bw) for n in names_t}
-    else:
-        base = {n: HASWELL_MEASURED_BW[n] for n in names_t}
-        bws = {**base, **(domain_bw or {})}
-    _, table = simulate_levels_batch(names_t, machine=machine,
+    m = get_machine(machine)
+    if cores_per_domain is None:
+        cores_per_domain = m.cores_per_domain or m.cores
+    if n_domains is None:
+        n_domains = m.n_domains
+    specs = [_as_spec(n) for n in (names or BENCHMARKS)]
+    names_t = tuple(s.name for s in specs)
+    bws = _stream_bws(names_t, m, domain_bw)
+    _, table = simulate_levels_batch(specs, machine=m,
                                      sustained_bw=bws, params=params)
-    t_single = table[:, 3]                                     # (K,)
-    specs = [BENCHMARKS[n] for n in names_t]
-    upd = np.array([s.elems_per_line(machine.line_bytes) * s.updates_per_elem
+    t_single = table[:, -1]                                    # (K,)
+    upd = np.array([s.elems_per_line(m.line_bytes) * s.updates_per_elem
                     for s in specs], float)
     mem_streams = np.array([s.mem_streams for s in specs], float)
     bw_arr = np.array([bws[n] for n in names_t], float)
 
-    p1 = upd * machine.clock_hz / t_single                     # (K,)
-    bytes_per_update = mem_streams * machine.line_bytes / upd
+    p1 = upd * m.clock_hz / t_single                           # (K,)
+    bytes_per_update = mem_streams * m.line_bytes / upd
     p_sat = bw_arr / bytes_per_update                          # per domain
 
     n = np.arange(1, n_cores + 1, dtype=float)                 # (N,)
@@ -360,10 +422,10 @@ def simulate_scaling(
     name: str,
     n_cores: int,
     *,
-    machine: MachineModel = HASWELL_EP,
+    machine: "MachineModel | str" = HASWELL_EP,
     domain_bw: float | None = None,
-    cores_per_domain: int = 7,
-    n_domains: int = 2,
+    cores_per_domain: int | None = None,
+    n_domains: int | None = None,
     params: SimParams = DEFAULT_PARAMS,
     fill_domains_first: bool = True,
 ) -> list[float]:
@@ -379,74 +441,54 @@ def simulate_scaling(
 
 
 # ---------------------------------------------------------------------------
-# Stencil kernels (layer-condition-driven traffic, arXiv:1410.5010)
+# Stencil wrappers (layer-condition-driven traffic, arXiv:1410.5010)
 # ---------------------------------------------------------------------------
 
 
 def _as_stencil(name_or_spec) -> StencilSpec:
-    return (name_or_spec if isinstance(name_or_spec, StencilSpec)
-            else STENCILS[name_or_spec])
+    """Registry-key-or-spec coercion (specs are hashable non-keys)."""
+    spec = STENCILS.get(name_or_spec, name_or_spec)
+    if not hasattr(spec, "row_streams"):
+        raise KeyError(f"unknown stencil {name_or_spec!r}; "
+                       f"registered: {sorted(STENCILS)}")
+    return spec
 
 
 def simulate_stencil_levels_batch(
     name_or_spec: "str | StencilSpec",
     widths_arr,
     *,
-    machine: MachineModel = HASWELL_EP,
-    caches: CacheHierarchy = HASWELL_CACHES_COD,
+    machine: "MachineModel | str" = HASWELL_EP,
+    caches: CacheHierarchy | None = None,
     sustained_bw: float | None = None,
     params: SimParams = DEFAULT_PARAMS,
     safety: float = LC_SAFETY,
     misses: "np.ndarray | None" = None,
 ) -> np.ndarray:
-    """Simulated ("measured") cy/CL for a stencil: ``(B, 4)`` over a batch
+    """Simulated ("measured") cy/CL for a stencil: ``(B, L)`` over a batch
     of effective inner widths.
 
     Unlike the streaming kernels, the light-speed transfer terms are not
     constants: the inward load count on every edge comes from the layer
-    condition of the cache above it (:func:`repro.core.layer_condition.
-    misses_batch`; pass a precomputed ``misses`` table to share it with a
-    caller that already built the predicted side).  The light-speed base
-    is the shared :func:`repro.core.layer_condition.
-    stencil_batch_from_misses` builder; the non-light-speed effects are
-    the same four calibrated mechanisms as :func:`simulate_levels_batch`,
-    applied with the per-level (LC-dependent) stream counts.
+    condition of the cache above it (pass a precomputed ``misses`` table to
+    share it with a caller that already built the predicted side).  The
+    stencil is lowered by the same engine and simulated by the same
+    :func:`simulate_lowered` core as every other workload.  Layer
+    conditions and the residence blend both default to the *machine's*
+    capacities (:func:`machine_caches`).
     """
+    m = get_machine(machine)
+    if caches is None:
+        caches = machine_caches(m)
     spec = _as_stencil(name_or_spec)
-    bw = sustained_bw or STENCIL_MEASURED_BW.get(spec.name, 24.1e9)
-    if misses is None:
-        misses = misses_batch(spec, widths_arr, caches.capacities(),
-                              safety=safety)                   # (B, L)
-    rfo, wb = float(spec.rfo_streams), float(spec.wb_streams)
-    mem_cy = machine.mem_cycles_per_line(bw)
-    batch = stencil_batch_from_misses(spec, misses, machine=machine,
-                                      sustained_bw=bw)
-    pred = batch.predictions()                                 # (B, 4)
-    p = params
-
-    # per-residence-level inward load streams (edge feeding that level)
-    loads_l2 = misses[:, 0] + rfo
-    loads_l3 = misses[:, 1] + rfo
-    loads_mem = misses[:, 2] + rfo
-    share = wb / np.maximum(misses[:, 2] + rfo + wb, 1.0)
-    l1_uops = spec.uop_loads + spec.uop_stores
-
-    eff = np.zeros_like(pred)
-    eff[:, 0] = p.frontend_jitter if l1_uops >= 4 else 0.0
-    eff[:, 1] = p.l2_load_penalty * loads_l2 + p.l2_evict_interference * wb
-    h3 = np.maximum(0.0, 1.0 - pred[:, 2] / p.hide_scale_l3)
-    eff[:, 2] = (p.offcore_load_penalty * loads_l3 * h3
-                 - p.evict_credit_l3 * share)
-    hm = np.maximum(0.0, 1.0 - pred[:, 3] / p.hide_scale_mem)
-    eff[:, 3] = p.mem_load_penalty * loads_mem * hm
-
-    out = pred + eff
-    hmc = np.maximum(0.0, 1.0 - pred[:, 3] / p.evict_credit_mem_scale)
-    out[:, 3] = out[:, 3] - wb * mem_cy * hmc
-    out = np.maximum(out, batch.t_core[:, None])
-    EVAL_COUNTERS["batch_array_evals"] += 1
-    EVAL_COUNTERS["scalar_points"] += out.size
-    return out
+    bw = sustained_bw or m.sustained_bw(spec.name, "_stencil",
+                                        default=24.1e9)
+    w = StencilWorkload(spec, widths=np.asarray(widths_arr, float),
+                        capacities=caches.capacities(), safety=safety,
+                        misses=misses)
+    _, table = simulate_workloads_batch([w], m, sustained_bw=bw,
+                                        params=params)
+    return table
 
 
 def simulate_stencil_level(name_or_spec, level: int, *,
@@ -461,8 +503,8 @@ def stencil_sweep_batch(
     name_or_spec: "str | StencilSpec",
     problem_ns,
     *,
-    machine: MachineModel = HASWELL_EP,
-    caches: CacheHierarchy = HASWELL_CACHES_COD,
+    machine: "MachineModel | str" = HASWELL_EP,
+    caches: CacheHierarchy | None = None,
     sustained_bw: float | None = None,
     params: SimParams = DEFAULT_PARAMS,
     safety: float = LC_SAFETY,
@@ -476,8 +518,12 @@ def stencil_sweep_batch(
     both vary along the sweep, which is exactly the 1410.5010 Fig. 6
     structure.  Returns per-N arrays: ``predicted`` / ``measured`` (cy per
     CL of updates), ``ws_bytes``, ``misses`` (B, 3) and ``regime`` (the
-    dominant residence level index).
+    dominant residence level index).  Capacities default to the machine's
+    (:func:`machine_caches`).
     """
+    m = get_machine(machine)
+    if caches is None:
+        caches = machine_caches(m)
     spec = _as_stencil(name_or_spec)
     ns = np.asarray(problem_ns, float)
     widths = (ns[:, None] if spec.dim == 2
@@ -485,12 +531,13 @@ def stencil_sweep_batch(
     ws = n_arrays * ns ** spec.dim * spec.elem_bytes
     misses = misses_batch(spec, widths, caches.capacities(), safety=safety)
 
-    bw = sustained_bw or STENCIL_MEASURED_BW.get(spec.name, 24.1e9)
-    batch = stencil_batch_from_misses(spec, misses, machine=machine,
+    bw = sustained_bw or m.sustained_bw(spec.name, "_stencil",
+                                        default=24.1e9)
+    batch = stencil_batch_from_misses(spec, misses, machine=m,
                                       sustained_bw=bw)
     pred_levels = batch.predictions()                          # (B, 4)
     meas_levels = simulate_stencil_levels_batch(
-        spec, widths, machine=machine, caches=caches, sustained_bw=bw,
+        spec, widths, machine=m, caches=caches, sustained_bw=bw,
         params=params, safety=safety, misses=misses)
     weights = residence_weights_batch(ws, caches)              # (B, 4)
     EVAL_COUNTERS["batch_array_evals"] += 1

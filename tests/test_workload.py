@@ -1,0 +1,378 @@
+"""Unified workload/machine registry: round-trip, bit-equality pins and
+hierarchy-routing semantics.
+
+Three guarantees of the refactor are pinned here:
+
+1. **Bit-equality on Haswell** — every Table I stream kernel and both
+   stencils (several layer-condition regimes) produce *bit-identical*
+   ECM models through the unified engine, against golden values captured
+   from the pre-refactor builders (``tests/golden_haswell_ecm.json``).
+2. **Registry round-trip** — every registered workload builds a valid
+   model on every registered machine through the same single code path.
+3. **Hierarchy routing** — the Skylake-SP victim L3 and the TPU's
+   no-write-allocate hierarchy change the routed per-level *line counts*
+   of the same logical workload (not merely the bandwidth numbers).
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BENCHMARKS,
+    HASWELL_CAPACITIES,
+    HASWELL_EP,
+    HASWELL_MEASURED_BW,
+    JACOBI2D,
+    MACHINES,
+    SKYLAKE_SP,
+    STENCIL_MEASURED_BW,
+    TPU_V5E_HIERARCHY,
+    TRIAD_UPDATE,
+    StencilWorkload,
+    StreamWorkload,
+    fuse_chain,
+    get_machine,
+    haswell_ecm,
+    lower,
+    machine_names,
+    route_traffic,
+    stencil_ecm,
+    workload_batch,
+    workload_ecm,
+    workload_registry,
+)
+from repro.core.autotune import rank_workloads
+
+GOLDEN = json.loads(
+    (Path(__file__).parent / "golden_haswell_ecm.json").read_text())
+
+STENCIL_CASES = {
+    "jacobi2d": [(512,), (1024,), (8192,)],
+    "jacobi3d": [(20, 20), (100, 100), (100, 500), (480, 480)],
+}
+
+
+# ---------------------------------------------------------------------------
+# 1. Haswell predictions pinned bit-equal to the pre-refactor builders
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN["stream"]))
+def test_stream_bit_equal_to_pre_refactor(name):
+    rec = GOLDEN["stream"][name]
+    m = haswell_ecm(name)
+    assert m.t_ol.hex() == rec["t_ol"]
+    assert m.t_nol.hex() == rec["t_nol"]
+    assert [t.hex() for t in m.transfers] == rec["transfers"]
+    assert [p.hex() for p in m.predictions()] == rec["predictions"]
+
+
+@pytest.mark.parametrize("name,widths", [
+    (n, w) for n, ws in STENCIL_CASES.items() for w in ws])
+def test_stencil_bit_equal_to_pre_refactor(name, widths):
+    key = "%s@%s" % (name, ",".join(map(str, widths)))
+    rec = GOLDEN["stencil"][key]
+    m = stencil_ecm(name, widths=widths)
+    assert m.t_ol.hex() == rec["t_ol"]
+    assert m.t_nol.hex() == rec["t_nol"]
+    assert [t.hex() for t in m.transfers] == rec["transfers"]
+    assert [p.hex() for p in m.predictions()] == rec["predictions"]
+
+
+def test_blocked_stencil_bit_equal_to_pre_refactor():
+    rec = GOLDEN["stencil"]["jacobi2d@8192@blk256"]
+    m = stencil_ecm("jacobi2d", widths=(8192,), block=(256,))
+    assert [p.hex() for p in m.predictions()] == rec["predictions"]
+
+
+def test_engine_view_equals_spec_view_bitwise():
+    """workload_ecm(StreamWorkload(spec)) == spec.ecm == batch element."""
+    for name, spec in BENCHMARKS.items():
+        bw = HASWELL_MEASURED_BW[name]
+        via_engine = workload_ecm(StreamWorkload(spec), HASWELL_EP,
+                                  sustained_bw=bw)
+        via_spec = spec.ecm(HASWELL_EP, bw)
+        assert via_engine.transfers == via_spec.transfers
+        assert via_engine.t_ol == via_spec.t_ol
+        assert via_engine.t_nol == via_spec.t_nol
+
+
+# ---------------------------------------------------------------------------
+# 2. Registry round-trip: every workload x every machine
+# ---------------------------------------------------------------------------
+
+
+def test_registry_is_populated():
+    reg = workload_registry()
+    assert set(BENCHMARKS).issubset(reg)
+    assert {"triad_update", "jacobi2d", "jacobi3d"}.issubset(reg)
+    assert {"haswell-ep", "sandy-bridge-ep", "broadwell-ep", "skylake-sp",
+            "tpu-v5e"}.issubset(machine_names())
+    # >= 3 machines beyond the original pair, incl. a non-inclusive LLC
+    assert len(MACHINES) >= 5
+    assert any(m.victim_l3 for m in MACHINES.values())
+
+
+@pytest.mark.parametrize("machine", sorted(MACHINES))
+def test_every_workload_builds_on_every_machine(machine):
+    """The acceptance-criterion grid: one code path, valid shapes
+    everywhere."""
+    m = get_machine(machine)
+    ws = list(workload_registry().values())
+    batch = workload_batch(ws, m)
+    levels = m.level_names()
+    assert batch.levels == levels
+    assert batch.transfers.shape[-1] == len(levels) - 1
+    assert np.all(batch.transfers >= 0)
+    assert np.all(batch.t_ol >= 0) and np.all(batch.t_nol >= 0)
+    preds = batch.predictions()
+    assert preds.shape == (len(batch), len(levels))
+    # Eq. 1: predictions are monotone over levels and >= T_core
+    assert np.all(np.diff(preds, axis=-1) >= -1e-12)
+    assert np.all(preds[..., 0] >= batch.t_core - 1e-12)
+    # every scalar view round-trips through ECMModel validation
+    for i in range(len(batch)):
+        sm = batch.scalar(i)
+        assert len(sm.levels) == len(sm.transfers) + 1
+
+
+@pytest.mark.parametrize("machine", sorted(set(MACHINES) - {"tpu-v5e"}))
+def test_generic_simulator_covers_every_cpu_machine(machine):
+    """The unified simulator consumes any lowered workload with no
+    family-specific code."""
+    from repro.simcache import simulate_workloads_batch
+
+    names, table = simulate_workloads_batch(
+        list(workload_registry().values()), machine)
+    assert table.shape == (len(names), 4)
+    assert np.all(table > 0)
+    assert np.all(np.diff(table, axis=-1) >= -1e-9)
+
+
+def test_no_per_family_branches_in_consumers():
+    """The refactor's contract: simcache/sim.py and core/autotune.py
+    contain no isinstance/per-family dispatch."""
+    import repro.core.autotune as autotune
+    import repro.simcache.sim as sim
+
+    for mod in (sim, autotune):
+        src = Path(mod.__file__).read_text()
+        assert "isinstance(" not in src, mod.__name__
+
+
+# ---------------------------------------------------------------------------
+# 3. Hierarchy routing: victim L3 and no-write-allocate
+# ---------------------------------------------------------------------------
+
+
+def test_skylake_victim_l3_traffic_differs_from_inclusive():
+    """Same logical workload, different per-level line counts: the SKX
+    LLC edge carries victims outward and nothing inward."""
+    w = StreamWorkload(BENCHMARKS["copy"])       # 1 load + 1 RFO + 1 WB
+    hsw = route_traffic(HASWELL_EP, w.traffic(HASWELL_EP))
+    skx = route_traffic(SKYLAKE_SP, w.traffic(SKYLAKE_SP))
+    llc = len(HASWELL_EP.levels) - 1             # the L2<->L3 edge index
+    # inclusive: loads + RFO inward, write-back outward
+    assert hsw.load_lines[0, llc] == 2.0
+    assert hsw.evict_lines[0, llc] == 1.0
+    # victim: nothing inward; clean victim (the load) + dirty WB outward
+    assert skx.load_lines[0, llc] == 0.0
+    assert skx.evict_lines[0, llc] == 2.0
+    # the memory edge is unchanged (same lines must cross to DRAM)
+    assert skx.load_lines[0, -1] == hsw.load_lines[0, -1]
+    assert skx.evict_lines[0, -1] == hsw.evict_lines[0, -1]
+
+
+def test_skylake_stencil_lc_uses_its_own_capacities():
+    """SKX's 1 MiB L2 holds layer conditions an HSW 256 KiB L2 breaks."""
+    width = 8192                                  # 3 rows x 8 B = 192 KiB
+    hsw = StencilWorkload(JACOBI2D, widths=(width,)).traffic(HASWELL_EP)
+    skx = StencilWorkload(JACOBI2D, widths=(width,)).traffic(SKYLAKE_SP)
+    assert hsw.loads[0, 1] == 3.0                 # broken in HSW L2
+    assert skx.loads[0, 1] == 1.0                 # held in SKX L2
+
+
+def test_tpu_no_write_allocate_routing():
+    """Software-managed hierarchy: RFO vanishes, stores are NT streams —
+    the paper's §VII-E store behaviour as a machine property."""
+    w = StreamWorkload(BENCHMARKS["copy"])
+    routed = route_traffic(TPU_V5E_HIERARCHY, w.traffic(TPU_V5E_HIERARCHY))
+    # VREG<->VMEM edge: 1 load in, 1 NT store out (no RFO anywhere)
+    assert routed.load_lines[0, 0] == 1.0
+    assert routed.evict_lines[0, 0] == 1.0
+    # HBM edge: 2 lines total, vs 3 on a write-allocate machine
+    hsw = route_traffic(HASWELL_EP, w.traffic(HASWELL_EP))
+    assert float(routed.mem_lines()[0]) == 2.0
+    assert float(hsw.mem_lines()[0]) == 3.0
+
+
+def test_nt_speedup_is_free_on_tpu():
+    """striad and striad_nt collapse to the same model on the TPU (every
+    store is already non-temporal)."""
+    st = workload_ecm(StreamWorkload(BENCHMARKS["striad"]), "tpu-v5e")
+    nt = workload_ecm(StreamWorkload(BENCHMARKS["striad_nt"]), "tpu-v5e")
+    assert st.predictions() == nt.predictions()
+
+
+# ---------------------------------------------------------------------------
+# Calibration dedupe: the registry is the single source
+# ---------------------------------------------------------------------------
+
+
+def test_deprecated_bw_aliases_point_at_machine_calibration():
+    for k, v in HASWELL_MEASURED_BW.items():
+        assert HASWELL_EP.measured_bw[k] == v
+    for k, v in STENCIL_MEASURED_BW.items():
+        assert HASWELL_EP.measured_bw[k] == v
+    assert HASWELL_CAPACITIES == HASWELL_EP.capacities
+
+
+def test_bw_lookup_chain():
+    assert HASWELL_EP.sustained_bw("striad") == 27.1e9
+    assert HASWELL_EP.sustained_bw("no-such-kernel", "_stream") == 27e9
+    with pytest.raises(KeyError):
+        HASWELL_EP.sustained_bw("no-such-kernel")
+    assert HASWELL_EP.sustained_bw("no-such", default=1.0) == 1.0
+
+
+def test_machine_aliases_resolve():
+    assert get_machine("hsw") is HASWELL_EP
+    assert get_machine("haswell-ep-2695v3") is HASWELL_EP
+    assert get_machine(HASWELL_EP) is HASWELL_EP
+    with pytest.raises(KeyError):
+        get_machine("pentium-pro")
+
+
+# ---------------------------------------------------------------------------
+# Fused chains + generic ranking
+# ---------------------------------------------------------------------------
+
+
+def test_fused_chain_elides_intermediate_streams():
+    assert TRIAD_UPDATE.loads_explicit == 2      # B, C
+    assert TRIAD_UPDATE.stores == 1              # A only; T stays resident
+    assert TRIAD_UPDATE.rfo == 1
+    assert TRIAD_UPDATE.mem_streams == 4
+    unfused = (BENCHMARKS["striad"].mem_streams
+               + BENCHMARKS["update"].mem_streams)
+    assert unfused == 6                          # striad 4 + update 2
+    # ECM stream counting: fused chain beats the two-launch composition
+    fused = TRIAD_UPDATE.ecm(HASWELL_EP,
+                             HASWELL_EP.sustained_bw("triad_update"))
+    st = haswell_ecm("striad")
+    up = haswell_ecm("update")
+    assert fused.prediction("Mem") < st.prediction("Mem") + up.prediction("Mem")
+
+
+def test_fuse_chain_validates():
+    with pytest.raises(ValueError):
+        fuse_chain("bad", (BENCHMARKS["load"], BENCHMARKS["load"]),
+                   internal=2)
+    with pytest.raises(ValueError):   # NT intermediate cannot stay resident
+        fuse_chain("bad_nt", (BENCHMARKS["striad_nt"], BENCHMARKS["update"]),
+                   internal=1)
+
+
+def test_fuse_chain_rfo_follows_the_arrays():
+    """RFO accounting per fused link: copy∘copy collapses to a plain copy
+    (1 load + 1 RFO + 1 WB), and the in-place `update` stage's store
+    gains an RFO when its covering load is elided (triad_update)."""
+    cc = fuse_chain("copy2", (BENCHMARKS["copy"], BENCHMARKS["copy"]),
+                    internal=1)
+    assert (cc.loads_explicit, cc.rfo, cc.stores) == (1, 1, 1)
+    assert cc.mem_streams == BENCHMARKS["copy"].mem_streams == 3
+    assert TRIAD_UPDATE.rfo == 1      # striad's T-RFO gone, A's RFO gained
+
+
+def test_lower_many_rejects_mixed_hierarchies():
+    from repro.core.tpu_ecm import TPUStepECM
+
+    step = TPUStepECM(name="step", t_comp=1e-3, t_hbm=2e-3, t_ici=5e-4)
+    with pytest.raises(ValueError, match="different hierarchies"):
+        rank_workloads([StreamWorkload(BENCHMARKS["ddot"]),
+                        step.as_workload()], "haswell-ep")
+
+
+def test_registry_seeding_survives_early_user_registration():
+    """A user workload registered before first registry access must not
+    suppress the shipped entries."""
+    import repro.core.workload as wl
+
+    saved, saved_flag = dict(wl.WORKLOADS), wl._REGISTRY_SEEDED
+    try:
+        wl.WORKLOADS.clear()
+        wl._REGISTRY_SEEDED = False
+        wl.register_workload(StreamWorkload(BENCHMARKS["ddot"]))
+        reg = workload_registry()
+        assert "striad" in reg and "jacobi2d" in reg
+        assert len(reg) >= 12
+    finally:
+        wl.WORKLOADS.clear()
+        wl.WORKLOADS.update(saved)
+        wl._REGISTRY_SEEDED = saved_flag
+
+
+def test_unknown_registry_names_raise_keyerror():
+    from repro.core.autotune import rank_stencil_blocks
+    from repro.simcache import simulate_level, simulate_stencil_level
+
+    with pytest.raises(KeyError, match="jacobi2"):
+        rank_stencil_blocks("jacobi2", (8192,))
+    with pytest.raises(KeyError, match="ddott"):
+        simulate_level("ddott", 0)
+    with pytest.raises(KeyError, match="jacobi2"):
+        simulate_stencil_level("jacobi2", 0, widths=(512,))
+
+
+def test_stencil_simulation_uses_machine_capacities_by_default():
+    """SKX's 1 MiB L2 must drive the layer conditions (and residence)
+    when simulating on skylake-sp — not Haswell's 256 KiB."""
+    from repro.simcache import simulate_stencil_levels_batch
+
+    width = 8192                      # holds in SKX L2, breaks HSW L2
+    skx = simulate_stencil_levels_batch(
+        "jacobi2d", np.array([[float(width)]]), machine="skylake-sp")
+    hsw = simulate_stencil_levels_batch(
+        "jacobi2d", np.array([[float(width)]]), machine="haswell-ep")
+    assert not np.allclose(skx, hsw)
+    # and the SKX table matches an explicit SKX-capacity evaluation
+    from repro.simcache import machine_caches
+    explicit = simulate_stencil_levels_batch(
+        "jacobi2d", np.array([[float(width)]]), machine="skylake-sp",
+        caches=machine_caches("skylake-sp"))
+    np.testing.assert_array_equal(skx, explicit)
+
+
+def test_rank_workloads_mixed_families_one_path():
+    """Streams, a stencil and the fused chain ranked in one pass on one
+    machine — and the order is the Mem-level prediction order."""
+    ws = [StreamWorkload(BENCHMARKS["ddot"]),
+          StreamWorkload(TRIAD_UPDATE),
+          StencilWorkload(JACOBI2D, widths=(8192,))]
+    for machine in ("haswell-ep", "skylake-sp"):
+        ranked = rank_workloads(ws, machine)
+        ts = [r["t_ecm"] for r in ranked]
+        assert ts == sorted(ts)
+        assert ranked[0]["name"] == "ddot"
+
+
+def test_rank_workloads_accepts_prelowered_tpu_step():
+    from repro.core.tpu_ecm import TPUStepECM
+
+    step = TPUStepECM(name="step", t_comp=1e-3, t_hbm=2e-3, t_ici=5e-4)
+    ranked = rank_workloads([step.as_workload()], "tpu-v5e")
+    assert ranked[0]["name"] == "step"
+    assert ranked[0]["t_ecm"] > 0
+
+
+def test_tpu_overlap_calibration_lives_on_machine():
+    from repro.core import TPU_V5E
+    from repro.core.hlo import HLOResources
+    from repro.core.tpu_ecm import MeshSpec, from_resources
+
+    res = HLOResources(flops=1e12, bytes_accessed=1e9, collectives=())
+    step = from_resources(res, MeshSpec(shape=(4,), axes=("data",)))
+    assert step.exposed_hbm_fraction == TPU_V5E.exposed_hbm_fraction
+    assert step.exposed_ici_fraction == TPU_V5E.exposed_ici_fraction

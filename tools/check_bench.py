@@ -1,0 +1,205 @@
+#!/usr/bin/env python3
+"""BENCH artifact check: stdlib JSON-schema validation for the
+perf-trajectory files emitted by ``benchmarks/run.py --json``.
+
+    python tools/check_bench.py [files...]      # default: BENCH_*.json
+
+Every artifact shares one envelope (``schema`` version, ``suite``,
+``machine``) plus a per-suite payload; this checker pins the field names
+and types that downstream trajectory tooling relies on, so a refactor
+that silently drops or renames a field fails CI instead of producing
+holes in the perf history.  Legacy ``schema: 1`` files (no envelope) are
+accepted — the suite is inferred from their distinctive payload keys.
+
+Exit code 0 when clean, 1 with a per-finding report otherwise.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+SUITES = ("stream", "stencil", "tpu")
+
+#: minimal spec language: {key: type | (type, predicate) | dict (nested) |
+#: [element_spec] (non-empty list) | callable(value) -> error or None}
+NUM = (int, float)
+
+
+def _positive(x):
+    return None if x > 0 else f"expected > 0, got {x!r}"
+
+
+def _fraction(x):
+    return None if 0.0 <= x <= 1.0 else f"expected in [0, 1], got {x!r}"
+
+
+STREAM_SPEC = {
+    "pipeline": {
+        "kernels": dict,
+        "fused_triad_update": {
+            "fused_s": (NUM, _positive),
+            "unfused_s": (NUM, _positive),
+            "speedup": NUM,
+            "predicted_stream_ratio": NUM,
+        },
+        "overlap": {
+            "kernel": str,
+            "t_serial_s": NUM,
+            "t_pipelined_s": NUM,
+            "exposed_hbm_fraction": (NUM, _fraction),
+        },
+    },
+    "model_eval": {
+        "batch_points": (int, _positive),
+        "batch_wall_s": (NUM, _positive),
+        "batch_points_per_s": (NUM, _positive),
+        "batch_array_evals": (int, _positive),
+        "python_calls_per_point_batch": NUM,
+        "scalar_points_per_s": (NUM, _positive),
+        "throughput_ratio": (NUM, _positive),
+        "per_point_call_reduction": (NUM, _positive),
+    },
+    "autotune": {
+        "n_candidates": (int, _positive),
+        "batch_rank_wall_s": (NUM, _positive),
+        "best_config": dict,
+    },
+}
+
+STENCIL_SPEC = {
+    "sweep": [{
+        "n": (int, _positive),
+        "ws_kib": (NUM, _positive),
+        "regime": str,
+        "lc_misses": list,
+        "predicted_cy_per_cl": (NUM, _positive),
+        "measured_cy_per_cl": (NUM, _positive),
+        "model_error": NUM,
+    }],
+    "blocking": {
+        "n": (int, _positive),
+        "ranked": [{
+            "block": list,
+            "t_ecm": (NUM, _positive),
+            "misses_l1": (int, _positive),
+            "speedup_vs_unblocked": (NUM, _positive),
+        }],
+        "best": dict,
+    },
+    "kernels": {
+        "shape": list,
+        "stages": dict,
+    },
+}
+
+TPU_SPEC = {
+    "pipeline": {"kernels": dict},
+    "zoo": dict,
+}
+
+SPECS = {"stream": STREAM_SPEC, "stencil": STENCIL_SPEC, "tpu": TPU_SPEC}
+
+#: distinctive payload keys for suite inference on legacy (schema 1) files
+SUITE_HINTS = (("model_eval", "stream"), ("sweep", "stencil"),
+               ("zoo", "tpu"))
+
+
+def check_value(path: str, value, spec, problems: list[str]) -> None:
+    if isinstance(spec, dict):
+        if not isinstance(value, dict):
+            problems.append(f"{path}: expected object, got "
+                            f"{type(value).__name__}")
+            return
+        for k, sub in spec.items():
+            if k not in value:
+                problems.append(f"{path}.{k}: missing")
+                continue
+            check_value(f"{path}.{k}", value[k], sub, problems)
+    elif isinstance(spec, list):
+        if not isinstance(value, list) or not value:
+            problems.append(f"{path}: expected non-empty array")
+            return
+        for i, item in enumerate(value):
+            check_value(f"{path}[{i}]", item, spec[0], problems)
+    elif (isinstance(spec, tuple) and len(spec) == 2
+          and not isinstance(spec[1], type) and callable(spec[1])):
+        typ, pred = spec
+        if not isinstance(value, typ) or isinstance(value, bool):
+            problems.append(f"{path}: expected {typ}, got "
+                            f"{type(value).__name__}")
+            return
+        err = pred(value)
+        if err:
+            problems.append(f"{path}: {err}")
+    else:
+        if not isinstance(value, spec) or (spec is not bool
+                                           and isinstance(value, bool)):
+            problems.append(f"{path}: expected {spec}, got "
+                            f"{type(value).__name__}")
+
+
+def check_file(path: Path) -> list[str]:
+    problems: list[str] = []
+    rel = path.name
+    try:
+        payload = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{rel}: unreadable JSON ({e})"]
+    if not isinstance(payload, dict):
+        return [f"{rel}: top level must be an object"]
+
+    schema = payload.get("schema")
+    if not isinstance(schema, int) or schema < 1:
+        problems.append(f"{rel}.schema: missing or not a positive int")
+        schema = 1
+
+    suite = payload.get("suite")
+    if suite is None:
+        suite = next((s for k, s in SUITE_HINTS if k in payload), None)
+        if schema >= 2:
+            problems.append(f"{rel}.suite: missing (required for schema "
+                            f">= 2)")
+    elif suite not in SUITES:
+        problems.append(f"{rel}.suite: unknown suite {suite!r}")
+        suite = None
+    if schema >= 2 and not isinstance(payload.get("machine"), str):
+        problems.append(f"{rel}.machine: missing or not a string")
+
+    if suite is None:
+        problems.append(f"{rel}: cannot determine suite; keys = "
+                        f"{sorted(payload)[:8]}")
+        return problems
+    check_value(rel, payload, SPECS[suite], problems)
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [Path(a).resolve() for a in argv]
+    else:
+        files = sorted(ROOT.glob("BENCH_*.json"))
+    if not files:
+        print("check_bench: no BENCH_*.json artifacts found", file=sys.stderr)
+        return 1
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        for f in missing:
+            print(f"missing file: {f}", file=sys.stderr)
+        return 1
+    problems: list[str] = []
+    for f in files:
+        problems += check_file(f)
+    if problems:
+        print("\n".join(problems), file=sys.stderr)
+        print(f"\ncheck_bench: {len(problems)} problem(s) in "
+              f"{len(files)} file(s)", file=sys.stderr)
+        return 1
+    print(f"check_bench: {len(files)} artifact(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
