@@ -1,0 +1,200 @@
+"""Compute-bound ECM: blocked matmul + flash attention (the in-core limit).
+
+The paper validates the model's bandwidth-bound side on streaming kernels;
+this section exercises the *other* side of Eq. 1 — workloads whose
+``T_OL`` (FMA ports on the CPUs, the MXU systolic rate on the TPU) hides
+the whole transfer chain.  Per machine it reports the light-speed ECM of
+the cache-blocked GEMM and the flash-attention tiles, the ECM-ranked
+block-size sweeps (``rank_matmul_blocks`` / ``rank_attention_blocks``,
+showing where blocking moves a kernel from the bandwidth-bound into the
+core-bound regime), and interpret-mode validation of the Pallas kernels at
+the autotuner-chosen blockings.
+
+This module is a *section* of the merged suite runner — registration and
+artifact emission live in ``benchmarks/run.py``:
+
+    PYTHONPATH=src python -m benchmarks.run --suite compute [--machine M]
+    PYTHONPATH=src python -m benchmarks.run --json --suite compute
+"""
+from __future__ import annotations
+
+import time
+
+from .util import fmt, pred_str, table
+
+MATMUL_DIMS = (4096, 4096, 4096)
+ATTENTION_DIMS = (4096, 4096, 128)         # (sq, skv, head_dim)
+
+
+def _ecm_detail(model) -> dict:
+    return {
+        "levels": list(model.levels),
+        "input_notation": model.notation(),
+        "predictions": [float(x) for x in model.predictions()],
+        "t_ol": float(model.t_ol),
+        "t_nol": float(model.t_nol),
+        "core_bound": model.core_bound(),
+    }
+
+
+def matmul_payload(dims=MATMUL_DIMS, machine: str | None = None) -> dict:
+    """Light-speed ECM + ECM-ranked (bm, bn) blockings of a blocked GEMM."""
+    from repro.core import workload_ecm
+    from repro.core.autotune import rank_matmul_blocks
+    from repro.kernels.matmul.ops import matmul_workload
+
+    machine = machine or "haswell-ep"
+    m, n, k = dims
+    ranked = rank_matmul_blocks(dims, machine=machine)
+    best = ranked[0]
+    w = matmul_workload(m, n, k, bm=best["block"][0], bn=best["block"][1],
+                        bk=best["block"][2])
+    return {
+        "dims": list(dims),
+        "ecm": _ecm_detail(workload_ecm(w, machine)),
+        "blocking": {"ranked": ranked, "best": best},
+    }
+
+
+def attention_payload(dims=ATTENTION_DIMS, machine: str | None = None,
+                      causal: bool = True) -> dict:
+    """Light-speed ECM + ECM-ranked (bq, bkv) tilings of flash attention."""
+    from repro.core import workload_ecm
+    from repro.core.autotune import rank_attention_blocks
+    from repro.kernels.attention.ops import attention_workload
+
+    machine = machine or "haswell-ep"
+    sq, skv, d = dims
+    ranked = rank_attention_blocks(dims, machine=machine, causal=causal)
+    best = ranked[0]
+    w = attention_workload(sq, skv, d, bq=best["block"][0],
+                           bk=best["block"][1], causal=causal)
+    return {
+        "dims": list(dims),
+        "causal": causal,
+        "ecm": _ecm_detail(workload_ecm(w, machine)),
+        "blocking": {"ranked": ranked, "best": best},
+    }
+
+
+def kernel_payload(mm_dim: int = 256, att_seq: int = 256,
+                   att_d: int = 64, repeats: int = 2,
+                   machine: str | None = None) -> dict:
+    """Interpret-mode validation of both Pallas kernels at the blockings
+    the autotuner picks *for the suite's machine* (numerics vs the jnp
+    oracles)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.attention import ops as att_ops, ref as att_ref
+    from repro.kernels.matmul import ops as mm_ops, ref as mm_ref
+
+    machine = machine or "haswell-ep"
+    out: dict = {}
+    key = jax.random.key(0)
+    kx, ky, kq, kk, kv = jax.random.split(key, 5)
+
+    bm, bn, bk = mm_ops.tuned_blocks(mm_dim, mm_dim, mm_dim,
+                                     machine=machine)
+    x = jax.random.normal(kx, (mm_dim, mm_dim), jnp.float32)
+    y = jax.random.normal(ky, (mm_dim, mm_dim), jnp.float32)
+    fn = lambda: mm_ops.matmul(x, y, bm=bm, bn=bn, bk=bk, interpret=True)
+    got = np.asarray(jax.block_until_ready(fn()))
+    want = np.asarray(mm_ref.matmul(x, y))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    err = float(np.max(np.abs(got - want)))
+    out["matmul"] = {
+        "shape": [mm_dim, mm_dim, mm_dim], "block": [bm, bn, bk],
+        "max_abs_err": err, "matches_ref": bool(err < 1e-3),
+        "wall_s": best,
+    }
+
+    bq, bkv = att_ops.tuned_blocks(att_seq, att_seq, att_d,
+                                   machine=machine)
+    shape = (1, att_seq, 1, att_d)
+    q = jax.random.normal(kq, shape, jnp.float32)
+    k = jax.random.normal(kk, shape, jnp.float32)
+    v = jax.random.normal(kv, shape, jnp.float32)
+    fn = lambda: att_ops.flash_attention(q, k, v, causal=True, bq=bq,
+                                         bk=bkv, interpret=True)
+    got = np.asarray(jax.block_until_ready(fn()))
+    # the oracle takes fused (B*H, S, d) tensors
+    flat = lambda t: t.transpose(0, 2, 1, 3).reshape(att_seq, att_d)[None]
+    want = np.asarray(att_ref.attention(flat(q), flat(k), flat(v),
+                                        causal=True))
+    want = want.reshape(1, 1, att_seq, att_d).transpose(0, 2, 1, 3)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    err = float(np.max(np.abs(got - want)))
+    out["attention"] = {
+        "shape": list(shape), "block": [bq, bkv],
+        "max_abs_err": err, "matches_ref": bool(err < 1e-3),
+        "wall_s": best,
+    }
+    return out
+
+
+def run(machine: str | None = None) -> str:
+    machine = machine or "haswell-ep"
+    out = []
+
+    mm = matmul_payload(machine=machine)
+    e = mm["ecm"]
+    out.append(f"== blocked matmul {tuple(mm['dims'])} on {machine}: "
+               f"{e['input_notation']} ==")
+    out.append(f"T_ECM {pred_str(e['predictions'])}  "
+               f"(T_OL={fmt(e['t_ol'], 1)}, T_nOL={fmt(e['t_nol'], 1)}; "
+               f"{'core-bound' if e['core_bound'] else 'transfer-bound'})")
+    rows = [[f"{r['block'][0]}x{r['block'][1]}", fmt(r["mem_lines"], 1),
+             fmt(r["t_ecm"], 1), "yes" if r["core_bound"] else "no",
+             fmt(r["speedup_vs_min_block"], 2) + "x"]
+            for r in mm["blocking"]["ranked"][:8]]
+    out.append(table(["bm x bn", "mem lines/CL", "T_ECM cy/CL",
+                      "core-bound", "vs min block"], rows))
+    out.append(f"autotuner pick: {tuple(mm['blocking']['best']['block'])}")
+
+    att = attention_payload(machine=machine)
+    e = att["ecm"]
+    out.append(f"\n== flash attention (sq, skv, d)={tuple(att['dims'])}, "
+               f"causal={att['causal']}, on {machine}: "
+               f"{e['input_notation']} ==")
+    out.append(f"T_ECM {pred_str(e['predictions'])}  "
+               f"(T_OL={fmt(e['t_ol'], 1)}; "
+               f"{'core-bound' if e['core_bound'] else 'transfer-bound'})")
+    rows = [[f"{r['block'][0]}x{r['block'][1]}",
+             fmt(r["tile_bytes"] / 1024, 0) + " KiB",
+             "yes" if r["fits"] else "NO", fmt(r["t_ecm"], 1)]
+            for r in att["blocking"]["ranked"][:8]]
+    out.append(table(["bq x bkv", "tile bytes", "fits", "T_ECM cy/CL"],
+                     rows))
+    out.append(f"autotuner pick: {tuple(att['blocking']['best']['block'])}")
+
+    k = kernel_payload(machine=machine)
+    out.append("\n== Pallas kernels at the autotuned blockings "
+               "(interpret mode, vs jnp oracles) ==")
+    rows = [[name, "x".join(str(s) for s in v["shape"]),
+             "x".join(str(b) for b in v["block"]),
+             f"{v['max_abs_err']:.2e}",
+             "yes" if v["matches_ref"] else "NO",
+             fmt(v["wall_s"] * 1e3, 1)]
+            for name, v in k.items()]
+    out.append(table(["kernel", "shape", "block", "max |err|",
+                      "matches ref", "wall ms"], rows))
+    return "\n".join(out)
+
+
+def main() -> int:
+    print(run())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,10 +7,11 @@ runner for all kernel families.
     PYTHONPATH=src python -m benchmarks.run --json --suite stencil
     PYTHONPATH=src python -m benchmarks.run --only machine_zoo --machine skylake-sp
 
-``--suite {stream,stencil,tpu}`` selects a kernel family (default: all
-sections); ``--machine`` picks a registry machine for the sections and
-artifacts that are machine-parameterized (the zoo table, the stencil
-sweep, the model-eval throughput grid).
+``--suite {stream,stencil,compute,tpu}`` selects a kernel family
+(default: all sections); ``--machine`` picks a registry machine for the
+sections and artifacts that are machine-parameterized (the zoo table, the
+stencil sweep, the compute blocking sweeps, the model-eval throughput
+grid).
 
 ``--json`` skips the report sections and emits the perf-trajectory
 artifact for the selected suite instead, in one shared BENCH schema
@@ -18,9 +19,12 @@ artifact for the selected suite instead, in one shared BENCH schema
 (``schema``/``suite``/``machine``) plus the suite payload —
 ``BENCH_pipeline.json`` (stream: pipelined wall-clock + model-eval
 throughput), ``BENCH_stencil.json`` (stencil: LC sweep + blocking +
-kernel equality) and ``BENCH_tpu.json`` (TPU: pipeline timings + the
-tpu-v5e zoo predictions).  Field names are stable across schema bumps so
-trajectories remain comparable.
+kernel equality), ``BENCH_compute.json`` (compute: matmul/attention ECM +
+block rankings + interpret-mode kernel validation) and ``BENCH_tpu.json``
+(TPU: pipeline timings + the tpu-v5e zoo predictions).  Field names are
+stable across schema bumps so trajectories remain comparable; the CI
+regression gate diffs fresh artifacts against the committed baselines
+with ``tools/check_bench.py --compare``.
 """
 from __future__ import annotations
 
@@ -30,6 +34,7 @@ import json
 import time
 
 from . import (
+    compute_bench,
     fig10_scaling,
     fig11_bandwidth,
     fig12_nt_stores,
@@ -60,6 +65,9 @@ SECTIONS = [
     ("stencil_sweep",
      "Stencil LC-ECM: 2D Jacobi sweeps + blocking (arXiv:1410.5010)",
      stencil_sweep),
+    ("compute_bench",
+     "Compute-bound ECM: blocked matmul + flash attention (in-core limit)",
+     compute_bench),
     ("machine_zoo",
      "Machine zoo: every workload x every machine (arXiv:1702.07554)",
      machine_zoo),
@@ -79,6 +87,7 @@ SUITES = {
                "fig56_energy", "fig11_bandwidth", "fig12_nt_stores",
                "machine_zoo"],
     "stencil": ["stencil_sweep", "machine_zoo"],
+    "compute": ["compute_bench", "machine_zoo"],
     "tpu": ["tpu_stream_ecm", "tpu_roofline", "tpu_energy", "tpu_scaling",
             "machine_zoo"],
 }
@@ -87,6 +96,7 @@ SUITES = {
 BENCH_PATHS = {
     "stream": "BENCH_pipeline.json",
     "stencil": "BENCH_stencil.json",
+    "compute": "BENCH_compute.json",
     "tpu": "BENCH_tpu.json",
 }
 
@@ -197,6 +207,15 @@ def stencil_payload(machine: str = "haswell-ep") -> dict:
     }
 
 
+def compute_payload(machine: str = "haswell-ep") -> dict:
+    return {
+        **_envelope("compute", machine),
+        "matmul": compute_bench.matmul_payload(machine=machine),
+        "attention": compute_bench.attention_payload(machine=machine),
+        "kernels": compute_bench.kernel_payload(machine=machine),
+    }
+
+
 def tpu_payload(machine: str = "tpu-v5e") -> dict:
     return {
         **_envelope("tpu", machine),
@@ -209,7 +228,7 @@ def emit_json(path: str | None, suite: str = "stream",
               machine: str | None = None) -> str:
     """Write the suite's BENCH artifact; returns the path written."""
     builders = {"stream": stream_payload, "stencil": stencil_payload,
-                "tpu": tpu_payload}
+                "compute": compute_payload, "tpu": tpu_payload}
     if machine is None:
         machine = "tpu-v5e" if suite == "tpu" else "haswell-ep"
     payload = builders[suite](machine=machine)
@@ -233,6 +252,14 @@ def emit_json(path: str | None, suite: str = "stream",
               f"{payload['blocking']['best']['block']} "
               f"({payload['blocking']['best']['speedup_vs_unblocked']:.2f}x),"
               f" kernels bit-identical: {ok}")
+    elif suite == "compute":
+        mm, att = payload["matmul"], payload["attention"]
+        ok = all(v["matches_ref"] for v in payload["kernels"].values())
+        print(f"[bench] wrote {path}: matmul {tuple(mm['dims'])} "
+              f"best block {tuple(mm['blocking']['best']['block'])} "
+              f"(core-bound: {mm['ecm']['core_bound']}), attention best "
+              f"{tuple(att['blocking']['best']['block'])}, kernels match "
+              f"ref: {ok}")
     else:
         n = len(payload["zoo"].get(machine, {}))
         print(f"[bench] wrote {path}: {n} workloads predicted on {machine}")

@@ -5,7 +5,10 @@
 2. Stencil mode — layer-condition-aware ECM for the 2D Jacobi: the model
    inputs change with problem width, and spatial blocking is ranked by
    predicted T_ECM (see docs/ecm-model.md).
-3. TPU mode — jit a small training step, pull FLOPs/bytes/collectives out
+3. Compute mode — the in-core limit: blocked matmul hits the FMA peak on
+   Haswell and the MXU rate on the TPU; the ECM autotuner picks the
+   block sizes the Pallas kernel runs with.
+4. TPU mode — jit a small training step, pull FLOPs/bytes/collectives out
    of the compiled artifact and build the three-term TPU-ECM model that
    drives the framework's §Roofline analysis.
 
@@ -40,7 +43,23 @@ best = rank_stencil_blocks("jacobi2d", (8192,))[0]
 print(f"autotuned blocking at N=8192: block {best['block']} "
       f"({best['speedup_vs_unblocked']:.2f}x predicted vs unblocked)")
 
-# --- 3. TPU mode -----------------------------------------------------------
+# --- 3. compute mode (the in-core limit) -----------------------------------
+from repro.core import workload_ecm, workload_registry
+from repro.core.autotune import rank_matmul_blocks
+
+print("\n== Compute-bound ECM: blocked matmul (T_OL dominates) ==")
+mm = workload_registry()["matmul"]
+for machine in ("haswell-ep", "tpu-v5e"):
+    ecm = workload_ecm(mm, machine)
+    bound = "core" if ecm.core_bound() else "transfer"
+    print(f"{machine:12s} {ecm.notation():34s} -> "
+          f"{ecm.prediction_notation()}  ({bound}-bound)")
+best = rank_matmul_blocks((4096, 4096, 4096))[0]
+print(f"autotuned tiling: bm x bn = {best['block'][0]}x{best['block'][1]} "
+      f"(core-bound: {best['core_bound']}, "
+      f"{best['mem_lines']:.0f} mem lines/CL)")
+
+# --- 4. TPU mode -----------------------------------------------------------
 from repro.configs import get_arch
 from repro.configs.base import ShapeSpec
 from repro.core import hlo

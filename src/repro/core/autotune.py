@@ -231,13 +231,17 @@ def rank_workloads(workloads, machine=None, *,
 
     Returns dicts ``{"name", "index", "t_ecm", "predictions"}``
     best-first (``index`` is the position in the lowered batch, i.e. the
-    candidate order).
+    candidate order).  ``workloads`` may also be an already-lowered
+    :class:`~repro.core.workload.LoweredBatch` (callers that need the
+    routed traffic or in-core times anyway avoid lowering twice);
+    ``machine``/``sustained_bw`` are ignored then.
     """
     from .machine import HASWELL_EP
     from .workload import lower_many
 
-    lowered = lower_many(workloads, machine or HASWELL_EP,
-                         sustained_bw=sustained_bw)
+    lowered = (workloads if hasattr(workloads, "routed")
+               else lower_many(workloads, machine or HASWELL_EP,
+                               sustained_bw=sustained_bw))
     batch = lowered.batch
     t = batch.prediction(level)                               # (C,)
     order = (np.argsort(t, kind="stable") if tiebreak is None
@@ -321,3 +325,141 @@ def rank_stencil_blocks(spec_or_name, widths: tuple[int, ...],
              "misses_l1": int(mis[r["index"], 0]),
              "speedup_vs_unblocked": base / r["t_ecm"]}
             for r in ranked if r["index"] < len(cands)]
+
+
+# ---------------------------------------------------------------------------
+# Compute-bound block-size autotuners (blocked matmul + flash attention)
+# ---------------------------------------------------------------------------
+
+
+def _pow2_divisors(dim: int, min_block: int, max_block: int) -> list[int]:
+    """Power-of-two tile sizes that divide ``dim`` evenly (the Pallas
+    kernels' grid constraint), capped at the dimension itself."""
+    out, b = [], min_block
+    while b <= min(max_block, dim):
+        if dim % b == 0:
+            out.append(b)
+        b *= 2
+    return out or [dim]
+
+
+def matmul_block_candidates(m: int, n: int, k: int, *,
+                            min_block: int = 32,
+                            max_block: int = 1024,
+                            bk: int | None = None
+                            ) -> list[tuple[int, int, int]]:
+    """(bm, bn, bk) candidates: power-of-two output tilings that divide
+    the problem (the K blocking only sets the accumulator depth — it does
+    not move the operand-panel layer conditions, so it is held fixed)."""
+    bk = bk or min(k, 512)
+    return [(bm, bn, bk)
+            for bm in _pow2_divisors(m, min_block, max_block)
+            for bn in _pow2_divisors(n, min_block, max_block)]
+
+
+def rank_matmul_blocks(dims: tuple[int, int, int],
+                       blocks: "list[tuple[int, int, int]] | None" = None,
+                       *, level: "int | str" = -1,
+                       machine=None, sustained_bw: float | None = None,
+                       spec=None) -> list[dict]:
+    """Rank blocked-GEMM tilings of ``C[m,n] = A[m,k] @ B[k,n]`` by
+    predicted ``T_ECM``.
+
+    Same structure as :func:`rank_stencil_blocks`: one vectorized lowering
+    over every candidate through :func:`rank_workloads`, then an argsort.
+    Ties (every blocking already core-bound: ``T_OL`` hides the whole
+    transfer chain) break toward the *largest* output tile — equal
+    predicted cycles but fewer grid steps and less panel re-streaming the
+    light-speed model does not charge for.
+
+    Returns dicts ``{"block", "t_ecm", "core_bound", "mem_lines",
+    "speedup_vs_min_block"}`` best-first.
+    """
+    from .machine import HASWELL_EP, get_machine
+    from .workload import MATMUL_F32, MatmulWorkload, lower_many
+
+    m_, n_, k_ = dims
+    mach = get_machine(machine or HASWELL_EP)
+    cands = blocks or matmul_block_candidates(m_, n_, k_)
+    base = MatmulWorkload(spec or MATMUL_F32, m=m_, n=n_, k=k_)
+    ws = [base.with_block(b) for b in cands]
+    lowered = lower_many(ws, mach, sustained_bw=sustained_bw)
+    mem_lines = lowered.routed.mem_lines()       # (C,)
+    core = lowered.batch.core_bound(level)       # (C,)
+    ranked = rank_workloads(lowered, level=level,
+                            tiebreak=[-b[0] * b[1] for b in cands])
+    t_by_index = {r["index"]: r["t_ecm"] for r in ranked}
+    base_i = min(range(len(cands)), key=lambda i: cands[i][0] * cands[i][1])
+    base = t_by_index[base_i]
+    return [{"block": tuple(int(x) for x in cands[r["index"]]),
+             "t_ecm": r["t_ecm"],
+             "core_bound": bool(core[r["index"]]),
+             "mem_lines": float(mem_lines[r["index"]]),
+             "speedup_vs_min_block": base / r["t_ecm"]}
+            for r in ranked]
+
+
+def attention_block_candidates(sq: int, skv: int, *,
+                               min_block: int = 128,
+                               max_block: int = 2048
+                               ) -> list[tuple[int, int]]:
+    """(bq, bkv) candidates: power-of-two tile rows dividing the
+    sequence lengths (the Pallas kernel's grid constraint)."""
+    return [(bq, bkv)
+            for bq in _pow2_divisors(sq, min_block, max_block)
+            for bkv in _pow2_divisors(skv, min_block, max_block)]
+
+
+def rank_attention_blocks(dims: tuple[int, int, int],
+                          blocks: "list[tuple[int, int]] | None" = None,
+                          *, level: "int | str" = -1,
+                          machine=None, causal: bool = True,
+                          sustained_bw: float | None = None,
+                          spec=None) -> list[dict]:
+    """Rank flash-attention (bq, bkv) tilings by predicted ``T_ECM``.
+
+    ``dims`` is ``(sq, skv, d)``.  Candidates whose working set (q tile,
+    KV tiles, score tile, accumulator) overflows the reuse level — the
+    innermost cache that can hold it (VMEM on the TPU, L2/L3 on the
+    CPUs) — are marked ``fits=False`` and ranked after every fitting
+    candidate: the flash strategy's traffic model assumes the tiles stay
+    resident through a KV pass.
+
+    Larger ``bq`` cuts the KV re-streaming (``2*Sk/bq`` lines per CL of
+    O); larger ``bkv`` cuts the online-softmax rescale uops — the tuner
+    trades both against the fit constraint.
+
+    Returns dicts ``{"block", "t_ecm", "fits", "core_bound",
+    "tile_bytes"}`` best-first.
+    """
+    from .machine import HASWELL_EP, get_machine
+    from .workload import (COMPUTE_LC_SAFETY, FLASH_ATTENTION_F32,
+                           AttentionWorkload, lower_many)
+
+    sq, skv, d = dims
+    mach = get_machine(machine or HASWELL_EP)
+    sp = spec or FLASH_ATTENTION_F32
+    cands = blocks or attention_block_candidates(sq, skv)
+    base = AttentionWorkload(sp, sq=sq, skv=skv, d=d, causal=causal)
+    ws = [base.with_block(b) for b in cands]
+    eb = sp.elem_bytes
+    reuse_cap = max(mach.capacities) if mach.capacities else 0
+    tile_bytes = [(bq * d + 2 * bkv * d + bq * bkv + bq * d) * eb
+                  for bq, bkv in cands]
+    fits = [not reuse_cap or tb * COMPUTE_LC_SAFETY <= reuse_cap
+            for tb in tile_bytes]
+    lowered = lower_many(ws, mach, sustained_bw=sustained_bw)
+    core = lowered.batch.core_bound(level)       # (C,)
+    ranked = rank_workloads(
+        lowered, level=level,
+        # at equal predictions prefer the larger tiles (less KV streaming
+        # / fewer rescale passes than the light-speed tie reflects)
+        tiebreak=[-bq * bkv for bq, bkv in cands])
+    # fit is the primary key: the traffic model assumes resident tiles
+    ranked.sort(key=lambda r: 0 if fits[r["index"]] else 1)
+    return [{"block": tuple(int(x) for x in cands[r["index"]]),
+             "t_ecm": r["t_ecm"],
+             "fits": bool(fits[r["index"]]),
+             "core_bound": bool(core[r["index"]]),
+             "tile_bytes": int(tile_bytes[r["index"]])}
+            for r in ranked]

@@ -80,8 +80,17 @@ class ECMModel:
     def predictions(self) -> tuple[float, ...]:
         return tuple(self.prediction(i) for i in range(len(self.levels)))
 
+    def core_bound(self, level: int | str = -1) -> bool:
+        """True when ``T_OL`` hides the whole transfer chain down to
+        ``level`` (default: the memory level) — the prediction *is* the
+        in-core time.  The single home of the core-bound test used by
+        the block tuners, benchmarks and docs."""
+        return self.prediction(level) <= self.t_ol + 1e-9
+
     def _level_index(self, level: int | str) -> int:
         if isinstance(level, int):
+            if level < 0:
+                level += len(self.levels)
             if not 0 <= level < len(self.levels):
                 raise IndexError(f"level {level} out of range")
             return level
@@ -240,6 +249,10 @@ class ECMBatch:
         idx = (level if isinstance(level, int)
                else self.levels.index(level))
         return self.predictions()[..., idx]
+
+    def core_bound(self, level: int | str = -1) -> np.ndarray:
+        """Vectorized :meth:`ECMModel.core_bound`: ``(B,)`` booleans."""
+        return self.prediction(level) <= self.t_ol + 1e-9
 
     def performance(self, work_per_unit, level: int | str,
                     clock_hz: float | None = None) -> np.ndarray:

@@ -81,7 +81,10 @@ class PortModel:
       ``optimized_agu=True``
     * ``n_fma`` / ``n_mul`` (ports 0/1) and ``n_add`` (port 1 only).  A
       machine without FMA units (``n_fma=0``, e.g. Sandy Bridge) executes
-      each FMA as a separate multiply and add uop.
+      each FMA as a separate multiply and add uop.  Contraction MACs
+      (``dot`` uops, the matmul/attention inner products) are ordinary
+      FMAs on a CPU — only machines with a matrix unit treat them
+      differently (see :class:`VPUIssueModel`).
     * ``load_issue_cycles`` / ``store_issue_cycles`` — cycles one
       full-width vector op occupies its port (2.0 on Sandy Bridge: 16 B
       data paths moving 32 B AVX registers).
@@ -106,6 +109,7 @@ class PortModel:
         fma: float = 0,
         mul: float = 0,
         add: float = 0,
+        dot: float = 0,
         optimized_agu: bool = False,
     ) -> tuple[float, float]:
         """Return ``(t_nol, t_ol)`` in cycles for one unit of work.
@@ -114,6 +118,7 @@ class PortModel:
         assumption (i) these do not overlap with any transfer in the
         hierarchy.  ``t_ol`` — everything else (arithmetic), which does.
         """
+        fma = fma + dot                         # contraction MACs = FMAs
         if not self.n_fma:                      # no FMA units: mul + add uops
             mul = mul + fma
             add = add + fma
@@ -142,15 +147,31 @@ class VPUIssueModel:
     non-overlapping load/store retirement phase — data movement is the
     explicit DMA modelled by the transfer edges, so ``t_nol = 0``.  Duck-
     types :meth:`PortModel.core_cycles`.
+
+    ``mxu_vectors_per_cycle`` is the matrix-unit throughput for
+    contraction MACs (``dot`` uops) in canonical uops per cycle; ``0``
+    means no matrix unit and ``dot`` executes on the VPU like any other
+    FMA.  When set, the MXU systolic throughput *replaces* the FMA port
+    model for matmul-class workloads while element-wise mul/add/fma stay
+    on the VPU — compute time is the max of the two pipes (they issue
+    concurrently).
     """
 
     vectors_per_cycle: float = 8.0      # 8 x 128-lane VPU sub-units
+    mxu_vectors_per_cycle: float = 0.0  # 0 = no matrix unit
 
     def core_cycles(self, *, loads: float = 0, stores: float = 0,
                     fma: float = 0, mul: float = 0, add: float = 0,
-                    optimized_agu: bool = False) -> tuple[float, float]:
-        vec_ops = max(fma + mul + add, 1.0)
-        return 0.0, vec_ops / self.vectors_per_cycle
+                    dot: float = 0, optimized_agu: bool = False
+                    ) -> tuple[float, float]:
+        if dot and not self.mxu_vectors_per_cycle:
+            fma = fma + dot             # no MXU: contractions run on the VPU
+            dot = 0.0
+        vec_ops = max(fma + mul + add, 0.0 if dot else 1.0)
+        t_ol = vec_ops / self.vectors_per_cycle
+        if dot:
+            t_ol = max(t_ol, dot / self.mxu_vectors_per_cycle)
+        return 0.0, t_ol
 
 
 # ---------------------------------------------------------------------------
@@ -250,13 +271,14 @@ class MachineModel:
 
     def core_cycles(self, *, loads: float = 0, stores: float = 0,
                     fma: float = 0, mul: float = 0, add: float = 0,
-                    optimized_agu: bool = False) -> tuple[float, float]:
+                    dot: float = 0, optimized_agu: bool = False
+                    ) -> tuple[float, float]:
         """SIMD-width-scaled in-core times; the unified engine's entry to
         the machine's issue model."""
         s = self.effective_uop_scale
         return self.ports.core_cycles(
             loads=loads * s, stores=stores * s, fma=fma * s, mul=mul * s,
-            add=add * s, optimized_agu=optimized_agu)
+            add=add * s, dot=dot * s, optimized_agu=optimized_agu)
 
 
 # ---------------------------------------------------------------------------
@@ -313,8 +335,14 @@ _HASWELL_BW = {
     "triad_update": 27.1e9,
     "jacobi2d": 24.1e9,
     "jacobi3d": 24.1e9,
+    # compute-bound kernels: the memory-edge streams are almost entirely
+    # loads (panel re-reads), so the sustained bandwidth is load-dominated;
+    # the value barely matters because T_core dominates the composition.
+    "matmul": 30.0e9,
+    "flash-attention": 30.0e9,
     "_stream": 27e9,
     "_stencil": 24.1e9,
+    "_compute": 30.0e9,
 }
 
 
@@ -351,7 +379,8 @@ HASWELL_EP = register_machine(MachineModel(
 #: (``HASWELL_EP.measured_bw``); this name is kept for API compatibility.
 HASWELL_MEASURED_BW = {
     k: v for k, v in HASWELL_EP.measured_bw.items() if not k.startswith("_")
-    and k not in ("triad_update", "jacobi2d", "jacobi3d")
+    and k not in ("triad_update", "jacobi2d", "jacobi3d",
+                  "matmul", "flash-attention")
 }
 
 #: Non-CoD sustained chip bandwidths (both memory controllers, Fig. 10/11).
@@ -518,7 +547,15 @@ TPU_V5E_HIERARCHY = register_machine(MachineModel(
     ),
     mem_level_name="HBM",
     first_level_name="VREG",
-    ports=VPUIssueModel(vectors_per_cycle=8.0),
+    # VPU for element-wise work; contraction MACs (``dot`` uops) run on
+    # the 128x128 MXU instead of the FMA/VPU pipe.  The rate is calibrated
+    # so a matmul workload's T_OL equals flops / peak_f32 at this clock:
+    # one unit of work (a 128-lane f32 row of C) counts 2K canonical dot
+    # uops for 2*128*K flops, hence peak/clock/128 canonical uops/cycle.
+    ports=VPUIssueModel(
+        vectors_per_cycle=8.0,
+        mxu_vectors_per_cycle=TPU_V5E.peak_f32_flops / TPU_V5E.clock_hz
+        / 128.0),
     cores=1,
     # registers hold nothing across iterations; VMEM is the reuse level
     capacities=(0, TPU_V5E.vmem_bytes),

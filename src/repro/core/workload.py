@@ -38,6 +38,12 @@ Workload families shipped here:
   :func:`~repro.core.kernel_spec.fuse_chain` (e.g. ``triad_update``),
   which sums stage uops and elides the intermediate streams that stay
   resident between fused stages; they are ordinary stream workloads here;
+* :class:`MatmulWorkload` / :class:`AttentionWorkload` — the
+  compute-bound families (cache-blocked GEMM and flash-attention tiles):
+  per-level traffic from layer-condition analysis of which operand
+  blocks survive each cache, contraction MACs as ``UopMix.dot`` uops so
+  a matrix unit (the TPU MXU) can retire them at the systolic rate —
+  the first families where ``T_core`` dominates the composition;
 * :class:`RawWorkload` — a pre-lowered record (the TPU step model's
   seconds-per-step terms enter the engine through this, see
   :func:`tpu_step_workload`).
@@ -66,13 +72,21 @@ from .machine import MACHINES, MachineModel, get_machine
 class UopMix:
     """Micro-op mix per unit of work, canonical per 32 B vector register on
     a 64 B line (Table I's accounting); the machine's
-    ``effective_uop_scale`` adapts it to wider/narrower SIMD."""
+    ``effective_uop_scale`` adapts it to wider/narrower SIMD.
+
+    ``dot`` counts *contraction* MACs (matmul / attention inner products)
+    separately from element-wise ``fma``: on a CPU they are the same FMA
+    uops, but a machine with a matrix unit (the TPU's MXU) retires them at
+    the systolic-array rate instead of the vector-FMA rate — the uop mix
+    carries the distinction so the machine's issue model can route it.
+    """
 
     loads: float = 0.0
     stores: float = 0.0
     fma: float = 0.0
     mul: float = 0.0
     add: float = 0.0
+    dot: float = 0.0
 
     @property
     def l1_uops(self) -> float:
@@ -255,7 +269,7 @@ def lower(workload: Workload, machine: "MachineModel | str", *,
                             mem_cy_per_line=np.zeros(b))
     u = workload.uops()
     t_nol, t_ol = m.core_cycles(loads=u.loads, stores=u.stores, fma=u.fma,
-                                mul=u.mul, add=u.add,
+                                mul=u.mul, add=u.add, dot=u.dot,
                                 optimized_agu=optimized_agu)
     traffic = workload.traffic(m)
     routed = route_traffic(m, traffic)
@@ -481,6 +495,245 @@ class StencilWorkload:
 
 
 # ---------------------------------------------------------------------------
+# Compute-bound workloads: blocked matmul + flash attention
+# ---------------------------------------------------------------------------
+#
+# These are the first families where T_core (not transfer time) dominates
+# the Eq. 1 composition: the overlap rule is exercised from the
+# non-saturated side (T_OL hides the whole transfer chain).  Their traffic
+# follows the layer-condition approach of arXiv:1410.5010 generalized to
+# cache-blocked GEMM: the per-edge line counts depend on which operand
+# *panels* survive in each cache level, exactly as the stencil's depend on
+# which row neighbourhoods do.  The in-core side follows the per-
+# generation throughput analysis of arXiv:1511.03639 (FMA ports on the
+# CPUs, the MXU systolic rate on the TPU via ``UopMix.dot``).
+
+#: reuse-set safety factor (same rule of thumb as the stencil layer
+#: conditions: a panel only survives if it fits in *half* the cache).
+COMPUTE_LC_SAFETY = 2.0
+
+
+@dataclass(frozen=True)
+class MatmulSpec:
+    """Register-tile + dtype description of a blocked-GEMM family.
+
+    uop accounting per cache line of C fully computed (Table I's canonical
+    32 B-vector-on-64 B-line units): the two C vectors of a line each take
+    ``K`` contraction MACs -> ``2K`` ``dot`` uops; the register tile
+    (``reg_m_vecs`` vector rows x ``reg_n`` columns of C, the classic
+    Haswell 8x6 DGEMM microkernel by default) amortizes the A-broadcast
+    and B-vector loads to ``2K * (1/reg_n + 1/reg_m_vecs)`` load uops —
+    which is what makes a well-tiled GEMM FMA-bound rather than
+    load-bound in the port model (arXiv:1511.03639's Haswell analysis).
+    """
+
+    name: str = "matmul"
+    elem_bytes: int = 4                 # f32, matching the Pallas kernel
+    reg_m_vecs: int = 2                 # register tile: vector rows of C
+    reg_n: int = 6                      # register tile: columns of C
+
+
+@dataclass(frozen=True)
+class MatmulWorkload:
+    """Cache-blocked GEMM ``C[m,n] = A[m,k] @ B[k,n]`` with tile sizes
+    ``bm/bn/bk`` (the Pallas kernel's grid blocking).
+
+    Unit of work: one cache line of C elements fully computed.  Per-level
+    line traffic via layer-condition analysis of the blocked loop nest
+    (i-blocks outer, j-blocks middle, k innermost-sequential — the
+    ``kernels/matmul`` grid order):
+
+    * **A** (``bm x K`` panel, streamed per (i, j) block): if the panel
+      survives a level across the j-loop, A is read once per i-row —
+      ``K/N`` lines per CL of C; otherwise it is re-read for every
+      j-block — ``K/bn`` lines.
+    * **B** (whole matrix, streamed per i-block): if all of B fits, it is
+      read once — ``K/M`` lines; otherwise re-read per i-block —
+      ``K/bm`` lines.
+    * **C** is written once (the accumulator tile stays resident across
+      the k loop): the LC-independent write-allocate + write-back pair.
+
+    The memory-edge load count ``K/bm + K/bn`` is the classic blocked-GEMM
+    traffic law: blocking grows ``bm``/``bn`` until T_core dominates and
+    the kernel leaves the bandwidth-bound regime.
+    """
+
+    spec: MatmulSpec
+    m: int
+    n: int
+    k: int
+    bm: int = 256
+    bn: int = 256
+    bk: int = 512
+    safety: float = COMPUTE_LC_SAFETY
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    def batch_names(self) -> tuple[str, ...]:
+        return (self.spec.name,)
+
+    def uops(self) -> UopMix:
+        s = self.spec
+        dot = 2.0 * self.k
+        return UopMix(loads=dot * (1.0 / s.reg_n + 1.0 / s.reg_m_vecs),
+                      stores=2.0, dot=dot)
+
+    def traffic(self, machine: MachineModel) -> LineTraffic:
+        caps = machine.capacities
+        n_levels = len(machine.levels) + 1
+        if len(caps) != n_levels:
+            raise ValueError(
+                f"machine {machine.name!r} declares {len(caps)} cache "
+                f"capacities; the blocked-matmul layer conditions need "
+                f"{n_levels} (one per prediction level short of memory)")
+        eb = self.spec.elem_bytes
+        bm, bn = min(self.bm, self.m), min(self.bn, self.n)
+        a_panel = bm * self.k * eb
+        b_full = self.k * self.n * eb
+        lines = [
+            (self.k / self.n if a_panel * self.safety <= c
+             else self.k / bn)
+            + (self.k / self.m if b_full * self.safety <= c
+               else self.k / bm)
+            for c in caps
+        ]
+        return LineTraffic(loads=np.asarray([lines], float),
+                           rfo=1.0, evicts=1.0, nt=0.0)
+
+    def bw_keys(self) -> tuple[str, ...]:
+        return (self.spec.name, "_compute")
+
+    def work_per_elem(self) -> tuple[int, int]:
+        return 2 * self.k, 1
+
+    def with_block(self, block) -> "MatmulWorkload":
+        bm, bn, bk = (int(x) for x in block)
+        return replace(self, bm=bm, bn=bn, bk=bk)
+
+
+@dataclass(frozen=True)
+class AttentionSpec:
+    """Flash-attention (online-softmax) family description.
+
+    uop accounting per cache line of O, canonical units: the QK^T and PV
+    contractions contribute ``4 * Sk_eff`` ``dot`` uops (each O element
+    costs ``2 * Sk_eff`` MACs); the softmax rides on the VPU/scalar ports
+    — ``exp_mul_uops``/``exp_add_uops`` model the exp() polynomial per
+    score, plus the running-max compare and sum.  The online-softmax
+    *rescale* (``acc *= alpha`` once per visited KV block) is the uop
+    overhead that shrinks with the KV block size — the knob
+    ``rank_attention_blocks`` trades against VMEM/cache fit.
+    """
+
+    name: str = "flash-attention"
+    elem_bytes: int = 4                 # f32
+    reg_q_vecs: int = 2                 # register tile, as MatmulSpec
+    reg_k: int = 6
+    exp_mul_uops: float = 4.0           # per score: exp() multiplies
+    exp_add_uops: float = 4.0           # per score: exp() adds
+
+
+@dataclass(frozen=True)
+class AttentionWorkload:
+    """Flash-attention tiles: ``O[sq,d] = softmax(Q K^T / sqrt(d)) V``
+    with q-blocks of ``bq`` rows streaming over KV blocks of ``bkv`` rows
+    (the ``kernels/attention`` grid; heads multiply the work, they do not
+    change the per-line model).
+
+    Unit of work: one cache line of O elements.  Traffic:
+
+    * **Q** is read once and stays resident through the KV loop — 1 line
+      per CL of O;
+    * **K, V** stream once per q-block: ``2*Sk_eff/bq`` lines per CL of
+      O, unless the whole KV set survives a cache level
+      (``2*skv*d*elem_bytes`` fits), where only the cold misses remain —
+      ``2*skv/sq`` lines;
+    * **O** is written once: the write-allocate + write-back pair
+      (running m/l statistics are a ``1/d`` fraction — neglected).
+
+    ``causal=True`` visits only ~half the KV blocks per q row
+    (``kv_fraction``), scaling both the contraction uops and the streamed
+    KV traffic.
+    """
+
+    spec: AttentionSpec
+    sq: int = 4096
+    skv: int = 4096
+    d: int = 128
+    bq: int = 512
+    bkv: int = 512
+    causal: bool = True
+    safety: float = COMPUTE_LC_SAFETY
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    def batch_names(self) -> tuple[str, ...]:
+        return (self.spec.name,)
+
+    def kv_fraction(self) -> float:
+        """Fraction of (q, kv) tile pairs the kernel visits under causal
+        masking.  The Pallas kernel skips a tile only when its *whole*
+        q block lies above the diagonal (``qi*bq + bq - 1 < ki*bkv``),
+        so coarsening either tile grows the visited fraction:
+        ``0.5 + max(bq, bkv) / (2*skv)`` (exact for power-of-two tilings
+        of square problems; 1.0 when one tile spans the sequence)."""
+        if not self.causal:
+            return 1.0
+        return min(1.0, 0.5 + max(self.bq, self.bkv) / (2.0 * self.skv))
+
+    def uops(self) -> UopMix:
+        s = self.spec
+        sk_eff = self.skv * self.kv_fraction()
+        dot = 4.0 * sk_eff                       # QK^T + PV contractions
+        score_vecs = 2.0 * sk_eff / self.d       # score vectors per CL of O
+        rescale = 2.0 * sk_eff / self.bkv        # acc *= alpha per KV block
+        return UopMix(
+            loads=dot * (1.0 / s.reg_k + 1.0 / s.reg_q_vecs),
+            stores=2.0,
+            mul=s.exp_mul_uops * score_vecs + rescale,
+            add=(s.exp_add_uops + 2.0) * score_vecs,
+            dot=dot)
+
+    def traffic(self, machine: MachineModel) -> LineTraffic:
+        caps = machine.capacities
+        n_levels = len(machine.levels) + 1
+        if len(caps) != n_levels:
+            raise ValueError(
+                f"machine {machine.name!r} declares {len(caps)} cache "
+                f"capacities; the attention KV reuse conditions need "
+                f"{n_levels}")
+        kv_bytes = 2 * self.skv * self.d * self.spec.elem_bytes
+        sk_eff = self.skv * self.kv_fraction()
+        lines = [
+            1.0 + (2.0 * self.skv / self.sq
+                   if kv_bytes * self.safety <= c
+                   else 2.0 * sk_eff / self.bq)
+            for c in caps
+        ]
+        return LineTraffic(loads=np.asarray([lines], float),
+                           rfo=1.0, evicts=1.0, nt=0.0)
+
+    def bw_keys(self) -> tuple[str, ...]:
+        return (self.spec.name, "_compute")
+
+    def work_per_elem(self) -> tuple[int, int]:
+        return int(round(4.0 * self.skv * self.kv_fraction())), 1
+
+    def with_block(self, block) -> "AttentionWorkload":
+        bq, bkv = (int(x) for x in block)
+        return replace(self, bq=bq, bkv=bkv)
+
+
+#: the shipped compute-bound specs (f32, Haswell-8x6-class register tile)
+MATMUL_F32 = MatmulSpec()
+FLASH_ATTENTION_F32 = AttentionSpec()
+
+
+# ---------------------------------------------------------------------------
 # Pre-lowered workloads (TPU step model and other direct records)
 # ---------------------------------------------------------------------------
 
@@ -555,4 +808,10 @@ def workload_registry() -> "dict[str, Workload]":
                              StencilWorkload(JACOBI2D, widths=(8192,)))
         WORKLOADS.setdefault("jacobi3d",
                              StencilWorkload(JACOBI3D, widths=(480, 480)))
+        # compute-bound families, bound to the kernels' default blockings
+        WORKLOADS.setdefault(
+            MATMUL_F32.name,
+            MatmulWorkload(MATMUL_F32, m=4096, n=4096, k=4096))
+        WORKLOADS.setdefault(FLASH_ATTENTION_F32.name,
+                             AttentionWorkload(FLASH_ATTENTION_F32))
     return WORKLOADS

@@ -1,4 +1,8 @@
-"""Jitted wrappers for the flash attention kernel (GQA-aware)."""
+"""Jitted wrappers for the flash attention kernel (GQA-aware), plus the
+bridge to the analytic side: :func:`attention_workload` builds the
+``repro.core.workload.AttentionWorkload`` matching this kernel's tiling,
+and :func:`tuned_blocks` asks the ECM autotuner for the ``(bq, bk)`` to
+pass back into :func:`flash_attention`."""
 from __future__ import annotations
 
 import functools
@@ -36,3 +40,23 @@ def flash_attention(q, k, v, *, causal=True, bq=K.DEFAULT_BQ, bk=K.DEFAULT_BK,
                                   causal=causal, interpret=interpret)
     out = call(qf, kf, vf)
     return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+def attention_workload(sq: int, sk: int, d: int, *, bq=K.DEFAULT_BQ,
+                       bk=K.DEFAULT_BK, causal: bool = True):
+    """The analytic ECM workload of this kernel at a given tiling (heads
+    multiply the work; they do not change the per-line model)."""
+    from repro.core.workload import FLASH_ATTENTION_F32, AttentionWorkload
+
+    return AttentionWorkload(FLASH_ATTENTION_F32, sq=sq, skv=sk, d=d,
+                             bq=min(bq, sq), bkv=min(bk, sk), causal=causal)
+
+
+def tuned_blocks(sq: int, sk: int, d: int, *, causal: bool = True,
+                 machine: str = "tpu-v5e") -> tuple[int, int]:
+    """ECM-autotuned ``(bq, bk)`` for :func:`flash_attention` on a
+    registry machine (candidates are tilings the kernel accepts)."""
+    from repro.core.autotune import rank_attention_blocks
+
+    return rank_attention_blocks((sq, sk, d), machine=machine,
+                                 causal=causal)[0]["block"]

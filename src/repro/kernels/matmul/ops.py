@@ -1,4 +1,8 @@
-"""Jitted wrapper for the blocked matmul Pallas kernel."""
+"""Jitted wrapper for the blocked matmul Pallas kernel, plus the bridge
+to the analytic side: :func:`matmul_workload` builds the
+``repro.core.workload.MatmulWorkload`` matching this kernel's grid
+blocking, and :func:`tuned_blocks` asks the ECM autotuner for the
+``(bm, bn, bk)`` to pass back into :func:`matmul`."""
 from __future__ import annotations
 
 import functools
@@ -19,3 +23,23 @@ def matmul(x, y, *, bm=K.DEFAULT_BM, bn=K.DEFAULT_BN, bk=K.DEFAULT_BK,
     call = K.matmul_call(m, n, k, x.dtype, bm=bm, bn=bn, bk=bk,
                          out_dtype=out_dtype, interpret=interpret)
     return call(x, y)
+
+
+def matmul_workload(m: int, n: int, k: int, *, bm=K.DEFAULT_BM,
+                    bn=K.DEFAULT_BN, bk=K.DEFAULT_BK):
+    """The analytic ECM workload of this kernel at a given blocking —
+    lower it on any registry machine (``repro.core.workload_ecm``) or
+    hand it to ``autotune.rank_workloads``."""
+    from repro.core.workload import MATMUL_F32, MatmulWorkload
+
+    return MatmulWorkload(MATMUL_F32, m=m, n=n, k=k,
+                          bm=min(bm, m), bn=min(bn, n), bk=min(bk, k))
+
+
+def tuned_blocks(m: int, n: int, k: int, *,
+                 machine: str = "tpu-v5e") -> tuple[int, int, int]:
+    """ECM-autotuned ``(bm, bn, bk)`` for :func:`matmul` on a registry
+    machine (candidates are restricted to tilings the kernel accepts)."""
+    from repro.core.autotune import rank_matmul_blocks
+
+    return rank_matmul_blocks((m, n, k), machine=machine)[0]["block"]

@@ -1,0 +1,489 @@
+"""Compute-bound workload families: blocked matmul + flash attention.
+
+Pinned here:
+
+1. **Traffic law** — the blocked-GEMM layer conditions (``K/bn + K/bm``
+   streamed panels vs ``K/N + K/M`` resident ones) and the attention KV
+   reuse condition produce the hand-derived per-edge line counts, and
+   they move with the *machine's* capacities.
+2. **In-core routing** — contraction MACs (``UopMix.dot``) run on the FMA
+   ports on CPUs (hitting exactly the SP FMA peak on Haswell), decompose
+   into mul+add on the no-FMA Sandy Bridge, and retire at the MXU
+   systolic rate on the tpu-v5e hierarchy view (``T_OL`` = flops /
+   peak_f32 exactly).
+3. **Eq. 1 from the non-saturated side** — both families are core-bound:
+   the prediction equals ``T_OL`` at every residence level, and golden
+   Haswell models are pinned bit-identical
+   (``tests/golden_haswell_ecm.json``).
+4. **Autotuners** — ``rank_matmul_blocks`` / ``rank_attention_blocks``
+   rank through the generic ``rank_workloads`` path, and the chosen
+   blockings drive the real Pallas kernels (interpret mode) to
+   oracle-identical results.
+5. **Bench-regression gate** — ``tools/check_bench.py --compare`` passes
+   on identical artifacts, ignores wall-clock drift, and fails (exit 1)
+   on injected model-prediction drift beyond ``--rtol``.
+"""
+import importlib.util
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FLASH_ATTENTION_F32,
+    HASWELL_EP,
+    MACHINES,
+    MATMUL_F32,
+    SANDY_BRIDGE_EP,
+    SKYLAKE_SP,
+    TPU_V5E,
+    TPU_V5E_HIERARCHY,
+    AttentionWorkload,
+    MatmulWorkload,
+    get_machine,
+    route_traffic,
+    workload_ecm,
+    workload_registry,
+)
+from repro.core.autotune import (
+    attention_block_candidates,
+    matmul_block_candidates,
+    rank_attention_blocks,
+    rank_matmul_blocks,
+)
+
+GOLDEN = json.loads(
+    (Path(__file__).parent / "golden_haswell_ecm.json").read_text())
+
+MM = MatmulWorkload(MATMUL_F32, m=4096, n=4096, k=4096)
+ATT = AttentionWorkload(FLASH_ATTENTION_F32)
+
+
+# ---------------------------------------------------------------------------
+# 1. Traffic law
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_streamed_panel_traffic():
+    """Neither panel survives Haswell's L1/L2 at the default blocking:
+    K/bn (A) + K/bm (B) lines per CL of C, plus the C store pair."""
+    t = MM.traffic(HASWELL_EP)
+    k, bm, bn = MM.k, MM.bm, MM.bn
+    assert t.loads[0, 0] == k / bn + k / bm == 32.0
+    assert t.loads[0, 1] == 32.0
+    assert t.rfo[0] == 1.0 and t.evicts[0] == 1.0 and t.nt[0] == 0.0
+
+
+def test_matmul_a_panel_layer_condition():
+    """bm=512 makes the A panel (bm*K*4 B = 8 MB) fit the 17.5 MB L3
+    (safety 2): A drops to K/N = 1 line at the memory edge while B still
+    streams at K/bm."""
+    w = MM.with_block((512, 1024, 512))
+    t = w.traffic(HASWELL_EP)
+    assert t.loads[0, 2] == MM.k / MM.n + MM.k / 512 == 9.0
+    # bm=1024: the 16 MB panel no longer fits half the LLC slice
+    t2 = MM.with_block((1024, 512, 512)).traffic(HASWELL_EP)
+    assert t2.loads[0, 2] == MM.k / 512 + MM.k / 1024 == 12.0
+
+
+def test_matmul_lc_moves_with_machine_capacities():
+    """The same workload holds the A panel in SKX's big L2 slice only
+    where the capacities allow: per-machine traffic, one code path."""
+    small = MatmulWorkload(MATMUL_F32, m=512, n=512, k=512, bm=128, bn=128)
+    hsw = small.traffic(HASWELL_EP)    # A panel 128*512*4 = 256 KiB
+    skx = small.traffic(SKYLAKE_SP)    # SKX L2 = 1 MiB holds it (safety 2)
+    assert hsw.loads[0, 1] == 512 / 128 + 512 / 128      # both streamed
+    assert skx.loads[0, 1] == 512 / 512 + 512 / 128      # A resident in L2
+
+
+def test_matmul_blocking_changes_mem_traffic_not_uops():
+    u1, u2 = MM.uops(), MM.with_block((32, 32, 512)).uops()
+    assert u1 == u2
+    t1 = MM.traffic(HASWELL_EP).loads[0, 0]
+    t2 = MM.with_block((32, 32, 512)).traffic(HASWELL_EP).loads[0, 0]
+    assert t2 == 4096 / 32 * 2 > t1
+    # the tiny A panel (32 rows) goes L3-resident: K/N + K/bm at the edge
+    t2_mem = MM.with_block((32, 32, 512)).traffic(HASWELL_EP).loads[0, -1]
+    assert t2_mem == 4096 / 4096 + 4096 / 32
+
+
+def test_attention_kv_reuse_condition():
+    """KV (2*4096*128*4 B = 4 MB) fits Haswell's L3 slice but not L1/L2:
+    streamed 2*Sk_eff/bq lines above, cold 2*skv/sq lines below."""
+    t = ATT.traffic(HASWELL_EP)
+    sk_eff = ATT.skv * ATT.kv_fraction()
+    assert t.loads[0, 0] == pytest.approx(1.0 + 2.0 * sk_eff / ATT.bq)
+    assert t.loads[0, 2] == pytest.approx(1.0 + 2.0 * ATT.skv / ATT.sq)
+    assert t.rfo[0] == 1.0 and t.evicts[0] == 1.0
+
+
+def test_attention_causal_fraction():
+    assert ATT.kv_fraction() == pytest.approx(0.5 + 512 / 8192)
+    full = AttentionWorkload(FLASH_ATTENTION_F32, causal=False)
+    assert full.kv_fraction() == 1.0
+    # non-causal doubles the contractions (up to the block-diagonal term)
+    assert full.uops().dot == pytest.approx(4.0 * full.skv)
+    assert ATT.uops().dot < full.uops().dot
+
+
+def test_attention_causal_fraction_matches_kernel_block_skip():
+    """The Pallas kernel visits a tile unless the whole q block is above
+    the diagonal (``qi*bq + bq - 1 < ki*bkv``): count the visited block
+    pairs exactly and compare with the model's kv_fraction."""
+    for bq, bkv in ((2048, 128), (128, 2048), (512, 512), (4096, 4096)):
+        w = AttentionWorkload(FLASH_ATTENTION_F32, bq=bq, bkv=bkv)
+        visited = sum(1
+                      for qi in range(w.sq // bq)
+                      for ki in range(w.skv // bkv)
+                      if qi * bq + bq - 1 >= ki * bkv)
+        total = (w.sq // bq) * (w.skv // bkv)
+        assert w.kv_fraction() == pytest.approx(visited / total), (bq, bkv)
+
+
+def test_attention_rescale_overhead_shrinks_with_kv_block():
+    """The online-softmax rescale is the bkv knob: fewer KV passes, fewer
+    acc *= alpha multiplies (causal factor held fixed here)."""
+    small = AttentionWorkload(FLASH_ATTENTION_F32, causal=False, bkv=128)
+    large = AttentionWorkload(FLASH_ATTENTION_F32, causal=False, bkv=2048)
+    assert small.uops().mul > large.uops().mul
+    assert small.uops().dot == large.uops().dot
+
+
+def test_compute_families_route_through_hierarchy_semantics():
+    """No-write-allocate routing applies to the families like any other
+    workload: the C/O store pair becomes an NT stream on the TPU."""
+    routed = route_traffic(TPU_V5E_HIERARCHY, MM.traffic(TPU_V5E_HIERARCHY))
+    hbm_in = routed.load_lines[0, -1]
+    hbm_out = routed.evict_lines[0, -1]
+    assert hbm_out == 1.0                      # write-back turned NT stream
+    assert hbm_in == 2.0                       # A + B resident in VMEM
+
+
+# ---------------------------------------------------------------------------
+# 2. In-core routing of contraction MACs
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_hits_fma_peak_on_haswell():
+    """T_OL = K cycles per CL of C = exactly the SP FMA peak (2 ports x
+    8 f32 lanes x 2 flops); the register tile keeps loads non-binding
+    (arXiv:1511.03639's Haswell DGEMM structure)."""
+    e = workload_ecm(MM, HASWELL_EP)
+    assert e.t_ol == MM.k
+    assert e.t_nol < e.t_ol
+    elems = HASWELL_EP.line_bytes // MATMUL_F32.elem_bytes
+    flops_per_cl = elems * 2 * MM.k
+    assert flops_per_cl / e.prediction("Mem") == pytest.approx(
+        HASWELL_EP.flops_per_cycle_sp)
+
+
+def test_dot_uops_decompose_on_no_fma_machine():
+    """Sandy Bridge has no FMA units: each contraction MAC splits into a
+    multiply and an add uop — T_OL doubles (add-port bound)."""
+    hsw = workload_ecm(MM, HASWELL_EP)
+    snb = workload_ecm(MM, SANDY_BRIDGE_EP)
+    assert snb.t_ol == 2 * hsw.t_ol
+
+
+def test_mxu_replaces_fma_ports_on_tpu():
+    """On the tpu-v5e view the dot uops retire at the MXU systolic rate:
+    T_OL equals flops / peak_f32 in core cycles, not the VPU rate."""
+    e = workload_ecm(MM, "tpu-v5e")
+    flops_per_row = 128 * 2 * MM.k
+    want = flops_per_row / (TPU_V5E.peak_f32_flops / TPU_V5E.clock_hz)
+    assert e.t_ol == pytest.approx(want)
+    # the VPU rate would be ~100x slower for the same uop count
+    vpu_cycles = MM.uops().dot / 8.0
+    assert e.t_ol < vpu_cycles / 50
+
+
+def test_attention_softmax_rides_the_vpu_on_tpu():
+    """The QK/PV contractions hit the MXU but the online-softmax
+    mul/add stay on the VPU — on the TPU the exp/rescale overhead, not
+    the MACs, binds T_OL (the small-d flash-attention reality)."""
+    e = workload_ecm(ATT, "tpu-v5e")
+    u = ATT.uops()
+    mxu = TPU_V5E_HIERARCHY.ports.mxu_vectors_per_cycle
+    assert e.t_ol == pytest.approx(max(u.dot / mxu, (u.mul + u.add) / 8.0))
+    assert (u.mul + u.add) / 8.0 > u.dot / mxu
+
+
+# ---------------------------------------------------------------------------
+# 3. Core-bound composition + golden pins
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("workload", [MM, ATT], ids=["matmul", "attention"])
+@pytest.mark.parametrize("machine", sorted(MACHINES))
+def test_core_bound_on_every_machine(workload, machine):
+    """T_OL hides the whole transfer chain at the registry sizes: the
+    prediction equals T_core at every residence level — Eq. 1 exercised
+    from the non-saturated side on the full zoo."""
+    e = workload_ecm(workload, machine)
+    assert e.t_ol > e.t_nol
+    for p in e.predictions():
+        assert p == pytest.approx(e.t_ol)
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN["compute"]))
+def test_compute_bit_equal_to_golden(key):
+    rec = GOLDEN["compute"][key]
+    name, dims, blk = key.split("@")
+    block = tuple(int(x) for x in blk.removeprefix("blk").split(","))
+    if name == "matmul":
+        m, n, k = (int(x) for x in dims.split("x"))
+        w = MatmulWorkload(MATMUL_F32, m=m, n=n, k=k).with_block(block)
+    else:
+        sq, rest = dims.split("x", 1)
+        skv, d = rest.split("xd")
+        w = AttentionWorkload(FLASH_ATTENTION_F32, sq=int(sq), skv=int(skv),
+                              d=int(d)).with_block(block)
+    mdl = workload_ecm(w, "haswell-ep")
+    assert mdl.t_ol.hex() == rec["t_ol"]
+    assert mdl.t_nol.hex() == rec["t_nol"]
+    assert [t.hex() for t in mdl.transfers] == rec["transfers"]
+    assert [p.hex() for p in mdl.predictions()] == rec["predictions"]
+
+
+def test_registry_includes_compute_families():
+    reg = workload_registry()
+    assert {"matmul", "flash-attention"}.issubset(reg)
+    assert len(reg) >= 14
+
+
+# ---------------------------------------------------------------------------
+# 4. Autotuners + Pallas kernel validation
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_candidates_divide_dims():
+    for bm, bn, bk in matmul_block_candidates(4096, 2048, 1024):
+        assert 4096 % bm == 0 and 2048 % bn == 0 and 1024 % bk == 0
+
+
+def test_rank_matmul_blocks_prefers_core_bound_tiles():
+    ranked = rank_matmul_blocks((4096, 4096, 4096), machine="haswell-ep")
+    best, worst = ranked[0], ranked[-1]
+    assert best["core_bound"] and best["t_ecm"] <= worst["t_ecm"]
+    assert worst["block"][:2] == (32, 32) and not worst["core_bound"]
+    assert best["mem_lines"] < worst["mem_lines"]
+    # ties among core-bound candidates break toward the largest tile
+    assert best["block"][:2] == (1024, 1024)
+
+
+def test_rank_attention_blocks_fit_constraint():
+    ranked = rank_attention_blocks((4096, 4096, 128), machine="haswell-ep")
+    fitting = [r["fits"] for r in ranked]
+    # all fitting candidates rank before any non-fitting one
+    assert fitting == sorted(fitting, reverse=True)
+    assert ranked[0]["fits"]
+    cap = max(get_machine("haswell-ep").capacities)
+    assert ranked[0]["tile_bytes"] * 2 <= cap
+
+
+def test_attention_candidates_divide_dims():
+    for bq, bkv in attention_block_candidates(2048, 4096):
+        assert 2048 % bq == 0 and 4096 % bkv == 0
+
+
+def test_tuned_blocks_drive_pallas_matmul_to_oracle():
+    """The tuner's pick is directly usable by the Pallas kernel and
+    produces oracle-identical results in interpret mode."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.matmul import ops as mm_ops, ref as mm_ref
+
+    dim = 256
+    bm, bn, bk = mm_ops.tuned_blocks(dim, dim, dim)
+    assert dim % bm == 0 and dim % bn == 0 and dim % bk == 0
+    kx, ky = jax.random.split(jax.random.key(1))
+    x = jax.random.normal(kx, (dim, dim), jnp.float32)
+    y = jax.random.normal(ky, (dim, dim), jnp.float32)
+    got = mm_ops.matmul(x, y, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(mm_ref.matmul(x, y)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_tuned_blocks_drive_pallas_attention_to_oracle():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.attention import ops as att_ops, ref as att_ref
+
+    sq = sk = 256
+    d = 64
+    bq, bkv = att_ops.tuned_blocks(sq, sk, d, machine="haswell-ep")
+    assert sq % bq == 0 and sk % bkv == 0
+    kq, kk, kv = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(kq, (1, sq, 1, d), jnp.float32)
+    k = jax.random.normal(kk, (1, sk, 1, d), jnp.float32)
+    v = jax.random.normal(kv, (1, sk, 1, d), jnp.float32)
+    got = att_ops.flash_attention(q, k, v, causal=True, bq=bq, bk=bkv,
+                                  interpret=True)
+    flat = lambda t: t.transpose(0, 2, 1, 3).reshape(1, sq, d)
+    want = att_ref.attention(flat(q), flat(k), flat(v), causal=True)
+    want = want.reshape(1, 1, sq, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_matmul_workload_matches_kernel_blocking():
+    from repro.kernels.matmul.ops import matmul_workload
+
+    w = matmul_workload(512, 512, 512, bm=128, bn=128, bk=128)
+    assert (w.bm, w.bn, w.bk) == (128, 128, 128)
+    assert w.m == 512
+
+
+# ---------------------------------------------------------------------------
+# Simulator: the compute-bound path
+# ---------------------------------------------------------------------------
+
+
+def test_simulator_compute_bound_path():
+    """Long-T_OL kernels sustain fma_sustained_eff of the light-speed
+    rate at every residence level; short-T_OL kernels are untouched."""
+    from repro.simcache import simulate_workloads_batch
+    from repro.simcache.sim import DEFAULT_PARAMS, SimParams
+
+    names, table = simulate_workloads_batch([MM], "haswell-ep")
+    want = MM.k / DEFAULT_PARAMS.fma_sustained_eff
+    np.testing.assert_allclose(table, want)
+
+    # disabling the effect recovers the light-speed core bound (up to the
+    # small L2/front-end penalties, < 1% at this T_OL)
+    off = SimParams(fma_sustained_eff=1.0)
+    _, table_off = simulate_workloads_batch([MM], "haswell-ep", params=off)
+    assert np.all(table_off >= MM.k)
+    assert np.all(table_off <= MM.k * 1.01)
+
+
+def test_simulator_passes_through_prelowered_records():
+    """The cycles-denominated FMA derate must not touch pre-lowered
+    records whose times are in their own units (the TPU step model is
+    microseconds per step): they simulate at the light-speed prediction."""
+    from repro.core.tpu_ecm import TPUStepECM
+    from repro.core.workload import lower, tpu_step_workload
+    from repro.simcache import simulate_workloads_batch
+
+    step = tpu_step_workload(
+        TPUStepECM(name="big", t_comp=2e-4, t_hbm=5e-5, t_ici=0.0))
+    _, table = simulate_workloads_batch([step], "tpu-v5e")
+    want = lower(step, "tpu-v5e").batch.predictions()
+    np.testing.assert_array_equal(table, want)
+
+
+def test_simulator_streams_unaffected_by_compute_path():
+    """The threshold keeps every Table I / stencil kernel identical to
+    the pre-compute-path simulator (their T_OL <= 6 cycles)."""
+    from repro.core import BENCHMARKS, StreamWorkload
+    from repro.simcache import simulate_workloads_batch
+    from repro.simcache.sim import SimParams
+
+    ws = [StreamWorkload(s) for s in BENCHMARKS.values()]
+    _, with_eff = simulate_workloads_batch(ws, "haswell-ep")
+    _, without = simulate_workloads_batch(
+        ws, "haswell-ep", params=SimParams(fma_sustained_eff=1.0))
+    np.testing.assert_array_equal(with_eff, without)
+
+
+# ---------------------------------------------------------------------------
+# 5. The bench-regression gate
+# ---------------------------------------------------------------------------
+
+
+def _load_check_bench():
+    path = Path(__file__).parent.parent / "tools" / "check_bench.py"
+    spec = importlib.util.spec_from_file_location("check_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+MINI_COMPUTE = {
+    "schema": 2, "suite": "compute", "machine": "haswell-ep",
+    "matmul": {
+        "dims": [64, 64, 64],
+        "ecm": {"levels": ["L1", "L2", "L3", "Mem"],
+                "input_notation": "{64 || 43 | 1 | 2 | 3}",
+                "predictions": [64.0, 64.0, 64.0, 64.0],
+                "t_ol": 64.0, "t_nol": 43.0, "core_bound": True},
+        "blocking": {"ranked": [{"block": [64, 64, 64], "t_ecm": 64.0,
+                                 "core_bound": True, "mem_lines": 4.0,
+                                 "speedup_vs_min_block": 1.0}],
+                     "best": {"block": [64, 64, 64]}},
+    },
+    "attention": {
+        "dims": [64, 64, 16], "causal": True,
+        "ecm": {"levels": ["L1", "L2", "L3", "Mem"],
+                "input_notation": "{a}", "predictions": [1.0, 2.0, 3.0, 4.0],
+                "t_ol": 1.0, "t_nol": 0.5, "core_bound": False},
+        "blocking": {"ranked": [{"block": [64, 64], "t_ecm": 4.0,
+                                 "fits": True, "core_bound": False,
+                                 "tile_bytes": 1024}],
+                     "best": {"block": [64, 64]}},
+    },
+    "kernels": {
+        "matmul": {"shape": [64, 64, 64], "block": [64, 64, 64],
+                   "max_abs_err": 0.0, "matches_ref": True, "wall_s": 0.1},
+        "attention": {"shape": [1, 64, 1, 16], "block": [64, 64],
+                      "max_abs_err": 0.0, "matches_ref": True,
+                      "wall_s": 0.1},
+    },
+}
+
+
+def test_check_bench_gate_passes_and_fails_on_drift(tmp_path, capsys):
+    cb = _load_check_bench()
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(MINI_COMPUTE))
+
+    fresh = tmp_path / "fresh.json"
+    fresh.write_text(json.dumps(MINI_COMPUTE))
+    assert cb.main([str(fresh), "--compare", str(base)]) == 0
+
+    # wall-clock drift is volatile: ignored at any magnitude
+    noisy = json.loads(json.dumps(MINI_COMPUTE))
+    noisy["kernels"]["matmul"]["wall_s"] *= 50
+    fresh.write_text(json.dumps(noisy))
+    assert cb.main([str(fresh), "--compare", str(base)]) == 0
+
+    # >rtol model-prediction drift fails the gate
+    drift = json.loads(json.dumps(MINI_COMPUTE))
+    drift["matmul"]["ecm"]["predictions"][3] *= 1.2
+    fresh.write_text(json.dumps(drift))
+    assert cb.main([str(fresh), "--compare", str(base), "--rtol",
+                    "0.05"]) == 1
+    assert "predictions[3]" in capsys.readouterr().err
+
+    # ...unless the tolerance allows it
+    fresh.write_text(json.dumps(drift))
+    assert cb.main([str(fresh), "--compare", str(base), "--rtol",
+                    "0.5"]) == 0
+
+
+def test_check_bench_gate_catches_missing_fields(tmp_path, capsys):
+    cb = _load_check_bench()
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(MINI_COMPUTE))
+    dropped = json.loads(json.dumps(MINI_COMPUTE))
+    del dropped["matmul"]["blocking"]["ranked"][0]["mem_lines"]
+    fresh = tmp_path / "fresh.json"
+    fresh.write_text(json.dumps(dropped))
+    assert cb.main([str(fresh), "--compare", str(base)]) == 1
+    assert "mem_lines" in capsys.readouterr().err
+
+
+def test_check_bench_validates_compute_schema(tmp_path):
+    cb = _load_check_bench()
+    good = tmp_path / "BENCH_compute.json"
+    good.write_text(json.dumps(MINI_COMPUTE))
+    assert cb.main([str(good)]) == 0
+    broken = json.loads(json.dumps(MINI_COMPUTE))
+    del broken["matmul"]["ecm"]["predictions"]
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(broken))
+    assert cb.main([str(bad)]) == 1

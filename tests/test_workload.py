@@ -107,7 +107,8 @@ def test_engine_view_equals_spec_view_bitwise():
 def test_registry_is_populated():
     reg = workload_registry()
     assert set(BENCHMARKS).issubset(reg)
-    assert {"triad_update", "jacobi2d", "jacobi3d"}.issubset(reg)
+    assert {"triad_update", "jacobi2d", "jacobi3d",
+            "matmul", "flash-attention"}.issubset(reg)
     assert {"haswell-ep", "sandy-bridge-ep", "broadwell-ep", "skylake-sp",
             "tpu-v5e"}.issubset(machine_names())
     # >= 3 machines beyond the original pair, incl. a non-inclusive LLC

@@ -1,8 +1,10 @@
 #!/usr/bin/env python3
-"""BENCH artifact check: stdlib JSON-schema validation for the
-perf-trajectory files emitted by ``benchmarks/run.py --json``.
+"""BENCH artifact check: stdlib JSON-schema validation *and* the bench-
+regression gate for the perf-trajectory files emitted by
+``benchmarks/run.py --json``.
 
     python tools/check_bench.py [files...]      # default: BENCH_*.json
+    python tools/check_bench.py NEW.json --compare BASELINE.json [--rtol R]
 
 Every artifact shares one envelope (``schema`` version, ``suite``,
 ``machine``) plus a per-suite payload; this checker pins the field names
@@ -11,17 +13,26 @@ that silently drops or renames a field fails CI instead of producing
 holes in the perf history.  Legacy ``schema: 1`` files (no envelope) are
 accepted — the suite is inferred from their distinctive payload keys.
 
+``--compare`` is the CI regression gate: it diffs a freshly generated
+artifact against the committed baseline, failing when any *deterministic*
+value (model predictions, ranked blockings, traffic counts, bit-equality
+flags) drifts beyond ``--rtol`` or disappears.  Wall-clock-derived fields
+(``wall``/``*_s``/``per_s``/throughput ratios/measured overlap fractions)
+are volatile by nature and excluded — the gate guards the *model*, not
+the runner's machine of the day.
+
 Exit code 0 when clean, 1 with a per-finding report otherwise.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 
-SUITES = ("stream", "stencil", "tpu")
+SUITES = ("stream", "stencil", "compute", "tpu")
 
 #: minimal spec language: {key: type | (type, predicate) | dict (nested) |
 #: [element_spec] (non-empty list) | callable(value) -> error or None}
@@ -100,11 +111,63 @@ TPU_SPEC = {
     "zoo": dict,
 }
 
-SPECS = {"stream": STREAM_SPEC, "stencil": STENCIL_SPEC, "tpu": TPU_SPEC}
+_ECM_DETAIL = {
+    "levels": list,
+    "input_notation": str,
+    "predictions": list,
+    "t_ol": (NUM, _positive),
+    "t_nol": NUM,
+    "core_bound": bool,
+}
+
+COMPUTE_SPEC = {
+    "matmul": {
+        "dims": list,
+        "ecm": _ECM_DETAIL,
+        "blocking": {
+            "ranked": [{
+                "block": list,
+                "t_ecm": (NUM, _positive),
+                "core_bound": bool,
+                "mem_lines": (NUM, _positive),
+                "speedup_vs_min_block": (NUM, _positive),
+            }],
+            "best": dict,
+        },
+    },
+    "attention": {
+        "dims": list,
+        "causal": bool,
+        "ecm": _ECM_DETAIL,
+        "blocking": {
+            "ranked": [{
+                "block": list,
+                "t_ecm": (NUM, _positive),
+                "fits": bool,
+                "core_bound": bool,
+                "tile_bytes": (int, _positive),
+            }],
+            "best": dict,
+        },
+    },
+    "kernels": {
+        "matmul": {
+            "shape": list, "block": list, "max_abs_err": NUM,
+            "matches_ref": bool, "wall_s": (NUM, _positive),
+        },
+        "attention": {
+            "shape": list, "block": list, "max_abs_err": NUM,
+            "matches_ref": bool, "wall_s": (NUM, _positive),
+        },
+    },
+}
+
+SPECS = {"stream": STREAM_SPEC, "stencil": STENCIL_SPEC,
+         "compute": COMPUTE_SPEC, "tpu": TPU_SPEC}
 
 #: distinctive payload keys for suite inference on legacy (schema 1) files
 SUITE_HINTS = (("model_eval", "stream"), ("sweep", "stencil"),
-               ("zoo", "tpu"))
+               ("matmul", "compute"), ("zoo", "tpu"))
 
 
 def check_value(path: str, value, spec, problems: list[str]) -> None:
@@ -176,15 +239,108 @@ def check_file(path: Path) -> list[str]:
     return problems
 
 
+# ---------------------------------------------------------------------------
+# The bench-regression gate (--compare): deterministic values only
+# ---------------------------------------------------------------------------
+
+#: path segments whose values depend on the runner's wall clock / machine
+#: rather than on the model: never compared across runs.
+VOLATILE_PARTS = ("wall", "per_s", "throughput", "reduction", "exposed",
+                  "err")
+#: exact key names that are wall-clock-derived even though similarly named
+#: fields elsewhere are deterministic (``speedup_vs_unblocked`` is a model
+#: ratio; the fused-pipeline ``speedup`` is measured).
+VOLATILE_KEYS = frozenset({"speedup"})
+
+
+def _is_volatile(key: str) -> bool:
+    k = key.lower()
+    return (k in VOLATILE_KEYS or k.endswith("_s")
+            or any(p in k for p in VOLATILE_PARTS))
+
+
+def _rel_close(a: float, b: float, rtol: float) -> bool:
+    return abs(a - b) <= rtol * max(abs(a), abs(b), 1e-300)
+
+
+def compare_values(path: str, new, base, rtol: float,
+                   problems: list[str]) -> None:
+    """Recursive diff of the deterministic (model-derived) leaves."""
+    if isinstance(base, dict):
+        if not isinstance(new, dict):
+            problems.append(f"{path}: object became {type(new).__name__}")
+            return
+        for k in sorted(set(base) | set(new)):
+            if _is_volatile(k):
+                continue
+            sub = f"{path}.{k}"
+            if k not in new:
+                problems.append(f"{sub}: missing from new artifact")
+            elif k not in base:
+                problems.append(f"{sub}: not in baseline (schema drift — "
+                                f"regenerate the committed baseline)")
+            else:
+                compare_values(sub, new[k], base[k], rtol, problems)
+    elif isinstance(base, list):
+        if not isinstance(new, list):
+            problems.append(f"{path}: array became {type(new).__name__}")
+            return
+        if len(new) != len(base):
+            problems.append(f"{path}: length {len(base)} -> {len(new)}")
+            return
+        for i, (nv, bv) in enumerate(zip(new, base)):
+            compare_values(f"{path}[{i}]", nv, bv, rtol, problems)
+    elif isinstance(base, bool) or isinstance(new, bool):
+        if new != base:
+            problems.append(f"{path}: {base} -> {new}")
+    elif isinstance(base, (int, float)) and isinstance(new, (int, float)):
+        if not _rel_close(float(new), float(base), rtol):
+            drift = (float(new) - float(base)) / max(abs(float(base)), 1e-300)
+            problems.append(f"{path}: {base} -> {new} "
+                            f"({drift:+.2%} > rtol {rtol:.2%})")
+    elif new != base:
+        problems.append(f"{path}: {base!r} -> {new!r}")
+
+
+def compare_files(new_path: Path, base_path: Path, rtol: float) -> list[str]:
+    problems: list[str] = []
+    try:
+        new = json.loads(new_path.read_text(encoding="utf-8"))
+        base = json.loads(base_path.read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"compare: unreadable JSON ({e})"]
+    compare_values(new_path.name, new, base, rtol, problems)
+    return problems
+
+
 def main(argv: list[str]) -> int:
-    if argv:
-        files = [Path(a).resolve() for a in argv]
+    ap = argparse.ArgumentParser(
+        description="BENCH artifact schema check + regression gate")
+    ap.add_argument("files", nargs="*",
+                    help="artifacts to validate (default: BENCH_*.json)")
+    ap.add_argument("--compare", metavar="BASELINE", default=None,
+                    help="regression gate: diff the single given artifact "
+                         "against this baseline (deterministic fields only)")
+    ap.add_argument("--rtol", type=float, default=0.05,
+                    help="relative drift tolerance for --compare "
+                         "(default: 0.05)")
+    args = ap.parse_args(argv)
+
+    if args.files:
+        files = [Path(a).resolve() for a in args.files]
     else:
         files = sorted(ROOT.glob("BENCH_*.json"))
     if not files:
         print("check_bench: no BENCH_*.json artifacts found", file=sys.stderr)
         return 1
+    if args.compare and len(files) != 1:
+        print("check_bench: --compare takes exactly one artifact to diff",
+              file=sys.stderr)
+        return 1
+    baseline = Path(args.compare).resolve() if args.compare else None
     missing = [f for f in files if not f.exists()]
+    if baseline is not None and not baseline.exists():
+        missing.append(baseline)
     if missing:
         for f in missing:
             print(f"missing file: {f}", file=sys.stderr)
@@ -192,12 +348,18 @@ def main(argv: list[str]) -> int:
     problems: list[str] = []
     for f in files:
         problems += check_file(f)
+    if baseline is not None:
+        problems += check_file(baseline)
+        problems += compare_files(files[0], baseline, args.rtol)
     if problems:
         print("\n".join(problems), file=sys.stderr)
         print(f"\ncheck_bench: {len(problems)} problem(s) in "
               f"{len(files)} file(s)", file=sys.stderr)
         return 1
-    print(f"check_bench: {len(files)} artifact(s) clean")
+    what = (f"{files[0].name} vs baseline {baseline.name} "
+            f"(rtol {args.rtol:.2%})" if baseline is not None
+            else f"{len(files)} artifact(s)")
+    print(f"check_bench: {what} clean")
     return 0
 
 
