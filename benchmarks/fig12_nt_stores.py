@@ -8,7 +8,7 @@ speedups *exactly* (1.42x / 1.32x, as inferred in the paper's text).
 """
 from __future__ import annotations
 
-from repro.core import BENCHMARKS, haswell_ecm
+from repro.core import haswell_ecm
 
 from .util import fmt, pred_str, table
 

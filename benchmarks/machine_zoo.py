@@ -34,10 +34,21 @@ def zoo_payload(machines=None) -> dict:
     return out
 
 
+def saturation_zoo_payload(machines=None) -> dict:
+    """The cross-zoo Eq. 2 table (every registered machine x every
+    registered workload): per-domain and per-chip saturation points
+    through the registry scaling engine."""
+    from repro.core import saturation_table
+
+    return saturation_table(machines=machines)
+
+
 def run(machine: str | None = None) -> str:
     from repro.core import get_machine, machine_names
 
-    machines = [machine] if machine else list(machine_names())
+    # resolve aliases once: payloads key by canonical machine name
+    machines = ([get_machine(machine).name] if machine
+                else list(machine_names()))
     payload = zoo_payload(machines)
     out = []
 
@@ -48,6 +59,20 @@ def run(machine: str | None = None) -> str:
         rows.append([n] + [fmt(payload[m][n]["t_ecm_mem"], 1)
                            for m in machines])
     out.append("== T_ECM at the memory level (cy per unit of work) ==")
+    out.append(table(["workload"] + machines, rows))
+
+    # cross-zoo Eq. 2: saturation points per (workload x machine) — the
+    # chip-level story of the same registry grid (core-bound families
+    # report the full chip: they never hit the shared bottleneck)
+    sat = saturation_zoo_payload(machines)
+    rows = []
+    for n in names:
+        rows.append([n] + [
+            f"{sat[m][n]['n_sat_chip']}"
+            + ("*" if sat[m][n]["core_bound"] else "")
+            for m in machines])
+    out.append("\n== Eq. 2 chip saturation points "
+               "(* = core-bound: linear to the full chip) ==")
     out.append(table(["workload"] + machines, rows))
 
     # per-machine detail: full prediction notation

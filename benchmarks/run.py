@@ -7,10 +7,11 @@ runner for all kernel families.
     PYTHONPATH=src python -m benchmarks.run --json --suite stencil
     PYTHONPATH=src python -m benchmarks.run --only machine_zoo --machine skylake-sp
 
-``--suite {stream,stencil,compute,tpu}`` selects a kernel family
-(default: all sections); ``--machine`` picks a registry machine for the
-sections and artifacts that are machine-parameterized (the zoo table, the
-stencil sweep, the compute blocking sweeps, the model-eval throughput
+``--suite {stream,stencil,compute,scaling,tpu}`` selects a kernel family
+or the chip-level suite (default: all sections); ``--machine`` picks a
+registry machine for the sections and artifacts that are
+machine-parameterized (the zoo table, the stencil sweep, the compute
+blocking sweeps, the scaling/energy grids, the model-eval throughput
 grid).
 
 ``--json`` skips the report sections and emits the perf-trajectory
@@ -20,8 +21,11 @@ artifact for the selected suite instead, in one shared BENCH schema
 ``BENCH_pipeline.json`` (stream: pipelined wall-clock + model-eval
 throughput), ``BENCH_stencil.json`` (stencil: LC sweep + blocking +
 kernel equality), ``BENCH_compute.json`` (compute: matmul/attention ECM +
-block rankings + interpret-mode kernel validation) and ``BENCH_tpu.json``
-(TPU: pipeline timings + the tpu-v5e zoo predictions).  Field names are
+block rankings + interpret-mode kernel validation),
+``BENCH_scaling.json`` (chip level: Eq. 2 saturation table, Figs. 5/6
+energy/EDP grids + optimal operating points, TPU DP scaling) and
+``BENCH_tpu.json`` (TPU: pipeline timings + the tpu-v5e zoo
+predictions).  Field names are
 stable across schema bumps so trajectories remain comparable; the CI
 regression gate diffs fresh artifacts against the committed baselines
 with ``tools/check_bench.py --compare``.
@@ -35,17 +39,14 @@ import time
 
 from . import (
     compute_bench,
-    fig10_scaling,
     fig11_bandwidth,
     fig12_nt_stores,
-    fig56_energy,
     fig789_sweeps,
     machine_zoo,
+    scaling_bench,
     stencil_sweep,
     table1_ecm,
-    tpu_energy,
     tpu_roofline,
-    tpu_scaling,
     tpu_stream_ecm,
 )
 
@@ -54,10 +55,9 @@ SECTIONS = [
      table1_ecm),
     ("fig789_sweeps", "Figs. 7-9: working-set sweeps + AGU-optimized triad",
      fig789_sweeps),
-    ("fig10_scaling", "Fig. 10: multicore scaling, CoD vs non-CoD (Eq. 2)",
-     fig10_scaling),
-    ("fig56_energy", "Figs. 5/6: energy-to-solution and EDP grids",
-     fig56_energy),
+    ("scaling_bench",
+     "Chip scaling + energy: Fig. 10 (Eq. 2), Figs. 5/6, TPU DP analogue",
+     scaling_bench),
     ("fig11_bandwidth", "Fig. 11: sustained bandwidth across uarchs",
      fig11_bandwidth),
     ("fig12_nt_stores", "Fig. 12: non-temporal stores (ECM vs roofline)",
@@ -75,20 +75,16 @@ SECTIONS = [
      tpu_stream_ecm),
     ("tpu_roofline", "TPU §Roofline: per (arch x shape x mesh) ECM terms",
      tpu_roofline),
-    ("tpu_energy", "TPU Fig. 5/6 analogue: energy per step per cell",
-     tpu_energy),
-    ("tpu_scaling", "TPU Eq. 2 analogue: DP-scaling saturation per arch",
-     tpu_scaling),
 ]
 
 #: section names per kernel-family suite (the zoo rides with every suite)
 SUITES = {
-    "stream": ["table1_ecm", "fig789_sweeps", "fig10_scaling",
-               "fig56_energy", "fig11_bandwidth", "fig12_nt_stores",
-               "machine_zoo"],
+    "stream": ["table1_ecm", "fig789_sweeps", "fig11_bandwidth",
+               "fig12_nt_stores", "machine_zoo"],
     "stencil": ["stencil_sweep", "machine_zoo"],
     "compute": ["compute_bench", "machine_zoo"],
-    "tpu": ["tpu_stream_ecm", "tpu_roofline", "tpu_energy", "tpu_scaling",
+    "scaling": ["scaling_bench", "machine_zoo"],
+    "tpu": ["tpu_stream_ecm", "tpu_roofline", "scaling_bench",
             "machine_zoo"],
 }
 
@@ -97,6 +93,7 @@ BENCH_PATHS = {
     "stream": "BENCH_pipeline.json",
     "stencil": "BENCH_stencil.json",
     "compute": "BENCH_compute.json",
+    "scaling": "BENCH_scaling.json",
     "tpu": "BENCH_tpu.json",
 }
 
@@ -216,6 +213,16 @@ def compute_payload(machine: str = "haswell-ep") -> dict:
     }
 
 
+def scaling_payload(machine: str = "haswell-ep") -> dict:
+    return {
+        **_envelope("scaling", machine),
+        "saturation": scaling_bench.saturation_payload(machine),
+        "energy": scaling_bench.energy_payload(machine),
+        "operating_points": scaling_bench.operating_points_payload(machine),
+        "tpu_dp": scaling_bench.tpu_dp_payload(),
+    }
+
+
 def tpu_payload(machine: str = "tpu-v5e") -> dict:
     return {
         **_envelope("tpu", machine),
@@ -228,7 +235,8 @@ def emit_json(path: str | None, suite: str = "stream",
               machine: str | None = None) -> str:
     """Write the suite's BENCH artifact; returns the path written."""
     builders = {"stream": stream_payload, "stencil": stencil_payload,
-                "compute": compute_payload, "tpu": tpu_payload}
+                "compute": compute_payload, "scaling": scaling_payload,
+                "tpu": tpu_payload}
     if machine is None:
         machine = "tpu-v5e" if suite == "tpu" else "haswell-ep"
     payload = builders[suite](machine=machine)
@@ -252,6 +260,16 @@ def emit_json(path: str | None, suite: str = "stream",
               f"{payload['blocking']['best']['block']} "
               f"({payload['blocking']['best']['speedup_vs_unblocked']:.2f}x),"
               f" kernels bit-identical: {ok}")
+    elif suite == "scaling":
+        sat = payload["saturation"]["workloads"]
+        n_core = sum(1 for d in sat.values() if d["core_bound"])
+        be = payload["energy"]["best_energy"]
+        dp = payload["tpu_dp"]
+        print(f"[bench] wrote {path}: Eq. 2 for {len(sat)} workloads "
+              f"({n_core} core-bound), best energy "
+              f"{be['energy_J']:.0f} J at {be['f_ghz']} GHz x "
+              f"{be['n_cores']} cores, TPU DP saturation "
+              f"~{dp['n_saturation']} chips")
     elif suite == "compute":
         mm, att = payload["matmul"], payload["attention"]
         ok = all(v["matches_ref"] for v in payload["kernels"].values())
@@ -288,6 +306,9 @@ def main() -> int:
                   machine=args.machine)
         return 0
     keep = set(SUITES[args.suite]) if args.suite else None
+    # the tpu suite's report defaults its machine-parameterized sections
+    # to the TPU entry (matching the json path) instead of the CPU pair
+    machine = args.machine or ("tpu-v5e" if args.suite == "tpu" else None)
     for name, title, mod in SECTIONS:
         if args.only and name != args.only:
             continue
@@ -297,7 +318,7 @@ def main() -> int:
         print(f"\n{'=' * 78}\n== {title}\n{'=' * 78}")
         # machine-parameterized sections accept the --machine flag
         if "machine" in inspect.signature(mod.run).parameters:
-            print(mod.run(machine=args.machine))
+            print(mod.run(machine=machine))
         else:
             print(mod.run())
         print(f"[{name}: {time.time() - t0:.1f}s]")

@@ -1,0 +1,324 @@
+"""Chip-level scaling + energy suite: Fig. 10 (Eq. 2 saturation, CoD vs
+non-CoD), Figs. 5/6 (energy-to-solution / EDP grids and the
+energy-optimal operating point) and the TPU data-parallel Eq. 2 analogue
+(ICI collectives as the shared bottleneck) — all through the one
+registry engine (``repro.core.scaling``), for any ``--machine``.
+
+Merges the former ``fig10_scaling`` / ``fig56_energy`` / ``tpu_scaling``
+/ ``tpu_energy`` sections; the ``--json`` payload is the ``scaling``
+suite's ``BENCH_scaling.json`` (schema 2 envelope, validated and
+regression-gated by ``tools/check_bench.py``).
+"""
+from __future__ import annotations
+
+from .util import fmt, table
+
+#: the Fig. 10 kernels (plus the compute-bound families, which exercise
+#: the core-bound n_S = cores path)
+FIG10_KERNELS = ("ddot", "striad", "schoenauer")
+DATASET_BYTES = 10e9
+
+
+def _work_units(machine) -> float:
+    """Fig. 5/6 normalization: CLs of the A array of a 10 GB striad set."""
+    return DATASET_BYTES / 3 / machine.line_bytes
+
+
+def saturation_payload(machine: str = "haswell-ep") -> dict:
+    """Eq. 2 for every registered workload on one machine, plus the
+    Haswell-style CoD vs non-CoD comparison for the Fig. 10 kernels.
+    The per-workload rows come from the engine's one shared extraction
+    (:meth:`repro.core.scaling.ChipScaling.saturation_summary`)."""
+    from repro.core import get_machine, scale_workloads, workload_registry
+    from repro.core.machine import HASWELL_CHIP_BW_NONCOD
+    from repro.core.workload import StreamWorkload
+    from repro.core.kernel_spec import BENCHMARKS
+
+    m = get_machine(machine)
+    cs = scale_workloads(list(workload_registry().values()), m)
+    out = {
+        "workloads": cs.saturation_summary(),
+        "cores_per_domain": cs.cores_per_domain,
+        "n_domains": cs.n_domains,
+    }
+    if m.name == "haswell-ep":
+        # Fig. 10's second mode: one big domain at the chip bandwidth
+        noncod = {}
+        for k in FIG10_KERNELS:
+            nc = scale_workloads(
+                [StreamWorkload(BENCHMARKS[k])], m,
+                sustained_bw=HASWELL_CHIP_BW_NONCOD[k],
+                cores_per_domain=m.cores, n_domains=1)
+            noncod[k] = nc.saturation_summary()[k]["n_sat_domain"]
+        out["fig10_noncod"] = noncod
+    return out
+
+
+def energy_payload(machine: str = "haswell-ep",
+                   workload: str = "striad") -> dict:
+    """Figs. 5/6 from the machine's DVFS + power calibration: the energy
+    and EDP grids plus both optimal operating points."""
+    from repro.core import get_machine, scale_workloads, workload_registry
+
+    m = get_machine(machine)
+    w = workload_registry()[workload]
+    cs = scale_workloads([w], m)
+    work = _work_units(m)
+    g = cs.energy(work)
+
+    def _best(objective):
+        b = cs.best(work, objective=objective)[0]
+        return {"f_ghz": b["f_ghz"], "n_cores": b["n_cores"],
+                "energy_J": b["energy_J"], "edp_Js": b["edp_Js"]}
+
+    return {
+        "workload": workload,
+        "f_ghz": [float(f) for f in cs.f_ghz],
+        "n_cores": cs.cores,
+        "grid_energy_J": [[float(x) for x in row] for row in g["energy_J"][0]],
+        "grid_edp_Js": [[float(x) for x in row] for row in g["edp_Js"][0]],
+        "best_energy": _best("energy"),
+        "best_edp": _best("edp"),
+    }
+
+
+def operating_points_payload(machine: str = "haswell-ep",
+                             top: int = 5) -> list[dict]:
+    """Top EDP operating points across the Fig. 10 kernels — the
+    ``rank_operating_points`` path exercised end to end."""
+    from repro.core import get_machine, workload_registry
+    from repro.core.autotune import rank_operating_points
+
+    m = get_machine(machine)
+    reg = workload_registry()
+    ws = [reg[k] for k in FIG10_KERNELS if k in reg]
+    return rank_operating_points(ws, m, objective="edp",
+                                 total_work_units=_work_units(m), top=top)
+
+
+def _dp_resources(n_params: float = 1e9, tokens: float = 1 << 20,
+                  dtype_bytes: int = 2):
+    """First-order single-chip resources of one data-parallel training
+    step: FLOPs/HBM from the usual 6ND counting, the gradient exchange
+    as a real ``CollectiveOp`` so the ring wire-byte math of
+    ``repro.core.hlo`` is what the scaling sees."""
+    from repro.core.hlo import CollectiveOp, HLOResources
+
+    res = HLOResources()
+    res.flops = 6.0 * n_params * tokens
+    # weights + grads + optimizer streamed once, activations ~3x fwd
+    res.bytes_accessed = (3 * n_params * 4.0
+                          + 3 * tokens * 4096 * dtype_bytes * 12)
+    res.collectives = [CollectiveOp(kind="all-reduce",
+                                    out_bytes=n_params * 4.0,
+                                    group_size=1)]
+    res.collective_out_bytes = res.by_kind()
+    return res
+
+
+def tpu_dp_payload(chip_counts=(1, 2, 4, 8, 16, 32, 64, 128, 256)) -> dict:
+    """Eq. 2 at chip granularity: the gradient all-reduce's ICI wire
+    floor is the shared bottleneck of data-parallel scaling."""
+    from repro.core import tpu_dp_scaling
+
+    return {"model": {"n_params": 1e9, "tokens": float(1 << 20)},
+            **tpu_dp_scaling(_dp_resources(), chip_counts)}
+
+
+def step_energy(rec: dict, m=None) -> dict:
+    """Joules per step per chip from recorded dry-run ECM terms: the
+    per-term energy model (pJ/FLOP, pJ/HBM-byte, pJ/ICI-byte + idle
+    power x ECM time) — bandwidth-bound steps waste energy on idle MXUs
+    exactly like the Stream triad wasted cores (§III-D transferred)."""
+    from repro.core.machine import TPU_V5E
+
+    m = m or TPU_V5E
+    e = rec["ecm"]
+    flops = rec["cost"]["flops_per_chip"]
+    hbm = rec["cost"]["bytes_per_chip"]
+    ici = rec["collectives"]["wire_bytes_per_chip"]
+    dyn = (flops * m.pj_per_flop + hbm * m.pj_per_hbm_byte
+           + ici * m.pj_per_ici_byte) * 1e-12
+    idle = m.idle_watts * e["t_ecm_s"]
+    return {
+        "dyn_J": dyn, "idle_J": idle, "total_J": dyn + idle,
+        "fleet_kJ": (dyn + idle) * e["detail_chips"] / 1e3,
+        "idle_frac": idle / max(dyn + idle, 1e-12),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Report sections
+# ---------------------------------------------------------------------------
+
+
+def _saturation_section(machine: str) -> str:
+    pay = saturation_payload(machine)
+    rows = [[w, d["n_sat_domain"], d["n_sat_chip"],
+             "core" if d["core_bound"] else "mem",
+             fmt(d["t_single_cy"], 1), fmt(d["bottleneck_cy"], 2)]
+            for w, d in pay["workloads"].items()]
+    out = [f"== {machine}: Eq. 2 saturation "
+           f"({pay['n_domains']} x {pay['cores_per_domain']} cores) ==",
+           table(["workload", "n_sat/domain", "n_sat/chip", "bound",
+                  "T_ECM^mem cy", "T_bottleneck cy"], rows)]
+    if "fig10_noncod" in pay:
+        rows = [[k, pay["workloads"][k]["n_sat_domain"], nc]
+                for k, nc in pay["fig10_noncod"].items()]
+        out.append("\nFig. 10 CoD (per 7-core domain) vs non-CoD "
+                   "(chip bandwidth):")
+        out.append(table(["kernel", "CoD n_sat", "non-CoD n_sat"], rows))
+        out.append("paper: both modes saturate at nearly identical chip "
+                   "performance; CoD needs n_domains x n_sat cores")
+    return "\n".join(out)
+
+
+def _energy_section(machine: str) -> str:
+    pay = energy_payload(machine)
+    freqs = pay["f_ghz"]
+    out = [f"== {machine}: energy-to-solution [J] for "
+           f"{pay['workload']} (rows = GHz, cols = cores) =="]
+    out.append(table(
+        ["GHz\\n"] + [str(n) for n in range(1, pay["n_cores"] + 1)],
+        [[f] + [fmt(v, 0) for v in row]
+         for f, row in zip(freqs, pay["grid_energy_J"])]))
+    be, bd = pay["best_energy"], pay["best_edp"]
+    out.append(f"best energy: {be['energy_J']:.0f} J at {be['f_ghz']} GHz "
+               f"x {be['n_cores']} cores")
+    out.append(f"best EDP:    {bd['edp_Js']:.1f} Js at {bd['f_ghz']} GHz "
+               f"x {bd['n_cores']} cores")
+    return "\n".join(out)
+
+
+def _tpu_section() -> str:
+    pay = tpu_dp_payload()
+    rows = [[n, fmt(c, 1), fmt(h, 1), fmt(i, 1), fmt(t, 1),
+             fmt(s, 2), fmt(e * 100, 0) + "%"]
+            for n, c, h, i, t, s, e in zip(
+                pay["chips"], pay["t_comp_us"], pay["t_hbm_us"],
+                pay["t_ici_us"], pay["t_step_us"], pay["speedup"],
+                pay["parallel_efficiency"])]
+    out = ["== TPU Eq. 2 analogue: data-parallel scaling, 1B params x "
+           "1M tokens ==",
+           table(["chips", "comp us", "hbm us", "ici us", "step us",
+                  "speedup", "eff"], rows),
+           f"\nICI floor {fmt(pay['t_ici_floor_us'], 1)} us -> Eq. 2 "
+           f"saturation at ~{pay['n_saturation']} chips (the gradient "
+           f"ring's wire bytes stop shrinking — the T_L3Mem role at "
+           f"chip granularity)"]
+    return "\n".join(out)
+
+
+def _arch_dp_section(chip_counts=(16, 32, 64, 128, 256, 512, 1024, 2048)
+                     ) -> str:
+    """DP-scaling saturation per assigned architecture (the former
+    ``tpu_scaling`` section): for a fixed global batch, adding chips
+    divides compute/HBM but the gradient collective approaches a floor —
+    the ECM-predicted saturation is where the speedup flattens."""
+    from repro.configs import ARCH_NAMES, get_arch
+    from repro.core.autotune import CandidateConfig, WorkloadSpec, estimate
+
+    rows = []
+    for name in ARCH_NAMES:
+        arch = get_arch(name)
+        cfg = arch.cfg
+        w = WorkloadSpec(
+            n_params=arch.n_active_params, d_model=cfg.d_model,
+            n_layers=getattr(cfg, "n_layers", 12),
+            global_batch=256, seq_len=4096, kind="train")
+        times = []
+        for n in chip_counts:
+            model = max(1, min(16, n // 16))
+            data = n // model
+            accum = min(max(1, w.global_batch // max(data, 1)), 16)
+            est = estimate(w, CandidateConfig(data=data, model=model,
+                                              accum=accum))
+            times.append(est.t_ecm)
+        eff = times[0] * chip_counts[0] / (times[-1] * chip_counts[-1])
+        rows.append([arch.name, *(fmt(t * 1e3, 1) for t in times),
+                     fmt(eff * 100, 0) + "%"])
+    hdr = (["arch (train_4k)"] + [f"{n}c ms" for n in chip_counts]
+           + [f"eff@{chip_counts[-1]}"])
+    return "\n".join([
+        "== per-arch DP scaling (autotuner estimates, Eq. 2 floor) ==",
+        table(hdr, rows),
+        "the efficiency gap is the Eq.-2 floor: per-microbatch weight "
+        "stream + gradient collective do not shrink with the data axis"])
+
+
+def _dryrun_energy_section() -> str:
+    """Energy per step per chip from dry-run records, when present (the
+    former ``tpu_energy`` section); empty string otherwise."""
+    import glob
+    import json
+    import os
+
+    results = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results, "*16x16.json"))):
+        if "2x16x16" in path:
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        en = step_energy(rec)
+        e = rec["ecm"]
+        rows.append([
+            rec["arch"], rec["shape"], fmt(e["t_ecm_s"] * 1e3, 1),
+            fmt(en["total_J"], 2), fmt(en["fleet_kJ"], 2),
+            fmt(en["idle_frac"] * 100, 0) + "%", e["dominant"][:4]])
+    if not rows:
+        return ""
+    return "\n".join([
+        "== TPU Fig. 5/6 analogue: energy per step (dry-run records) ==",
+        table(["arch", "shape", "step_ms", "J/chip/step", "fleet kJ/step",
+               "idle share", "dom"], rows),
+        "bandwidth/collective-bound steps have high idle share — the "
+        "energy-optimal config uses fewer chips for the same step "
+        "(race-to-idle at chip granularity)"])
+
+
+def run(machine: str | None = None) -> str:
+    from repro.core import machine_names
+
+    machines = [machine] if machine else ["haswell-ep", "sandy-bridge-ep"]
+    out = []
+    for m in machines:
+        out.append(_saturation_section(m))
+        out.append("")
+        out.append(_energy_section(m))
+        out.append("")
+    if machine is None or machine in ("haswell-ep",):
+        # the cross-uarch §III-D claim, now from per-machine calibration
+        from repro.core import get_machine, scale_workloads, workload_registry
+
+        pts = {}
+        for m in ("haswell-ep", "sandy-bridge-ep"):
+            mm = get_machine(m)
+            cs = scale_workloads([workload_registry()["striad"]], mm)
+            pts[m] = cs.best(_work_units(mm), objective="energy")[0]
+        ratio = (pts["sandy-bridge-ep"]["energy_J"]
+                 / pts["haswell-ep"]["energy_J"])
+        out.append(f"haswell-ep vs sandy-bridge-ep optimal energy: "
+                   f"{ratio:.2f}x better on Haswell "
+                   f"(paper: 12-23% energy, 35-55% EDP)")
+        out.append("")
+    out.append(_tpu_section())
+    out.append("")
+    out.append(_arch_dp_section())
+    dryrun = _dryrun_energy_section()
+    if dryrun:
+        out.append("")
+        out.append(dryrun)
+    out.append(f"\n[registered machines: {', '.join(machine_names())}; "
+               f"run with --machine <m> for any of them]")
+    return "\n".join(out)
+
+
+def main():
+    print(run())
+
+
+if __name__ == "__main__":
+    main()

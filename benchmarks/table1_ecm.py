@@ -21,7 +21,7 @@ from repro.core import (
 )
 from repro.simcache import simulate_level
 
-from .util import fmt, pred_str, table
+from .util import pred_str, table
 
 
 def run() -> str:

@@ -12,7 +12,7 @@ Run:  PYTHONPATH=src python examples/ecm_explorer.py --kernel striad
 import argparse
 import dataclasses
 
-from repro.core import BENCHMARKS, HASWELL_EP, HASWELL_MEASURED_BW, haswell_ecm
+from repro.core import BENCHMARKS, HASWELL_EP, HASWELL_MEASURED_BW
 from repro.core.saturation import ScalingModel
 from repro.simcache import simulate_level
 

@@ -24,7 +24,6 @@ import os
 import queue
 import shutil
 import threading
-import time
 from typing import Any
 
 import jax

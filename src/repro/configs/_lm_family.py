@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 from repro.models import lm
-from repro.models.moe import MoEConfig
 from .base import ArchDef
 
 

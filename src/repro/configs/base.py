@@ -104,7 +104,6 @@ class ArchDef:
         flat, _ = jax.tree_util.tree_flatten_with_path(
             spec, is_leaf=is_spec)
         for path, s in flat:
-            keys = "/".join(str(getattr(p, "key", p)) for p in path)
             n = int(math.prod(s.shape))
             if "experts" in s.axes:     # expert-parallel weights
                 n = int(n * moe.top_k / moe.n_experts)

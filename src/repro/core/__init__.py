@@ -5,7 +5,11 @@ Paper-faithful pieces: :mod:`.ecm` (model + Eq. 1 overlap rule + notation),
 zoo, with per-machine bandwidth/issue tables and calibration data),
 :mod:`.kernel_spec` (§IV-C construction recipe + Table I benchmarks),
 :mod:`.saturation` (Eq. 2 multicore scaling) and :mod:`.energy` (§III-D
-energy/EDP analysis).
+energy/EDP analysis), both now thin views over :mod:`.scaling` — the
+registry-integrated chip engine (domain-aware Eq. 2 saturation, DVFS +
+per-machine power calibration, energy/EDP operating points, and the TPU
+data-parallel Eq. 2 analogue with ICI collectives as the shared
+bottleneck).
 
 Unified construction: :mod:`.workload` — every kernel family reduces to
 one canonical record (uop mix + per-level line traffic) and one batched
@@ -44,6 +48,7 @@ from .layer_condition import (
 )
 from .machine import (
     BROADWELL_EP,
+    ChipPower,
     HASWELL_EP,
     HASWELL_MEASURED_BW,
     MACHINES,
@@ -60,6 +65,15 @@ from .machine import (
     register_machine,
 )
 from .saturation import ScalingModel, batch_curve, batch_saturation, domain_scaling
+from .scaling import (
+    ChipScaling,
+    fill_domains,
+    frequency_scale,
+    saturation_table,
+    scale_workloads,
+    scaling_zoo,
+    tpu_dp_scaling,
+)
 from .workload import (
     FLASH_ATTENTION_F32,
     MATMUL_F32,
@@ -127,6 +141,14 @@ __all__ = [
     "fuse_chain",
     "ScalingModel",
     "domain_scaling",
+    "ChipScaling",
+    "ChipPower",
+    "fill_domains",
+    "frequency_scale",
+    "saturation_table",
+    "scale_workloads",
+    "scaling_zoo",
+    "tpu_dp_scaling",
     "WORKLOADS",
     "FLASH_ATTENTION_F32",
     "MATMUL_F32",

@@ -24,8 +24,7 @@ happens.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -252,6 +251,37 @@ def rank_workloads(workloads, machine=None, *,
              "t_ecm": float(t[i]),
              "predictions": tuple(float(x) for x in preds[i])}
             for i in order]
+
+
+def rank_operating_points(workloads, machine=None, *,
+                          objective: str = "edp",
+                          total_work_units: float = 1.0,
+                          f_ghz=None, sustained_bw=None,
+                          n_cores: int | None = None,
+                          top: int | None = None) -> list[dict]:
+    """Rank chip operating points ``(workload, frequency, cores)`` by a
+    performance-, energy- or EDP-objective.
+
+    The chip-level companion of :func:`rank_workloads`: the same one
+    lowering through the unified engine (``workloads`` may be any
+    family mix or an already-lowered ``LoweredBatch``), then the
+    registry scaling engine (:func:`repro.core.scaling.scale_workloads`
+    — domain topology, DVFS grid and power coefficients all from the
+    machine's calibration) evaluates the full (W x F x N) surface in
+    one array pass and argsorts it.  ``objective`` is one of
+    ``"performance"`` (minimise runtime), ``"energy"``
+    (energy-to-solution) or ``"edp"``; ``top`` truncates the ranking.
+
+    Returns dicts ``{"name", "f_ghz", "n_cores", "objective", "value",
+    "runtime_s", "energy_J", "edp_Js"}`` best-first.
+    """
+    from .machine import HASWELL_EP
+    from .scaling import scale_workloads
+
+    cs = scale_workloads(workloads, machine or HASWELL_EP, f_ghz=f_ghz,
+                         sustained_bw=sustained_bw)
+    return cs.operating_points(total_work_units, objective=objective,
+                               n_cores=n_cores, top=top)
 
 
 # ---------------------------------------------------------------------------

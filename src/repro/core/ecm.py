@@ -21,9 +21,8 @@ one VMEM block or one training step on the TPU — the model is agnostic, see
 """
 from __future__ import annotations
 
-import math
 import re
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 import numpy as np
 

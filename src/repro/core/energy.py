@@ -1,46 +1,45 @@
 """Energy-to-solution and EDP modelling (paper §III-D, Figs. 5/6).
 
-The paper shows, for bandwidth-limited kernels, that (i) race-to-idle is not
-efficient, (ii) once memory bandwidth is saturated, adding cores or clock
-only costs energy, and (iii) on Haswell the sustained bandwidth is frequency
-independent, so the lowest frequency minimises energy.
+.. deprecated::
+    The energy/DVFS analysis is now a registry subsystem: power
+    coefficients live on :attr:`repro.core.machine.MachineModel.power`
+    (a :class:`~repro.core.machine.ChipPower`), the frequency behaviour
+    on the machine's ``f_nominal_ghz`` / ``f_steps_ghz`` /
+    ``bw_freq_coupled`` / ``coupling_floor`` calibration fields, and the
+    batched engine is :func:`repro.core.scaling.scale_workloads` (energy
+    / EDP / operating points for any workload on any machine in one
+    call).  This module keeps the original single-model API as thin
+    views over that engine — bit-identical to the pre-registry
+    implementation (pinned in ``tests/golden_haswell_ecm.json``).
 
-We reproduce the *structure* of those heat maps analytically: a simple power
-model ``P(n, f) = P_idle + n * (p0 + p1 * f + p2 * f**2)`` combined with the
-frequency-dependent ECM runtime prediction gives energy-to-solution
-``E = P * T`` and ``EDP = P * T^2`` over a (cores x frequency) grid.
+The paper shows, for bandwidth-limited kernels, that (i) race-to-idle is
+not efficient, (ii) once memory bandwidth is saturated, adding cores or
+clock only costs energy, and (iii) on Haswell the sustained bandwidth is
+frequency independent, so the lowest frequency minimises energy.  The
+power model is ``P(n, f) = P_idle + n * (p0 + p1 * f + p2 * f**2)``;
+energy-to-solution is ``E = P * T`` and ``EDP = P * T^2`` over a
+(cores x frequency) grid.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 
-from .ecm import ECMModel
-from .saturation import ScalingModel
+from .ecm import ECMBatch, ECMModel
 
-
-@dataclass(frozen=True)
-class PowerModel:
-    """Chip power as a function of active cores and frequency (GHz).
-
-    Coefficients calibrated against the paper's reference points
-    (single-core package power ~40-55 W, Haswell-vs-SNB/IVB energy ratio
-    1.12-1.23x, EDP ratio 1.35-1.55x); see EXPERIMENTS.md."""
-
-    idle_watts: float = 25.0
-    static_per_core: float = 0.5       # W per active core
-    dyn_lin: float = 0.3               # W per core per GHz
-    dyn_quad: float = 2.2              # W per core per GHz^2
-
-    def watts(self, n_cores: int, f_ghz: float) -> float:
-        return self.idle_watts + n_cores * (
-            self.static_per_core + self.dyn_lin * f_ghz + self.dyn_quad * f_ghz**2
-        )
+# Deprecated alias: the coefficients are per-machine calibration now
+# (``MachineModel.power``); the class itself lives in ``repro.core.
+# machine`` and its defaults are the Haswell fit this module always used.
+from .machine import ChipPower as PowerModel  # noqa: F401  (re-export)
 
 
 @dataclass(frozen=True)
 class FrequencyScaledECM:
-    """Frequency behaviour of an ECM model.
+    """Frequency behaviour of one ECM model.
+
+    .. deprecated:: use the machine calibration fields
+        (``bw_freq_coupled`` / ``coupling_floor`` / ``f_nominal_ghz``)
+        with :func:`repro.core.scaling.frequency_scale`, which applies
+        the same rule to whole batches.
 
     In-core and in-cache cycles are frequency-invariant *in cycles* (they
     live in the core clock domain).  The memory term is fixed *in seconds*
@@ -56,16 +55,16 @@ class FrequencyScaledECM:
     coupling_floor: float = 2.0 / 3.0  # SNB/IVB: 1.2GHz gives ~2/3 bandwidth
 
     def at_frequency(self, f_ghz: float) -> ECMModel:
-        scale = f_ghz / self.f_nominal_ghz
-        mem_cy = self.ecm.transfers[-1] * scale
-        if self.bw_freq_coupled:
-            # bandwidth degrades towards the floor as f decreases
-            rel = min(1.0, self.coupling_floor + (1 - self.coupling_floor) * scale)
-            mem_cy = mem_cy / rel
-        transfers = self.ecm.transfers[:-1] + (mem_cy,)
-        return ECMModel(t_ol=self.ecm.t_ol, t_nol=self.ecm.t_nol,
-                        transfers=transfers, levels=self.ecm.levels,
-                        name=self.ecm.name)
+        import dataclasses
+
+        from .scaling import frequency_scale
+
+        batch = frequency_scale(
+            ECMBatch.from_models([self.ecm]), [f_ghz],
+            f_nominal_ghz=self.f_nominal_ghz,
+            bw_freq_coupled=self.bw_freq_coupled,
+            coupling_floor=self.coupling_floor)
+        return dataclasses.replace(batch.scalar((0, 0)), name=self.ecm.name)
 
 
 def energy_grid(
@@ -76,23 +75,34 @@ def energy_grid(
     f_ghz_list: list[float],
     total_work_units: float,
 ) -> dict[str, list[list[float]]]:
-    """Energy-to-solution [J] and EDP [Js] over (frequency x cores)."""
-    energy, edp, runtime = [], [], []
-    for f in f_ghz_list:
-        ecm_f = fecm.at_frequency(f)
-        scal = ScalingModel.from_ecm(ecm_f)
-        e_row, d_row, t_row = [], [], []
-        for n in range(1, n_cores_max + 1):
-            perf_cy = scal.performance(n)                 # work / cycle
-            t_s = total_work_units / (perf_cy * f * 1e9)  # seconds
-            w = power.watts(n, f)
-            e_row.append(w * t_s)
-            d_row.append(w * t_s * t_s)
-            t_row.append(t_s)
-        energy.append(e_row)
-        edp.append(d_row)
-        runtime.append(t_row)
-    return {"energy_J": energy, "edp_Js": edp, "runtime_s": runtime}
+    """Energy-to-solution [J] and EDP [Js] over (frequency x cores).
+
+    Thin view over :class:`repro.core.scaling.ChipScaling` (one-domain
+    topology, as the original implementation assumed)."""
+    import dataclasses
+
+    import numpy as np
+
+    from .machine import HASWELL_EP
+    from .scaling import ChipScaling, frequency_scale
+
+    batch = frequency_scale(
+        ECMBatch.from_models([fecm.ecm]), f_ghz_list,
+        f_nominal_ghz=fecm.f_nominal_ghz,
+        bw_freq_coupled=fecm.bw_freq_coupled,
+        coupling_floor=fecm.coupling_floor)
+    cs = ChipScaling(
+        machine=dataclasses.replace(HASWELL_EP, power=power,
+                                    cores=n_cores_max),
+        names=(fecm.ecm.name,),
+        f_ghz=np.asarray(f_ghz_list, float),
+        t_single=batch.predictions()[..., -1],
+        bottleneck=batch.transfers[..., -1],
+        t_ol=np.asarray([fecm.ecm.t_ol], float),
+        cores_per_domain=n_cores_max, n_domains=1)
+    g = cs.energy(total_work_units)
+    return {k: [[float(x) for x in row] for row in g[k][0]]
+            for k in ("energy_J", "edp_Js", "runtime_s")}
 
 
 def best_config(grid_rows: list[list[float]], f_ghz_list: list[float]

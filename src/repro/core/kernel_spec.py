@@ -23,8 +23,7 @@ stencils and TPU steps, on any machine in the registry.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from .ecm import ECMModel
 from .machine import HASWELL_MEASURED_BW, MachineModel

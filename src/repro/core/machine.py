@@ -66,6 +66,31 @@ class TransferLevel:
 
 
 @dataclass(frozen=True)
+class ChipPower:
+    """Chip power as a function of active cores and frequency (GHz):
+    ``P(n, f) = idle + n * (static + lin * f + quad * f**2)`` (§III-D).
+
+    This is per-machine *calibration data*, carried on
+    :attr:`MachineModel.power` the same way ``measured_bw`` carries the
+    sustained-bandwidth inputs.  The defaults are the Haswell-EP
+    calibration (single-core package power ~40-55 W, Haswell-vs-SNB/IVB
+    energy ratio 1.12-1.23x, EDP ratio 1.35-1.55x).
+    """
+
+    idle_watts: float = 25.0
+    static_per_core: float = 0.5       # W per active core
+    dyn_lin: float = 0.3               # W per core per GHz
+    dyn_quad: float = 2.2              # W per core per GHz^2
+
+    def watts(self, n_cores, f_ghz):
+        """Power draw; accepts scalars or broadcastable NumPy arrays."""
+        return self.idle_watts + n_cores * (
+            self.static_per_core + self.dyn_lin * f_ghz
+            + self.dyn_quad * f_ghz**2
+        )
+
+
+@dataclass(frozen=True)
 class PortModel:
     """Simplified Haswell-style issue/port model (paper §III-A, §V).
 
@@ -226,6 +251,21 @@ class MachineModel:
     # ---- multi-core topology ------------------------------------------
     cores_per_domain: int = 0            # 0 = all cores in one domain
     n_domains: int = 1
+    # ---- chip-level calibration: DVFS grid + power model (§III-D) -----
+    #: power coefficients for the energy/EDP analysis; per-machine
+    #: calibration like ``measured_bw`` (defaults: the Haswell fit).
+    power: ChipPower = ChipPower()
+    #: nominal core frequency in GHz; 0.0 = derive from ``clock_hz``.
+    f_nominal_ghz: float = 0.0
+    #: DVFS operating frequencies in GHz for the energy grids;
+    #: () = fixed-frequency part (just the nominal clock).
+    f_steps_ghz: tuple = ()
+    #: sustained memory bandwidth degrades at low core frequency
+    #: (paper Fig. 4: true on SNB/IVB, false on Haswell — the Uncore
+    #: clock decouples from the core clock there).
+    bw_freq_coupled: bool = False
+    #: bandwidth floor for coupled machines: 1.2 GHz gives ~2/3 bandwidth
+    coupling_floor: float = 2.0 / 3.0
 
     # ------------------------------------------------------------------
     def mem_cycles_per_line(self, sustained_bw_bytes_per_s: float) -> float:
@@ -243,6 +283,16 @@ class MachineModel:
 
     def with_cores(self, n: int) -> "MachineModel":
         return dataclasses.replace(self, cores=n)
+
+    @property
+    def nominal_ghz(self) -> float:
+        """Nominal core frequency in GHz (the ECM models' clock domain)."""
+        return self.f_nominal_ghz or self.clock_hz / 1e9
+
+    def frequency_grid(self) -> tuple[float, ...]:
+        """DVFS operating points for the energy/EDP grids; machines
+        without a calibrated grid run at the nominal clock only."""
+        return self.f_steps_ghz or (self.nominal_ghz,)
 
     # ------------------------------------------------------------------
     # Calibration lookup + in-core issue (the two machine-specific hooks
@@ -373,6 +423,11 @@ HASWELL_EP = register_machine(MachineModel(
     measured_bw=dict(_HASWELL_BW),
     cores_per_domain=7,
     n_domains=2,
+    # §III-D calibration: the ChipPower defaults *are* the Haswell fit;
+    # sustained bandwidth is frequency-independent on Haswell (Fig. 4)
+    power=ChipPower(),
+    f_steps_ghz=(1.2, 1.6, 2.0, 2.3, 2.7, 3.0),
+    bw_freq_coupled=False,
 ), "haswell", "haswell-ep-2695v3", "hsw")
 
 #: Deprecated alias — the calibration table now lives on the machine
@@ -415,6 +470,13 @@ SANDY_BRIDGE_EP = register_machine(MachineModel(
     measured_bw=_scaled_bw(_HASWELL_BW, 1.35),
     cores_per_domain=8,
     n_domains=1,
+    # 32 nm part: higher leakage + steeper dynamic power than Haswell,
+    # and the Uncore rides the core clock, so sustained bandwidth
+    # degrades at low frequency (paper Fig. 4)
+    power=ChipPower(idle_watts=32.0, static_per_core=0.8,
+                    dyn_lin=0.5, dyn_quad=2.8),
+    f_steps_ghz=(1.2, 1.6, 2.0, 2.3, 2.7),
+    bw_freq_coupled=True,
 ), "sandy-bridge", "snb")
 
 BROADWELL_EP = register_machine(MachineModel(
@@ -437,6 +499,12 @@ BROADWELL_EP = register_machine(MachineModel(
     measured_bw=_scaled_bw(_HASWELL_BW, 1.12),
     cores_per_domain=11,
     n_domains=2,
+    # 14 nm shrink of the Haswell core: slightly lower static/dynamic
+    # power, same decoupled-Uncore bandwidth behaviour
+    power=ChipPower(idle_watts=22.0, static_per_core=0.5,
+                    dyn_lin=0.3, dyn_quad=2.0),
+    f_steps_ghz=(1.2, 1.6, 2.0, 2.2),
+    bw_freq_coupled=False,
 ), "broadwell", "bdw")
 
 SKYLAKE_SP = register_machine(MachineModel(
@@ -462,6 +530,12 @@ SKYLAKE_SP = register_machine(MachineModel(
     measured_bw=_scaled_bw(_HASWELL_BW, 1.85),
     cores_per_domain=10,
     n_domains=2,
+    # AVX-512 pipes raise both static and dynamic per-core power; the
+    # mesh Uncore clocks independently of the cores
+    power=ChipPower(idle_watts=30.0, static_per_core=0.6,
+                    dyn_lin=0.4, dyn_quad=2.4),
+    f_steps_ghz=(1.2, 1.6, 2.0, 2.4),
+    bw_freq_coupled=False,
 ), "skylake", "skx")
 
 
@@ -562,4 +636,9 @@ TPU_V5E_HIERARCHY = register_machine(MachineModel(
     write_allocate=False,
     measured_bw={"_default": TPU_V5E.hbm_bytes_per_s},
     uop_scale=1.0,                       # uop counts used as-is (VPU ops)
+    # fixed-frequency part: the energy grid degenerates to one column.
+    # ChipPower calibrated to the public idle/peak envelope (70/220 W
+    # at 0.94 GHz with one "core" = the whole chip's compute complex).
+    power=ChipPower(idle_watts=TPU_V5E.idle_watts, static_per_core=20.0,
+                    dyn_lin=30.0, dyn_quad=115.0),
 ), "tpu", "v5e")

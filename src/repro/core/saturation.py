@@ -7,6 +7,16 @@ interconnect on the TPU — is hit::
     P(n) = min(n * P_ECM^mem, I * b_S)
 
 with the saturation point ``n_S = ceil(T_ECM^mem / T_L3Mem)``.
+
+**Core-bound workloads** (the PR-4 compute-bound families at
+cache-resident sizes, or pre-lowered records whose bottleneck term is
+zero) never hit the shared bottleneck: they scale linearly to the full
+chip, so ``n_S = cores`` and ``P(n) = n * P_ECM`` — dividing by a zero
+``bottleneck_cycles`` is guarded everywhere below.
+
+This module is the scalar, single-machine view; the registry-integrated
+batched engine (domain topology, DVFS, energy) lives in
+:mod:`repro.core.scaling`.
 """
 from __future__ import annotations
 
@@ -24,10 +34,16 @@ class ScalingModel:
     #: transfer time over the shared bottleneck edge (cy per unit of work);
     #: on Haswell this is T_L3Mem — the last transfer term by default.
     bottleneck_cycles: float
+    #: cores available on the chip (0 = unknown).  Caps ``n_saturation``
+    #: and is the reported saturation point for core-bound workloads
+    #: (``bottleneck_cycles == 0``: linear scaling to the full chip).
+    cores: int = 0
 
     @classmethod
-    def from_ecm(cls, ecm: ECMModel, bottleneck_level: int = -1) -> "ScalingModel":
-        return cls(ecm=ecm, bottleneck_cycles=ecm.transfers[bottleneck_level])
+    def from_ecm(cls, ecm: ECMModel, bottleneck_level: int = -1,
+                 cores: int = 0) -> "ScalingModel":
+        return cls(ecm=ecm, bottleneck_cycles=ecm.transfers[bottleneck_level],
+                   cores=cores)
 
     # ------------------------------------------------------------------
     @property
@@ -36,16 +52,27 @@ class ScalingModel:
         return self.ecm.prediction(len(self.ecm.levels) - 1)
 
     @property
+    def core_bound(self) -> bool:
+        """No shared-bottleneck term: the workload scales linearly."""
+        return self.bottleneck_cycles <= 0.0
+
+    @property
     def n_saturation(self) -> int:
-        """Eq. 2: cores needed to saturate the bottleneck."""
-        return math.ceil(self.t_single / self.bottleneck_cycles)
+        """Eq. 2: cores needed to saturate the bottleneck.  Core-bound
+        workloads report the full chip (``cores``) — they never
+        saturate; a known core count also caps the bandwidth-bound
+        ceiling (more cores than the chip has cannot help)."""
+        if self.core_bound:
+            return max(self.cores, 1)
+        n = math.ceil(self.t_single / self.bottleneck_cycles)
+        return min(n, self.cores) if self.cores else n
 
     def performance(self, n_cores: int, work_per_unit: float = 1.0,
                     clock_hz: float | None = None) -> float:
         """P(n) in work units per cycle (or per second with ``clock_hz``)."""
         p_one = work_per_unit / self.t_single
-        p_sat = work_per_unit / self.bottleneck_cycles
-        p = min(n_cores * p_one, p_sat)
+        p = (n_cores * p_one if self.core_bound
+             else min(n_cores * p_one, work_per_unit / self.bottleneck_cycles))
         return p * clock_hz if clock_hz else p
 
     def curve(self, n_cores: int, work_per_unit: float = 1.0,
@@ -59,27 +86,37 @@ def batch_curve(batch, n_cores: int, work_per_unit=1.0,
                 bottleneck_level: int = -1):
     """Vectorized Eq. 2 scaling surface for an :class:`~repro.core.ecm.
     ECMBatch`: P(n) for every batch element x n = 1..n_cores, shape
-    ``B + (n_cores,)`` — one array op instead of a per-(kernel, n) loop."""
+    ``B + (n_cores,)`` — one array op instead of a per-(kernel, n) loop.
+    Zero-bottleneck (core-bound) elements scale linearly."""
     import numpy as np
 
     t_single = batch.prediction(len(batch.levels) - 1)       # (B,)
     bottleneck = batch.transfers[..., bottleneck_level]       # (B,)
     w = np.asarray(work_per_unit, float)
     p_one = w / t_single
-    p_sat = w / bottleneck
+    bound = bottleneck > 0
+    p_sat = np.where(bound, w / np.where(bound, bottleneck, 1.0), np.inf)
     n = np.arange(1, n_cores + 1, dtype=float)
     p = np.minimum(n * p_one[..., None], p_sat[..., None])
     return p * clock_hz if clock_hz else p
 
 
-def batch_saturation(batch, bottleneck_level: int = -1):
-    """Vectorized Eq. 2 saturation points: ``ceil(T_ECM^mem / T_bottleneck)``
-    per batch element."""
+def batch_saturation(batch, bottleneck_level: int = -1, cores: int = 0):
+    """Vectorized Eq. 2 saturation points: ``ceil(T_ECM^mem /
+    T_bottleneck)`` per batch element.  Elements with a zero bottleneck
+    term (core-bound workloads) report ``cores`` — linear scaling to the
+    full chip; a non-zero ``cores`` also caps the bandwidth-bound points.
+    """
     import numpy as np
 
     t_single = batch.prediction(len(batch.levels) - 1)
     bottleneck = batch.transfers[..., bottleneck_level]
-    return np.ceil(t_single / bottleneck).astype(int)
+    bound = bottleneck > 0
+    out = np.full(bottleneck.shape, max(cores, 1), dtype=int)
+    out[bound] = np.ceil(t_single[bound] / bottleneck[bound]).astype(int)
+    if cores:
+        out = np.minimum(out, cores)
+    return out
 
 
 def domain_scaling(ecm_domain: ECMModel, n_domains: int,

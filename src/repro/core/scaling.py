@@ -1,0 +1,435 @@
+"""Registry-integrated chip scaling and energy: Eq. 2 + §III-D as one
+batched engine over the workload/machine registry.
+
+The paper's chip-level results — the Eq. 2 saturation point
+``n_S = ceil(T_ECM^mem / T_L3Mem)`` (§IV-B, Fig. 10) and the
+energy-to-solution / EDP grids over (cores x frequency) (§III-D,
+Figs. 5/6) — were historically computed from one hand-built
+:class:`~repro.core.ecm.ECMModel` with Haswell-only constants
+(``core.saturation`` / ``core.energy``).  This module promotes both to
+first-class registry subsystems:
+
+* :func:`scale_workloads` builds a :class:`ChipScaling` from **any**
+  workloads on **any** registered machine — the lowered record supplies
+  the light-speed times and the shared-bottleneck (memory-edge) term,
+  the machine supplies the domain topology (CoD / SNC:
+  ``cores_per_domain`` / ``n_domains``), the per-domain ``measured_bw``
+  calibration, the DVFS grid and the :class:`~repro.core.machine.
+  ChipPower` coefficients;
+* every quantity is **vectorized** over (workloads x frequencies x
+  cores) on top of :class:`~repro.core.ecm.ECMBatch` — one array pass
+  for a whole (registry x DVFS x chip) surface, and one more machine in
+  the outer dict for the cross-zoo tables;
+* frequency behaviour follows the old ``FrequencyScaledECM`` rule
+  exactly (in-core/in-cache cycles frequency-invariant, the memory term
+  fixed in seconds so it scales with ``f`` in cycles, with the SNB/IVB
+  bandwidth-coupling floor), but the knobs now come from per-machine
+  calibration (``bw_freq_coupled`` / ``coupling_floor`` /
+  ``f_steps_ghz``);
+* **core-bound workloads** never saturate within the machine: either
+  the bottleneck term is zero (cache-resident compute, pre-lowered
+  records — no division by a zero transfer term anywhere) or the Eq. 2
+  point lies beyond the domain's core count (in-core time dominates).
+  They report ``n_S = cores`` and scale linearly to the full chip;
+* :func:`tpu_dp_scaling` is the Eq. 2 analogue at chip granularity: the
+  ICI collective traffic extracted by :mod:`repro.core.hlo` is the
+  shared-bottleneck term of multi-chip data-parallel scaling (compute
+  and HBM divide with the fleet, the ring-collective wire bytes
+  approach a floor — exactly the role of ``T_L3Mem`` in Eq. 2).
+
+The Haswell numbers of the old modules are reproduced **bit-identically**
+through this path (pinned in ``tests/golden_haswell_ecm.json`` via
+``tests/test_scaling.py``); ``core.energy`` and the scalar
+``core.saturation`` API remain as thin / deprecated views.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from .ecm import ECMBatch
+from .machine import MACHINES, MachineModel, get_machine
+
+__all__ = [
+    "ChipScaling",
+    "fill_domains",
+    "frequency_scale",
+    "scale_workloads",
+    "saturation_table",
+    "scaling_zoo",
+    "tpu_dp_scaling",
+]
+
+
+# ---------------------------------------------------------------------------
+# Building blocks (shared with repro.simcache and repro.core.energy)
+# ---------------------------------------------------------------------------
+
+
+def frequency_scale(batch: ECMBatch, f_ghz, *, f_nominal_ghz: float,
+                    bw_freq_coupled: bool = False,
+                    coupling_floor: float = 2.0 / 3.0) -> ECMBatch:
+    """Vectorized DVFS view of a batch: appends a frequency axis.
+
+    In-core and in-cache cycle counts live in the core clock domain and
+    are frequency-invariant *in cycles*; the memory edge is fixed *in
+    seconds* (DRAM clock domain), so in core cycles it scales with
+    ``f / f_nominal``.  On bandwidth-coupled machines (SNB/IVB, paper
+    Fig. 4) the sustained bandwidth additionally degrades towards
+    ``coupling_floor`` as the frequency drops.  Returns an
+    :class:`ECMBatch` with batch shape ``B + (F,)``.
+    """
+    f = np.atleast_1d(np.asarray(f_ghz, float))                  # (F,)
+    scale = f / f_nominal_ghz
+    mem_cy = batch.transfers[..., -1, None] * scale              # B + (F,)
+    if bw_freq_coupled:
+        rel = np.minimum(1.0, coupling_floor
+                         + (1 - coupling_floor) * scale)
+        mem_cy = mem_cy / rel
+    shape = mem_cy.shape
+    cache = np.broadcast_to(batch.transfers[..., None, :-1],
+                            shape + (batch.transfers.shape[-1] - 1,))
+    transfers = np.concatenate([cache, mem_cy[..., None]], axis=-1)
+    return ECMBatch(
+        t_ol=np.broadcast_to(batch.t_ol[..., None], shape).copy(),
+        t_nol=np.broadcast_to(batch.t_nol[..., None], shape).copy(),
+        transfers=transfers, levels=batch.levels, names=batch.names,
+        unit=batch.unit)
+
+
+def fill_domains(p1, p_sat, n_cores: int, cores_per_domain: int,
+                 n_domains: int, fill_domains_first: bool = True
+                 ) -> np.ndarray:
+    """Domain-aware Eq. 2 performance curves, vectorized over cores.
+
+    ``p1`` (single-core performance) and ``p_sat`` (per-domain
+    saturation performance; ``inf`` = no shared bottleneck) are
+    broadcast-compatible arrays; the result appends a trailing axis of
+    length ``n_cores``.  ``fill_domains_first=True`` is the CoD/SNC
+    pinning (cores fill one affinity domain after the other; each
+    domain saturates independently); ``False`` spreads cores over one
+    big domain with ``n_domains`` times the bandwidth (non-CoD).  This
+    is the one shared scaling rule: the light-speed engine here and the
+    calibrated simulator (``repro.simcache``) both call it.
+    """
+    p1 = np.asarray(p1, float)[..., None]
+    p_sat = np.asarray(p_sat, float)[..., None]
+    n = np.arange(1, n_cores + 1, dtype=float)
+    if not fill_domains_first:
+        return np.minimum(n * p1, n_domains * p_sat)
+    full = np.floor_divide(n, cores_per_domain)
+    rem = n - full * cores_per_domain
+    p = (full * np.minimum(cores_per_domain * p1, p_sat)
+         + np.minimum(rem * p1, p_sat) * (rem > 0))
+    return np.minimum(p, n_domains * p_sat)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ChipScaling:
+    """Domain-aware multicore scaling + energy of a workload batch on one
+    machine, over a DVFS grid — the registry-integrated Eq. 2 / §III-D
+    engine.  All arrays are ``(W, F)``-shaped (workloads x frequencies);
+    performance/energy surfaces append a core axis ``(W, F, N)``.
+    Construct via :func:`scale_workloads`."""
+
+    machine: MachineModel
+    names: tuple[str, ...]
+    f_ghz: np.ndarray              # (F,)
+    t_single: np.ndarray           # (W, F) mem-level cy per unit of work
+    bottleneck: np.ndarray         # (W, F) per-domain bottleneck cy/unit
+    t_ol: np.ndarray               # (W,) overlapping in-core cycles
+    cores_per_domain: int
+    n_domains: int
+
+    @property
+    def cores(self) -> int:
+        return self.cores_per_domain * self.n_domains
+
+    def _n_sat_raw(self) -> np.ndarray:
+        """(W, F) uncapped Eq. 2 points as floats; ``inf`` where the
+        bottleneck term is zero (nothing to saturate)."""
+        bound = self.bottleneck > 0
+        n = np.full(self.bottleneck.shape, np.inf)
+        n[bound] = np.ceil(self.t_single[bound] / self.bottleneck[bound])
+        return n
+
+    def core_bound(self) -> np.ndarray:
+        """(W, F) booleans: the workload cannot saturate the shared
+        bottleneck within one affinity domain — either there is no
+        bottleneck term at all (cache-resident compute: zero memory
+        traffic) or the Eq. 2 point lies beyond the domain's core
+        count (in-core time dominates).  Consistent with
+        :meth:`performance` by construction: a core-bound workload's
+        bandwidth cap is unreachable with the cores this machine has."""
+        return self._n_sat_raw() > self.cores_per_domain
+
+    def n_saturation(self) -> np.ndarray:
+        """(W, F) Eq. 2 per-domain saturation points.  The domain core
+        count caps the values: core-bound workloads report the full
+        domain (linear scaling to the machine's edge)."""
+        return np.minimum(self._n_sat_raw(),
+                          self.cores_per_domain).astype(int)
+
+    def n_saturation_chip(self) -> np.ndarray:
+        """(W, F) chip-level saturation under balanced domain pinning:
+        ``n_domains`` x the per-domain point (paper Fig. 10: "2 x 4
+        cores for the chip"); the full chip for core-bound workloads."""
+        return np.minimum(self.n_saturation() * self.n_domains, self.cores)
+
+    def saturation_summary(self, f_ghz: float | None = None
+                           ) -> dict[str, dict]:
+        """Per-workload Eq. 2 summary at one frequency (default: the
+        machine's nominal clock) — the one extraction behind the
+        cross-zoo :func:`saturation_table`, the ``BENCH_scaling``
+        artifact and the zoo report."""
+        f = self.machine.nominal_ghz if f_ghz is None else f_ghz
+        fi = int(np.argmin(np.abs(self.f_ghz - f)))
+        n_dom, n_chip = self.n_saturation(), self.n_saturation_chip()
+        core = self.core_bound()
+        return {
+            w: {"n_sat_domain": int(n_dom[i, fi]),
+                "n_sat_chip": int(n_chip[i, fi]),
+                "core_bound": bool(core[i, fi]),
+                "t_single_cy": float(self.t_single[i, fi]),
+                "bottleneck_cy": float(self.bottleneck[i, fi])}
+            for i, w in enumerate(self.names)
+        }
+
+    # ------------------------------------------------------------------
+    def _p_sat(self, work_per_unit) -> np.ndarray:
+        w = np.broadcast_to(np.asarray(work_per_unit, float),
+                            self.bottleneck.shape)
+        bound = self.bottleneck > 0
+        return np.where(bound,
+                        w / np.where(bound, self.bottleneck, 1.0), np.inf)
+
+    def performance(self, n_cores: int | None = None,
+                    work_per_unit=1.0, *,
+                    fill_domains_first: bool = True) -> np.ndarray:
+        """(W, F, N) performance surface in work units per core cycle
+        (multiply by ``f * 1e9`` for units/s).  ``work_per_unit``
+        broadcasts over ``(W, F)`` (e.g. updates per unit of work)."""
+        w = np.asarray(work_per_unit, float)
+        p1 = w / self.t_single
+        return fill_domains(p1, self._p_sat(work_per_unit),
+                            n_cores or self.cores, self.cores_per_domain,
+                            self.n_domains, fill_domains_first)
+
+    def energy(self, total_work_units: float, *,
+               n_cores: int | None = None,
+               fill_domains_first: bool = True) -> dict[str, np.ndarray]:
+        """(W, F, N) energy-to-solution [J], EDP [Js], runtime [s] and
+        power [W] grids — the Figs. 5/6 surfaces from the machine's
+        :class:`~repro.core.machine.ChipPower` calibration."""
+        perf = self.performance(n_cores, fill_domains_first=fill_domains_first)
+        n_max = perf.shape[-1]
+        f = self.f_ghz[None, :, None]
+        n = np.arange(1, n_max + 1, dtype=float)[None, None, :]
+        t_s = total_work_units / (perf * f * 1e9)
+        watts = self.machine.power.watts(n, f) + np.zeros_like(t_s)
+        energy = watts * t_s
+        return {"energy_J": energy, "edp_Js": energy * t_s,
+                "runtime_s": t_s, "watts": watts}
+
+    def operating_points(self, total_work_units: float = 1.0, *,
+                         objective: str = "edp",
+                         n_cores: int | None = None,
+                         fill_domains_first: bool = True,
+                         top: int | None = None) -> list[dict]:
+        """Rank every (workload, frequency, cores) operating point by an
+        objective — ``"performance"`` (min runtime), ``"energy"`` (min
+        energy-to-solution) or ``"edp"``.  Returns dicts best-first;
+        ``top`` truncates.  The argsort is stable with the grid laid out
+        frequency-outer / cores-inner, matching the scan order of the
+        old ``energy.best_config``."""
+        key = {"performance": "runtime_s", "energy": "energy_J",
+               "edp": "edp_Js"}
+        if objective not in key:
+            raise KeyError(f"unknown objective {objective!r}; "
+                           f"pick one of {sorted(key)}")
+        grids = self.energy(total_work_units, n_cores=n_cores,
+                            fill_domains_first=fill_domains_first)
+        obj = grids[key[objective]]                       # (W, F, N)
+        flat = obj.reshape(-1)
+        order = np.argsort(flat, kind="stable")
+        if top is not None:
+            order = order[:top]
+        out = []
+        for i in order:
+            wi, fi, ni = np.unravel_index(i, obj.shape)
+            out.append({
+                "name": (self.names[wi] if self.names else str(int(wi))),
+                "f_ghz": float(self.f_ghz[fi]),
+                "n_cores": int(ni) + 1,
+                "objective": objective,
+                "value": float(flat[i]),
+                "runtime_s": float(grids["runtime_s"][wi, fi, ni]),
+                "energy_J": float(grids["energy_J"][wi, fi, ni]),
+                "edp_Js": float(grids["edp_Js"][wi, fi, ni]),
+            })
+        return out
+
+    def best(self, total_work_units: float = 1.0, *,
+             objective: str = "edp", n_cores: int | None = None,
+             fill_domains_first: bool = True) -> list[dict]:
+        """The energy-optimal (or EDP-/runtime-optimal) ``(n, f)``
+        operating point per workload — first minimum in the
+        frequency-outer / cores-inner scan order (bit-compatible with
+        ``energy.best_config``)."""
+        pts = self.operating_points(total_work_units, objective=objective,
+                                    n_cores=n_cores,
+                                    fill_domains_first=fill_domains_first)
+        seen: dict[str, dict] = {}
+        for p in pts:
+            seen.setdefault(p["name"], p)
+        return [seen[n] for n in (self.names or sorted(seen))]
+
+
+def scale_workloads(workloads, machine: "MachineModel | str" = "haswell-ep",
+                    *, f_ghz=None, sustained_bw=None,
+                    cores_per_domain: int | None = None,
+                    n_domains: int | None = None,
+                    optimized_agu: bool = False) -> ChipScaling:
+    """Build the chip-scaling engine for any workloads on any machine.
+
+    ``workloads`` is any mix the unified engine can lower (or an
+    already-lowered :class:`~repro.core.workload.LoweredBatch`); the
+    per-domain sustained bandwidth comes from the machine's
+    ``measured_bw`` calibration unless overridden, and the domain
+    topology / DVFS grid default to the machine's own.
+    """
+    from .workload import lower_many
+
+    m = get_machine(machine)
+    lowered = (workloads if hasattr(workloads, "routed")
+               else lower_many(workloads, m, sustained_bw=sustained_bw,
+                               optimized_agu=optimized_agu))
+    batch = lowered.batch
+    f = np.atleast_1d(np.asarray(
+        f_ghz if f_ghz is not None else m.frequency_grid(), float))
+    scaled = frequency_scale(batch, f, f_nominal_ghz=m.nominal_ghz,
+                             bw_freq_coupled=m.bw_freq_coupled,
+                             coupling_floor=m.coupling_floor)
+    return ChipScaling(
+        machine=m,
+        names=batch.names,
+        f_ghz=f,
+        t_single=scaled.predictions()[..., -1],
+        bottleneck=scaled.transfers[..., -1],
+        t_ol=np.asarray(batch.t_ol, float),
+        cores_per_domain=cores_per_domain
+        or (m.cores_per_domain or m.cores),
+        n_domains=n_domains or m.n_domains,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cross-zoo views
+# ---------------------------------------------------------------------------
+
+
+def scaling_zoo(workloads=None, machines=None, **kw
+                ) -> dict[str, ChipScaling]:
+    """One :class:`ChipScaling` per machine for the given workloads
+    (default: the full workload registry on every registered machine) —
+    the (workloads x machines x cores x frequencies) surface as a
+    per-machine dict of batched engines (hierarchies differ across
+    machines, so the machine axis stays an outer dict)."""
+    from .workload import workload_registry
+
+    ws = list(workloads if workloads is not None
+              else workload_registry().values())
+    ms = [get_machine(m) for m in (machines or sorted(MACHINES))]
+    return {m.name: scale_workloads(ws, m, **kw) for m in ms}
+
+
+def saturation_table(workloads=None, machines=None) -> dict[str, dict]:
+    """The cross-zoo Eq. 2 table: ``{machine: {workload:
+    saturation-summary row}}`` at each machine's nominal frequency —
+    every registered workload on every registered machine."""
+    return {name: cs.saturation_summary()
+            for name, cs in scaling_zoo(workloads, machines,
+                                        f_ghz=None).items()}
+
+
+# ---------------------------------------------------------------------------
+# TPU Eq. 2 analogue: ICI collectives as the shared bottleneck
+# ---------------------------------------------------------------------------
+
+
+def tpu_dp_scaling(resources, chip_counts=(1, 2, 4, 8, 16, 32, 64, 128,
+                                           256), *,
+                   machine=None, dtype_peak: float | None = None,
+                   exposed_ici_fraction: float | None = None) -> dict:
+    """Eq. 2 at chip granularity: data-parallel scaling of one program.
+
+    ``resources`` describes the global program on one chip (an
+    :class:`~repro.core.hlo.HLOResources` or anything with ``flops``,
+    ``bytes_accessed`` and a ``collectives`` list of
+    :class:`~repro.core.hlo.CollectiveOp`).  Spreading it over ``n``
+    chips divides the compute and HBM terms by ``n``, but the ring
+    collectives' per-chip wire bytes scale with ``(n-1)/n`` — they
+    approach a **floor** that plays exactly the role of ``T_L3Mem`` in
+    Eq. 2: the shared-bottleneck transfer time that does not shrink
+    with more executing units.  The saturation chip count is the Eq. 2
+    form ``n_S = ceil(T_single / T_ICI_floor)``.
+
+    Returns per-``n`` arrays (``t_*_us`` in microseconds) plus
+    ``n_saturation`` (``None`` when the program has no collectives —
+    linear scaling, the chip-level core-bound case).
+    """
+    from .machine import TPU_V5E
+    from .tpu_ecm import TPUStepECM
+
+    m = machine or TPU_V5E
+    peak = dtype_peak or m.peak_bf16_flops
+    exposed = (m.exposed_ici_fraction if exposed_ici_fraction is None
+               else exposed_ici_fraction)
+    colls = list(getattr(resources, "collectives", ()))
+    ici_bw = m.ici_link_bytes_per_s * m.ici_links_per_chip
+
+    def t_ici(n: int) -> float:
+        return sum(replace(c, group_size=n).wire_bytes_per_chip
+                   for c in colls) / ici_bw
+
+    # the floor: ring fraction (n-1)/n -> 1
+    floor_bytes = sum((2.0 if c.kind == "all-reduce" else 1.0) * c.out_bytes
+                      for c in colls)
+    t_floor = floor_bytes / ici_bw
+
+    chips, t_comp, t_hbm, t_coll, t_step = [], [], [], [], []
+    for n in chip_counts:
+        step = TPUStepECM(
+            t_comp=resources.flops / (n * peak),
+            t_hbm=resources.bytes_accessed / (n * m.hbm_bytes_per_s),
+            t_ici=t_ici(n), t_dcn=0.0,
+            exposed_ici_fraction=exposed, name=f"dp-{n}")
+        chips.append(int(n))
+        t_comp.append(step.t_comp)
+        t_hbm.append(step.t_hbm)
+        t_coll.append(step.t_ici)
+        t_step.append(step.t_ecm)
+    t1 = t_step[0] * chips[0]          # single-chip step time equivalent
+    # no collectives, or a fully-hidden ICI term (exposed fraction 0):
+    # nothing ever saturates — the chip-level core-bound case
+    n_sat = (None if t_floor <= 0 or exposed <= 0
+             else max(1, math.ceil(t1 / (exposed * t_floor))))
+    return {
+        "chips": chips,
+        "t_comp_us": [t * 1e6 for t in t_comp],
+        "t_hbm_us": [t * 1e6 for t in t_hbm],
+        "t_ici_us": [t * 1e6 for t in t_coll],
+        "t_step_us": [t * 1e6 for t in t_step],
+        "speedup": [t_step[0] / t for t in t_step],
+        "parallel_efficiency": [t_step[0] / (t * n) * chips[0]
+                                for n, t in zip(chips, t_step)],
+        "t_ici_floor_us": t_floor * 1e6,
+        "n_saturation": n_sat,
+    }

@@ -12,8 +12,6 @@ deterministic permutation of ``(seed, epoch)``.
 """
 from __future__ import annotations
 
-import math
-import os
 from dataclasses import dataclass
 from typing import Any, Callable
 

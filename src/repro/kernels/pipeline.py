@@ -52,7 +52,6 @@ lowers to Mosaic DMA on a real TPU backend.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax

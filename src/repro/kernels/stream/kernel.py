@@ -13,7 +13,6 @@ Scalars arrive as (1, 1) SMEM-style blocks so they stay runtime values.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

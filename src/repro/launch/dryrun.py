@@ -26,7 +26,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, SHAPES, get_arch
 from repro.configs.base import ArchDef, ShapeSpec

@@ -44,7 +44,6 @@ def main() -> int:
     profile = PROFILES[arch.profile](multi_pod)
     max_len = args.prompt_len + args.gen + 8
 
-    rng = np.random.default_rng(args.seed)
     from repro.configs.base import ShapeSpec
     shape = ShapeSpec("cli_prefill", seq_len=args.prompt_len,
                       global_batch=args.batch, kind="prefill")

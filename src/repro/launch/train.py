@@ -12,7 +12,6 @@ import argparse
 import json
 import os
 
-import jax
 
 from repro.configs import ARCH_NAMES, get_arch
 from repro.configs.base import ShapeSpec

@@ -12,8 +12,7 @@ Layers are scanned (``lax.scan`` over parameters stacked on a leading
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax
@@ -28,7 +27,6 @@ from .common import (
     rmsnorm,
     rmsnorm_spec,
     shard_annotate,
-    softmax_xent,
     swiglu,
     swiglu_spec,
     unembed,

@@ -16,7 +16,6 @@ gated RMSNorm output stage, matching the reference Mamba2 block layout.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 
 import jax

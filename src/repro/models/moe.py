@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -89,7 +88,6 @@ def moe_ffn_ref(p, cfg: MoEConfig, x):
     b, s, d = x.shape
     xf = x.reshape(-1, d)
     weights, ids, aux = _route(p, cfg, xf)
-    n = xf.shape[0]
     out = jnp.zeros_like(xf)
     for e in range(cfg.n_experts):
         w_e = jnp.sum(jnp.where(ids == e, weights, 0.0), axis=-1)   # (N,)

@@ -20,11 +20,10 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .attention import AttnConfig, attn_spec, attention, decode_attention, _qkv
+from .attention import AttnConfig, attn_spec, attention, decode_attention
 from .common import (
     ParamSpec,
     embed,
-    embedding_spec,
     gelu_mlp,
     gelu_mlp_spec,
     layernorm,
@@ -283,7 +282,6 @@ def prefill(params, cfg: WhisperConfig, batch, *, max_len: int | None = None):
 def decode_step(params, cfg: WhisperConfig, cache, batch):
     """One-token decode with cached self + cross KV."""
     tokens = batch["tokens"]
-    b = tokens.shape[0]
     length = cache["length"]
     h = embed(params["dec"]["embedding"], tokens).astype(cfg.dtype)
     h = h + jnp.take(params["dec"]["pos"], length[None], axis=0

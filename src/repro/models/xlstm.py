@@ -26,7 +26,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from .common import ParamSpec, rmsnorm, shard_annotate
+from .common import ParamSpec, shard_annotate
 
 
 @dataclass(frozen=True)

@@ -19,7 +19,6 @@ cache — HLO stays O(1) in depth.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Any
 

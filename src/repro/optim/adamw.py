@@ -13,9 +13,7 @@ All moment math happens in f32; quantization error only affects what is
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -404,6 +404,8 @@ def scaling_batch(
     AND core counts.  Domain topology defaults to the machine's
     (``cores_per_domain`` / ``n_domains``).
     """
+    from repro.core.scaling import fill_domains
+
     m = get_machine(machine)
     if cores_per_domain is None:
         cores_per_domain = m.cores_per_domain or m.cores
@@ -424,19 +426,11 @@ def scaling_batch(
     bytes_per_update = mem_streams * m.line_bytes / upd
     p_sat = bw_arr / bytes_per_update                          # per domain
 
-    n = np.arange(1, n_cores + 1, dtype=float)                 # (N,)
     EVAL_COUNTERS["batch_array_evals"] += 1
-    if fill_domains_first:
-        full = np.floor_divide(n, cores_per_domain)
-        rem = n - full * cores_per_domain
-        p = (full[None, :] * np.minimum(cores_per_domain * p1[:, None],
-                                        p_sat[:, None])
-             + np.minimum(rem[None, :] * p1[:, None], p_sat[:, None])
-             * (rem[None, :] > 0))
-        p = np.minimum(p, n_domains * p_sat[:, None])
-    else:
-        p = np.minimum(n[None, :] * p1[:, None],
-                       n_domains * p_sat[:, None])
+    # the one shared Eq. 2 domain-filling rule (repro.core.scaling) on
+    # the *simulated* single-core time — measured-style curves
+    p = fill_domains(p1, p_sat, n_cores, cores_per_domain, n_domains,
+                     fill_domains_first)
     EVAL_COUNTERS["scalar_points"] += p.size
     return names_t, p
 

@@ -25,8 +25,8 @@ from __future__ import annotations
 
 import statistics
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable
+from dataclasses import dataclass
+from typing import Callable
 
 import jax
 import numpy as np
@@ -39,7 +39,6 @@ from repro.dist.sharding import (
     param_shardings,
     use_mesh_context,
 )
-from repro.models.common import materialize
 from repro.optim import AdamWConfig
 from repro.optim.schedule import Schedule
 from .steps import init_state, make_train_step, state_spec

@@ -17,7 +17,6 @@ import jax
 from jax.sharding import Mesh
 
 from repro.dist.sharding import ShardingProfile, param_shardings
-from repro.models.common import is_spec
 
 
 def remesh_state(state, state_spec_tree, new_mesh: Mesh,

@@ -10,8 +10,7 @@ standard memory-term reduction when the HBM roofline term dominates.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -10,8 +10,6 @@ import random
 import sys
 import types
 
-import pytest
-
 
 def pytest_configure(config):
     config.addinivalue_line(

@@ -1,5 +1,4 @@
 """ECM-guided config selection: sanity of the analytic ranking."""
-import pytest
 
 from repro.core.autotune import (
     CandidateConfig,

@@ -9,7 +9,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import _chunked_attn, _dense_attn
 from repro.models.mamba2 import Mamba2Config, _ssd_chunked, mamba2_layer
-from repro.models.xlstm import XLSTMConfig, _mlstm_chunked, _mlstm_core
+from repro.models.xlstm import _mlstm_chunked, _mlstm_core
 
 
 def _rand(key, *shape):

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.configs.base import SHAPES, ShapeSpec
+from repro.configs.base import ShapeSpec
 from repro.data import DataConfig, SyntheticLMDataset, TokenFileDataset
 from repro.data.arch_data import ArchSyntheticDataset
 

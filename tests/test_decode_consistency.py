@@ -2,7 +2,6 @@
 reproduce the teacher-forced logits (exercises the KV cache, the GQA
 grouped einsums and the cache-length masking)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

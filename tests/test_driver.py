@@ -1,7 +1,6 @@
 """Fault-tolerant driver: checkpoint-restart, determinism, stragglers."""
 import time
 
-import numpy as np
 import pytest
 
 from repro.configs import get_arch

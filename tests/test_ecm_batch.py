@@ -4,13 +4,7 @@ scaling and the autotuner ranking."""
 import numpy as np
 import pytest
 
-from repro.core import (
-    BENCHMARKS,
-    ECMBatch,
-    HASWELL_MEASURED_BW,
-    benchmark_batch,
-    haswell_ecm,
-)
+from repro.core import BENCHMARKS, ECMBatch, benchmark_batch, haswell_ecm
 from repro.core.autotune import (
     WorkloadSpec,
     candidates,

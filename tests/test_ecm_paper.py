@@ -3,12 +3,10 @@
 These tests pin the ECM core to the paper's own published values; they are
 the reproduction baseline everything else builds on.
 """
-import math
 
 import pytest
 
 from repro.core import (
-    BENCHMARKS,
     HASWELL_EP,
     PAPER_TABLE1_INPUTS,
     PAPER_TABLE1_MEASUREMENTS,

@@ -43,7 +43,6 @@ def test_parse_collectives_kinds_and_groups():
     kinds = sorted(o.kind for o in ops)
     assert kinds == ["all-gather", "all-reduce", "all-reduce",
                      "all-to-all", "collective-permute", "reduce-scatter"]
-    by = {(-o.out_bytes, o.kind): o for o in ops}
     ag = next(o for o in ops if o.kind == "all-gather")
     assert ag.out_bytes == 8 * 512 * 2
     assert ag.group_size == 8            # replica_groups=[2,8]

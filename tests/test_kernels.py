@@ -1,6 +1,5 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
 swept over shapes, block sizes and dtypes."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

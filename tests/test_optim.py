@@ -13,7 +13,7 @@ from repro.optim import (
     global_norm,
     opt_state_spec,
 )
-from repro.optim.schedule import constant, cosine, linear_warmup_cosine
+from repro.optim.schedule import constant, linear_warmup_cosine
 from repro.models.common import ParamSpec, abstract
 
 

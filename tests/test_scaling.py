@@ -1,0 +1,433 @@
+"""Registry chip-scaling + energy engine (``repro.core.scaling``).
+
+Four guarantees pinned here:
+
+1. **Golden Fig. 10 / Figs. 5-6 values** — the Haswell saturation points
+   (CoD vs non-CoD) and the energy/EDP grid minima computed through the
+   new registry path are bit-identical to the pre-refactor
+   ``saturation.py`` / ``energy.py`` numbers captured in
+   ``tests/golden_haswell_ecm.json``.
+2. **Core-bound regression** — workloads whose shared-bottleneck term is
+   zero (the compute-bound families at cache-resident sizes) report
+   ``n_S = cores`` and scale linearly instead of raising
+   ``ZeroDivisionError``.
+3. **One engine, any machine** — the cross-zoo saturation table covers
+   every registered workload on every registered machine, and
+   ``rank_operating_points`` ranks the (workload x frequency x cores)
+   surface under all three objectives.
+4. **TPU Eq. 2 analogue** — ICI collective wire bytes act as the
+   shared-bottleneck term of multi-chip data-parallel scaling.
+"""
+import importlib.util
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    get_machine,
+    haswell_ecm,
+    machine_names,
+    saturation_table,
+    scale_workloads,
+    tpu_dp_scaling,
+    workload_registry,
+)
+from repro.core.autotune import rank_operating_points
+from repro.core.ecm import ECMBatch, ECMModel
+from repro.core.energy import (
+    FrequencyScaledECM,
+    PowerModel,
+    best_config,
+    energy_grid,
+)
+from repro.core.hlo import CollectiveOp, HLOResources
+from repro.core.machine import HASWELL_CHIP_BW_NONCOD, ChipPower
+from repro.core.saturation import (
+    ScalingModel,
+    batch_curve,
+    batch_saturation,
+)
+from repro.core.scaling import fill_domains, frequency_scale
+from repro.core.workload import StreamWorkload
+from repro.core.kernel_spec import BENCHMARKS
+
+GOLDEN = json.loads(
+    (Path(__file__).parent / "golden_haswell_ecm.json").read_text())["scaling"]
+
+FREQS = GOLDEN["freqs_ghz"]
+WORK = float.fromhex(GOLDEN["work_units"])
+FIG10 = ("ddot", "striad", "schoenauer")
+
+
+# ---------------------------------------------------------------------------
+# 1. Golden pins: Fig. 10 saturation + Figs. 5/6 energy minima
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def hsw_scaling():
+    reg = workload_registry()
+    return scale_workloads(list(reg.values()), "haswell-ep")
+
+
+@pytest.mark.parametrize("kernel", FIG10)
+def test_fig10_cod_saturation_pinned(hsw_scaling, kernel):
+    """Registry CoD path: per-domain and per-chip Eq. 2 points, plus the
+    cycle terms they derive from, bit-equal to the golden capture."""
+    cs = hsw_scaling
+    rec = GOLDEN["fig10"][kernel]
+    i = cs.names.index(kernel)
+    fi = int(np.argmin(np.abs(cs.f_ghz - cs.machine.nominal_ghz)))
+    assert int(cs.n_saturation()[i, fi]) == rec["n_sat_domain"]
+    assert int(cs.n_saturation_chip()[i, fi]) == rec["n_sat_chip"]
+    assert float(cs.t_single[i, fi]).hex() == rec["t_single_cy"]
+    assert float(cs.bottleneck[i, fi]).hex() == rec["bottleneck_cy"]
+
+
+@pytest.mark.parametrize("kernel", FIG10)
+def test_fig10_noncod_saturation_pinned(kernel):
+    """Non-CoD mode (one big domain at the measured chip bandwidth)."""
+    m = get_machine("haswell-ep")
+    cs = scale_workloads(
+        [StreamWorkload(BENCHMARKS[kernel])], m,
+        sustained_bw=HASWELL_CHIP_BW_NONCOD[kernel],
+        cores_per_domain=m.cores, n_domains=1)
+    fi = int(np.argmin(np.abs(cs.f_ghz - m.nominal_ghz)))
+    assert (int(cs.n_saturation()[0, fi])
+            == GOLDEN["fig10"][kernel]["n_sat_noncod"])
+
+
+@pytest.mark.parametrize("label,coupled", [("uncoupled", False),
+                                           ("coupled", True)])
+def test_energy_minima_bit_equal_to_pre_refactor(label, coupled):
+    """The deprecated one-model view reproduces the pre-refactor grids
+    exactly (it is now a thin wrapper over the batched engine)."""
+    rec = GOLDEN["energy_one_domain"][label]
+    fecm = FrequencyScaledECM(haswell_ecm("striad"), f_nominal_ghz=2.3,
+                              bw_freq_coupled=coupled)
+    g = energy_grid(fecm, PowerModel(), n_cores_max=14,
+                    f_ghz_list=FREQS, total_work_units=WORK)
+    f_e, n_e, e = best_config(g["energy_J"], FREQS)
+    f_d, n_d, d = best_config(g["edp_Js"], FREQS)
+    assert [f_e, n_e, float(e).hex()] == rec["best_energy"]
+    assert [f_d, n_d, float(d).hex()] == rec["best_edp"]
+    assert [float(x).hex() for x in g["energy_J"][0]] == rec["energy_row_1p2"]
+
+
+def test_registry_one_domain_override_matches_deprecated_view():
+    """scale_workloads with the one-domain topology override produces the
+    same energy surface as the deprecated ``energy_grid`` — bit-identical,
+    the acceptance bar of the refactor."""
+    fecm = FrequencyScaledECM(haswell_ecm("striad"), f_nominal_ghz=2.3)
+    g_old = energy_grid(fecm, PowerModel(), n_cores_max=14,
+                        f_ghz_list=FREQS, total_work_units=WORK)
+    cs = scale_workloads([workload_registry()["striad"]], "haswell-ep",
+                         f_ghz=FREQS, cores_per_domain=14, n_domains=1)
+    g_new = cs.energy(WORK)
+    for k in ("energy_J", "edp_Js", "runtime_s"):
+        assert np.array_equal(np.asarray(g_old[k]), g_new[k][0]), k
+
+
+def test_registry_cod_energy_minima_pinned():
+    """The domain-aware registry path (CoD: cores fill 7-core domains)
+    has its own — pinned — optimum."""
+    cs = scale_workloads([workload_registry()["striad"]], "haswell-ep")
+    be = cs.best(WORK, objective="energy")[0]
+    bd = cs.best(WORK, objective="edp")[0]
+    rec = GOLDEN["energy_registry_cod"]
+    assert [be["f_ghz"], be["n_cores"],
+            float(be["energy_J"]).hex()] == rec["best_energy"]
+    assert [bd["f_ghz"], bd["n_cores"],
+            float(bd["edp_Js"]).hex()] == rec["best_edp"]
+
+
+def test_frequency_scale_matches_scalar_rule():
+    """Vectorized DVFS == the scalar FrequencyScaledECM rule, per point."""
+    ecm = haswell_ecm("striad")
+    batch = frequency_scale(ECMBatch.from_models([ecm]), FREQS,
+                            f_nominal_ghz=2.3, bw_freq_coupled=True)
+    for fi, f in enumerate(FREQS):
+        scalar = FrequencyScaledECM(ecm, f_nominal_ghz=2.3,
+                                    bw_freq_coupled=True).at_frequency(f)
+        got = batch.scalar((0, fi))
+        assert got.transfers == scalar.transfers
+        assert got.t_ol == scalar.t_ol and got.t_nol == scalar.t_nol
+
+
+# ---------------------------------------------------------------------------
+# 2. Core-bound regression: zero bottleneck must not divide
+# ---------------------------------------------------------------------------
+
+
+def _core_bound_ecm():
+    # in-core time dominates and the memory edge transfers nothing: the
+    # cache-resident compute-bound shape
+    return ECMModel(t_ol=64.0, t_nol=8.0, transfers=(2.0, 4.0, 0.0),
+                    name="resident")
+
+
+def test_scalar_scaling_model_core_bound_no_zero_division():
+    m = ScalingModel.from_ecm(_core_bound_ecm(), cores=14)
+    assert m.core_bound
+    assert m.n_saturation == 14          # linear to the full chip
+    # P(n) = n * P(1), exactly — no bandwidth ceiling anywhere
+    p1 = m.performance(1)
+    for n in (2, 7, 14):
+        assert m.performance(n) == pytest.approx(n * p1)
+    assert len(m.curve(14)) == 14
+
+
+def test_scalar_scaling_model_core_bound_without_core_count():
+    # unknown chip size: degrade to 1 (never 0, never a crash)
+    assert ScalingModel.from_ecm(_core_bound_ecm()).n_saturation == 1
+
+
+def test_batch_saturation_core_bound():
+    batch = ECMBatch.from_models([_core_bound_ecm(), haswell_ecm("striad")])
+    n = batch_saturation(batch, cores=14)
+    assert n[0] == 14                    # core-bound: the full chip
+    assert 1 <= n[1] < 14                # bandwidth-bound: Eq. 2
+    # and the curve stays linear for the core-bound element
+    p = batch_curve(batch, 14)
+    assert p[0, -1] == pytest.approx(14 * p[0, 0])
+    assert p[1, -1] < 14 * p[1, 0]
+
+
+def test_registry_matmul_is_core_bound_full_chip(hsw_scaling):
+    cs = hsw_scaling
+    fi = int(np.argmin(np.abs(cs.f_ghz - cs.machine.nominal_ghz)))
+    for name in ("matmul", "flash-attention"):
+        i = cs.names.index(name)
+        assert bool(cs.core_bound()[i, fi])
+        assert int(cs.n_saturation_chip()[i, fi]) == cs.cores
+        perf = cs.performance()[i, fi]
+        assert perf[-1] == pytest.approx(cs.cores * perf[0])
+
+
+def test_overlap_dominated_but_bandwidth_limited_not_core_bound():
+    """A workload whose T_OL hides the whole transfer chain can still
+    saturate the bus when its Eq. 2 point fits inside a domain:
+    ``core_bound`` / ``n_saturation`` must agree with the
+    ``performance()`` cap (regression: the flag used to claim linear
+    scaling while the surface plateaued at 2 cores)."""
+    from repro.core.machine import HASWELL_EP
+    from repro.core.scaling import ChipScaling
+
+    cs = ChipScaling(machine=HASWELL_EP, names=("ovl",),
+                     f_ghz=np.asarray([2.3]),
+                     t_single=np.asarray([[40.0]]),
+                     bottleneck=np.asarray([[20.0]]),
+                     t_ol=np.asarray([40.0]),
+                     cores_per_domain=7, n_domains=2)
+    assert not bool(cs.core_bound()[0, 0])
+    assert int(cs.n_saturation()[0, 0]) == 2          # ceil(40/20)
+    p = cs.performance()[0, 0]
+    assert p[1] == pytest.approx(1 / 20)              # domain saturated...
+    assert p[6] == pytest.approx(p[1])                # ...stays flat
+    assert p[13] == pytest.approx(2 * p[1])           # second domain
+
+
+def test_fill_domains_topology():
+    # 2 domains x 7 cores, saturation at 2x single-core performance
+    p = fill_domains(1.0, 2.0, 14, 7, 2)
+    assert p[0] == 1.0 and p[1] == 2.0 and p[6] == 2.0   # domain 0 caps
+    assert p[7] == 3.0 and p[8] == 4.0                   # domain 1 fills
+    assert p[-1] == 4.0                                  # both saturated
+    # non-CoD: one pool with the aggregate bandwidth
+    q = fill_domains(1.0, 2.0, 14, 7, 2, fill_domains_first=False)
+    assert q[3] == 4.0 and q[-1] == 4.0
+    # no shared bottleneck: linear everywhere
+    lin = fill_domains(1.0, np.inf, 14, 7, 2)
+    assert list(lin) == list(range(1, 15))
+
+
+# ---------------------------------------------------------------------------
+# 3. Cross-zoo table + operating-point ranking
+# ---------------------------------------------------------------------------
+
+
+def test_saturation_table_covers_every_machine_and_workload():
+    table = saturation_table()
+    names = set(workload_registry())
+    assert set(table) == set(machine_names())
+    for mname, rows in table.items():
+        m = get_machine(mname)
+        assert set(rows) == names
+        for w, rec in rows.items():
+            assert 1 <= rec["n_sat_domain"] <= rec["n_sat_chip"] <= m.cores
+        # compute-bound families never hit the shared bottleneck anywhere
+        for w in ("matmul", "flash-attention"):
+            assert rows[w]["core_bound"]
+            assert rows[w]["n_sat_chip"] == m.cores
+
+
+def test_rank_operating_points_objectives():
+    ws = [workload_registry()[k] for k in FIG10]
+    for objective, key in (("energy", "energy_J"), ("edp", "edp_Js"),
+                           ("performance", "runtime_s")):
+        pts = rank_operating_points(ws, "haswell-ep", objective=objective,
+                                    total_work_units=WORK)
+        assert len(pts) == 3 * len(FREQS) * 14
+        values = [p["value"] for p in pts]
+        assert values == sorted(values)
+        assert all(p["value"] == p[key] for p in pts)
+    top = rank_operating_points(ws, "haswell-ep", total_work_units=WORK,
+                                top=5)
+    assert len(top) == 5
+
+
+def test_rank_operating_points_unknown_objective():
+    with pytest.raises(KeyError):
+        rank_operating_points([workload_registry()["striad"]],
+                              "haswell-ep", objective="speed")
+
+
+def test_machine_power_calibration_present():
+    """Every registered machine carries §III-D calibration: a power model
+    and a (possibly degenerate) DVFS grid."""
+    for name in machine_names():
+        m = get_machine(name)
+        assert isinstance(m.power, ChipPower)
+        grid = m.frequency_grid()
+        assert grid and all(f > 0 for f in grid)
+        assert m.power.watts(1, grid[0]) > 0
+        # array broadcasting (the batched engine's form)
+        w = m.power.watts(np.arange(1, 4), np.asarray(grid[0]))
+        assert w.shape == (3,) and np.all(np.diff(w) > 0)
+
+
+# ---------------------------------------------------------------------------
+# 4. TPU Eq. 2 analogue: ICI collectives as the shared bottleneck
+# ---------------------------------------------------------------------------
+
+
+def _resources(with_collective=True):
+    res = HLOResources()
+    res.flops = 6.0e18 / 1e3
+    res.bytes_accessed = 4.0e12
+    if with_collective:
+        res.collectives = [CollectiveOp(kind="all-reduce",
+                                        out_bytes=4.0e9, group_size=1)]
+    return res
+
+
+def test_tpu_dp_scaling_saturates_on_ici_floor():
+    out = tpu_dp_scaling(_resources(), chip_counts=(1, 2, 4, 8, 16, 32))
+    assert out["t_ici_floor_us"] > 0
+    assert out["n_saturation"] is not None and out["n_saturation"] >= 1
+    # speedup grows monotonically but sub-linearly once the floor bites
+    assert all(b > a for a, b in zip(out["speedup"], out["speedup"][1:]))
+    eff = out["parallel_efficiency"]
+    assert eff[0] == pytest.approx(1.0)
+    assert all(b <= a + 1e-12 for a, b in zip(eff, eff[1:]))
+    # the collective term approaches its ring floor from below
+    assert out["t_ici_us"][-1] <= out["t_ici_floor_us"] + 1e-9
+
+
+def test_tpu_dp_scaling_no_collectives_is_core_bound_case():
+    out = tpu_dp_scaling(_resources(with_collective=False),
+                         chip_counts=(1, 2, 4))
+    assert out["n_saturation"] is None
+    assert out["speedup"][-1] == pytest.approx(4.0)
+
+
+def test_tpu_dp_scaling_fully_hidden_ici_never_saturates():
+    """exposed_ici_fraction=0 hides the collective entirely: scaling is
+    linear, so no finite saturation chip count must be reported."""
+    out = tpu_dp_scaling(_resources(), chip_counts=(1, 2, 4),
+                         exposed_ici_fraction=0.0)
+    assert out["n_saturation"] is None
+
+
+# ---------------------------------------------------------------------------
+# 5. check_bench: the scaling suite schema + strict unknown suites
+# ---------------------------------------------------------------------------
+
+
+def _load_check_bench():
+    path = Path(__file__).parent.parent / "tools" / "check_bench.py"
+    spec = importlib.util.spec_from_file_location("check_bench_scaling",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _scaling_artifact():
+    from benchmarks.run import scaling_payload
+
+    return scaling_payload("haswell-ep")
+
+
+@pytest.fixture(scope="module")
+def scaling_artifact():
+    return _scaling_artifact()
+
+
+def test_check_bench_accepts_scaling_artifact(tmp_path, scaling_artifact):
+    cb = _load_check_bench()
+    p = tmp_path / "BENCH_scaling.json"
+    p.write_text(json.dumps(scaling_artifact))
+    assert cb.check_file(p) == []
+
+
+def test_check_bench_rejects_unrecognized_suite(tmp_path):
+    """An unknown suite name is a hard failure, never a silent pass."""
+    cb = _load_check_bench()
+    p = tmp_path / "BENCH_mystery.json"
+    p.write_text(json.dumps({"schema": 2, "suite": "mystery",
+                             "machine": "haswell-ep"}))
+    problems = cb.check_file(p)
+    assert problems and "unrecognized suite" in problems[0]
+    assert cb.main([str(p)]) == 1
+
+
+def test_check_bench_compare_rejects_suite_mismatch(tmp_path,
+                                                    scaling_artifact):
+    cb = _load_check_bench()
+    new = tmp_path / "BENCH_scaling.json"
+    new.write_text(json.dumps(scaling_artifact))
+    base = tmp_path / "BENCH_tpu.json"
+    base.write_text(json.dumps({"schema": 2, "suite": "tpu",
+                                "machine": "tpu-v5e",
+                                "pipeline": {"kernels": {}}, "zoo": {}}))
+    problems = cb.compare_files(new, base, rtol=0.05)
+    assert problems and "suite mismatch" in problems[0]
+
+
+def test_check_bench_gate_catches_saturation_drift(tmp_path,
+                                                   scaling_artifact):
+    cb = _load_check_bench()
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(scaling_artifact))
+    drifted = json.loads(json.dumps(scaling_artifact))
+    drifted["saturation"]["workloads"]["striad"]["n_sat_chip"] += 2
+    new = tmp_path / "BENCH_scaling.json"
+    new.write_text(json.dumps(drifted))
+    problems = cb.compare_files(new, base, rtol=0.05)
+    assert any("n_sat_chip" in p for p in problems)
+    # identical artifacts are clean
+    assert cb.compare_files(base, base, rtol=0.05) == []
+
+
+def test_scaling_payload_deterministic(scaling_artifact):
+    """The artifact the CI gate diffs carries no wall-clock fields: two
+    builds in one process are byte-identical."""
+    a = json.dumps(scaling_artifact, sort_keys=True)
+    b = json.dumps(_scaling_artifact(), sort_keys=True)
+    assert a == b
+
+
+def test_dp_saturation_consistent_with_floor():
+    """n_S follows the Eq. 2 form against the exposed ICI floor."""
+    out = tpu_dp_scaling(_resources(), chip_counts=(1,))
+    t1 = out["t_step_us"][0]
+    floor = out["t_ici_floor_us"]
+    from repro.core.machine import TPU_V5E
+
+    expected = max(1, math.ceil(
+        t1 / (TPU_V5E.exposed_ici_fraction * floor)))
+    assert out["n_saturation"] == expected

@@ -3,13 +3,11 @@ import pytest
 
 from repro.core import (
     BENCHMARKS,
-    HASWELL_EP,
     HASWELL_MEASURED_BW,
     PAPER_TABLE1_MEASUREMENTS,
     haswell_ecm,
 )
 from repro.simcache import (
-    HASWELL_CACHES_COD,
     simulate_level,
     simulate_scaling,
     simulate_working_set,

@@ -35,7 +35,6 @@ from repro.core import (
     fuse_chain,
     get_machine,
     haswell_ecm,
-    lower,
     machine_names,
     route_traffic,
     stencil_ecm,

@@ -12,6 +12,10 @@ and types that downstream trajectory tooling relies on, so a refactor
 that silently drops or renames a field fails CI instead of producing
 holes in the perf history.  Legacy ``schema: 1`` files (no envelope) are
 accepted — the suite is inferred from their distinctive payload keys.
+An *unrecognized* suite name is always a hard failure (exit 1), so a
+typo'd or not-yet-registered suite cannot pass the gate silently.
+Suites: stream, stencil, compute, scaling (Eq. 2 saturation + energy/EDP
+grids + TPU DP scaling), tpu.
 
 ``--compare`` is the CI regression gate: it diffs a freshly generated
 artifact against the committed baseline, failing when any *deterministic*
@@ -32,7 +36,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 
-SUITES = ("stream", "stencil", "compute", "tpu")
+SUITES = ("stream", "stencil", "compute", "scaling", "tpu")
 
 #: minimal spec language: {key: type | (type, predicate) | dict (nested) |
 #: [element_spec] (non-empty list) | callable(value) -> error or None}
@@ -162,12 +166,84 @@ COMPUTE_SPEC = {
     },
 }
 
+def _int_or_none(x):
+    if x is None or (isinstance(x, int) and not isinstance(x, bool)):
+        return None
+    return f"expected int or null, got {x!r}"
+
+
+def _saturation_workloads(v):
+    """Per-workload Eq. 2 entries: every value carries the saturation
+    points, the core-bound flag and the two cycle terms."""
+    if not isinstance(v, dict) or not v:
+        return "expected non-empty object of per-workload entries"
+    for name, d in v.items():
+        if not isinstance(d, dict):
+            return f"[{name}]: expected object"
+        for k, typ in (("n_sat_domain", int), ("n_sat_chip", int),
+                       ("core_bound", bool), ("t_single_cy", float),
+                       ("bottleneck_cy", float)):
+            val = d.get(k)
+            if not isinstance(val, typ) or (typ is not bool
+                                            and isinstance(val, bool)):
+                return f"[{name}].{k}: expected {typ.__name__}, got " \
+                       f"{type(val).__name__}"
+    return None
+
+
+_BEST_POINT = {
+    "f_ghz": (NUM, _positive),
+    "n_cores": (int, _positive),
+    "energy_J": (NUM, _positive),
+    "edp_Js": (NUM, _positive),
+}
+
+SCALING_SPEC = {
+    "saturation": {
+        "workloads": _saturation_workloads,
+        "cores_per_domain": (int, _positive),
+        "n_domains": (int, _positive),
+    },
+    "energy": {
+        "workload": str,
+        "f_ghz": [NUM],
+        "n_cores": (int, _positive),
+        "grid_energy_J": [list],
+        "grid_edp_Js": [list],
+        "best_energy": _BEST_POINT,
+        "best_edp": _BEST_POINT,
+    },
+    "operating_points": [{
+        "name": str,
+        "f_ghz": (NUM, _positive),
+        "n_cores": (int, _positive),
+        "objective": str,
+        "value": (NUM, _positive),
+        "runtime_s": (NUM, _positive),
+        "energy_J": (NUM, _positive),
+        "edp_Js": (NUM, _positive),
+    }],
+    "tpu_dp": {
+        "chips": [(int, _positive)],
+        "t_comp_us": [NUM],
+        "t_hbm_us": [NUM],
+        "t_ici_us": [NUM],
+        "t_step_us": [(NUM, _positive)],
+        "speedup": [(NUM, _positive)],
+        "parallel_efficiency": [(NUM, _positive)],
+        "t_ici_floor_us": (NUM, _positive),
+        "n_saturation": _int_or_none,
+    },
+}
+
 SPECS = {"stream": STREAM_SPEC, "stencil": STENCIL_SPEC,
-         "compute": COMPUTE_SPEC, "tpu": TPU_SPEC}
+         "compute": COMPUTE_SPEC, "scaling": SCALING_SPEC,
+         "tpu": TPU_SPEC}
 
 #: distinctive payload keys for suite inference on legacy (schema 1) files
 SUITE_HINTS = (("model_eval", "stream"), ("sweep", "stencil"),
-               ("matmul", "compute"), ("zoo", "tpu"))
+               ("matmul", "compute"), ("tpu_dp", "scaling"),
+               ("zoo", "tpu"))
 
 
 def check_value(path: str, value, spec, problems: list[str]) -> None:
@@ -197,6 +273,10 @@ def check_value(path: str, value, spec, problems: list[str]) -> None:
         err = pred(value)
         if err:
             problems.append(f"{path}: {err}")
+    elif not isinstance(spec, type) and callable(spec):
+        err = spec(value)
+        if err:
+            problems.append(f"{path}: {err}")
     else:
         if not isinstance(value, spec) or (spec is not bool
                                            and isinstance(value, bool)):
@@ -220,14 +300,17 @@ def check_file(path: Path) -> list[str]:
         schema = 1
 
     suite = payload.get("suite")
+    if suite is not None and suite not in SUITES:
+        # an unrecognized suite name is a hard error, never a skip: a
+        # typo'd or unregistered suite must not slide through the gate
+        problems.append(f"{rel}.suite: unrecognized suite {suite!r} "
+                        f"(known: {', '.join(SUITES)})")
+        return problems
     if suite is None:
         suite = next((s for k, s in SUITE_HINTS if k in payload), None)
         if schema >= 2:
             problems.append(f"{rel}.suite: missing (required for schema "
                             f">= 2)")
-    elif suite not in SUITES:
-        problems.append(f"{rel}.suite: unknown suite {suite!r}")
-        suite = None
     if schema >= 2 and not isinstance(payload.get("machine"), str):
         problems.append(f"{rel}.machine: missing or not a string")
 
@@ -309,6 +392,11 @@ def compare_files(new_path: Path, base_path: Path, rtol: float) -> list[str]:
         base = json.loads(base_path.read_text(encoding="utf-8"))
     except (OSError, json.JSONDecodeError) as e:
         return [f"compare: unreadable JSON ({e})"]
+    if (isinstance(new, dict) and isinstance(base, dict)
+            and new.get("suite") != base.get("suite")):
+        return [f"compare: suite mismatch — new {new.get('suite')!r} vs "
+                f"baseline {base.get('suite')!r}; comparing artifacts of "
+                f"different suites is meaningless"]
     compare_values(new_path.name, new, base, rtol, problems)
     return problems
 
