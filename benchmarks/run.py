@@ -7,8 +7,9 @@ runner for all kernel families.
     PYTHONPATH=src python -m benchmarks.run --json --suite stencil
     PYTHONPATH=src python -m benchmarks.run --only machine_zoo --machine skylake-sp
 
-``--suite {stream,stencil,compute,scaling,tpu}`` selects a kernel family
-or the chip-level suite (default: all sections); ``--machine`` picks a
+``--suite {stream,stencil,compute,scaling,tpu,serve}`` selects a kernel
+family, the chip-level suite, or the serving-engine suite (default: all
+sections); ``--machine`` picks a
 registry machine for the sections and artifacts that are
 machine-parameterized (the zoo table, the stencil sweep, the compute
 blocking sweeps, the scaling/energy grids, the model-eval throughput
@@ -23,9 +24,12 @@ throughput), ``BENCH_stencil.json`` (stencil: LC sweep + blocking +
 kernel equality), ``BENCH_compute.json`` (compute: matmul/attention ECM +
 block rankings + interpret-mode kernel validation),
 ``BENCH_scaling.json`` (chip level: Eq. 2 saturation table, Figs. 5/6
-energy/EDP grids + optimal operating points, TPU DP scaling) and
+energy/EDP grids + optimal operating points, TPU DP scaling),
 ``BENCH_tpu.json`` (TPU: pipeline timings + the tpu-v5e zoo
-predictions).  Field names are
+predictions) and ``BENCH_serve.json`` (serving engine: one
+deterministic virtual-clock run per fault class — throughput, latency
+percentiles, predicted-vs-measured step ratios, recovery counts).
+Field names are
 stable across schema bumps so trajectories remain comparable; the CI
 regression gate diffs fresh artifacts against the committed baselines
 with ``tools/check_bench.py --compare``.
@@ -44,6 +48,7 @@ from . import (
     fig789_sweeps,
     machine_zoo,
     scaling_bench,
+    serve_bench,
     stencil_sweep,
     table1_ecm,
     tpu_roofline,
@@ -71,6 +76,9 @@ SECTIONS = [
     ("machine_zoo",
      "Machine zoo: every workload x every machine (arXiv:1702.07554)",
      machine_zoo),
+    ("serve_bench",
+     "Model-guided serving: continuous batching under fault injection",
+     serve_bench),
     ("tpu_stream_ecm", "TPU adaptation: Pallas stream kernels + TPU-ECM",
      tpu_stream_ecm),
     ("tpu_roofline", "TPU §Roofline: per (arch x shape x mesh) ECM terms",
@@ -86,6 +94,7 @@ SUITES = {
     "scaling": ["scaling_bench", "machine_zoo"],
     "tpu": ["tpu_stream_ecm", "tpu_roofline", "scaling_bench",
             "machine_zoo"],
+    "serve": ["serve_bench", "machine_zoo"],
 }
 
 #: default artifact path per suite (schema: tools/check_bench.py)
@@ -95,6 +104,7 @@ BENCH_PATHS = {
     "compute": "BENCH_compute.json",
     "scaling": "BENCH_scaling.json",
     "tpu": "BENCH_tpu.json",
+    "serve": "BENCH_serve.json",
 }
 
 BENCH_SCHEMA_VERSION = 2
@@ -231,14 +241,21 @@ def tpu_payload(machine: str = "tpu-v5e") -> dict:
     }
 
 
+def serve_payload(machine: str = "tpu-v5e") -> dict:
+    return {
+        **_envelope("serve", machine),
+        **serve_bench.serve_payload(machine=machine),
+    }
+
+
 def emit_json(path: str | None, suite: str = "stream",
               machine: str | None = None) -> str:
     """Write the suite's BENCH artifact; returns the path written."""
     builders = {"stream": stream_payload, "stencil": stencil_payload,
                 "compute": compute_payload, "scaling": scaling_payload,
-                "tpu": tpu_payload}
+                "tpu": tpu_payload, "serve": serve_payload}
     if machine is None:
-        machine = "tpu-v5e" if suite == "tpu" else "haswell-ep"
+        machine = "tpu-v5e" if suite in ("tpu", "serve") else "haswell-ep"
     payload = builders[suite](machine=machine)
     path = path or BENCH_PATHS[suite]
     with open(path, "w") as f:
@@ -270,6 +287,16 @@ def emit_json(path: str | None, suite: str = "stream",
               f"{be['energy_J']:.0f} J at {be['f_ghz']} GHz x "
               f"{be['n_cores']} cores, TPU DP saturation "
               f"~{dp['n_saturation']} chips")
+    elif suite == "serve":
+        cls = payload["classes"]
+        lost = sum(c["lost"] for c in cls.values())
+        req = sum(c["requeued"] for c in
+                  (v["recovery"] for v in cls.values()))
+        base = cls["none"]
+        print(f"[bench] wrote {path}: {len(cls)} fault classes x "
+              f"{payload['trace']['n_requests']} requests, "
+              f"{base['tok_rate']:.0f} tok/s fault-free, "
+              f"{req} fault requeues recovered, lost requests: {lost}")
     elif suite == "compute":
         mm, att = payload["matmul"], payload["attention"]
         ok = all(v["matches_ref"] for v in payload["kernels"].values())

@@ -176,7 +176,9 @@ class AsyncCheckpointer:
             try:
                 save_tree(self.root, step, tree, metadata=meta)
                 prune(self.root, self.keep_last)
-            except Exception as e:          # surfaced on next submit/close
+            # noqa rationale: the worker must never die silently — any
+            # write failure is captured and re-raised on submit/close
+            except Exception as e:  # noqa: BLE001
                 self._err = e
             finally:
                 self._q.task_done()
@@ -192,7 +194,22 @@ class AsyncCheckpointer:
         if self._err:
             raise self._err
 
-    def close(self) -> None:
+    def close(self, timeout: float = 10.0) -> None:
+        """Drain the queue and stop the worker.
+
+        Raises ``RuntimeError`` if the worker is still alive after
+        ``timeout`` seconds — a wedged writer (dead filesystem, stuck
+        I/O) must be loud, not silently leaked as a daemon thread with
+        a checkpoint possibly half-written.  Any error the worker
+        recorded is surfaced too (chained when both happen).
+        """
         self.wait()
         self._q.put(None)
-        self._thread.join(timeout=10)
+        self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            raise RuntimeError(
+                f"checkpoint writer thread failed to stop within "
+                f"{timeout:.0f}s; a write to {self.root!r} may be "
+                f"wedged or half-finished") from self._err
+        if self._err:
+            raise self._err

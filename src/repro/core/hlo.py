@@ -169,8 +169,9 @@ def analyze(compiled, lowered=None, n_devices: int | None = None) -> HLOResource
         ca = compiled.cost_analysis()
         if isinstance(ca, (list, tuple)):
             ca = ca[0]
-    except Exception:
-        ca = None
+    except (AttributeError, IndexError, NotImplementedError, RuntimeError,
+            TypeError, ValueError):
+        ca = None  # backend exposes no cost analysis
     if ca:
         res.flops = float(ca.get("flops", 0.0))
         res.bytes_accessed = float(ca.get("bytes accessed", 0.0))
@@ -178,7 +179,7 @@ def analyze(compiled, lowered=None, n_devices: int | None = None) -> HLOResource
     if n_devices is None:
         try:
             n_devices = len(compiled.input_shardings[0].device_set)  # best effort
-        except Exception:
+        except (AttributeError, IndexError, TypeError):
             n_devices = 1
     text = None
     for src in (compiled, lowered):
@@ -187,7 +188,8 @@ def analyze(compiled, lowered=None, n_devices: int | None = None) -> HLOResource
         try:
             text = src.as_text()
             break
-        except Exception:
+        except (AttributeError, NotImplementedError, RuntimeError,
+                TypeError, ValueError):
             continue
     if text:
         res.collectives = parse_collectives(text, n_devices)
@@ -200,7 +202,8 @@ def memory_analysis_dict(compiled) -> dict[str, float]:
     out: dict[str, float] = {}
     try:
         ma = compiled.memory_analysis()
-    except Exception:
+    except (AttributeError, NotImplementedError, RuntimeError, TypeError,
+            ValueError):
         return out
     if ma is None:
         return out

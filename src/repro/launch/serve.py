@@ -4,6 +4,13 @@
 --gen 8`` runs prefill on a synthetic prompt batch and decodes tokens,
 reporting per-phase timings.  Smoke scale on CPU; the same entry point
 targets the production mesh with ``--mesh single-pod``.
+
+``--continuous`` runs the model-guided continuous-batching engine
+(``repro.serve``) over a synthetic trace instead of a single static
+batch: requests arrive, are admitted against their ECM-predicted finish
+times, and the summary reports throughput/latency plus the full event
+ledger.  Optionally combine with ``--faults <plan>`` to replay one of
+the named fault scenarios.
 """
 from __future__ import annotations
 
@@ -11,19 +18,29 @@ import argparse
 import json
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import ARCH_NAMES, get_arch
-from repro.dist.sharding import PROFILES, use_mesh_context
-from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.models.common import materialize
+def _continuous(args) -> int:
+    """Trace-driven engine mode: pure virtual clock, no jax needed."""
+    from repro.serve import (
+        EngineConfig,
+        FaultInjector,
+        ServeEngine,
+        TraceConfig,
+        fault_plan,
+        synthetic_trace,
+    )
+
+    engine = ServeEngine(EngineConfig(seed=args.seed))
+    trace = synthetic_trace(
+        TraceConfig(n_requests=args.requests), seed=args.seed)
+    summary = engine.run(trace, FaultInjector(fault_plan(args.faults)))
+    print(json.dumps(summary, indent=1, default=str))
+    return 0 if summary["lost"] == 0 else 1
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_NAMES, default="internlm2-1.8b")
+    ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8)
@@ -32,7 +49,30 @@ def main() -> int:
     ap.add_argument("--mesh", default="host",
                     choices=("host", "single-pod", "multi-pod"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="run the ECM-guided continuous-batching engine "
+                         "over a synthetic trace (repro.serve)")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="trace length for --continuous")
+    ap.add_argument("--faults", default="none",
+                    help="fault plan for --continuous "
+                         "(none/device_loss/slow_step/kv_corruption)")
     args = ap.parse_args()
+
+    if args.continuous:
+        return _continuous(args)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import ARCH_NAMES, get_arch
+    from repro.dist.sharding import PROFILES, use_mesh_context
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.models.common import materialize
+
+    if args.arch not in ARCH_NAMES:
+        ap.error(f"--arch must be one of {ARCH_NAMES}")
 
     arch = get_arch(args.arch, smoke=args.smoke)
     if not arch.has_decoder:
@@ -71,11 +111,14 @@ def main() -> int:
         jax.block_until_ready(logits)
         t_decode = time.perf_counter() - t0
 
+    # --gen 0 is a prefill-only run: no decode steps happened, so a
+    # per-token decode time does not exist (it is null, not 0/0)
     print(json.dumps({
         "arch": arch.name,
         "prefill_s": round(t_prefill, 4),
-        "decode_s_per_tok": round(t_decode / args.gen, 4),
-        "tokens": np.stack(toks, 1).tolist(),
+        "decode_s_per_tok": (round(t_decode / args.gen, 4)
+                             if args.gen > 0 else None),
+        "tokens": np.stack(toks, 1).tolist() if toks else [],
     }, indent=1))
     return 0
 

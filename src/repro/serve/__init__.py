@@ -1,0 +1,48 @@
+"""Model-guided serving: continuous batching with ECM admission control.
+
+The ECM model predicts step time from first principles, which makes it
+usable *online*: this package puts the registry-lowered
+``AttentionWorkload`` predictions inside a continuous-batching serving
+loop as the scheduler's brain.  Admission control, degradation under
+pressure and fault recovery are all decided against — and logged with —
+the model's predicted step times.
+
+Modules:
+
+* :mod:`repro.serve.trace` — seedable synthetic heavy-traffic traces;
+* :mod:`repro.serve.policy` — SLO classes, bounded retry with backoff,
+  the degradation ladder;
+* :mod:`repro.serve.engine` — the continuous-batching engine on a
+  virtual clock, with per-(batch, context) bucket predictions and
+  online re-calibration;
+* :mod:`repro.serve.faults` — deterministic fault injection (device
+  loss via ``repro.train.elastic``, slow steps, corrupted KV pages).
+"""
+from .engine import BucketModel, EngineConfig, ServeEngine, ServingModel
+from .faults import (
+    PRESETS,
+    DeviceLoss,
+    FaultInjector,
+    FaultPlan,
+    KVCorrupt,
+    SlowWindow,
+    fault_plan,
+)
+from .policy import (
+    SLO_CLASSES,
+    DegradationPolicy,
+    RequestState,
+    RetryPolicy,
+    SLOClass,
+    slo_class,
+)
+from .trace import Request, TraceConfig, synthetic_trace
+
+__all__ = [
+    "BucketModel", "EngineConfig", "ServeEngine", "ServingModel",
+    "DeviceLoss", "FaultInjector", "FaultPlan", "KVCorrupt", "PRESETS",
+    "SlowWindow", "fault_plan",
+    "SLO_CLASSES", "DegradationPolicy", "RequestState", "RetryPolicy",
+    "SLOClass", "slo_class",
+    "Request", "TraceConfig", "synthetic_trace",
+]

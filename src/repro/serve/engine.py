@@ -1,0 +1,704 @@
+"""The continuous-batching engine: ECM predictions drive scheduling.
+
+The engine runs on a **virtual clock**: each iteration admits queued
+requests, forms one decode step over the running batch (new admissions
+piggyback their prefill onto the step, chunked-prefill style), predicts
+the step time from the registry-lowered ``AttentionWorkload`` models,
+then "executes" it by advancing the clock by the *measured* time (the
+same light-speed prediction scaled by the configured hardware factor
+and any injected faults).  Nothing reads a wall clock, so a (trace,
+config, fault plan, seed) tuple reproduces the run bit-for-bit — which
+is what lets the tests pin exact recovery sequences.
+
+The model is the scheduler's brain in three places:
+
+* **bucket predictions** — :class:`BucketModel` lowers a decode-regime
+  attention workload (one query row streaming the whole KV: ``sq = bq
+  = 1``, the bandwidth-bound case ECM predicts well) per power-of-two
+  context bucket, with ``rank_attention_blocks`` picking the KV block
+  size per bucket, and composes per-step time as the batch's summed
+  per-request cycles over the data-parallel devices;
+* **admission control** — a request is admitted only if its predicted
+  finish (prefill + remaining decode steps at the would-be batch size)
+  meets its deadline; hopeless requests are rejected *with the
+  prediction logged*;
+* **re-calibration** — when a measured step exceeds the prediction by
+  more than ``recalib_threshold`` (an injected slow step, a degraded
+  part), the involved buckets' calibration multipliers are pulled
+  toward the measured ratio, and subsequent admission decisions use the
+  calibrated times.
+
+Degradation under pressure and fault handling are layered on by
+:mod:`repro.serve.policy` and :mod:`repro.serve.faults`; the engine
+logs every transition with the prediction that triggered it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.autotune import rank_attention_blocks
+from repro.core.machine import MachineModel, get_machine
+from repro.core.workload import AttentionSpec, AttentionWorkload, lower
+
+from .policy import DegradationPolicy, RequestState, RetryPolicy
+from .trace import Request
+
+
+# ---------------------------------------------------------------------------
+# The served model and the per-bucket ECM predictions
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ServingModel:
+    """First-order description of the served transformer's attention
+    path (the decode bottleneck the ECM model predicts): head count,
+    layer count, head dimension and KV dtype width."""
+
+    heads: int = 8
+    layers: int = 16
+    d: int = 128
+    elem_bytes: int = 4
+
+    def o_lines_per_token(self, line_bytes: int = 64) -> float:
+        """Cache lines of attention output per generated token across
+        all heads and layers — the unit-of-work count that converts the
+        per-CL ECM prediction into per-token cycles."""
+        return (self.d * self.elem_bytes / line_bytes) \
+            * self.heads * self.layers
+
+
+def pow2_bucket(x: int, lo: int, hi: int) -> int:
+    """Smallest power of two >= ``x``, clamped to ``[lo, hi]``."""
+    b = lo
+    while b < x and b < hi:
+        b *= 2
+    return b
+
+
+class BucketModel:
+    """Per-(kind, context-bucket) ECM step-time predictions + online
+    calibration.
+
+    Decode buckets lower ``AttentionWorkload(sq=1, bq=1, skv=bucket)``
+    — one query row streaming the whole KV, ``causal=False`` (decode
+    attends to everything already cached).  Prefill buckets lower the
+    causal tiled workload at the bucket's square shape.  For each
+    bucket ``rank_attention_blocks`` ranks the KV block candidates and
+    the engine serves from the winner (degradation level 2 falls back
+    to the smallest fitting candidate).  ``calib`` starts at 1.0 per
+    bucket and is pulled toward measured/predicted by
+    :meth:`recalibrate`.
+    """
+
+    def __init__(self, machine: "MachineModel | str" = "tpu-v5e",
+                 model: ServingModel = ServingModel(), *,
+                 min_ctx: int = 128, max_ctx: int = 16384,
+                 bkv_candidates: tuple[int, ...] = (128, 256, 512,
+                                                    1024, 2048)):
+        self.machine = get_machine(machine)
+        self.model = model
+        self.min_ctx = min_ctx
+        self.max_ctx = max_ctx
+        self.bkv_candidates = bkv_candidates
+        self.spec = AttentionSpec(elem_bytes=model.elem_bytes)
+        self.calib: dict[tuple[str, int], float] = {}
+        self._decode: dict[int, dict] = {}
+        self._prefill: dict[int, dict] = {}
+
+    # -- bucket construction ------------------------------------------------
+
+    def ctx_bucket(self, ctx: int) -> int:
+        return pow2_bucket(int(ctx), self.min_ctx, self.max_ctx)
+
+    def _decode_entry(self, cb: int) -> dict:
+        ent = self._decode.get(cb)
+        if ent is None:
+            blocks = [(1, bkv) for bkv in self.bkv_candidates if bkv <= cb] \
+                or [(1, cb)]
+            ranked = rank_attention_blocks(
+                (1, cb, self.model.d), blocks=blocks, machine=self.machine,
+                causal=False, spec=self.spec)
+            fitting = [r for r in ranked if r["fits"]] or ranked
+            by_bkv = {r["block"][1]: r["t_ecm"] for r in ranked}
+            ent = {
+                "best_bkv": fitting[0]["block"][1],
+                "min_bkv": min(r["block"][1] for r in fitting),
+                "cy_per_cl": by_bkv,
+                "tile_bytes": {r["block"][1]: r["tile_bytes"]
+                               for r in ranked},
+            }
+            self._decode[cb] = ent
+        return ent
+
+    def _prefill_entry(self, cb: int) -> dict:
+        ent = self._prefill.get(cb)
+        if ent is None:
+            blocks = [(bq, bkv)
+                      for bq in self.bkv_candidates if bq <= cb
+                      for bkv in self.bkv_candidates if bkv <= cb] \
+                or [(cb, cb)]
+            ranked = rank_attention_blocks(
+                (cb, cb, self.model.d), blocks=blocks, machine=self.machine,
+                causal=True, spec=self.spec)
+            fitting = [r for r in ranked if r["fits"]] or ranked
+            best = fitting[0]
+            ent = {"block": best["block"], "cy_per_cl": best["t_ecm"]}
+            self._prefill[cb] = ent
+        return ent
+
+    def decode_block(self, ctx: int, *, smallest: bool = False) -> int:
+        """The ranked KV block size for this context bucket (the
+        degradation ladder's level-2 fallback picks the smallest)."""
+        ent = self._decode_entry(self.ctx_bucket(ctx))
+        return ent["min_bkv"] if smallest else ent["best_bkv"]
+
+    def chosen_blocks(self) -> dict[int, dict]:
+        """Every bucket built so far: ``{ctx_bucket: {"decode_bkv",
+        "prefill_block"}}`` (the bench artifact pins these)."""
+        out: dict[int, dict] = {}
+        for cb, ent in sorted(self._decode.items()):
+            out[cb] = {"decode_bkv": ent["best_bkv"]}
+        for cb, ent in sorted(self._prefill.items()):
+            out.setdefault(cb, {})["prefill_block"] = list(ent["block"])
+        return out
+
+    # -- predictions --------------------------------------------------------
+
+    def _verify_attention_model(self, ctx_bucket, workload):
+        # hook point for tests; lower() is the registry path already
+        return lower(workload, self.machine)
+
+    def decode_cy_per_token(self, ctx: int, *, smallest_block: bool = False,
+                            calibrated: bool = True) -> float:
+        """Predicted core cycles to decode one token at this context."""
+        cb = self.ctx_bucket(ctx)
+        ent = self._decode_entry(cb)
+        bkv = ent["min_bkv"] if smallest_block else ent["best_bkv"]
+        cy = ent["cy_per_cl"][bkv] * self.model.o_lines_per_token(
+            self.machine.line_bytes)
+        if calibrated:
+            cy *= self.calib.get(("decode", cb), 1.0)
+        return cy
+
+    def prefill_cy(self, prompt_len: int, *, calibrated: bool = True
+                   ) -> float:
+        """Predicted core cycles to prefill a prompt (all layers/heads)."""
+        cb = self.ctx_bucket(prompt_len)
+        ent = self._prefill_entry(cb)
+        cy = ent["cy_per_cl"] * prompt_len \
+            * self.model.o_lines_per_token(self.machine.line_bytes)
+        if calibrated:
+            cy *= self.calib.get(("prefill", cb), 1.0)
+        return cy
+
+    def seconds(self, cycles: float, n_devices: int = 1) -> float:
+        """Cycles -> virtual seconds over ``n_devices`` data-parallel
+        devices (requests partition across devices; the step ends when
+        the slowest share does — modeled as an even split)."""
+        return cycles / (self.machine.clock_hz * max(n_devices, 1))
+
+    # -- calibration --------------------------------------------------------
+
+    def calibration(self, kind: str, ctx: int) -> float:
+        return self.calib.get((kind, self.ctx_bucket(ctx)), 1.0)
+
+    def recalibrate(self, kind: str, ctx: int, ratio: float,
+                    alpha: float = 0.75) -> float:
+        """Pull the bucket's multiplier toward ``measured/predicted``;
+        returns the new value."""
+        key = (kind, self.ctx_bucket(ctx))
+        old = self.calib.get(key, 1.0)
+        new = (1.0 - alpha) * old + alpha * old * ratio
+        self.calib[key] = new
+        return new
+
+
+# ---------------------------------------------------------------------------
+# Engine configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Knobs of one engine instance (all deterministic)."""
+
+    machine: str = "tpu-v5e"
+    n_devices: int = 4
+    max_batch: int = 16
+    min_ctx: int = 128
+    max_ctx: int = 16384
+    #: true hardware time as a multiple of the light-speed prediction
+    #: (1.0 = the model is exact; the fault harness perturbs per step)
+    hw_factor: float = 1.0
+    #: measured/predicted ratio beyond which a step triggers bucket
+    #: re-calibration (either direction)
+    recalib_threshold: float = 1.5
+    recalib_alpha: float = 0.75
+    #: slack multiplier on predicted finish vs deadline at admission
+    admission_slack: float = 1.0
+    max_steps: int = 100_000
+    seed: int = 0
+    bkv_candidates: tuple[int, ...] = (128, 256, 512, 1024, 2048)
+
+
+@dataclass
+class StepRecord:
+    """One executed engine step (deterministic trajectory element)."""
+
+    step: int
+    t_start: float
+    batch: int
+    prefills: int
+    predicted_s: float
+    measured_s: float
+    degrade_level: int
+    n_devices: int
+    buckets: tuple[int, ...] = ()
+
+    @property
+    def ratio(self) -> float:
+        return self.measured_s / self.predicted_s if self.predicted_s else 1.0
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+class ServeEngine:
+    """Continuous batching on a virtual clock, scheduled by the ECM
+    model.  See the module docstring for the loop structure; public
+    results are ``log`` (the decision/event log), ``steps`` (per-step
+    predicted vs measured) and :meth:`summary`."""
+
+    def __init__(self, cfg: EngineConfig = EngineConfig(),
+                 model: ServingModel = ServingModel(), *,
+                 retry: RetryPolicy = RetryPolicy(),
+                 degrade: DegradationPolicy = DegradationPolicy()):
+        self.cfg = cfg
+        self.model = model
+        self.retry = retry
+        self.degrade = degrade
+        self.buckets = BucketModel(
+            cfg.machine, model, min_ctx=cfg.min_ctx, max_ctx=cfg.max_ctx,
+            bkv_candidates=cfg.bkv_candidates)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.now = 0.0
+        self.step_idx = 0
+        self.level = 0
+        self.n_devices = cfg.n_devices
+        self.log: list[dict] = []
+        self.steps: list[StepRecord] = []
+        self.requests: list[Request] = []
+        # optional real-jax KV page store (resharded on device loss)
+        self.mesh = None
+        self.kv_store = None
+        self.kv_spec = None
+        self.kv_profile = None
+
+    # -- logging ------------------------------------------------------------
+
+    def _log(self, event: str, **fields) -> dict:
+        rec = {"t": round(self.now, 9), "step": self.step_idx,
+               "event": event, **fields}
+        self.log.append(rec)
+        return rec
+
+    def events(self, *names: str) -> list[dict]:
+        return [e for e in self.log if not names or e["event"] in names]
+
+    # -- optional real KV store (exercised by the device-loss fault) --------
+
+    def attach_kv_store(self, mesh, *, n_pages: int = 64,
+                        page_tokens: int = 16):
+        """Attach a real jax KV-page pytree sharded over ``mesh``'s
+        ``data`` axis; the device-loss fault reshards it through
+        ``repro.train.elastic`` (values must survive bit-identically)."""
+        from repro.dist.sharding import ShardingProfile, param_shardings
+        from repro.models.common import ParamSpec, is_spec
+
+        import jax
+
+        d = self.model.d
+        spec = {"kv_pages": ParamSpec(shape=(n_pages, page_tokens, d),
+                                      axes=("pages", None, None)),
+                "page_table": ParamSpec(shape=(n_pages,),
+                                        axes=("pages",), dtype=np.int32)}
+        profile = ShardingProfile("kv_pages", rules={"pages": "data"})
+        arrays = {
+            "kv_pages": np.arange(n_pages * page_tokens * d,
+                                  dtype=np.float32
+                                  ).reshape(n_pages, page_tokens, d),
+            "page_table": np.arange(n_pages, dtype=np.int32),
+        }
+        shardings = param_shardings(spec, mesh, profile)
+        flat_a, treedef = jax.tree.flatten(arrays)
+        flat_s = jax.tree.flatten(
+            shardings, is_leaf=lambda x: hasattr(x, "spec"))[0]
+        self.kv_store = jax.tree.unflatten(
+            treedef, [jax.device_put(a, s) for a, s in zip(flat_a, flat_s)])
+        self.kv_spec = jax.tree.map(lambda s: s, spec, is_leaf=is_spec)
+        self.kv_profile = profile
+        self.mesh = mesh
+        return self.kv_store
+
+    # -- derived settings ---------------------------------------------------
+
+    @property
+    def effective_max_batch(self) -> int:
+        return max(self.cfg.max_batch // (2 if self.level >= 1 else 1), 1)
+
+    @property
+    def smallest_blocks(self) -> bool:
+        return self.level >= 2
+
+    # -- predictions --------------------------------------------------------
+
+    def _batch_cycles(self, running: list[Request],
+                      prefills: list[Request], *, calibrated: bool) -> float:
+        cy = sum(self.buckets.decode_cy_per_token(
+            r.context_len, smallest_block=self.smallest_blocks,
+            calibrated=calibrated) for r in running)
+        cy += sum(self.buckets.prefill_cy(r.prompt_len,
+                                          calibrated=calibrated)
+                  for r in prefills)
+        return cy
+
+    def predict_step_s(self, running: list[Request],
+                       prefills: list[Request] = (), *,
+                       calibrated: bool = True,
+                       n_devices: int | None = None) -> float:
+        """The scheduler's core query: predicted next-step seconds."""
+        return self.buckets.seconds(
+            self._batch_cycles(list(running), list(prefills),
+                               calibrated=calibrated),
+            n_devices if n_devices is not None else self.n_devices)
+
+    def predict_finish_s(self, req: Request, batch_size: int) -> float:
+        """Predicted completion time if ``req`` were admitted into a
+        batch of ``batch_size`` now: prefill (if KV is cold) plus the
+        remaining decode steps, each at the batch's predicted step
+        time (context frozen at admission — first-order, like the
+        paper's stream counting)."""
+        per_req = self.buckets.decode_cy_per_token(
+            req.context_len, smallest_block=self.smallest_blocks)
+        step_s = self.buckets.seconds(per_req * max(batch_size, 1),
+                                      self.n_devices)
+        prefill_s = 0.0
+        if req.tokens_done == 0:
+            prefill_s = self.buckets.seconds(
+                self.buckets.prefill_cy(req.prompt_len), self.n_devices)
+        return self.now + prefill_s + req.remaining_tokens * step_s
+
+    # -- the loop -----------------------------------------------------------
+
+    def run(self, requests: list[Request], faults=None) -> dict:
+        """Serve ``requests`` to completion; returns :meth:`summary`.
+
+        ``faults`` is a :class:`repro.serve.faults.FaultInjector` (or
+        ``None``).  The loop ends when every request is terminal; it
+        raises if ``cfg.max_steps`` is exceeded (a hung loop must fail,
+        not stall)."""
+        from .faults import apply_device_loss
+
+        self.requests = list(requests)
+        pending = sorted(self.requests, key=lambda r: (r.arrival_s, r.rid))
+        queue: list[Request] = []
+        running: list[Request] = []
+
+        while pending or queue or running:
+            if self.step_idx >= self.cfg.max_steps:
+                raise RuntimeError(
+                    f"serve loop exceeded max_steps={self.cfg.max_steps} "
+                    f"({len(pending)} pending, {len(queue)} queued, "
+                    f"{len(running)} running)")
+
+            # 1. advance the clock when idle (to the next arrival or the
+            #    earliest backoff-eligible queued request)
+            if not running:
+                times = [r.arrival_s for r in pending[:1]] \
+                    + [r.eligible_s for r in queue]
+                if times:
+                    self.now = max(self.now, min(times))
+
+            # 2. arrivals
+            while pending and pending[0].arrival_s <= self.now:
+                queue.append(pending.pop(0))
+
+            # 3. deadline sweep: cancel queued requests that can no
+            #    longer finish even solo (ECM-predicted floor)
+            for r in list(queue):
+                if self.predict_finish_s(r, 1) > r.deadline_s \
+                        and self.now > r.arrival_s:
+                    if self.predict_finish_s(r, 1) - r.deadline_s \
+                            < self.buckets.seconds(
+                                self.buckets.decode_cy_per_token(
+                                    r.context_len), self.n_devices):
+                        continue  # marginal: give admission a chance
+                    r.state = RequestState.CANCELLED
+                    r.finish_s = self.now
+                    r.reason = "deadline unreachable"
+                    queue.remove(r)
+                    self._log("cancel", rid=r.rid,
+                              predicted_finish_s=self.predict_finish_s(r, 1),
+                              deadline_s=r.deadline_s)
+
+            # 4. degradation ladder on the predicted next-step time
+            pressure = self.predict_step_s(
+                running if running else queue[: self.effective_max_batch])
+            new_level = self.degrade.next_level(self.level, pressure)
+            if new_level != self.level:
+                self._log("degrade" if new_level > self.level else "restore",
+                          level=new_level, from_level=self.level,
+                          predicted_step_s=pressure,
+                          step_budget_s=self.degrade.step_budget_s)
+                self.level = new_level
+            if self.level >= 3:
+                self._shed_queue(queue)
+
+            # 5. admission (priority, then deadline, then rid)
+            prefills = self._admit(queue, running)
+
+            if not running:
+                if not pending and not queue:
+                    break
+                continue
+
+            # 6. one continuous-batching step
+            self._execute_step(running, prefills, queue, faults,
+                               apply_device_loss)
+
+        return self.summary()
+
+    # -- loop pieces --------------------------------------------------------
+
+    def _shed_queue(self, queue: list[Request]) -> None:
+        """Level-3 action: shed the lowest-priority queued requests
+        whose ECM-predicted finish misses their deadline."""
+        for r in sorted(queue, key=lambda r: (-r.priority, r.rid)):
+            predicted = self.predict_finish_s(r, self.effective_max_batch)
+            if predicted * self.cfg.admission_slack > r.deadline_s:
+                r.state = RequestState.SHED
+                r.finish_s = self.now
+                r.reason = "load shed"
+                queue.remove(r)
+                self._log("shed", rid=r.rid, priority=r.priority,
+                          predicted_finish_s=predicted,
+                          deadline_s=r.deadline_s)
+                return  # one per step: pressure re-evaluated next round
+
+    def _admit(self, queue: list[Request],
+               running: list[Request]) -> list[Request]:
+        prefills: list[Request] = []
+        queue.sort(key=lambda r: (r.priority, r.deadline_s, r.rid))
+        for r in list(queue):
+            if len(running) >= self.effective_max_batch:
+                break
+            if r.eligible_s > self.now:
+                continue  # backoff window still open
+            if r.prompt_len + r.gen_len > self.cfg.max_ctx:
+                r.state = RequestState.SHED
+                r.finish_s = self.now
+                r.reason = "context exceeds max_ctx"
+                queue.remove(r)
+                self._log("reject", rid=r.rid, reason=r.reason,
+                          context=r.prompt_len + r.gen_len,
+                          max_ctx=self.cfg.max_ctx)
+                continue
+            predicted = self.predict_finish_s(r, len(running) + 1)
+            if predicted * self.cfg.admission_slack > r.deadline_s:
+                # would blow the deadline at this batch size; if even a
+                # solo run cannot make it, reject now (terminal,
+                # logged) instead of queueing a hopeless request
+                solo = self.predict_finish_s(r, 1)
+                if solo * self.cfg.admission_slack > r.deadline_s:
+                    r.state = RequestState.SHED
+                    r.finish_s = self.now
+                    r.reason = "deadline infeasible at admission"
+                    queue.remove(r)
+                    self._log("reject", rid=r.rid, reason=r.reason,
+                              predicted_finish_s=solo,
+                              deadline_s=r.deadline_s)
+                continue
+            queue.remove(r)
+            r.state = RequestState.RUNNING
+            r.admitted_s = self.now
+            running.append(r)
+            if r.tokens_done == 0:
+                prefills.append(r)
+            self._log("admit", rid=r.rid, batch=len(running),
+                      predicted_finish_s=predicted, deadline_s=r.deadline_s,
+                      ctx_bucket=self.buckets.ctx_bucket(r.context_len))
+        return prefills
+
+    def _execute_step(self, running: list[Request],
+                      prefills: list[Request], queue: list[Request],
+                      faults, apply_device_loss) -> None:
+        cfg = self.cfg
+
+        # fault: device loss lands before the step executes
+        if faults is not None:
+            for ev in faults.device_losses(self.step_idx):
+                before = self.n_devices
+                apply_device_loss(self, ev)
+                self._bounce_lost_shard(running, queue, before,
+                                        self.n_devices)
+                self._requeue_overflow(running, queue, "device loss")
+
+        predicted = self.predict_step_s(running, prefills)
+        raw = self.predict_step_s(running, prefills, calibrated=False)
+        factor = faults.step_factor(self.step_idx) if faults else 1.0
+        measured = raw * cfg.hw_factor * factor
+
+        bucket_set = tuple(sorted({self.buckets.ctx_bucket(r.context_len)
+                                   for r in running}))
+        self.steps.append(StepRecord(
+            step=self.step_idx, t_start=self.now, batch=len(running),
+            prefills=len(prefills), predicted_s=predicted,
+            measured_s=measured, degrade_level=self.level,
+            n_devices=self.n_devices, buckets=bucket_set))
+        self.now += measured
+        self.step_idx += 1
+
+        # re-calibration: measured diverged from the calibrated
+        # prediction beyond the threshold -> fold the ratio into every
+        # bucket this step touched (the model must track the degraded
+        # hardware before the next admission decision)
+        ratio = measured / predicted if predicted > 0 else 1.0
+        if ratio > cfg.recalib_threshold or ratio < 1.0 / cfg.recalib_threshold:
+            for cb in bucket_set:
+                new = self.buckets.recalibrate("decode", cb, ratio,
+                                               cfg.recalib_alpha)
+                self._log("recalibrate", kind="decode", ctx_bucket=cb,
+                          predicted_s=predicted, measured_s=measured,
+                          ratio=ratio, calibration=new)
+
+        # token accounting + completions
+        for r in list(running):
+            r.tokens_done += 1
+            if r.tokens_done >= r.gen_len:
+                r.state = RequestState.DONE
+                r.finish_s = self.now
+                running.remove(r)
+                self._log("complete", rid=r.rid,
+                          latency_s=r.finish_s - r.arrival_s,
+                          met_deadline=bool(r.finish_s <= r.deadline_s))
+
+        # fault: corrupted KV page detected at step end -> drop the
+        # request's pages and retry from prefill (bounded)
+        if faults is not None:
+            for ev in faults.corruptions(self.step_idx - 1):
+                victim = self._pick_victim(running, ev)
+                if victim is None:
+                    continue
+                self._log("kv_corrupt", rid=victim.rid,
+                          ctx_bucket=self.buckets.ctx_bucket(
+                              victim.context_len))
+                self._bounce(victim, running, queue, "corrupted KV page")
+
+    def _pick_victim(self, running: list[Request], ev) -> "Request | None":
+        if not running:
+            return None
+        return running[ev.slot % len(running)]
+
+    def _bounce_lost_shard(self, running: list[Request],
+                           queue: list[Request], before: int,
+                           after: int) -> None:
+        """Re-admit the requests whose KV pages lived on the lost
+        devices.  Pages round-robin over the data axis (request ``i``
+        of the rid-sorted batch on device ``i mod n``), so losing the
+        upper half of the axis loses the requests at positions with
+        ``i mod before >= after`` — those re-prefill after re-admission
+        (their pages are gone)."""
+        if after >= before:
+            return
+        ordered = sorted(running, key=lambda r: r.rid)
+        victims = [r for i, r in enumerate(ordered) if i % before >= after]
+        for r in victims:
+            self._bounce(r, running, queue, "device loss")
+
+    def _requeue_overflow(self, running: list[Request],
+                          queue: list[Request], why: str) -> None:
+        """After capacity shrank (device loss), bounce the lowest-
+        priority overflow back to the queue for re-admission."""
+        running.sort(key=lambda r: (r.priority, r.deadline_s, r.rid))
+        while len(running) > self.effective_max_batch:
+            victim = running.pop()  # lowest priority, latest deadline
+            self._bounce(victim, None, queue, why, drop_kv=False)
+
+    def _bounce(self, req: Request, running: "list[Request] | None",
+                queue: list[Request], why: str, *,
+                drop_kv: bool = True) -> None:
+        """Fault path re-admission: bounded retry with exponential
+        backoff + jitter; KV drop forces a re-prefill."""
+        if running is not None and req in running:
+            running.remove(req)
+        req.retries += 1
+        req.requeues += 1
+        if self.retry.exhausted(req.retries):
+            req.state = RequestState.FAILED
+            req.finish_s = self.now
+            req.reason = f"retries exhausted after {why}"
+            self._log("fail", rid=req.rid, reason=req.reason,
+                      retries=req.retries)
+            return
+        if drop_kv:
+            req.tokens_done = 0  # pages dropped: decode restarts cold
+        backoff = self.retry.backoff_s(req.retries - 1, self.rng)
+        req.state = RequestState.QUEUED
+        req.eligible_s = self.now + backoff
+        queue.append(req)
+        self._log("requeue", rid=req.rid, reason=why, retries=req.retries,
+                  backoff_s=backoff, eligible_s=req.eligible_s)
+
+    # -- results ------------------------------------------------------------
+
+    def summary(self) -> dict:
+        """Deterministic run summary (virtual-clock throughput and
+        latency, model accuracy, recovery accounting)."""
+        reqs = self.requests
+        done = [r for r in reqs if r.state is RequestState.DONE]
+        lost = [r for r in reqs if not r.terminal]
+        tokens = sum(r.tokens_done for r in reqs)
+        t0 = min((r.arrival_s for r in reqs), default=0.0)
+        makespan = max(self.now - t0, 1e-12)
+        lat = sorted(r.finish_s - r.arrival_s for r in done)
+        ratios = [s.ratio for s in self.steps]
+        counts: dict[str, int] = {}
+        for e in self.log:
+            counts[e["event"]] = counts.get(e["event"], 0) + 1
+        terminal: dict[str, int] = {}
+        for r in reqs:
+            terminal[r.state.value] = terminal.get(r.state.value, 0) + 1
+        return {
+            "requests": len(reqs),
+            "completed": len(done),
+            "lost": len(lost),
+            "terminal": terminal,
+            "tokens": int(tokens),
+            "steps": len(self.steps),
+            "makespan": float(makespan),
+            "tok_rate": float(tokens / makespan),
+            "latency_p50": float(np.percentile(lat, 50)) if lat else None,
+            "latency_p99": float(np.percentile(lat, 99)) if lat else None,
+            "deadline_hits": sum(1 for r in done
+                                 if r.finish_s <= r.deadline_s),
+            "step_pred_measured": {
+                "mean_ratio": float(np.mean(ratios)) if ratios else 1.0,
+                "max_ratio": float(np.max(ratios)) if ratios else 1.0,
+            },
+            "recovery": {
+                "requeued": sum(r.requeues for r in reqs),
+                "retried": sum(1 for r in reqs if r.retries),
+                "recovered": sum(1 for r in done if r.retries),
+            },
+            "degrade_max_level": max(
+                (s.degrade_level for s in self.steps), default=0),
+            "events": counts,
+            "n_devices_final": self.n_devices,
+            "calibration": {f"{k}:{cb}": v
+                            for (k, cb), v in sorted(self.buckets.calib.items())},
+        }

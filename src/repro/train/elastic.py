@@ -36,6 +36,9 @@ def shrink_mesh(mesh: Mesh, lost_fraction_axis: str = "data") -> Mesh:
     ``lost_fraction_axis`` (simulated node failure)."""
     names = mesh.axis_names
     shape = dict(zip(names, mesh.devices.shape))
+    if lost_fraction_axis not in shape:
+        raise ValueError(
+            f"mesh has no axis {lost_fraction_axis!r} (axes: {names})")
     if shape[lost_fraction_axis] <= 1:
         raise ValueError(f"cannot shrink axis {lost_fraction_axis} below 1")
     shape[lost_fraction_axis] //= 2

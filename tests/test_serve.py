@@ -1,0 +1,305 @@
+"""Fault-tolerant serving engine: determinism, zero-lost accounting,
+pinned recovery sequences, model-traceable decisions.
+
+The engine runs on a virtual clock with seeded jitter, so a (trace,
+config, fault plan, seed) tuple is a *name* for one exact trajectory —
+these tests pin the recovery sequences byte-for-byte (which request
+bounced, at which step, in which order) instead of asserting loose
+"eventually recovers" properties.  The configs mirror
+``benchmarks/serve_bench.py`` so the committed ``BENCH_serve.json``
+baseline and the pins here guard the same trajectories.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.serve import (
+    EngineConfig,
+    FaultInjector,
+    RequestState,
+    RetryPolicy,
+    ServeEngine,
+    TraceConfig,
+    fault_plan,
+    slo_class,
+    synthetic_trace,
+)
+from repro.serve.faults import FaultPlan, KVCorrupt
+from repro.serve.policy import SLO_CLASSES, DegradationPolicy
+from repro.serve.trace import Request
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: the bench configuration (same trajectories as BENCH_serve.json)
+TRACE = TraceConfig(mean_interarrival_s=0.001)
+DEGRADE = DegradationPolicy(step_budget_s=0.001)
+
+
+def _bench_run(plan_name, **cfg_kw):
+    engine = ServeEngine(EngineConfig(**cfg_kw), degrade=DEGRADE)
+    summary = engine.run(synthetic_trace(TRACE, seed=0),
+                         FaultInjector(fault_plan(plan_name)))
+    return engine, summary
+
+
+# ---------------------------------------------------------------------------
+# trace + engine determinism
+# ---------------------------------------------------------------------------
+
+
+def test_trace_is_seed_deterministic():
+    a = synthetic_trace(TRACE, seed=3)
+    b = synthetic_trace(TRACE, seed=3)
+    c = synthetic_trace(TRACE, seed=4)
+    assert [(r.arrival_s, r.prompt_len, r.gen_len, r.slo.name)
+            for r in a] == \
+           [(r.arrival_s, r.prompt_len, r.gen_len, r.slo.name) for r in b]
+    assert [r.arrival_s for r in a] != [r.arrival_s for r in c]
+    assert all(a[i].arrival_s <= a[i + 1].arrival_s
+               for i in range(len(a) - 1))
+
+
+def test_engine_replay_is_bit_identical():
+    e1, s1 = _bench_run("device_loss")
+    e2, s2 = _bench_run("device_loss")
+    assert e1.log == e2.log
+    assert s1 == s2
+    assert [(st.step, st.predicted_s, st.measured_s) for st in e1.steps] \
+        == [(st.step, st.predicted_s, st.measured_s) for st in e2.steps]
+
+
+# ---------------------------------------------------------------------------
+# zero-lost accounting under every fault class
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("plan", ["none", "device_loss", "slow_step",
+                                  "kv_corruption"])
+def test_no_request_is_ever_lost(plan):
+    engine, summary = _bench_run(plan)
+    assert summary["lost"] == 0
+    assert summary["completed"] == TRACE.n_requests
+    for r in engine.requests:
+        assert r.terminal, (r.rid, r.state)
+        assert r.finish_s is not None
+
+
+def test_fault_free_run_is_clean():
+    engine, summary = _bench_run("none")
+    assert summary["recovery"] == {"requeued": 0, "retried": 0,
+                                   "recovered": 0}
+    assert not engine.events("requeue", "fail", "device_loss",
+                             "kv_corrupt", "recalibrate")
+    assert summary["step_pred_measured"]["max_ratio"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# pinned recovery sequences (one per fault class)
+# ---------------------------------------------------------------------------
+
+
+def test_device_loss_recovery_sequence_pinned():
+    engine, summary = _bench_run("device_loss")
+    seq = [(e["event"], e.get("rid"), e["step"])
+           for e in engine.events("device_loss", "requeue", "fail")]
+    # half the devices vanish at step 72; the four requests whose KV
+    # pages lived on the lost slice bounce, re-prefill, and complete
+    assert seq == [("device_loss", None, 72),
+                   ("requeue", 3, 72), ("requeue", 4, 72),
+                   ("requeue", 7, 72), ("requeue", 8, 72)]
+    loss = engine.events("device_loss")[0]
+    assert loss["n_devices_before"] == 4 and loss["n_devices_after"] == 2
+    assert summary["n_devices_final"] == 2
+    assert summary["recovery"] == {"requeued": 4, "retried": 4,
+                                   "recovered": 4}
+    for rid in (3, 4, 7, 8):
+        assert engine.requests[rid].state is RequestState.DONE
+
+
+def test_kv_corruption_drop_and_retry_sequence_pinned():
+    engine, summary = _bench_run("kv_corruption")
+    seq = [(e["event"], e["rid"], e["step"])
+           for e in engine.events("kv_corrupt", "requeue", "fail")]
+    assert seq == [("kv_corrupt", 1, 67), ("requeue", 1, 67),
+                   ("kv_corrupt", 2, 81), ("requeue", 2, 81)]
+    # a dropped page forces a cold re-prefill: the victims were
+    # re-admitted (admit count exceeds the request count)
+    assert summary["events"]["admit"] == TRACE.n_requests + 2
+    assert summary["recovery"]["recovered"] == 2
+    for e in engine.events("requeue"):
+        assert e["reason"] == "corrupted KV page"
+        assert e["backoff_s"] > 0
+        assert e["eligible_s"] > e["t"]
+
+
+def test_slow_window_triggers_recalibration():
+    engine, summary = _bench_run("slow_step")
+    recals = engine.events("recalibrate")
+    assert recals, "measured >> predicted must re-calibrate the buckets"
+    first = recals[0]
+    # first divergence is detected inside the injected window [60, 70)
+    assert 60 <= first["step"] <= 70
+    assert first["ratio"] == pytest.approx(4.0)
+    assert first["calibration"] > 1.0
+    # calibrated buckets feed later admission decisions
+    assert summary["calibration"], "calibration table must be exported"
+    assert summary["step_pred_measured"]["max_ratio"] == pytest.approx(4.0)
+    assert summary["lost"] == 0
+
+
+# ---------------------------------------------------------------------------
+# retry bounds + degradation traceability
+# ---------------------------------------------------------------------------
+
+
+def test_retry_budget_exhaustion_fails_terminally():
+    # corrupt the same slot every step: the victim must hit FAILED
+    # (terminal + accounted), never loop forever or vanish
+    plan = FaultPlan(name="hammer", kv_corruptions=tuple(
+        KVCorrupt(step=s, slot=0) for s in range(0, 400)))
+    engine = ServeEngine(EngineConfig(seed=0),
+                         retry=RetryPolicy(max_retries=2), degrade=DEGRADE)
+    summary = engine.run(synthetic_trace(TRACE, seed=0),
+                         FaultInjector(plan))
+    assert summary["lost"] == 0
+    fails = engine.events("fail")
+    assert fails
+    for e in fails:
+        assert "retries exhausted" in e["reason"]
+        assert engine.requests[e["rid"]].state is RequestState.FAILED
+        assert engine.requests[e["rid"]].retries == 3  # max_retries + 1
+
+
+def test_every_degradation_is_traceable_to_a_prediction():
+    engine, summary = _bench_run("none")
+    transitions = engine.events("degrade", "restore")
+    assert transitions, "the heavy trace must exercise the ladder"
+    assert summary["degrade_max_level"] >= 1
+    for e in transitions:
+        # each transition carries the ECM prediction that triggered it
+        assert "predicted_step_s" in e and "step_budget_s" in e
+        if e["event"] == "degrade":
+            assert e["predicted_step_s"] > e["step_budget_s"]
+        else:
+            assert e["predicted_step_s"] < 0.5 * e["step_budget_s"]
+
+
+def test_admission_decisions_carry_predictions():
+    engine, _ = _bench_run("none")
+    admits = engine.events("admit")
+    assert len(admits) == TRACE.n_requests
+    for e in admits:
+        assert e["predicted_finish_s"] <= e["deadline_s"]
+        assert e["ctx_bucket"] in (128, 256, 512, 1024, 2048, 4096)
+
+
+def test_hopeless_deadline_is_rejected_with_prediction():
+    # deadline far below even a solo ECM-predicted finish -> reject
+    impossible = slo_class("interactive").__class__(
+        "impossible", priority=0, base_budget_s=1e-9,
+        per_token_budget_s=0.0)
+    req = Request(rid=0, arrival_s=0.0, prompt_len=2048, gen_len=128,
+                  slo=impossible)
+    ok = Request(rid=1, arrival_s=0.0, prompt_len=128, gen_len=16,
+                 slo=SLO_CLASSES[2])
+    engine = ServeEngine(EngineConfig(seed=0))
+    summary = engine.run([req, ok])
+    assert req.state is RequestState.SHED
+    assert ok.state is RequestState.DONE
+    assert summary["lost"] == 0
+    rejects = engine.events("reject")
+    assert len(rejects) == 1
+    assert rejects[0]["predicted_finish_s"] > rejects[0]["deadline_s"]
+
+
+# ---------------------------------------------------------------------------
+# bench artifact: schema + spec agreement
+# ---------------------------------------------------------------------------
+
+
+def test_serve_payload_passes_check_bench(tmp_path):
+    from benchmarks.run import serve_payload
+
+    path = tmp_path / "BENCH_serve.json"
+    path.write_text(json.dumps(serve_payload()))
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_bench.py"),
+         str(path)], env=env, cwd=ROOT, capture_output=True, text=True,
+        timeout=120)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_check_bench_rejects_lost_requests(tmp_path):
+    from benchmarks.run import serve_payload
+
+    payload = serve_payload()
+    payload["classes"]["none"]["lost"] = 1  # a vanished request
+    path = tmp_path / "BENCH_serve.json"
+    path.write_text(json.dumps(payload))
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_bench.py"),
+         str(path)], env=env, cwd=ROOT, capture_output=True, text=True,
+        timeout=120)
+    assert r.returncode == 1
+    assert "lost requests must be 0" in r.stderr
+
+
+# ---------------------------------------------------------------------------
+# real-mesh device loss: elastic reshard keeps the KV store bit-identical
+# ---------------------------------------------------------------------------
+
+
+_RESHARD = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import jax
+import numpy as np
+from jax.sharding import Mesh
+from repro.serve import EngineConfig, ServeEngine
+from repro.serve.faults import DeviceLoss, apply_device_loss
+
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+engine = ServeEngine(EngineConfig(n_devices=4))
+store = engine.attach_kv_store(mesh, n_pages=16, page_tokens=4)
+before = {k: np.asarray(v).copy() for k, v in store.items()}
+
+apply_device_loss(engine, DeviceLoss(step=0, axis="data"))
+
+ev = engine.events("device_loss")[0]
+assert ev["resharded"] is True, ev
+assert ev["n_devices_before"] == 4 and ev["n_devices_after"] == 2, ev
+assert engine.mesh.devices.shape == (2, 2), engine.mesh.devices.shape
+for k, v in engine.kv_store.items():
+    assert np.array_equal(np.asarray(v), before[k]), k
+    assert v.sharding.mesh.devices.shape == (2, 2), k
+
+# second loss: data axis 2 -> 1; a third must fail loudly upstream
+apply_device_loss(engine, DeviceLoss(step=1, axis="data"))
+assert engine.mesh.devices.shape == (1, 2)
+for k, v in engine.kv_store.items():
+    assert np.array_equal(np.asarray(v), before[k]), k
+print('RESHARD-OK')
+"""
+
+
+def test_device_loss_reshards_kv_store_bit_identical():
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    r = subprocess.run([sys.executable, "-c", _RESHARD], env=env, cwd=ROOT,
+                       capture_output=True, text=True, timeout=240)
+    assert "RESHARD-OK" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# loop safety: a hung serve loop fails fast instead of spinning
+# ---------------------------------------------------------------------------
+
+
+def test_max_steps_guard_raises():
+    engine = ServeEngine(EngineConfig(max_steps=3, seed=0))
+    with pytest.raises(RuntimeError, match="max_steps"):
+        engine.run(synthetic_trace(TraceConfig(n_requests=8), seed=0))

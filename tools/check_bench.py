@@ -15,7 +15,10 @@ accepted — the suite is inferred from their distinctive payload keys.
 An *unrecognized* suite name is always a hard failure (exit 1), so a
 typo'd or not-yet-registered suite cannot pass the gate silently.
 Suites: stream, stencil, compute, scaling (Eq. 2 saturation + energy/EDP
-grids + TPU DP scaling), tpu.
+grids + TPU DP scaling), tpu, serve (fault-injected serving runs — the
+spec *pins zero lost requests per fault class*, so a request that
+vanishes without a terminal state fails validation, not just the
+compare).
 
 ``--compare`` is the CI regression gate: it diffs a freshly generated
 artifact against the committed baseline, failing when any *deterministic*
@@ -36,7 +39,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 
-SUITES = ("stream", "stencil", "compute", "scaling", "tpu")
+SUITES = ("stream", "stencil", "compute", "scaling", "tpu", "serve")
 
 #: minimal spec language: {key: type | (type, predicate) | dict (nested) |
 #: [element_spec] (non-empty list) | callable(value) -> error or None}
@@ -236,14 +239,63 @@ SCALING_SPEC = {
     },
 }
 
+def _zero_lost(x):
+    return None if x == 0 else f"lost requests must be 0, got {x!r}"
+
+
+def _num_or_none(x):
+    if x is None or (isinstance(x, NUM) and not isinstance(x, bool)):
+        return None
+    return f"expected number or null, got {x!r}"
+
+
+#: one fault class's run summary — a request without a terminal state
+#: ("lost") is a validation failure, not merely a regression
+_SERVE_CLASS = {
+    "requests": (int, _positive),
+    "completed": (int, _positive),
+    "lost": (int, _zero_lost),
+    "terminal": dict,
+    "tokens": (int, _positive),
+    "steps": (int, _positive),
+    "makespan": (NUM, _positive),
+    "tok_rate": (NUM, _positive),
+    "latency_p50": _num_or_none,
+    "latency_p99": _num_or_none,
+    "deadline_hits": int,
+    "step_pred_measured": {
+        "mean_ratio": (NUM, _positive),
+        "max_ratio": (NUM, _positive),
+    },
+    "recovery": {"requeued": int, "retried": int, "recovered": int},
+    "degrade_max_level": int,
+    "events": dict,
+    "n_devices_final": (int, _positive),
+    "blocks": dict,
+}
+
+SERVE_SPEC = {
+    "trace": {
+        "n_requests": (int, _positive),
+        "mean_interarrival_ms": (NUM, _positive),
+        "seed": int,
+    },
+    "classes": {
+        "none": _SERVE_CLASS,
+        "device_loss": _SERVE_CLASS,
+        "slow_step": _SERVE_CLASS,
+        "kv_corruption": _SERVE_CLASS,
+    },
+}
+
 SPECS = {"stream": STREAM_SPEC, "stencil": STENCIL_SPEC,
          "compute": COMPUTE_SPEC, "scaling": SCALING_SPEC,
-         "tpu": TPU_SPEC}
+         "tpu": TPU_SPEC, "serve": SERVE_SPEC}
 
 #: distinctive payload keys for suite inference on legacy (schema 1) files
 SUITE_HINTS = (("model_eval", "stream"), ("sweep", "stencil"),
                ("matmul", "compute"), ("tpu_dp", "scaling"),
-               ("zoo", "tpu"))
+               ("classes", "serve"), ("zoo", "tpu"))
 
 
 def check_value(path: str, value, spec, problems: list[str]) -> None:
