@@ -1,0 +1,143 @@
+"""``--suite compose``: whole-model composed step predictions for the
+config zoo.
+
+Every architecture in ``repro.configs`` is walked into its op list by
+``repro.core.compose``, lowered through the unified workload engine, and
+composed into prefill/decode step predictions under the payload
+machine's Eq. 1 overlap rule.  The "measured" side replays the same
+lowered ops through the calibrated cache simulator
+(``repro.simcache.simulate_lowered``) and recombines them under the same
+rule, so predicted-vs-measured is a deterministic model-vs-model
+comparison the CI regression gate can pin exactly.
+
+``BENCH_compose.json`` records, per config: predicted and measured step
+cycles per phase, useful FLOPs, memory-edge traffic and the dominant op;
+plus the cross-machine zoo (composed cycles for every config on every
+registry machine) and the composition throughput of the engine itself
+(volatile, excluded from the gate).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import ARCH_NAMES, get_arch
+from repro.core import compose
+from repro.core.machine import get_machine, machine_names
+from repro.core.workload import lower_many
+from repro.simcache import simulate_lowered
+
+#: one step shape for the whole table — batch 1, prefill over SEQ_LEN
+#: tokens, decode one token against a SEQ_LEN-deep KV cache (equal
+#: context, so the decode <= prefill invariant the tests pin applies)
+BATCH = 1
+SEQ_LEN = 4096
+
+#: repetitions for the composition-throughput measurement
+THROUGHPUT_REPEATS = 3
+
+
+def _model_ops(name: str) -> list:
+    cfg = get_arch(name).cfg
+    return (compose.model_ops(cfg, "prefill", batch=BATCH, seq_len=SEQ_LEN)
+            + compose.model_ops(cfg, "decode", batch=BATCH, seq_len=SEQ_LEN,
+                                context=SEQ_LEN))
+
+
+def measured_cycles(sp: compose.StepPrediction, sim, phase: str) -> float:
+    """Recombine the calibrated simulator's per-op cy/CL under the same
+    overlap rule as the prediction (``sim`` aligns with ``sp.ops``)."""
+    idx = [i for i, o in enumerate(sp.ops) if o.phase == phase]
+    t_ol, t_rest, serial = [], [], []
+    for i in idx:
+        op = sp.ops[i]
+        scale = op.count * op.units
+        extra = (float(sim[i]) - op.cy_per_unit) * scale
+        t_ol.append(op.t_ol_cy)
+        t_rest.append(op.t_rest_cy + extra)    # calibrated slowdown is
+        serial.append(float(sim[i]) * scale)   # all data-side
+    return compose.compose_cycles(t_ol, t_rest, serial, sp.alpha)
+
+
+def arch_entry(name: str, machine: str = "tpu-v5e") -> dict:
+    """Predicted + measured composed step for one config on ``machine``."""
+    ops = _model_ops(name)
+    sp = compose.compose_ops(ops, machine, name=name)
+    lowered = lower_many([o.workload for o in ops], get_machine(machine))
+    sim = simulate_lowered(lowered)[:, -1]
+    out: dict = {"n_ops": len(ops)}
+    for ph in compose.PHASES:
+        predicted = sp.cycles(ph)
+        measured = measured_cycles(sp, sim, ph)
+        out[ph] = {
+            "predicted_cy": predicted,
+            "measured_cy": measured,
+            "model_error": predicted / measured - 1.0,
+            "flops": sp.flops(ph),
+            "hbm_bytes": sp.hbm_bytes(ph),
+            "dominant_op": sp.dominant_op(ph),
+        }
+    return out
+
+
+def zoo_payload(machines=None) -> dict:
+    """Composed prefill/decode cycles: every config x every machine."""
+    machines = machines or machine_names()
+    out: dict = {}
+    for m in machines:
+        out[m] = {}
+        for name in ARCH_NAMES:
+            sp = compose.predict_step(name, m, batch=BATCH,
+                                      seq_len=SEQ_LEN, context=SEQ_LEN)
+            out[m][name] = {"prefill_cy": sp.cycles("prefill"),
+                            "decode_cy": sp.cycles("decode")}
+    return out
+
+
+def throughput_payload(machine: str = "tpu-v5e") -> dict:
+    """End-to-end composition throughput (config -> StepPrediction)."""
+    t0 = time.perf_counter()
+    n = 0
+    for _ in range(THROUGHPUT_REPEATS):
+        for name in ARCH_NAMES:
+            compose.predict_step(name, machine, batch=BATCH,
+                                 seq_len=SEQ_LEN, context=SEQ_LEN)
+            n += 1
+    dt = time.perf_counter() - t0
+    return {"n_compositions": n, "compose_wall_s": dt,
+            "compositions_per_s": n / dt}
+
+
+def compose_payload(machine: str = "tpu-v5e") -> dict:
+    """The ``BENCH_compose.json`` payload body (envelope added by the
+    runner)."""
+    return {
+        "shape": {"batch": BATCH, "seq_len": SEQ_LEN, "context": SEQ_LEN},
+        "models": {name: arch_entry(name, machine) for name in ARCH_NAMES},
+        "zoo": zoo_payload(),
+        "throughput": throughput_payload(machine),
+    }
+
+
+def run(machine: str | None = None) -> str:
+    """Human-readable report section."""
+    machine = machine or "tpu-v5e"
+    m = get_machine(machine)
+    lines = [f"whole-model composed step predictions on {machine} "
+             f"(batch {BATCH}, seq {SEQ_LEN}, "
+             f"alpha={compose.overlap_alpha(m):.2f})",
+             "",
+             f"{'config':<24} {'prefill ms':>11} {'decode ms':>10} "
+             f"{'err%':>7} {'dominant op':<18} {'ops':>4}"]
+    for name in ARCH_NAMES:
+        e = arch_entry(name, machine)
+        pre_ms = e["prefill"]["predicted_cy"] / m.clock_hz * 1e3
+        dec_ms = e["decode"]["predicted_cy"] / m.clock_hz * 1e3
+        err = e["decode"]["model_error"] * 100
+        lines.append(f"{name:<24} {pre_ms:>11.3f} {dec_ms:>10.4f} "
+                     f"{err:>7.1f} {e['decode']['dominant_op']:<18} "
+                     f"{e['n_ops']:>4}")
+    lines.append("")
+    lines.append("err% = composed prediction vs calibrated cache-simulator "
+                 "recombination (decode phase); every row decomposes per "
+                 "op / layer / phase via compose.predict_step")
+    return "\n".join(lines)

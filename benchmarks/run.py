@@ -7,8 +7,9 @@ runner for all kernel families.
     PYTHONPATH=src python -m benchmarks.run --json --suite stencil
     PYTHONPATH=src python -m benchmarks.run --only machine_zoo --machine skylake-sp
 
-``--suite {stream,stencil,compute,scaling,tpu,serve}`` selects a kernel
-family, the chip-level suite, or the serving-engine suite (default: all
+``--suite {stream,stencil,compute,scaling,tpu,serve,compose}`` selects a
+kernel family, the chip-level suite, the serving-engine suite, or the
+whole-model composition suite (default: all
 sections); ``--machine`` picks a
 registry machine for the sections and artifacts that are
 machine-parameterized (the zoo table, the stencil sweep, the compute
@@ -26,9 +27,12 @@ block rankings + interpret-mode kernel validation),
 ``BENCH_scaling.json`` (chip level: Eq. 2 saturation table, Figs. 5/6
 energy/EDP grids + optimal operating points, TPU DP scaling),
 ``BENCH_tpu.json`` (TPU: pipeline timings + the tpu-v5e zoo
-predictions) and ``BENCH_serve.json`` (serving engine: one
+predictions), ``BENCH_serve.json`` (serving engine: one
 deterministic virtual-clock run per fault class — throughput, latency
-percentiles, predicted-vs-measured step ratios, recovery counts).
+percentiles, predicted-vs-measured step ratios, recovery counts) and
+``BENCH_compose.json`` (whole-model composition: predicted-vs-measured
+step cycles per config, the config x machine zoo, composition
+throughput).
 Field names are
 stable across schema bumps so trajectories remain comparable; the CI
 regression gate diffs fresh artifacts against the committed baselines
@@ -42,6 +46,7 @@ import json
 import time
 
 from . import (
+    compose_bench,
     compute_bench,
     fig11_bandwidth,
     fig12_nt_stores,
@@ -76,6 +81,9 @@ SECTIONS = [
     ("machine_zoo",
      "Machine zoo: every workload x every machine (arXiv:1702.07554)",
      machine_zoo),
+    ("compose_bench",
+     "Whole-model composition: config zoo step predictions (Eq. 1 x model)",
+     compose_bench),
     ("serve_bench",
      "Model-guided serving: continuous batching under fault injection",
      serve_bench),
@@ -95,6 +103,7 @@ SUITES = {
     "tpu": ["tpu_stream_ecm", "tpu_roofline", "scaling_bench",
             "machine_zoo"],
     "serve": ["serve_bench", "machine_zoo"],
+    "compose": ["compose_bench", "machine_zoo"],
 }
 
 #: default artifact path per suite (schema: tools/check_bench.py)
@@ -105,6 +114,7 @@ BENCH_PATHS = {
     "scaling": "BENCH_scaling.json",
     "tpu": "BENCH_tpu.json",
     "serve": "BENCH_serve.json",
+    "compose": "BENCH_compose.json",
 }
 
 BENCH_SCHEMA_VERSION = 2
@@ -248,14 +258,23 @@ def serve_payload(machine: str = "tpu-v5e") -> dict:
     }
 
 
+def compose_payload(machine: str = "tpu-v5e") -> dict:
+    return {
+        **_envelope("compose", machine),
+        **compose_bench.compose_payload(machine=machine),
+    }
+
+
 def emit_json(path: str | None, suite: str = "stream",
               machine: str | None = None) -> str:
     """Write the suite's BENCH artifact; returns the path written."""
     builders = {"stream": stream_payload, "stencil": stencil_payload,
                 "compute": compute_payload, "scaling": scaling_payload,
-                "tpu": tpu_payload, "serve": serve_payload}
+                "tpu": tpu_payload, "serve": serve_payload,
+                "compose": compose_payload}
     if machine is None:
-        machine = "tpu-v5e" if suite in ("tpu", "serve") else "haswell-ep"
+        machine = ("tpu-v5e" if suite in ("tpu", "serve", "compose")
+                   else "haswell-ep")
     payload = builders[suite](machine=machine)
     path = path or BENCH_PATHS[suite]
     with open(path, "w") as f:
@@ -297,6 +316,14 @@ def emit_json(path: str | None, suite: str = "stream",
               f"{payload['trace']['n_requests']} requests, "
               f"{base['tok_rate']:.0f} tok/s fault-free, "
               f"{req} fault requeues recovered, lost requests: {lost}")
+    elif suite == "compose":
+        models = payload["models"]
+        dominant = {e["decode"]["dominant_op"] for e in models.values()}
+        tp = payload["throughput"]
+        print(f"[bench] wrote {path}: {len(models)} configs composed on "
+              f"{machine} x {len(payload['zoo'])} zoo machines, decode "
+              f"dominated by {sorted(dominant)}, "
+              f"{tp['compositions_per_s']:.0f} compositions/s")
     elif suite == "compute":
         mm, att = payload["matmul"], payload["attention"]
         ok = all(v["matches_ref"] for v in payload["kernels"].values())

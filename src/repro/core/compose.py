@@ -1,0 +1,634 @@
+"""Whole-model ECM composition: step-time prediction for a model config.
+
+The paper's Eq. 1 predicts one kernel; a model step is a *sequence* of
+kernels.  This module walks a model's ops (a ``LayerSpec`` adapter over
+the ``repro.configs`` architecture definitions), maps every op onto a
+registry workload —
+
+* projections / MLP / MoE experts  -> :class:`~repro.core.workload.MatmulWorkload`
+* prefill / decode attention       -> :class:`~repro.core.workload.AttentionWorkload`
+* norms / residuals / elementwise  -> :class:`~repro.core.workload.StreamWorkload`
+  (Table I specs at f32 element width, so the sustained-bandwidth
+  calibration keys keep resolving)
+
+— lowers the whole op list through the unified ``workload`` engine in one
+batch, and composes the per-op Eq. 1 results into a
+:class:`StepPrediction` under the machine's overlap rule:
+
+* **CPU (cache-based hierarchy)**: kernels run back to back; per-op
+  ``T_ECM = max(T_nOL + T_data, T_OL)`` terms *sum* (the paper's
+  single-core non-overlap assumption applied across kernels).
+* **tpu-v5e (software-managed hierarchy)**: the multi-buffered DMA
+  pipeline overlaps one op's HBM streams with its neighbours' compute,
+  calibrated by ``TPU_V5E.exposed_hbm_fraction`` — at the measured 0.0
+  the composition is Eq. 1 applied to the *summed* terms,
+  ``max(sum T_OL, sum (T_nOL + T_data))``.
+
+Both rules are the two ends of one blend (:func:`compose_cycles`):
+``alpha * serial + (1 - alpha) * pipelined`` with ``alpha =
+overlap_alpha(machine)``.
+
+Everything here is first-order by design (the GQA KV stream is counted
+per query head; chunked SSM scans are modeled as their per-token state
+contractions) — the point is that any config in the zoo becomes one
+composed prediction through the existing registry, not a new modeling
+effort.  ``scale_model`` (``repro.core.scaling``), the dry-run
+``--predict`` table and the serving engine's composition-backed
+``BucketModel`` all consume these records.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from .kernel_spec import BENCHMARKS
+from .machine import TPU_V5E, MachineModel, get_machine
+from .ecm import ECMBatch
+from .workload import (
+    FLASH_ATTENTION_F32,
+    MATMUL_F32,
+    AttentionWorkload,
+    LoweredBatch,
+    MatmulWorkload,
+    RoutedTraffic,
+    StreamWorkload,
+    lower_many,
+)
+
+PHASES = ("prefill", "decode")
+
+#: Table I stream specs reused at activation (f32) width: the spec *names*
+#: stay registered so the per-machine sustained-bandwidth calibration
+#: resolves; only the element width changes (uop counts are per cache
+#: line, so they are unaffected).
+_NORM_SPEC = replace(BENCHMARKS["update"], elem_bytes=4)      # x = f(x)
+_RESID_SPEC = replace(BENCHMARKS["striad"], elem_bytes=4)     # y = x + a*r
+_GATHER_SPEC = replace(BENCHMARKS["copy"], elem_bytes=4)      # table lookup
+
+#: composed-vs-three-term-model agreement band on the dry-run path
+#: (ratio composed/simulated step time); calibrated against the tpu-v5e
+#: zoo — the two paths share traffic inputs but differ in the in-core
+#: model (uop issue vs peak-FLOPs roofline), so the band is generous.
+DRYRUN_TOLERANCE = (0.2, 5.0)
+
+
+def overlap_alpha(machine: "MachineModel | str") -> float:
+    """Cross-op serialization coefficient of the machine's overlap rule.
+
+    1.0 on cache-based CPUs (write-allocate hierarchies: kernels run
+    serially, per-op Eq. 1 times sum); the calibrated
+    ``exposed_hbm_fraction`` on the software-managed TPU hierarchy
+    (0.0 = the DMA pipeline fully overlaps transfers across ops).
+    """
+    m = get_machine(machine)
+    if m.write_allocate:
+        return 1.0
+    return float(TPU_V5E.exposed_hbm_fraction)
+
+
+def compose_cycles(t_ol, t_rest, serial, alpha: float) -> float:
+    """The Eq. 1 overlap rule across ops.
+
+    ``serial`` sums per-op ``max(T_nOL + T_data, T_OL)``; ``pipelined``
+    applies Eq. 1 once to the summed terms.  ``alpha`` blends the two
+    (see :func:`overlap_alpha`).
+    """
+    t_ol = np.asarray(t_ol, float)
+    t_rest = np.asarray(t_rest, float)
+    serial = np.asarray(serial, float)
+    pipelined = max(float(t_ol.sum()), float(t_rest.sum()))
+    return alpha * float(serial.sum()) + (1.0 - alpha) * pipelined
+
+
+# ---------------------------------------------------------------------------
+# Op records
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OpSpec:
+    """One model op bound to a registry workload.
+
+    ``units`` are machine-dependent (cache lines of the op's output), so
+    the spec carries the machine-independent ``out_elems`` /
+    ``elem_bytes`` instead; ``count`` is the number of identical
+    instances per step (layers x heads x batch folded in).
+    """
+
+    name: str                      # e.g. "attn.qkv"
+    layer: str                     # breakdown group ("block", "head", ...)
+    phase: str                     # prefill | decode
+    kind: str                      # matmul | attention | stream
+    workload: object               # the registry workload to lower
+    out_elems: float               # output elements per instance
+    elem_bytes: int
+    count: float = 1.0
+
+    def units(self, line_bytes: int) -> float:
+        """Cache-line units of work per instance on this machine."""
+        return self.out_elems * self.elem_bytes / line_bytes
+
+    @property
+    def flops(self) -> float:
+        """Useful FLOPs across all instances (workload accounting)."""
+        per_elem = self.workload.work_per_elem()[0]
+        return float(per_elem) * self.out_elems * self.count
+
+
+@dataclass(frozen=True)
+class OpPrediction:
+    """One composed op: the lowered Eq. 1 terms scaled to step totals."""
+
+    name: str
+    layer: str
+    phase: str
+    kind: str
+    count: float
+    units: float                   # cache lines per instance
+    cy_per_unit: float             # per-unit T_ECM (== workload_batch)
+    t_ol_cy: float                 # step-total overlapping cycles
+    t_rest_cy: float               # step-total T_nOL + T_data cycles
+    cycles: float                  # step-total serial Eq. 1 cycles
+    flops: float
+    hbm_bytes: float               # step-total memory-edge traffic
+
+    def as_dict(self) -> dict:
+        return {
+            "op": self.name, "layer": self.layer, "phase": self.phase,
+            "kind": self.kind, "count": self.count,
+            "cy_per_unit": self.cy_per_unit, "cycles": self.cycles,
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+        }
+
+
+@dataclass(frozen=True)
+class StepPrediction:
+    """A whole-model step prediction, decomposable per op / layer / phase.
+
+    ``ops`` carry both phases; the per-phase totals re-apply the
+    machine's overlap rule (``alpha``), so *the breakdown always sums to
+    the total under that rule* — the invariant the tests pin.
+    """
+
+    name: str
+    machine: str
+    clock_hz: float
+    alpha: float
+    ops: tuple
+
+    # -- composition --------------------------------------------------
+    def phase_ops(self, phase: str | None = None) -> tuple:
+        if phase is None:
+            return self.ops
+        return tuple(o for o in self.ops if o.phase == phase)
+
+    def cycles(self, phase: str | None = None) -> float:
+        ops = self.phase_ops(phase)
+        if not ops:
+            return 0.0
+        return compose_cycles([o.t_ol_cy for o in ops],
+                              [o.t_rest_cy for o in ops],
+                              [o.cycles for o in ops], self.alpha)
+
+    def seconds(self, phase: str | None = None) -> float:
+        return self.cycles(phase) / self.clock_hz
+
+    @property
+    def prefill_s(self) -> float:
+        return self.seconds("prefill")
+
+    @property
+    def decode_s(self) -> float:
+        return self.seconds("decode")
+
+    # -- breakdowns ---------------------------------------------------
+    def per_op(self, phase: str | None = None) -> list[dict]:
+        return [o.as_dict() for o in sorted(self.phase_ops(phase),
+                                            key=lambda o: -o.cycles)]
+
+    def per_layer(self, phase: str | None = None) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for o in self.phase_ops(phase):
+            out[o.layer] = out.get(o.layer, 0.0) + o.cycles
+        return out
+
+    def flops(self, phase: str | None = None) -> float:
+        return sum(o.flops for o in self.phase_ops(phase))
+
+    def hbm_bytes(self, phase: str | None = None) -> float:
+        return sum(o.hbm_bytes for o in self.phase_ops(phase))
+
+    def dominant_op(self, phase: str | None = None) -> str:
+        ops = self.phase_ops(phase)
+        return max(ops, key=lambda o: o.cycles).name if ops else ""
+
+    def summary(self) -> dict:
+        out = {"name": self.name, "machine": self.machine,
+               "alpha": self.alpha, "n_ops": len(self.ops)}
+        for ph in PHASES:
+            if not self.phase_ops(ph):
+                continue
+            out[ph] = {
+                "cycles": self.cycles(ph),
+                "seconds": self.seconds(ph),
+                "flops": self.flops(ph),
+                "hbm_bytes": self.hbm_bytes(ph),
+                "dominant_op": self.dominant_op(ph),
+            }
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Op constructors
+# ---------------------------------------------------------------------------
+
+
+def matmul_op(name: str, layer: str, phase: str, *, m: int, n: int, k: int,
+              count: float = 1.0, spec=MATMUL_F32) -> OpSpec:
+    w = MatmulWorkload(spec, m=max(int(m), 1), n=max(int(n), 1),
+                       k=max(int(k), 1))
+    return OpSpec(name=name, layer=layer, phase=phase, kind="matmul",
+                  workload=w, out_elems=float(m) * float(n),
+                  elem_bytes=spec.elem_bytes, count=float(count))
+
+
+def attention_op(name: str, layer: str, phase: str, *, sq: int, skv: int,
+                 d: int, count: float, causal: bool,
+                 bq: int | None = None, bkv: int | None = None,
+                 out_tokens: int | None = None,
+                 spec=FLASH_ATTENTION_F32) -> OpSpec:
+    """One attention instance per (batch element x head); ``out_tokens``
+    overrides the output row count when the workload is evaluated at a
+    bucketed ``sq`` (the serving path)."""
+    bq = min(bq or 512, sq)
+    bkv = min(bkv or 512, skv)
+    w = AttentionWorkload(spec, sq=int(sq), skv=int(skv), d=int(d),
+                          bq=int(bq), bkv=int(bkv), causal=causal)
+    rows = sq if out_tokens is None else out_tokens
+    return OpSpec(name=name, layer=layer, phase=phase, kind="attention",
+                  workload=w, out_elems=float(rows) * float(d),
+                  elem_bytes=spec.elem_bytes, count=float(count))
+
+
+def stream_op(name: str, layer: str, phase: str, *, elems: float,
+              count: float = 1.0, spec=_NORM_SPEC) -> OpSpec:
+    return OpSpec(name=name, layer=layer, phase=phase, kind="stream",
+                  workload=StreamWorkload(spec), out_elems=float(elems),
+                  elem_bytes=spec.elem_bytes, count=float(count))
+
+
+# ---------------------------------------------------------------------------
+# LayerSpec adapters: config dataclass -> op walk
+# ---------------------------------------------------------------------------
+
+
+def _attn_dims(phase: str, seq_len: int, context: int) -> tuple[int, int, bool]:
+    """(sq, skv, causal) for decoder self-attention in this phase."""
+    if phase == "decode":
+        return 1, context, False
+    return seq_len, seq_len, True
+
+
+def _lm_ops(cfg, phase: str, *, batch: int, seq_len: int, context: int
+            ) -> list[OpSpec]:
+    """Dense / GQA / MoE / VLM decoder stack (``LMConfig``-shaped)."""
+    d, nh, dh = cfg.d_model, cfg.n_heads, cfg.head_dim_
+    kvh = cfg.n_kv_heads
+    n_layers = cfg.n_layers
+    tokens = batch if phase == "decode" else batch * seq_len
+    sq, skv, causal = _attn_dims(phase, seq_len, context)
+    ops = [
+        stream_op("embed.lookup", "embed", phase, elems=tokens * d,
+                  spec=_GATHER_SPEC),
+        stream_op("block.norm", "block", phase, elems=tokens * d,
+                  count=2 * n_layers),
+        stream_op("block.residual", "block", phase, elems=tokens * d,
+                  count=2 * n_layers, spec=_RESID_SPEC),
+        matmul_op("attn.qkv", "block", phase, m=tokens,
+                  n=(nh + 2 * kvh) * dh, k=d, count=n_layers),
+        attention_op("attn.core", "block", phase, sq=sq, skv=skv, d=dh,
+                     count=batch * nh * n_layers, causal=causal),
+        matmul_op("attn.out", "block", phase, m=tokens, n=d, k=nh * dh,
+                  count=n_layers),
+    ]
+    moe = getattr(cfg, "moe", None)
+    if moe is not None:
+        ops += [
+            matmul_op("moe.router", "block", phase, m=tokens,
+                      n=moe.n_experts, k=d, count=n_layers),
+            matmul_op("moe.expert_up", "block", phase,
+                      m=tokens * moe.top_k, n=2 * moe.d_ff, k=d,
+                      count=n_layers),
+            matmul_op("moe.expert_down", "block", phase,
+                      m=tokens * moe.top_k, n=d, k=moe.d_ff,
+                      count=n_layers),
+        ]
+    else:
+        ops += [
+            matmul_op("mlp.up", "block", phase, m=tokens, n=2 * cfg.d_ff,
+                      k=d, count=n_layers),
+            matmul_op("mlp.down", "block", phase, m=tokens, n=d,
+                      k=cfg.d_ff, count=n_layers),
+        ]
+    ops += [
+        stream_op("head.norm", "head", phase, elems=tokens * d),
+        matmul_op("head.unembed", "head", phase, m=tokens,
+                  n=cfg.vocab_padded, k=d),
+    ]
+    return ops
+
+
+def _zamba2_ops(cfg, phase: str, *, batch: int, seq_len: int, context: int
+                ) -> list[OpSpec]:
+    """Mamba2 backbone + shared attention blocks (Zamba2)."""
+    d = cfg.d_model
+    mc = cfg.mamba_cfg
+    di, ds = mc.d_inner, mc.d_state
+    n_layers, n_shared = cfg.n_layers, cfg.n_shared
+    nh, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    tokens = batch if phase == "decode" else batch * seq_len
+    sq, skv, causal = _attn_dims(phase, seq_len, context)
+    proj_out = 2 * di + 2 * mc.n_groups * ds + mc.n_heads
+    return [
+        stream_op("embed.lookup", "embed", phase, elems=tokens * d,
+                  spec=_GATHER_SPEC),
+        stream_op("mamba.norm", "mamba", phase, elems=tokens * d,
+                  count=n_layers),
+        stream_op("mamba.residual", "mamba", phase, elems=tokens * d,
+                  count=n_layers, spec=_RESID_SPEC),
+        matmul_op("mamba.in_proj", "mamba", phase, m=tokens, n=proj_out,
+                  k=d, count=n_layers),
+        stream_op("mamba.conv", "mamba", phase, elems=tokens * mc.conv_dim,
+                  count=n_layers),
+        # chunked SSM scan as its per-token state contractions (B·x in,
+        # C·h out): two d_state-deep GEMVs per channel per token
+        matmul_op("mamba.scan", "mamba", phase, m=tokens, n=di, k=ds,
+                  count=2 * n_layers),
+        stream_op("mamba.gate", "mamba", phase, elems=tokens * di,
+                  count=n_layers),
+        matmul_op("mamba.out_proj", "mamba", phase, m=tokens, n=d, k=di,
+                  count=n_layers),
+        # shared transformer block (input: concat of stream + skip -> 2d)
+        stream_op("shared.norm", "shared", phase, elems=tokens * 2 * d,
+                  count=2 * n_shared),
+        stream_op("shared.residual", "shared", phase, elems=tokens * d,
+                  count=2 * n_shared, spec=_RESID_SPEC),
+        matmul_op("shared.qkv", "shared", phase, m=tokens,
+                  n=(nh + 2 * kvh) * dh, k=2 * d, count=n_shared),
+        attention_op("shared.attn", "shared", phase, sq=sq, skv=skv, d=dh,
+                     count=batch * nh * n_shared, causal=causal),
+        matmul_op("shared.out", "shared", phase, m=tokens, n=d, k=nh * dh,
+                  count=n_shared),
+        matmul_op("shared.mlp_up", "shared", phase, m=tokens, n=2 * cfg.d_ff,
+                  k=d, count=n_shared),
+        matmul_op("shared.mlp_down", "shared", phase, m=tokens, n=d,
+                  k=cfg.d_ff, count=n_shared),
+        stream_op("head.norm", "head", phase, elems=tokens * d),
+        matmul_op("head.unembed", "head", phase, m=tokens,
+                  n=cfg.vocab_padded, k=d),
+    ]
+
+
+def _xlstm_ops(cfg, phase: str, *, batch: int, seq_len: int, context: int
+               ) -> list[OpSpec]:
+    """mLSTM / sLSTM block stack (xLSTM)."""
+    d = cfg.d_model
+    bc = cfg.block_cfg
+    di, dh = bc.d_inner, bc.head_dim
+    n_s = sum(1 for i in cfg.slstm_at if i < cfg.n_layers)
+    n_m = cfg.n_layers - n_s
+    tokens = batch if phase == "decode" else batch * seq_len
+    ops = [
+        stream_op("embed.lookup", "embed", phase, elems=tokens * d,
+                  spec=_GATHER_SPEC),
+        stream_op("block.norm", "block", phase, elems=tokens * d,
+                  count=2 * cfg.n_layers),
+        stream_op("block.residual", "block", phase, elems=tokens * d,
+                  count=2 * cfg.n_layers, spec=_RESID_SPEC),
+    ]
+    if n_m:
+        ops += [
+            matmul_op("mlstm.up_proj", "mlstm", phase, m=tokens, n=2 * di,
+                      k=d, count=n_m),
+            matmul_op("mlstm.qkv", "mlstm", phase, m=tokens, n=3 * di, k=d,
+                      count=n_m),
+            # matrix-memory update/readout: head_dim-deep contraction per
+            # channel per token (C += v k^T; h = C q)
+            matmul_op("mlstm.recurrence", "mlstm", phase, m=tokens, n=di,
+                      k=dh, count=2 * n_m),
+            matmul_op("mlstm.down_proj", "mlstm", phase, m=tokens, n=d,
+                      k=di, count=n_m),
+        ]
+    if n_s:
+        ops += [
+            matmul_op("slstm.gates", "slstm", phase, m=tokens, n=4 * d, k=d,
+                      count=n_s),
+            stream_op("slstm.recurrence", "slstm", phase, elems=tokens * d,
+                      count=n_s),
+            matmul_op("slstm.ff_up", "slstm", phase, m=tokens,
+                      n=2 * bc.d_ff_s, k=d, count=n_s),
+            matmul_op("slstm.ff_down", "slstm", phase, m=tokens, n=d,
+                      k=bc.d_ff_s, count=n_s),
+        ]
+    ops += [
+        stream_op("head.norm", "head", phase, elems=tokens * d),
+        matmul_op("head.unembed", "head", phase, m=tokens,
+                  n=cfg.vocab_padded, k=d),
+    ]
+    return ops
+
+
+def _whisper_ops(cfg, phase: str, *, batch: int, seq_len: int, context: int
+                 ) -> list[OpSpec]:
+    """Whisper encoder-decoder: the encoder runs in prefill only; decode
+    replays cached cross-attention KV over the encoded frames."""
+    d, nh, dh = cfg.d_model, cfg.n_heads, cfg.head_dim_
+    n_layers = cfg.n_layers
+    tokens = batch if phase == "decode" else batch * seq_len
+    enc_tokens = batch * seq_len
+    sq, skv, causal = _attn_dims(phase, seq_len, context)
+    ops: list[OpSpec] = []
+    if phase == "prefill":
+        ops += [
+            matmul_op("enc.qkv", "encoder", phase, m=enc_tokens, n=3 * d,
+                      k=d, count=n_layers),
+            attention_op("enc.attn", "encoder", phase, sq=seq_len,
+                         skv=seq_len, d=dh, count=batch * nh * n_layers,
+                         causal=False),
+            matmul_op("enc.out", "encoder", phase, m=enc_tokens, n=d,
+                      k=d, count=n_layers),
+            matmul_op("enc.mlp_up", "encoder", phase, m=enc_tokens,
+                      n=cfg.d_ff, k=d, count=n_layers),
+            matmul_op("enc.mlp_down", "encoder", phase, m=enc_tokens, n=d,
+                      k=cfg.d_ff, count=n_layers),
+            stream_op("enc.norm", "encoder", phase, elems=enc_tokens * d,
+                      count=2 * n_layers),
+            # cross-attention KV of the encoded frames, computed once
+            matmul_op("dec.cross_kv", "decoder", phase, m=enc_tokens,
+                      n=2 * d, k=d, count=n_layers),
+        ]
+    ops += [
+        stream_op("dec.norm", "decoder", phase, elems=tokens * d,
+                  count=3 * n_layers),
+        stream_op("dec.residual", "decoder", phase, elems=tokens * d,
+                  count=3 * n_layers, spec=_RESID_SPEC),
+        matmul_op("dec.self_qkv", "decoder", phase, m=tokens, n=3 * d,
+                  k=d, count=n_layers),
+        attention_op("dec.self_attn", "decoder", phase, sq=sq, skv=skv,
+                     d=dh, count=batch * nh * n_layers, causal=causal),
+        matmul_op("dec.cross_q", "decoder", phase, m=tokens, n=d, k=d,
+                  count=n_layers),
+        attention_op("dec.cross_attn", "decoder", phase,
+                     sq=1 if phase == "decode" else seq_len,
+                     skv=context, d=dh, count=batch * nh * n_layers,
+                     causal=False),
+        matmul_op("dec.out", "decoder", phase, m=tokens, n=d, k=d,
+                  count=2 * n_layers),
+        matmul_op("dec.mlp_up", "decoder", phase, m=tokens, n=cfg.d_ff,
+                  k=d, count=n_layers),
+        matmul_op("dec.mlp_down", "decoder", phase, m=tokens, n=d,
+                  k=cfg.d_ff, count=n_layers),
+        stream_op("head.norm", "head", phase, elems=tokens * d),
+        matmul_op("head.unembed", "head", phase, m=tokens,
+                  n=cfg.vocab_padded, k=d),
+    ]
+    return ops
+
+
+def model_ops(cfg, phase: str, *, batch: int = 1, seq_len: int = 4096,
+              context: int | None = None) -> list[OpSpec]:
+    """The ``LayerSpec`` adapter: walk one phase of a model config into
+    bound op records.  Dispatch is structural (field signatures), so any
+    config dataclass with the right fields composes — not just the
+    shipped zoo."""
+    if phase not in PHASES:
+        raise ValueError(f"unknown phase {phase!r}; expected one of {PHASES}")
+    context = context or seq_len
+    kw = dict(batch=batch, seq_len=seq_len, context=context)
+    if hasattr(cfg, "shared_every"):            # Zamba2 hybrid
+        ops = _zamba2_ops(cfg, phase, **kw)
+    elif hasattr(cfg, "slstm_at"):              # xLSTM
+        ops = _xlstm_ops(cfg, phase, **kw)
+    elif hasattr(cfg, "max_frames"):            # Whisper enc-dec
+        ops = _whisper_ops(cfg, phase, **kw)
+    elif hasattr(cfg, "n_kv_heads"):            # dense / GQA / MoE / VLM LM
+        ops = _lm_ops(cfg, phase, **kw)
+    else:
+        raise TypeError(
+            f"no LayerSpec adapter for config type {type(cfg).__name__}: "
+            f"expected LM / Zamba2 / xLSTM / Whisper field signature")
+    return [o for o in ops if o.count > 0 and o.out_elems > 0]
+
+
+# ---------------------------------------------------------------------------
+# Composition
+# ---------------------------------------------------------------------------
+
+
+def _resolve_config(config):
+    """(name, cfg) from an arch name, an ArchDef, or a raw config."""
+    if isinstance(config, str):
+        from repro.configs import get_arch
+
+        arch = get_arch(config)
+        return arch.name, arch.cfg
+    cfg = getattr(config, "cfg", None)
+    if cfg is not None and hasattr(config, "spec_fn"):   # ArchDef
+        return config.name, cfg
+    return getattr(config, "name", type(config).__name__), config
+
+
+def compose_ops(ops, machine: "MachineModel | str", *, name: str = "model",
+                sustained_bw=None) -> StepPrediction:
+    """Lower bound ops in one batch and compose a :class:`StepPrediction`.
+
+    Per-op results are *bit-identical* to lowering the op's workload
+    alone through ``workload_batch`` (same engine call); composition
+    only scales by (count x units) and applies the overlap rule.
+    """
+    m = get_machine(machine)
+    ops = list(ops)
+    if not ops:
+        raise ValueError("compose_ops: empty op list")
+    lowered = lower_many([o.workload for o in ops], m,
+                         sustained_bw=sustained_bw)
+    batch = lowered.batch
+    pred = batch.predictions()[:, -1]                       # serial T_ECM
+    t_rest = batch.t_nol + batch.transfers.sum(axis=-1)
+    mem_lines = lowered.routed.mem_lines()
+    records = []
+    for i, o in enumerate(ops):
+        units = o.units(m.line_bytes)
+        scale = o.count * units
+        records.append(OpPrediction(
+            name=o.name, layer=o.layer, phase=o.phase, kind=o.kind,
+            count=o.count, units=units,
+            cy_per_unit=float(pred[i]),
+            t_ol_cy=float(batch.t_ol[i]) * scale,
+            t_rest_cy=float(t_rest[i]) * scale,
+            cycles=float(pred[i]) * scale,
+            flops=o.flops,
+            hbm_bytes=float(mem_lines[i]) * m.line_bytes * scale,
+        ))
+    return StepPrediction(name=name, machine=m.name, clock_hz=m.clock_hz,
+                          alpha=overlap_alpha(m), ops=tuple(records))
+
+
+def predict_step(config, machine: "MachineModel | str" = "tpu-v5e", *,
+                 batch: int = 1, seq_len: int = 4096,
+                 context: int | None = None,
+                 phases=PHASES, sustained_bw=None) -> StepPrediction:
+    """Compose the whole-model step prediction for a config on a machine.
+
+    ``config`` is an arch name from ``repro.configs``, an ``ArchDef``,
+    or a raw model config dataclass.  The returned record carries both
+    a prefill step (``batch x seq_len`` tokens) and a decode step (one
+    token per sequence at ``context``), each decomposable per op and
+    per layer group.
+    """
+    name, cfg = _resolve_config(config)
+    context = context or seq_len
+    ops: list[OpSpec] = []
+    for ph in phases:
+        ops += model_ops(cfg, ph, batch=batch, seq_len=seq_len,
+                         context=context)
+    return compose_ops(ops, machine, name=name, sustained_bw=sustained_bw)
+
+
+def model_lowered(config, machine: "MachineModel | str", *,
+                  phase: str = "decode", batch: int = 1,
+                  seq_len: int = 4096, context: int | None = None,
+                  sustained_bw=None) -> LoweredBatch:
+    """One phase of a config aggregated into a single pre-scaled
+    :class:`LoweredBatch` element (unit: one whole step) — the adapter
+    that feeds the Eq. 2 chip-scaling engine (``scaling.scale_model``).
+
+    The aggregate's Eq. 1 prediction is the pipelined composition
+    ``max(sum T_OL, sum (T_nOL + T_data))``; its memory-edge transfer
+    term is the shared-bottleneck input Eq. 2 saturates on.
+    """
+    name, cfg = _resolve_config(config)
+    m = get_machine(machine)
+    ops = model_ops(cfg, phase, batch=batch, seq_len=seq_len,
+                    context=context)
+    lowered = lower_many([o.workload for o in ops], m,
+                         sustained_bw=sustained_bw)
+    scales = np.array([o.count * o.units(m.line_bytes) for o in ops])
+    w = scales[:, None]
+    batch_agg = ECMBatch(
+        t_ol=np.array([float((lowered.batch.t_ol * scales).sum())]),
+        t_nol=np.array([float((lowered.batch.t_nol * scales).sum())]),
+        transfers=(lowered.batch.transfers * w).sum(axis=0, keepdims=True),
+        levels=lowered.batch.levels,
+        names=(f"{name}/{phase}",),
+        unit="cy/step")
+    routed = RoutedTraffic(
+        load_lines=(lowered.routed.load_lines * w).sum(axis=0,
+                                                       keepdims=True),
+        evict_lines=(lowered.routed.evict_lines * w).sum(axis=0,
+                                                         keepdims=True))
+    return LoweredBatch(
+        batch=batch_agg, routed=routed,
+        l1_uops=np.array([float((lowered.l1_uops * scales).sum())]),
+        mem_cy_per_line=lowered.mem_cy_per_line[:1].copy())

@@ -56,6 +56,7 @@ __all__ = [
     "ChipScaling",
     "fill_domains",
     "frequency_scale",
+    "scale_model",
     "scale_workloads",
     "saturation_table",
     "scaling_zoo",
@@ -328,6 +329,32 @@ def scale_workloads(workloads, machine: "MachineModel | str" = "haswell-ep",
         or (m.cores_per_domain or m.cores),
         n_domains=n_domains or m.n_domains,
     )
+
+
+def scale_model(config, machine: "MachineModel | str" = "haswell-ep",
+                *, phase: str = "decode", batch: int = 1,
+                seq_len: int = 4096, context: int | None = None,
+                f_ghz=None, cores_per_domain: int | None = None,
+                n_domains: int | None = None) -> ChipScaling:
+    """Eq. 2 saturation / energy surfaces for a **whole model config**.
+
+    The composition engine (``repro.core.compose``) walks one phase of
+    the config into registry workloads and aggregates them into a
+    single pre-scaled lowered record whose unit of work is one step;
+    this function feeds that record to the same Eq. 2 machinery every
+    single-kernel workload uses.  ``t_single`` is the pipelined
+    composed step time, the bottleneck term is the step's summed
+    memory-edge transfer cycles — so ``n_saturation()``, ``energy()``
+    and ``operating_points()`` answer "how many cores / what frequency
+    does *this model step* need" directly.
+    """
+    from .compose import model_lowered
+
+    lowered = model_lowered(config, machine, phase=phase, batch=batch,
+                            seq_len=seq_len, context=context)
+    return scale_workloads(lowered, machine, f_ghz=f_ghz,
+                           cores_per_domain=cores_per_domain,
+                           n_domains=n_domains)
 
 
 # ---------------------------------------------------------------------------

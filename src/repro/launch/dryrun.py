@@ -210,6 +210,7 @@ def lower_cell(arch: ArchDef, shape: ShapeSpec, *, multi_pod: bool,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "profile": profile_name,
         "kind": shape.kind,
+        "kv_divisible": kv_div,
         "status": "ok",
         "t_lower_s": round(t_lower, 2),
         "t_compile_s": round(t_compile, 2),
@@ -227,6 +228,82 @@ def lower_cell(arch: ArchDef, shape: ShapeSpec, *, multi_pod: bool,
         "ecm": ecm.summary(),
     }
     return record, lowered, compiled
+
+
+# ---------------------------------------------------------------------------
+# composed-prediction table (--predict)
+# ---------------------------------------------------------------------------
+
+#: a train step is forward + backward; the backward re-runs each matmul
+#: twice (dL/dx and dL/dW), so step time ~= 3x the composed forward
+TRAIN_STEP_MULT = 3.0
+
+
+def composed_step_s(arch_name: str, shape: ShapeSpec, n_chips: int, *,
+                    machine: str = "tpu-v5e") -> float:
+    """Per-chip composed step time for one cell (ideal weak scaling:
+    the whole-model composition divided over the mesh's chips)."""
+    from repro.core import compose
+
+    if shape.kind == "decode":
+        pred = compose.predict_step(
+            arch_name, machine, batch=shape.global_batch,
+            seq_len=shape.seq_len, context=shape.seq_len,
+            phases=("decode",))
+        t = pred.decode_s
+    else:
+        pred = compose.predict_step(
+            arch_name, machine, batch=shape.global_batch,
+            seq_len=shape.seq_len, phases=("prefill",))
+        t = pred.prefill_s
+        if shape.kind == "train":
+            t *= TRAIN_STEP_MULT
+    return t / n_chips
+
+
+def predict_table(records, *, machine: str = "tpu-v5e") -> list[dict]:
+    """One row per dry-run record comparing the composed whole-model
+    prediction against the compiled-HLO three-term model.
+
+    Skipped and errored cells stay in the table with their reason —
+    previously they vanished from the run output entirely.
+    """
+    from repro.core.compose import DRYRUN_TOLERANCE
+
+    lo, hi = DRYRUN_TOLERANCE
+    rows = []
+    for rec in records:
+        row = {"arch": rec["arch"], "shape": rec["shape"],
+               "mesh": rec["mesh"], "status": rec["status"]}
+        if rec["status"] != "ok":
+            row["reason"] = rec.get("reason") or rec.get("error", "")
+            rows.append(row)
+            continue
+        shape = SHAPES[rec["shape"]]
+        n_chips = 512 if rec["mesh"] == "2x16x16" else 256
+        pred = composed_step_s(rec["arch"], shape, n_chips, machine=machine)
+        sim = float(rec["ecm"]["t_ecm_s"])
+        ratio = pred / sim if sim > 0 else float("inf")
+        row.update(predicted_s=pred, simulated_s=sim, ratio=ratio,
+                   agrees=bool(lo <= ratio <= hi))
+        rows.append(row)
+    return rows
+
+
+def format_predict_table(rows) -> str:
+    header = (f"{'arch':<24} {'shape':<12} {'mesh':<8} "
+              f"{'predicted_s':>12} {'simulated_s':>12} {'ratio':>7}  ok")
+    lines = [header, "-" * len(header)]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:<24} {r['shape']:<12} {r['mesh']:<8} "
+                         f"{r['status'].upper()}: {r.get('reason', '')}")
+            continue
+        lines.append(
+            f"{r['arch']:<24} {r['shape']:<12} {r['mesh']:<8} "
+            f"{r['predicted_s']:>12.4g} {r['simulated_s']:>12.4g} "
+            f"{r['ratio']:>7.2f}  {'yes' if r['agrees'] else 'NO'}")
+    return "\n".join(lines)
 
 
 # ---------------------------------------------------------------------------
@@ -255,6 +332,12 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool, out: str,
         record = {"arch": arch_name, "shape": shape_name,
                   "mesh": "2x16x16" if multi_pod else "16x16",
                   "status": "skipped", "reason": reason}
+        if verbose:
+            # skipped cells used to vanish from the run output entirely
+            # (nothing printed, no summary count) — surface them so a
+            # grid survey can't silently under-report its coverage
+            print(f"[dryrun] {arch_name} x {shape_name} "
+                  f"({record['mesh']}): SKIPPED — {reason}")
     else:
         try:
             record, lowered, compiled = lower_cell(arch, shape,
@@ -290,6 +373,9 @@ def main() -> int:
                     help="every (arch x shape) cell on both meshes")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--predict", action="store_true",
+                    help="append a composed-vs-simulated step-time table "
+                         "(repro.core.compose) over the run's cells")
     args = ap.parse_args()
 
     cells: list[tuple[str, str, bool]] = []
@@ -303,12 +389,16 @@ def main() -> int:
         pods = [False, True] if args.both_meshes else [args.multi_pod]
         cells = [(args.arch, args.shape, mp) for mp in pods]
 
-    failures = 0
+    records = []
     for a, s, mp in cells:
-        rec = run_cell(a, s, multi_pod=mp, out=args.out, force=args.force)
-        if rec["status"] == "error":
-            failures += 1
-    print(f"[dryrun] done: {len(cells)} cells, {failures} failures")
+        records.append(run_cell(a, s, multi_pod=mp, out=args.out,
+                                force=args.force))
+    failures = sum(r["status"] == "error" for r in records)
+    skipped = sum(r["status"] == "skipped" for r in records)
+    if args.predict:
+        print(format_predict_table(predict_table(records)))
+    print(f"[dryrun] done: {len(cells)} cells, {failures} failures, "
+          f"{skipped} skipped")
     return 1 if failures else 0
 
 

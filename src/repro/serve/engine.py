@@ -97,12 +97,22 @@ class BucketModel:
                  model: ServingModel = ServingModel(), *,
                  min_ctx: int = 128, max_ctx: int = 16384,
                  bkv_candidates: tuple[int, ...] = (128, 256, 512,
-                                                    1024, 2048)):
+                                                    1024, 2048),
+                 source: str = "attention"):
+        if source not in ("attention", "compose"):
+            raise ValueError(f"unknown bucket source {source!r}: "
+                             f"expected 'attention' or 'compose'")
         self.machine = get_machine(machine)
         self.model = model
         self.min_ctx = min_ctx
         self.max_ctx = max_ctx
         self.bkv_candidates = bkv_candidates
+        #: "attention" scales the ranked per-CL prediction directly;
+        #: "compose" routes the same workload through the whole-model
+        #: composition engine (repro.core.compose) — the two agree
+        #: bit-for-bit for this single-op model, which is exactly what
+        #: lets the engine swap brains with zero behavior drift
+        self.source = source
         self.spec = AttentionSpec(elem_bytes=model.elem_bytes)
         self.calib: dict[tuple[str, int], float] = {}
         self._decode: dict[int, dict] = {}
@@ -171,14 +181,41 @@ class BucketModel:
         # hook point for tests; lower() is the registry path already
         return lower(workload, self.machine)
 
+    def _composed_cy(self, kind: str, cb: int, block, *,
+                     out_tokens: int | None = None) -> float:
+        """The composition-engine view of one bucket: the ranked
+        attention workload as a whole-model op walk (heads x layers
+        folded into the op count), composed under the machine's overlap
+        rule.  For this single-op model the result is bit-identical to
+        the direct per-CL product — the no-drift guarantee the serving
+        tests pin."""
+        from repro.core.compose import attention_op, compose_ops
+
+        hl = self.model.heads * self.model.layers
+        if kind == "decode":
+            op = attention_op("serve.decode_attn", "serve", "decode",
+                              sq=1, skv=cb, d=self.model.d, bq=1,
+                              bkv=int(block), causal=False, count=hl,
+                              spec=self.spec)
+        else:
+            bq, bkv = block
+            op = attention_op("serve.prefill_attn", "serve", "prefill",
+                              sq=cb, skv=cb, d=self.model.d, bq=int(bq),
+                              bkv=int(bkv), causal=True, count=hl,
+                              out_tokens=out_tokens, spec=self.spec)
+        return compose_ops([op], self.machine, name="serving").cycles(kind)
+
     def decode_cy_per_token(self, ctx: int, *, smallest_block: bool = False,
                             calibrated: bool = True) -> float:
         """Predicted core cycles to decode one token at this context."""
         cb = self.ctx_bucket(ctx)
         ent = self._decode_entry(cb)
         bkv = ent["min_bkv"] if smallest_block else ent["best_bkv"]
-        cy = ent["cy_per_cl"][bkv] * self.model.o_lines_per_token(
-            self.machine.line_bytes)
+        if self.source == "compose":
+            cy = self._composed_cy("decode", cb, bkv)
+        else:
+            cy = ent["cy_per_cl"][bkv] * self.model.o_lines_per_token(
+                self.machine.line_bytes)
         if calibrated:
             cy *= self.calib.get(("decode", cb), 1.0)
         return cy
@@ -188,8 +225,12 @@ class BucketModel:
         """Predicted core cycles to prefill a prompt (all layers/heads)."""
         cb = self.ctx_bucket(prompt_len)
         ent = self._prefill_entry(cb)
-        cy = ent["cy_per_cl"] * prompt_len \
-            * self.model.o_lines_per_token(self.machine.line_bytes)
+        if self.source == "compose":
+            cy = self._composed_cy("prefill", cb, ent["block"],
+                                   out_tokens=prompt_len)
+        else:
+            cy = ent["cy_per_cl"] * prompt_len \
+                * self.model.o_lines_per_token(self.machine.line_bytes)
         if calibrated:
             cy *= self.calib.get(("prefill", cb), 1.0)
         return cy
@@ -242,6 +283,9 @@ class EngineConfig:
     max_steps: int = 100_000
     seed: int = 0
     bkv_candidates: tuple[int, ...] = (128, 256, 512, 1024, 2048)
+    #: where BucketModel sources its predictions: "attention" (direct
+    #: per-CL product) or "compose" (the whole-model composition engine)
+    bucket_source: str = "attention"
 
 
 @dataclass
@@ -284,7 +328,7 @@ class ServeEngine:
         self.degrade = degrade
         self.buckets = BucketModel(
             cfg.machine, model, min_ctx=cfg.min_ctx, max_ctx=cfg.max_ctx,
-            bkv_candidates=cfg.bkv_candidates)
+            bkv_candidates=cfg.bkv_candidates, source=cfg.bucket_source)
         self.rng = np.random.default_rng(cfg.seed)
         self.now = 0.0
         self.step_idx = 0

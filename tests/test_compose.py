@@ -1,0 +1,405 @@
+"""Whole-model ECM composition: the config zoo as step-time predictions.
+
+The deliverable of ``repro.core.compose`` is a *prediction claimed to
+decompose and to match measurement*, so these tests pin it from every
+side: golden Haswell step times (bit-exact hex floats) for a dense LM,
+an MoE and a Mamba2 hybrid; finite/positive + decode-vs-prefill +
+breakdown-sums-to-total invariants for every config x every registry
+machine; bit-identity of a composed single-op model with the direct
+``workload_batch`` lowering; monotonicity in layer count and hidden
+size; no behavior drift when the serving engine's ``BucketModel`` is
+sourced from composition; the dry-run ``--predict`` table (including
+the previously-silent skipped cells); and the ``BENCH_compose.json``
+schema/regression contract in ``tools/check_bench.py``.
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+from dataclasses import replace
+from functools import lru_cache
+from pathlib import Path
+
+import pytest
+
+from repro.configs import ARCH_NAMES, SHAPES, get_arch
+from repro.core import compose
+from repro.core.compose import (
+    attention_op,
+    compose_cycles,
+    compose_ops,
+    matmul_op,
+    model_ops,
+    overlap_alpha,
+    predict_step,
+)
+from repro.core.machine import get_machine, machine_names
+from repro.core.workload import (
+    FLASH_ATTENTION_F32,
+    MATMUL_F32,
+    AttentionWorkload,
+    MatmulWorkload,
+    workload_batch,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+GOLDEN = json.loads(
+    (Path(__file__).parent / "golden_haswell_ecm.json").read_text())
+
+MACHINES = machine_names()
+SEQ = 4096
+
+
+@lru_cache(maxsize=None)
+def _sp(name: str, machine: str) -> compose.StepPrediction:
+    return predict_step(name, machine, batch=1, seq_len=SEQ, context=SEQ)
+
+
+# ---------------------------------------------------------------------------
+# 1. Invariants: every config x every machine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("machine", MACHINES)
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prediction_finite_positive_and_decomposable(arch, machine):
+    sp = _sp(arch, machine)
+    assert sp.ops, "composition produced no ops"
+    for ph in compose.PHASES:
+        cy = sp.cycles(ph)
+        assert math.isfinite(cy) and cy > 0, (ph, cy)
+        assert sp.seconds(ph) == cy / sp.clock_hz
+        assert sp.flops(ph) > 0 and sp.hbm_bytes(ph) > 0
+        assert sp.dominant_op(ph)
+    for o in sp.ops:
+        assert math.isfinite(o.cycles) and o.cycles > 0, o.name
+        assert o.cy_per_unit > 0 and o.units > 0 and o.count > 0, o.name
+
+
+@pytest.mark.parametrize("machine", MACHINES)
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_step_not_above_prefill_at_equal_context(arch, machine):
+    sp = _sp(arch, machine)
+    assert sp.cycles("decode") <= sp.cycles("prefill")
+
+
+@pytest.mark.parametrize("machine", MACHINES)
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_per_op_breakdown_sums_to_total_under_overlap_rule(arch, machine):
+    """The phase total is exactly the machine's overlap rule applied to
+    the per-op terms — nothing is lost or double-counted between the
+    breakdown and the headline number."""
+    sp = _sp(arch, machine)
+    assert sp.alpha == overlap_alpha(machine)
+    for ph in compose.PHASES:
+        ops = sp.phase_ops(ph)
+        recombined = compose_cycles([o.t_ol_cy for o in ops],
+                                    [o.t_rest_cy for o in ops],
+                                    [o.cycles for o in ops], sp.alpha)
+        assert sp.cycles(ph) == recombined
+        # per-layer groups partition the per-op serial cycles
+        assert sum(sp.per_layer(ph).values()) == pytest.approx(
+            sum(o.cycles for o in ops))
+        if sp.alpha == 1.0:     # CPU rule: the serial sum *is* the total
+            assert sp.cycles(ph) == pytest.approx(
+                sum(o.cycles for o in ops))
+        if sp.alpha == 0.0:     # TPU rule: Eq. 1 over the summed terms
+            assert sp.cycles(ph) == pytest.approx(
+                max(sum(o.t_ol_cy for o in ops),
+                    sum(o.t_rest_cy for o in ops)))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_composed_flops_track_param_count_accounting(arch):
+    """The op walk is validated against the *independent* parameter-tree
+    accounting: composed prefill FLOPs must live in a calibrated band
+    around 2 * n_active_params per token (embedding and the seq-quadratic
+    attention term make the families sit on either side of exactly 2N;
+    the upper edge is whisper-base, whose attention dominates its tiny
+    parameter count at this sequence length)."""
+    a = get_arch(arch)
+    sp = _sp(arch, "tpu-v5e")
+    ratio = sp.flops("prefill") / (2.0 * a.n_active_params * SEQ)
+    assert 0.6 <= ratio <= 1.75, ratio
+
+
+# ---------------------------------------------------------------------------
+# 2. Golden Haswell pins (dense LM / MoE / Mamba2)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", sorted(GOLDEN["compose"]))
+def test_composed_step_bit_equal_to_golden(arch):
+    rec = GOLDEN["compose"][arch]
+    sp = _sp(arch, "haswell-ep")
+    assert sp.cycles("prefill").hex() == rec["prefill_cy"]
+    assert sp.cycles("decode").hex() == rec["decode_cy"]
+    assert len(sp.ops) == rec["n_ops"]
+
+
+def test_golden_covers_dense_moe_and_mamba():
+    pinned = set(GOLDEN["compose"])
+    assert "internlm2-1.8b" in pinned          # dense LM
+    assert "granite-moe-1b-a400m" in pinned    # MoE
+    assert "zamba2-1.2b" in pinned             # Mamba2 hybrid
+
+
+# ---------------------------------------------------------------------------
+# 3. Property tests: single-op degeneration + monotonicity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("machine", MACHINES)
+def test_single_op_composition_bit_identical_to_workload_batch(machine):
+    """A one-op model *is* its workload: the composed per-unit time must
+    equal the direct ``workload_batch`` lowering bit-for-bit, and the
+    step total must be exactly (count x units x per-unit) under either
+    overlap rule."""
+    m = get_machine(machine)
+    cases = [
+        (matmul_op("mm", "l", "prefill", m=2048, n=2048, k=2048, count=7),
+         MatmulWorkload(MATMUL_F32, m=2048, n=2048, k=2048)),
+        (attention_op("att", "l", "decode", sq=1, skv=4096, d=128,
+                      bq=1, bkv=512, count=32, causal=False),
+         AttentionWorkload(FLASH_ATTENTION_F32, sq=1, skv=4096, d=128,
+                           bq=1, bkv=512, causal=False)),
+    ]
+    for op, direct in cases:
+        sp = compose_ops([op], machine)
+        ref = float(workload_batch([direct], machine).predictions()[0, -1])
+        rec = sp.ops[0]
+        assert rec.cy_per_unit == ref                      # bit-identical
+        scale = rec.count * op.units(m.line_bytes)
+        assert sp.cycles(op.phase) == pytest.approx(ref * scale, rel=1e-12)
+
+
+@pytest.mark.parametrize("machine", ["haswell-ep", "tpu-v5e"])
+@pytest.mark.parametrize("knob", ["n_layers", "d_model"])
+def test_composition_monotone_in_layers_and_hidden_size(machine, knob):
+    cfg = get_arch("internlm2-1.8b").cfg
+    big = replace(cfg, **{knob: 2 * getattr(cfg, knob)})
+    for ph in compose.PHASES:
+        small_cy = compose_ops(
+            model_ops(cfg, ph, batch=1, seq_len=512), machine).cycles(ph)
+        big_cy = compose_ops(
+            model_ops(big, ph, batch=1, seq_len=512), machine).cycles(ph)
+        assert big_cy > small_cy, (knob, ph)
+
+
+def test_scale_model_feeds_eq2_engine():
+    """A whole config's step runs through the same Eq. 2 machinery as a
+    single kernel: memory-bound decode saturates a handful of cores,
+    and the aggregate's single-core time is the pipelined composition
+    of the op walk."""
+    from repro.core.scaling import scale_model
+
+    from repro.core.compose import model_lowered
+
+    cs = scale_model("internlm2-1.8b", "haswell-ep", phase="decode",
+                     batch=1, seq_len=SEQ)
+    n_sat = int(cs.n_saturation()[0, -1])
+    assert 1 <= n_sat <= cs.cores_per_domain
+    assert not bool(cs.core_bound()[0, -1])     # decode GEMVs stream HBM
+
+    lowered = model_lowered("internlm2-1.8b", "haswell-ep",
+                            phase="decode", batch=1, seq_len=SEQ)
+    sp = _sp("internlm2-1.8b", "haswell-ep")
+    ops = sp.phase_ops("decode")
+    pipelined = max(sum(o.t_ol_cy for o in ops),
+                    sum(o.t_rest_cy for o in ops))
+    assert float(lowered.batch.predictions()[0, -1]) == pytest.approx(
+        pipelined, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# 4. Serving: composition-backed BucketModel, zero behavior drift
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("machine", ["tpu-v5e", "haswell-ep"])
+def test_bucket_model_compose_source_bit_identical(machine):
+    from repro.serve.engine import BucketModel
+
+    direct = BucketModel(machine)
+    composed = BucketModel(machine, source="compose")
+    assert composed.source == "compose"
+    for cb in (130, 1000, 3000):
+        assert composed.decode_cy_per_token(cb) \
+            == direct.decode_cy_per_token(cb)
+        assert composed.prefill_cy(cb) == direct.prefill_cy(cb)
+
+
+def test_bucket_model_rejects_unknown_source():
+    from repro.serve.engine import BucketModel
+
+    with pytest.raises(ValueError, match="source"):
+        BucketModel("tpu-v5e", source="magic")
+
+
+def test_compose_backed_engine_reproduces_pinned_recovery_sequence():
+    """The PR-6 device-loss trajectory, byte-for-byte, with the brain's
+    predictions sourced from whole-model composition — same requeues,
+    same steps, same final device count."""
+    from repro.serve import (
+        EngineConfig,
+        FaultInjector,
+        ServeEngine,
+        TraceConfig,
+        fault_plan,
+        synthetic_trace,
+    )
+    from repro.serve.policy import DegradationPolicy
+
+    trace_cfg = TraceConfig(mean_interarrival_s=0.001)
+    engine = ServeEngine(EngineConfig(seed=0, bucket_source="compose"),
+                         degrade=DegradationPolicy(step_budget_s=0.001))
+    summary = engine.run(synthetic_trace(trace_cfg, seed=0),
+                         FaultInjector(fault_plan("device_loss")))
+    seq = [(e["event"], e.get("rid"), e["step"])
+           for e in engine.events("device_loss", "requeue", "fail")]
+    assert seq == [("device_loss", None, 72),
+                   ("requeue", 3, 72), ("requeue", 4, 72),
+                   ("requeue", 7, 72), ("requeue", 8, 72)]
+    assert summary["lost"] == 0
+    assert summary["n_devices_final"] == 2
+
+    baseline = ServeEngine(EngineConfig(seed=0),
+                           degrade=DegradationPolicy(step_budget_s=0.001))
+    base_summary = baseline.run(synthetic_trace(trace_cfg, seed=0),
+                                FaultInjector(fault_plan("device_loss")))
+    assert engine.log == baseline.log
+    assert summary == base_summary
+
+
+# ---------------------------------------------------------------------------
+# 5. Dry-run: --predict table + surfaced skips
+# ---------------------------------------------------------------------------
+
+
+def _dryrun_mod():
+    # importing repro.launch.dryrun pulls in jax with a forced device
+    # count; the skip path and the predict table never touch devices
+    from repro.launch import dryrun
+    return dryrun
+
+
+def test_run_cell_surfaces_skipped_cells(tmp_path, capsys):
+    dryrun = _dryrun_mod()
+    rec = dryrun.run_cell("internlm2-1.8b", "long_500k", multi_pod=False,
+                          out=str(tmp_path))
+    assert rec["status"] == "skipped"
+    assert rec["reason"]
+    out = capsys.readouterr().out
+    assert "SKIPPED" in out and rec["reason"] in out
+
+
+def test_predict_table_keeps_skipped_rows_and_flags_agreement(tmp_path):
+    dryrun = _dryrun_mod()
+    skipped = dryrun.run_cell("internlm2-1.8b", "long_500k",
+                              multi_pod=False, out=str(tmp_path),
+                              verbose=False)
+    shape = SHAPES["decode_32k"]
+    n_chips = 256
+    pred = dryrun.composed_step_s("internlm2-1.8b", shape, n_chips)
+    lo, hi = compose.DRYRUN_TOLERANCE
+    ok_rec = {"arch": "internlm2-1.8b", "shape": "decode_32k",
+              "mesh": "16x16", "status": "ok",
+              "ecm": {"t_ecm_s": pred / (0.5 * (lo + hi))}}
+    err_rec = {"arch": "glm4-9b", "shape": "train_4k", "mesh": "2x16x16",
+               "status": "error", "error": "RESOURCE_EXHAUSTED: boom"}
+    rows = dryrun.predict_table([skipped, ok_rec, err_rec])
+    assert len(rows) == 3
+
+    by_status = {r["status"]: r for r in rows}
+    assert by_status["skipped"]["reason"] == skipped["reason"]
+    assert by_status["error"]["reason"] == "RESOURCE_EXHAUSTED: boom"
+    ok_row = by_status["ok"]
+    assert ok_row["predicted_s"] == pytest.approx(pred)
+    assert ok_row["agrees"] is True
+    # a simulated time far outside the band must flip the flag
+    bad = dict(ok_rec, ecm={"t_ecm_s": pred / (10 * hi)})
+    assert dryrun.predict_table([bad])[0]["agrees"] is False
+
+    table = dryrun.format_predict_table(rows)
+    assert "SKIPPED" in table and "ERROR" in table
+    assert skipped["reason"] in table
+
+
+# ---------------------------------------------------------------------------
+# 6. BENCH_compose.json: schema + regression-gate contract
+# ---------------------------------------------------------------------------
+
+
+def _check_bench(*argv, timeout=120):
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_bench.py"),
+         *argv], env=env, cwd=ROOT, capture_output=True, text=True,
+        timeout=timeout)
+
+
+@pytest.fixture(scope="module")
+def compose_artifact(tmp_path_factory):
+    from benchmarks.run import compose_payload
+
+    path = tmp_path_factory.mktemp("bench") / "BENCH_compose.json"
+    path.write_text(json.dumps(compose_payload()))
+    return path
+
+
+def test_compose_payload_passes_check_bench(compose_artifact):
+    r = _check_bench(str(compose_artifact))
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_check_bench_rejects_decode_above_prefill(compose_artifact,
+                                                  tmp_path):
+    payload = json.loads(compose_artifact.read_text())
+    name = next(iter(payload["models"]))
+    payload["models"][name]["decode"]["predicted_cy"] = \
+        2 * payload["models"][name]["prefill"]["predicted_cy"]
+    path = tmp_path / "BENCH_compose.json"
+    path.write_text(json.dumps(payload))
+    r = _check_bench(str(path))
+    assert r.returncode == 1
+    assert "decode predicted_cy exceeds prefill" in r.stderr
+
+
+def test_check_bench_gates_deterministic_compose_fields(compose_artifact,
+                                                        tmp_path):
+    # identical artifacts pass the gate; a drifted prediction fails it
+    r = _check_bench(str(compose_artifact), "--compare",
+                     str(compose_artifact))
+    assert r.returncode == 0, r.stdout + r.stderr
+
+    payload = json.loads(compose_artifact.read_text())
+    name = next(iter(payload["models"]))
+    payload["models"][name]["decode"]["predicted_cy"] *= 0.5
+    drifted = tmp_path / "BENCH_compose.json"
+    drifted.write_text(json.dumps(payload))
+    r = _check_bench(str(drifted), "--compare", str(compose_artifact))
+    assert r.returncode == 1
+    assert "predicted_cy" in r.stderr
+
+
+def test_check_bench_rejects_cross_suite_compare(compose_artifact):
+    r = _check_bench(str(compose_artifact), "--compare",
+                     os.path.join(ROOT, "BENCH_serve.json"))
+    assert r.returncode == 1
+    assert "suite mismatch" in r.stderr
+
+
+def test_committed_compose_baseline_matches_model():
+    """The committed ``BENCH_compose.json`` carries the *current* model's
+    deterministic predictions (same gate CI applies on every PR)."""
+    base = json.loads(
+        (Path(ROOT) / "BENCH_compose.json").read_text())
+    assert base["suite"] == "compose"
+    for name, entry in base["models"].items():
+        sp = _sp(name, base["machine"])
+        assert entry["decode"]["predicted_cy"] == pytest.approx(
+            sp.cycles("decode"), rel=1e-9), name
+        assert entry["prefill"]["predicted_cy"] == pytest.approx(
+            sp.cycles("prefill"), rel=1e-9), name

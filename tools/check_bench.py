@@ -18,7 +18,9 @@ Suites: stream, stencil, compute, scaling (Eq. 2 saturation + energy/EDP
 grids + TPU DP scaling), tpu, serve (fault-injected serving runs — the
 spec *pins zero lost requests per fault class*, so a request that
 vanishes without a terminal state fails validation, not just the
-compare).
+compare), compose (whole-model composed step predictions — the spec pins
+per-config prefill/decode entries and the config x machine zoo, and
+requires decode <= prefill at the bench's equal-context shape).
 
 ``--compare`` is the CI regression gate: it diffs a freshly generated
 artifact against the committed baseline, failing when any *deterministic*
@@ -39,7 +41,8 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 
-SUITES = ("stream", "stencil", "compute", "scaling", "tpu", "serve")
+SUITES = ("stream", "stencil", "compute", "scaling", "tpu", "serve",
+          "compose")
 
 #: minimal spec language: {key: type | (type, predicate) | dict (nested) |
 #: [element_spec] (non-empty list) | callable(value) -> error or None}
@@ -288,14 +291,84 @@ SERVE_SPEC = {
     },
 }
 
+def _compose_phase(name: str, ph: str, p) -> str | None:
+    if not isinstance(p, dict):
+        return f"[{name}].{ph}: expected object"
+    for k in ("predicted_cy", "measured_cy", "flops", "hbm_bytes"):
+        val = p.get(k)
+        if not isinstance(val, NUM) or isinstance(val, bool) or val <= 0:
+            return f"[{name}].{ph}.{k}: expected positive number, got " \
+                   f"{val!r}"
+    if (not isinstance(p.get("model_error"), NUM)
+            or isinstance(p.get("model_error"), bool)):
+        return f"[{name}].{ph}.model_error: expected number"
+    if not isinstance(p.get("dominant_op"), str) or not p["dominant_op"]:
+        return f"[{name}].{ph}.dominant_op: expected non-empty string"
+    return None
+
+
+def _compose_models(v):
+    """Per-config composed entries: both phases present, every cycle /
+    traffic field finite-positive, and decode <= prefill at the bench's
+    equal-context shape (the invariant the test suite pins)."""
+    if not isinstance(v, dict) or not v:
+        return "expected non-empty object of per-config entries"
+    for name, d in v.items():
+        if not isinstance(d, dict):
+            return f"[{name}]: expected object"
+        n_ops = d.get("n_ops")
+        if not isinstance(n_ops, int) or isinstance(n_ops, bool) \
+                or n_ops <= 0:
+            return f"[{name}].n_ops: expected positive int"
+        for ph in ("prefill", "decode"):
+            err = _compose_phase(name, ph, d.get(ph))
+            if err:
+                return err
+        if d["decode"]["predicted_cy"] > d["prefill"]["predicted_cy"]:
+            return f"[{name}]: decode predicted_cy exceeds prefill at " \
+                   f"equal context"
+    return None
+
+
+def _compose_zoo(v):
+    if not isinstance(v, dict) or not v:
+        return "expected non-empty object keyed by machine"
+    for m, models in v.items():
+        if not isinstance(models, dict) or not models:
+            return f"[{m}]: expected non-empty object keyed by config"
+        for name, d in models.items():
+            for k in ("prefill_cy", "decode_cy"):
+                val = d.get(k) if isinstance(d, dict) else None
+                if not isinstance(val, NUM) or isinstance(val, bool) \
+                        or val <= 0:
+                    return f"[{m}][{name}].{k}: expected positive number"
+    return None
+
+
+COMPOSE_SPEC = {
+    "shape": {
+        "batch": (int, _positive),
+        "seq_len": (int, _positive),
+        "context": (int, _positive),
+    },
+    "models": _compose_models,
+    "zoo": _compose_zoo,
+    "throughput": {
+        "n_compositions": (int, _positive),
+        "compose_wall_s": (NUM, _positive),
+        "compositions_per_s": (NUM, _positive),
+    },
+}
+
 SPECS = {"stream": STREAM_SPEC, "stencil": STENCIL_SPEC,
          "compute": COMPUTE_SPEC, "scaling": SCALING_SPEC,
-         "tpu": TPU_SPEC, "serve": SERVE_SPEC}
+         "tpu": TPU_SPEC, "serve": SERVE_SPEC, "compose": COMPOSE_SPEC}
 
-#: distinctive payload keys for suite inference on legacy (schema 1) files
+#: distinctive payload keys for suite inference on legacy (schema 1)
+#: files; "models" must precede "zoo" — compose payloads carry both
 SUITE_HINTS = (("model_eval", "stream"), ("sweep", "stencil"),
                ("matmul", "compute"), ("tpu_dp", "scaling"),
-               ("classes", "serve"), ("zoo", "tpu"))
+               ("classes", "serve"), ("models", "compose"), ("zoo", "tpu"))
 
 
 def check_value(path: str, value, spec, problems: list[str]) -> None:
