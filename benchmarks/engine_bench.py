@@ -1,0 +1,178 @@
+"""Request-path engine speed: the precompiled lowering table, the warm
+vectorized Eq. 1/Eq. 2 evaluation path, and incremental re-ranking.
+
+    PYTHONPATH=src python -m benchmarks.run --suite engine
+    PYTHONPATH=src python -m benchmarks.run --json --suite engine
+
+Four measurements, all over the same registry (every workload x every
+machine):
+
+* **cold lowering** — first-touch cost of lowering the full zoo with the
+  table bypassed (``lower_many(..., table=False)`` under
+  ``engine.cache_disabled()``): what every request paid before the table.
+* **warm eval** — the steady-state request path: full working-set +
+  scaling surfaces from warm table rows and memoized level curves
+  (fixed rep count, so the point total is deterministic).
+* **zoo sweep** — the whole Eq. 2 grid (workload x machine x cores x
+  frequency) from packed warm rows; the engine floor gates its rate.
+* **re-rank** — full attention-block re-rank vs the incremental path
+  (``prior`` + small dirty set); the two rankings must be *identical*,
+  which the artifact records as a deterministic boolean.
+
+The deterministic anchor is ``table.zoo_t_ecm_mem_total_cy``: the summed
+memory-level ``T_ECM`` over every (workload, machine) row, computed
+through the table.  Any fast-path drift from the reference lowering moves
+this checksum and fails the regression gate.
+"""
+from __future__ import annotations
+
+import time
+
+from .util import fmt, table
+
+#: fixed rep counts — keep the deterministic point totals stable
+WARM_EVAL_ITERS = 5
+ZOO_SWEEP_ITERS = 20
+RERANK_DIMS = (4096, 4096, 128)
+RERANK_DIRTY = ((128, 128), (256, 256))
+
+
+def table_payload() -> dict:
+    """Build the full-registry lowered table; deterministic checksum."""
+    from repro.core import MACHINES, workload_registry
+    from repro.core.engine import lowered_table
+
+    tab = lowered_table()
+    tab.build()
+    total = 0.0
+    for m in sorted(MACHINES):
+        for w in workload_registry().values():
+            total += float(tab.get(w, MACHINES[m]).batch.prediction(-1)[0])
+    return {
+        "n_workloads": len(workload_registry()),
+        "n_machines": len(MACHINES),
+        "rows": len(tab),
+        "zoo_t_ecm_mem_total_cy": total,
+    }
+
+
+def cold_lower_payload() -> dict:
+    """First-touch lowering cost for the whole zoo, table bypassed."""
+    from repro.core import MACHINES, workload_registry
+    from repro.core.engine import cache_disabled
+    from repro.core.workload import lower_many
+
+    ws = list(workload_registry().values())
+    with cache_disabled():
+        t0 = time.perf_counter()
+        rows = 0
+        for m in sorted(MACHINES):
+            lowered = lower_many(ws, MACHINES[m], table=False)
+            rows += len(lowered)
+        dt = time.perf_counter() - t0
+    return {"rows": rows, "wall_s": dt, "rows_per_s": rows / dt}
+
+
+def warm_eval_payload(machine: str = "haswell-ep",
+                      n_sizes: int = 2000, n_cores: int = 64) -> dict:
+    """Steady-state eval rate: warm table rows + memoized level curves."""
+    import numpy as np
+
+    from repro.core import BENCHMARKS
+    from repro.simcache import scaling_batch, sweep_batch
+
+    names = tuple(BENCHMARKS)
+    sizes = list(np.geomspace(16 * 1024, 256 * 1024 * 1024, n_sizes))
+    # warm-up pass: populate the lowered table and the level-curve memo
+    sweep_batch(names, sizes, machine=machine)
+    scaling_batch(names, n_cores, machine=machine)
+
+    t0 = time.perf_counter()
+    points = 0
+    for _ in range(WARM_EVAL_ITERS):
+        _, surface = sweep_batch(names, sizes, machine=machine)
+        _, scaling = scaling_batch(names, n_cores, machine=machine)
+        points += int(surface.size + scaling.size)
+    dt = time.perf_counter() - t0
+    return {"points": points, "iters": WARM_EVAL_ITERS,
+            "wall_s": dt, "points_per_s": points / dt}
+
+
+def zoo_sweep_payload() -> dict:
+    """Whole-registry Eq. 2 grid rate from packed warm rows."""
+    from repro.core import MACHINES
+    from repro.core.engine import zoo_sweep
+
+    first = zoo_sweep()          # warm-up: packs every machine's zoo
+    t0 = time.perf_counter()
+    for _ in range(ZOO_SWEEP_ITERS):
+        out = zoo_sweep()
+    dt = time.perf_counter() - t0
+    assert out["points"] == first["points"]
+    return {
+        "points": out["points"],
+        "machines": len(MACHINES),
+        "iters": ZOO_SWEEP_ITERS,
+        "wall_s": dt,
+        "sweeps_per_s": ZOO_SWEEP_ITERS / dt,
+    }
+
+
+def rerank_payload() -> dict:
+    """Full vs incremental attention-block re-rank; must be identical."""
+    from repro.core.autotune import rank_attention_blocks
+    from repro.core.engine import cache_disabled
+
+    dims = RERANK_DIMS
+    with cache_disabled():            # full path pays real re-lowering
+        t0 = time.perf_counter()
+        full = rank_attention_blocks(dims)
+        dt_full = time.perf_counter() - t0
+
+    prior = rank_attention_blocks(dims)
+    t0 = time.perf_counter()
+    inc = rank_attention_blocks(dims, prior=prior, dirty=RERANK_DIRTY)
+    dt_inc = time.perf_counter() - t0
+    return {
+        "n_candidates": len(full),
+        "n_dirty": len(RERANK_DIRTY),
+        "full_wall_s": dt_full,
+        "incremental_wall_s": dt_inc,
+        "speedup": dt_full / dt_inc,
+        "identical": inc == full,
+    }
+
+
+def engine_payload(machine: str = "haswell-ep") -> dict:
+    return {
+        "table": table_payload(),
+        "cold_lower": cold_lower_payload(),
+        "warm_eval": warm_eval_payload(machine=machine),
+        "zoo_sweep": zoo_sweep_payload(),
+        "rerank": rerank_payload(),
+    }
+
+
+def run(machine: str | None = None) -> str:
+    p = engine_payload(machine=machine or "haswell-ep")
+    tab, cold, warm = p["table"], p["cold_lower"], p["warm_eval"]
+    zoo, rr = p["zoo_sweep"], p["rerank"]
+    rows = [
+        ["lowered table", f"{tab['rows']} rows",
+         f"{tab['n_workloads']} workloads x {tab['n_machines']} machines"],
+        ["cold lowering", f"{fmt(cold['rows_per_s'], 0)} rows/s",
+         f"{cold['rows']} rows in {cold['wall_s'] * 1e3:.1f} ms"],
+        ["warm eval", f"{warm['points_per_s'] / 1e6:.1f} M points/s",
+         f"{warm['points']} points, {warm['iters']} reps"],
+        ["zoo sweep", f"{fmt(zoo['sweeps_per_s'], 0)} sweeps/s",
+         f"{zoo['points']} Eq. 2 points x {zoo['machines']} machines, "
+         f"{1e6 * zoo['wall_s'] / zoo['iters']:.0f} us/sweep"],
+        ["re-rank", f"{rr['speedup']:.1f}x incremental",
+         f"{rr['n_candidates']} blocks, {rr['n_dirty']} dirty, "
+         f"identical: {rr['identical']}"],
+    ]
+    out = [table(["stage", "rate", "detail"], rows)]
+    out.append(f"\nzoo T_ECM(mem) checksum: "
+               f"{tab['zoo_t_ecm_mem_total_cy']:.3f} cy "
+               f"(regression-gated; any fast-path drift moves it)")
+    return "\n".join(out)

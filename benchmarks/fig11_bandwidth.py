@@ -8,7 +8,7 @@ peak ratios, and reports the effective application bandwidth including
 hidden RFO traffic (the paper's 1.3x write-allocate adjustment)."""
 from __future__ import annotations
 
-from repro.core import BENCHMARKS, HASWELL_MEASURED_BW
+from repro.core import BENCHMARKS, HASWELL_EP
 from repro.core.machine import HASWELL_CHIP_BW_NONCOD
 
 from .util import fmt, table
@@ -25,7 +25,7 @@ def run() -> str:
     rows = []
     for k in KERNELS:
         spec = BENCHMARKS[k]
-        hsw_cod = HASWELL_MEASURED_BW[k] * 2      # two memory domains
+        hsw_cod = HASWELL_EP.measured_bw[k] * 2      # two memory domains
         hsw = HASWELL_CHIP_BW_NONCOD[k]
         useful = (spec.loads_explicit + spec.stores + spec.nt_stores) \
             / spec.mem_streams

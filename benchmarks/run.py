@@ -7,10 +7,10 @@ runner for all kernel families.
     PYTHONPATH=src python -m benchmarks.run --json --suite stencil
     PYTHONPATH=src python -m benchmarks.run --only machine_zoo --machine skylake-sp
 
-``--suite {stream,stencil,compute,scaling,tpu,serve,compose}`` selects a
-kernel family, the chip-level suite, the serving-engine suite, or the
-whole-model composition suite (default: all
-sections); ``--machine`` picks a
+``--suite {stream,stencil,compute,scaling,tpu,serve,compose,engine}``
+selects a kernel family, the chip-level suite, the serving-engine suite,
+the whole-model composition suite, or the request-path engine suite
+(default: all sections); ``--machine`` picks a
 registry machine for the sections and artifacts that are
 machine-parameterized (the zoo table, the stencil sweep, the compute
 blocking sweeps, the scaling/energy grids, the model-eval throughput
@@ -32,7 +32,9 @@ deterministic virtual-clock run per fault class — throughput, latency
 percentiles, predicted-vs-measured step ratios, recovery counts) and
 ``BENCH_compose.json`` (whole-model composition: predicted-vs-measured
 step cycles per config, the config x machine zoo, composition
-throughput).
+throughput) and ``BENCH_engine.json`` (request-path engine: lowered-table
+shape + deterministic T_ECM checksum, cold-lowering vs warm table-backed
+eval rates, full-zoo Eq. 2 sweep latency, incremental re-rank speedup).
 Field names are
 stable across schema bumps so trajectories remain comparable; the CI
 regression gate diffs fresh artifacts against the committed baselines
@@ -48,6 +50,7 @@ import time
 from . import (
     compose_bench,
     compute_bench,
+    engine_bench,
     fig11_bandwidth,
     fig12_nt_stores,
     fig789_sweeps,
@@ -81,6 +84,9 @@ SECTIONS = [
     ("machine_zoo",
      "Machine zoo: every workload x every machine (arXiv:1702.07554)",
      machine_zoo),
+    ("engine_bench",
+     "Engine: lowered table, warm Eq. 1/Eq. 2 path, incremental re-rank",
+     engine_bench),
     ("compose_bench",
      "Whole-model composition: config zoo step predictions (Eq. 1 x model)",
      compose_bench),
@@ -104,6 +110,7 @@ SUITES = {
             "machine_zoo"],
     "serve": ["serve_bench", "machine_zoo"],
     "compose": ["compose_bench", "machine_zoo"],
+    "engine": ["engine_bench", "machine_zoo"],
 }
 
 #: default artifact path per suite (schema: tools/check_bench.py)
@@ -115,6 +122,7 @@ BENCH_PATHS = {
     "tpu": "BENCH_tpu.json",
     "serve": "BENCH_serve.json",
     "compose": "BENCH_compose.json",
+    "engine": "BENCH_engine.json",
 }
 
 BENCH_SCHEMA_VERSION = 2
@@ -129,10 +137,17 @@ def model_eval_benchmark(n_sizes: int = 2000, n_cores: int = 64,
     array ops; the scalar baseline calls the per-point API the way the
     pre-batch ``sweep()`` / ``simulate_scaling()`` did (subsampled and
     extrapolated, it is that slow).
+
+    The ``batch_*`` fields keep their historical *cold* semantics (engine
+    caches bypassed, so the trajectory stays comparable across the table
+    introduction); the ``warm_*`` fields time the steady-state request
+    path — warm lowered-table rows plus memoized level curves, over a
+    fixed ``warm_iters`` rep count.
     """
     import numpy as np
 
     from repro.core import BENCHMARKS
+    from repro.core import engine as core_engine
     from repro.simcache import (
         EVAL_COUNTERS,
         reset_counters,
@@ -146,23 +161,39 @@ def model_eval_benchmark(n_sizes: int = 2000, n_cores: int = 64,
     sizes = list(np.geomspace(16 * 1024, 256 * 1024 * 1024, n_sizes))
 
     reset_counters()
-    t0 = time.perf_counter()
-    _, surface = sweep_batch(names, sizes, machine=machine)
-    _, scaling = scaling_batch(names, n_cores, machine=machine)
-    dt_batch = time.perf_counter() - t0
+    with core_engine.cache_disabled():
+        t0 = time.perf_counter()
+        _, surface = sweep_batch(names, sizes, machine=machine)
+        _, scaling = scaling_batch(names, n_cores, machine=machine)
+        dt_batch = time.perf_counter() - t0
     batch_points = int(surface.size + scaling.size)
     batch_array_evals = EVAL_COUNTERS["batch_array_evals"]
 
+    # warm path: lowered-table rows + level-curve memo populated, then a
+    # fixed rep count so the point total is deterministic
+    warm_iters = 5
+    sweep_batch(names, sizes, machine=machine)
+    scaling_batch(names, n_cores, machine=machine)
+    t0 = time.perf_counter()
+    warm_points = 0
+    for _ in range(warm_iters):
+        _, surface = sweep_batch(names, sizes, machine=machine)
+        _, scaling = scaling_batch(names, n_cores, machine=machine)
+        warm_points += int(surface.size + scaling.size)
+    dt_warm = time.perf_counter() - t0
+
     # scalar baseline: one API call per (kernel, size) point; 4 levels per
     # call internally (the old sweep() shape).  Subsample, then extrapolate.
+    # Caches stay off so the baseline keeps measuring the per-point API.
     sub = sizes[:: max(n_sizes // 20, 1)]
-    t0 = time.perf_counter()
-    for n in names:
-        for s_ in sub:
-            simulate_working_set(n, s_, machine=machine)
-        for lv in range(4):
-            simulate_level(n, lv, machine=machine)
-    dt_sub = time.perf_counter() - t0
+    with core_engine.cache_disabled():
+        t0 = time.perf_counter()
+        for n in names:
+            for s_ in sub:
+                simulate_working_set(n, s_, machine=machine)
+            for lv in range(4):
+                simulate_level(n, lv, machine=machine)
+        dt_sub = time.perf_counter() - t0
     scalar_points = len(names) * (len(sub) + 4)
     scalar_rate = scalar_points / dt_sub
 
@@ -176,6 +207,14 @@ def model_eval_benchmark(n_sizes: int = 2000, n_cores: int = 64,
         "python_calls_per_point_scalar": 1.0,
         "throughput_ratio": (batch_points / dt_batch) / scalar_rate,
         "per_point_call_reduction": batch_points / batch_array_evals,
+        "cold_wall_s": dt_batch,
+        "cold_points_per_s": batch_points / dt_batch,
+        "warm_iters": warm_iters,
+        "warm_points": warm_points,
+        "warm_wall_s": dt_warm,
+        "warm_points_per_s": warm_points / dt_warm,
+        "warm_throughput_ratio": (warm_points / dt_warm)
+        / (batch_points / dt_batch),
     }
 
 
@@ -265,13 +304,21 @@ def compose_payload(machine: str = "tpu-v5e") -> dict:
     }
 
 
+def engine_payload(machine: str = "haswell-ep") -> dict:
+    return {
+        **_envelope("engine", machine),
+        **engine_bench.engine_payload(machine=machine),
+        "zoo": machine_zoo.zoo_payload(),
+    }
+
+
 def emit_json(path: str | None, suite: str = "stream",
               machine: str | None = None) -> str:
     """Write the suite's BENCH artifact; returns the path written."""
     builders = {"stream": stream_payload, "stencil": stencil_payload,
                 "compute": compute_payload, "scaling": scaling_payload,
                 "tpu": tpu_payload, "serve": serve_payload,
-                "compose": compose_payload}
+                "compose": compose_payload, "engine": engine_payload}
     if machine is None:
         machine = ("tpu-v5e" if suite in ("tpu", "serve", "compose")
                    else "haswell-ep")
@@ -324,6 +371,15 @@ def emit_json(path: str | None, suite: str = "stream",
               f"{machine} x {len(payload['zoo'])} zoo machines, decode "
               f"dominated by {sorted(dominant)}, "
               f"{tp['compositions_per_s']:.0f} compositions/s")
+    elif suite == "engine":
+        tab, warm = payload["table"], payload["warm_eval"]
+        zoo, rr = payload["zoo_sweep"], payload["rerank"]
+        print(f"[bench] wrote {path}: {tab['rows']} table rows "
+              f"({tab['n_workloads']} workloads x {tab['n_machines']} "
+              f"machines), warm eval {warm['points_per_s'] / 1e6:.1f} M "
+              f"points/s, {zoo['sweeps_per_s']:.0f} zoo sweeps/s, "
+              f"incremental re-rank {rr['speedup']:.1f}x "
+              f"(identical: {rr['identical']})")
     elif suite == "compute":
         mm, att = payload["matmul"], payload["attention"]
         ok = all(v["matches_ref"] for v in payload["kernels"].values())

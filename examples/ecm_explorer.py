@@ -12,7 +12,7 @@ Run:  PYTHONPATH=src python examples/ecm_explorer.py --kernel striad
 import argparse
 import dataclasses
 
-from repro.core import BENCHMARKS, HASWELL_EP, HASWELL_MEASURED_BW
+from repro.core import BENCHMARKS, HASWELL_EP
 from repro.core.saturation import ScalingModel
 from repro.simcache import simulate_level
 
@@ -28,7 +28,7 @@ def main():
 
     spec = BENCHMARKS[args.kernel]
     machine = dataclasses.replace(HASWELL_EP, clock_hz=args.clock_ghz * 1e9)
-    bw = args.bw or HASWELL_MEASURED_BW[args.kernel]
+    bw = args.bw or HASWELL_EP.measured_bw[args.kernel]
     ecm = spec.ecm(machine, bw, optimized_agu=args.optimized_agu)
 
     print(f"kernel    : {spec.name}   ({spec.expr})")
@@ -48,7 +48,7 @@ def main():
     if spec.stores and not args.optimized_agu:
         nt = BENCHMARKS.get(f"{spec.name}_nt")
         if nt:
-            bw_nt = HASWELL_MEASURED_BW[nt.name]
+            bw_nt = HASWELL_EP.measured_bw[nt.name]
             e_nt = nt.ecm(machine, bw_nt)
             x = ecm.prediction(3) / e_nt.prediction(3)
             print(f"non-temporal stores would give {x:.2f}x in memory "

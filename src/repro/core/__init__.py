@@ -33,12 +33,19 @@ from .kernel_spec import (
     fuse_chain,
     haswell_ecm,
 )
+from .engine import (
+    LoweredTable,
+    cache_disabled,
+    eq1_backend,
+    eq1_predictions,
+    fingerprint,
+    lowered_table,
+    zoo_sweep,
+)
 from .layer_condition import (
-    HASWELL_CAPACITIES,
     JACOBI2D,
     JACOBI3D,
     LC_SAFETY,
-    STENCIL_MEASURED_BW,
     STENCILS,
     LayerCondition,
     StencilSpec,
@@ -50,7 +57,6 @@ from .machine import (
     BROADWELL_EP,
     ChipPower,
     HASWELL_EP,
-    HASWELL_MEASURED_BW,
     MACHINES,
     SANDY_BRIDGE_EP,
     SKYLAKE_SP,
@@ -109,11 +115,9 @@ __all__ = [
     "StreamKernelSpec",
     "benchmark_batch",
     "haswell_ecm",
-    "HASWELL_CAPACITIES",
     "JACOBI2D",
     "JACOBI3D",
     "LC_SAFETY",
-    "STENCIL_MEASURED_BW",
     "STENCILS",
     "LayerCondition",
     "StencilSpec",
@@ -124,7 +128,6 @@ __all__ = [
     "batch_saturation",
     "BROADWELL_EP",
     "HASWELL_EP",
-    "HASWELL_MEASURED_BW",
     "MACHINES",
     "SANDY_BRIDGE_EP",
     "SKYLAKE_SP",
@@ -139,6 +142,13 @@ __all__ = [
     "machine_names",
     "register_machine",
     "fuse_chain",
+    "LoweredTable",
+    "cache_disabled",
+    "eq1_backend",
+    "eq1_predictions",
+    "fingerprint",
+    "lowered_table",
+    "zoo_sweep",
     "ScalingModel",
     "domain_scaling",
     "ChipScaling",
@@ -171,3 +181,22 @@ __all__ = [
     "workload_registry",
     "zoo_predictions",
 ]
+
+# PR-3 alias shims: resolved lazily so the DeprecationWarning fires in the
+# owning submodule only when the name is actually used, not on package import.
+_DEPRECATED_ALIASES = {
+    "HASWELL_MEASURED_BW": "machine",
+    "HASWELL_CAPACITIES": "layer_condition",
+    "STENCIL_MEASURED_BW": "layer_condition",
+    "PowerModel": "energy",
+}
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED_ALIASES:
+        import importlib
+
+        mod = importlib.import_module(
+            f".{_DEPRECATED_ALIASES[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -212,7 +212,9 @@ def recommend(w: WorkloadSpec, n_chips: int = 256,
 def rank_workloads(workloads, machine=None, *,
                    level: "int | str" = -1,
                    sustained_bw=None,
-                   tiebreak=None) -> list[dict]:
+                   tiebreak=None,
+                   prior: "list[dict] | None" = None,
+                   dirty=None) -> list[dict]:
     """Rank any workloads on any machine by predicted ``T_ECM``.
 
     One vectorized lowering through the unified engine
@@ -234,10 +236,27 @@ def rank_workloads(workloads, machine=None, *,
     :class:`~repro.core.workload.LoweredBatch` (callers that need the
     routed traffic or in-core times anyway avoid lowering twice);
     ``machine``/``sustained_bw`` are ignored then.
+
+    **Incremental re-ranking**: pass a previously returned ranking as
+    ``prior`` plus a ``dirty`` set of candidate indices and/or names
+    whose inputs changed; only those candidates are re-lowered, the rest
+    reuse their prior evaluations, and the same sort runs over the
+    merged values — the result is exactly what a full re-rank would
+    return (``dirty=None`` means nothing changed: a pure re-sort).
+    ``prior`` must rank this same candidate list (same order, length).
     """
     from .machine import HASWELL_EP
     from .workload import lower_many
 
+    if prior is not None:
+        if hasattr(workloads, "routed"):
+            raise ValueError(
+                "incremental re-ranking needs the candidate list (to "
+                "re-lower the dirty subset), not a pre-lowered batch")
+        return _rerank_workloads(list(workloads), machine, level=level,
+                                 sustained_bw=sustained_bw,
+                                 tiebreak=tiebreak, prior=prior,
+                                 dirty=dirty)
     lowered = (workloads if hasattr(workloads, "routed")
                else lower_many(workloads, machine or HASWELL_EP,
                                sustained_bw=sustained_bw))
@@ -251,6 +270,46 @@ def rank_workloads(workloads, machine=None, *,
              "t_ecm": float(t[i]),
              "predictions": tuple(float(x) for x in preds[i])}
             for i in order]
+
+
+def _rerank_workloads(ws, machine, *, level, sustained_bw, tiebreak,
+                      prior, dirty) -> list[dict]:
+    """The incremental arm of :func:`rank_workloads`: merge prior
+    evaluations with fresh ones for the dirty subset, then run the exact
+    sort of the full path over the merged values.  Float round-trips
+    through the prior dicts are exact, so the output is bit-identical to
+    a full re-rank whose non-dirty inputs did not change."""
+    from .machine import HASWELL_EP
+    from .workload import lower_many
+
+    n = len(ws)
+    by_index = {r["index"]: r for r in prior}
+    if sorted(by_index) != list(range(n)):
+        raise ValueError(
+            f"prior ranking covers candidate indices "
+            f"{sorted(by_index)[:8]}..., expected exactly 0..{n - 1}; "
+            f"it must be a ranking of this same candidate list")
+    dirty_set = frozenset(dirty if dirty is not None else ())
+    todo = [i for i in range(n)
+            if i in dirty_set or getattr(ws[i], "name", None) in dirty_set]
+    if todo:
+        lowered = lower_many([ws[i] for i in todo],
+                             machine or HASWELL_EP,
+                             sustained_bw=sustained_bw)
+        batch = lowered.batch
+        t_new = batch.prediction(level)
+        preds = batch.predictions()
+        for j, i in enumerate(todo):
+            by_index[i] = {
+                "name": batch.names[j] if batch.names else str(i),
+                "index": i,
+                "t_ecm": float(t_new[j]),
+                "predictions": tuple(float(x) for x in preds[j]),
+            }
+    t = np.array([by_index[i]["t_ecm"] for i in range(n)], float)
+    order = (np.argsort(t, kind="stable") if tiebreak is None
+             else np.lexsort((np.asarray(tiebreak), t)))
+    return [dict(by_index[int(i)]) for i in order]
 
 
 def rank_operating_points(workloads, machine=None, *,
@@ -445,7 +504,9 @@ def rank_attention_blocks(dims: tuple[int, int, int],
                           *, level: "int | str" = -1,
                           machine=None, causal: bool = True,
                           sustained_bw: float | None = None,
-                          spec=None) -> list[dict]:
+                          spec=None,
+                          prior: "list[dict] | None" = None,
+                          dirty=None) -> list[dict]:
     """Rank flash-attention (bq, bkv) tilings by predicted ``T_ECM``.
 
     ``dims`` is ``(sq, skv, d)``.  Candidates whose working set (q tile,
@@ -461,6 +522,15 @@ def rank_attention_blocks(dims: tuple[int, int, int],
 
     Returns dicts ``{"block", "t_ecm", "fits", "core_bound",
     "tile_bytes"}`` best-first.
+
+    **Incremental re-ranking**: pass a previously returned ranking as
+    ``prior`` plus a ``dirty`` set of ``(bq, bkv)`` blocks whose inputs
+    changed; only those candidates are re-lowered (fit/tile-size
+    arithmetic is always recomputed — it needs no lowering) and the same
+    sort runs over the merged values, so the result is exactly a full
+    re-rank.  An empty ``dirty`` performs no lowering at all — the case
+    serve's EWMA re-calibration hits, since its correction is a
+    post-prediction multiplier and no lowering input moved.
     """
     from .machine import HASWELL_EP, get_machine
     from .workload import (COMPUTE_LC_SAFETY, FLASH_ATTENTION_F32,
@@ -478,18 +548,38 @@ def rank_attention_blocks(dims: tuple[int, int, int],
                   for bq, bkv in cands]
     fits = [not reuse_cap or tb * COMPUTE_LC_SAFETY <= reuse_cap
             for tb in tile_bytes]
-    lowered = lower_many(ws, mach, sustained_bw=sustained_bw)
-    core = lowered.batch.core_bound(level)       # (C,)
-    ranked = rank_workloads(
-        lowered, level=level,
-        # at equal predictions prefer the larger tiles (less KV streaming
-        # / fewer rescale passes than the light-speed tie reflects)
-        tiebreak=[-bq * bkv for bq, bkv in cands])
+    if prior is None:
+        lowered = lower_many(ws, mach, sustained_bw=sustained_bw)
+        t = lowered.batch.prediction(level)      # (C,)
+        core = lowered.batch.core_bound(level)   # (C,)
+    else:
+        want = [tuple(int(x) for x in c) for c in cands]
+        by_block = {tuple(r["block"]): r for r in prior}
+        missing = [b for b in want if b not in by_block]
+        if missing:
+            raise ValueError(
+                f"prior ranking is missing blocks {missing[:4]}; it "
+                f"must rank this same candidate set")
+        # prior t_ecm values round-trip through float() exactly, so the
+        # merged sort keys match a full re-rank bit for bit
+        t = np.array([by_block[b]["t_ecm"] for b in want], float)
+        core = np.array([by_block[b]["core_bound"] for b in want], bool)
+        dirty_set = {tuple(int(x) for x in b) for b in (dirty or ())}
+        todo = [i for i, b in enumerate(want) if b in dirty_set]
+        if todo:
+            sub = lower_many([ws[i] for i in todo], mach,
+                             sustained_bw=sustained_bw)
+            t[todo] = sub.batch.prediction(level)
+            core[todo] = sub.batch.core_bound(level)
+    # at equal predictions prefer the larger tiles (less KV streaming /
+    # fewer rescale passes than the light-speed tie reflects)
+    order = np.lexsort((np.asarray([-bq * bkv for bq, bkv in cands]), t))
+    out = [{"block": tuple(int(x) for x in cands[i]),
+            "t_ecm": float(t[i]),
+            "fits": bool(fits[i]),
+            "core_bound": bool(core[i]),
+            "tile_bytes": int(tile_bytes[i])}
+           for i in order]
     # fit is the primary key: the traffic model assumes resident tiles
-    ranked.sort(key=lambda r: 0 if fits[r["index"]] else 1)
-    return [{"block": tuple(int(x) for x in cands[r["index"]]),
-             "t_ecm": r["t_ecm"],
-             "fits": bool(fits[r["index"]]),
-             "core_bound": bool(core[r["index"]]),
-             "tile_bytes": int(tile_bytes[r["index"]])}
-            for r in ranked]
+    out.sort(key=lambda r: 0 if r["fits"] else 1)
+    return out

@@ -241,8 +241,7 @@ class ECMBatch:
 
     def predictions(self) -> np.ndarray:
         """``T_ECM`` for every batch element x level: ``B + (L,)``."""
-        return np.maximum(self.t_nol[..., None] + self.t_data(),
-                          self.t_ol[..., None])
+        return eq1_predictions(self.t_ol, self.t_nol, self.transfers)
 
     def prediction(self, level: int | str) -> np.ndarray:
         idx = (level if isinstance(level, int)
@@ -290,6 +289,23 @@ class ECMBatch:
 
     def models(self) -> "list[ECMModel]":
         return [self.scalar(i) for i in range(len(self))]
+
+
+def eq1_predictions(t_ol, t_nol, transfers) -> np.ndarray:
+    """Eq. (1) as a standalone array program: ``T_ECM`` per level.
+
+    The single home of the model's arithmetic — :meth:`ECMBatch.predictions`
+    and the table-backed fast path in :mod:`repro.core.engine` both call
+    this, so "fast" and "reference" cannot drift apart.  Shapes: ``t_ol``
+    and ``t_nol`` are ``B``-shaped, ``transfers`` is ``B + (E,)``; the
+    result is ``B + (E + 1,)`` with level 0 carrying zero transfer time.
+    """
+    t_ol = np.asarray(t_ol, float)
+    t_nol = np.asarray(t_nol, float)
+    transfers = np.asarray(transfers, float)
+    zero = np.zeros(transfers.shape[:-1] + (1,))
+    t_data = np.concatenate([zero, np.cumsum(transfers, axis=-1)], axis=-1)
+    return np.maximum(t_nol[..., None] + t_data, t_ol[..., None])
 
 
 # ---------------------------------------------------------------------------

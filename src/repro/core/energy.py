@@ -22,14 +22,24 @@ energy-to-solution is ``E = P * T`` and ``EDP = P * T^2`` over a
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 from .ecm import ECMBatch, ECMModel
+from .machine import ChipPower
 
-# Deprecated alias: the coefficients are per-machine calibration now
-# (``MachineModel.power``); the class itself lives in ``repro.core.
-# machine`` and its defaults are the Haswell fit this module always used.
-from .machine import ChipPower as PowerModel  # noqa: F401  (re-export)
+
+def __getattr__(name: str):
+    # PR-3 alias shim: the coefficients are per-machine calibration now
+    # (``MachineModel.power``); the class lives in ``repro.core.machine``
+    # and its defaults are the Haswell fit this module always used.
+    if name == "PowerModel":
+        warnings.warn(
+            "PowerModel is deprecated; use repro.core.machine.ChipPower "
+            "(the per-machine power calibration, MachineModel.power)",
+            DeprecationWarning, stacklevel=2)
+        return ChipPower
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclass(frozen=True)
@@ -69,7 +79,7 @@ class FrequencyScaledECM:
 
 def energy_grid(
     fecm: FrequencyScaledECM,
-    power: PowerModel,
+    power: ChipPower,
     *,
     n_cores_max: int,
     f_ghz_list: list[float],

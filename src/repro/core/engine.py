@@ -1,0 +1,453 @@
+"""Compiled evaluation layer: the request-path speed pass (ROADMAP item 5).
+
+PRs 6-7 put :class:`~repro.core.ecm.ECMBatch` evaluation inside the serving
+engine's admission control, the compose step-predictor and the autotuners —
+code that runs per-request and per-step — but every call still paid the
+Python-level §IV-C reduction (uops -> core cycles, logical traffic ->
+:func:`~repro.core.traffic.route_traffic`, bandwidth-key resolution).  The
+paper's point is that Eq. 1/Eq. 2 are cheap closed forms over a handful of
+machine constants; this module makes them cheap *here*:
+
+* :class:`LoweredTable` — a precomputed lowered-record table.  Every
+  (workload, machine, bandwidth-override, AGU-mode) combination is lowered
+  once into packed arrays and served on every later request.  Rows are
+  keyed by a structural **fingerprint** of the inputs (exact canonical
+  form, compared by equality — never by a lossy hash), so two calls share a
+  row iff their inputs are bit-for-bit the same calibration.
+* **Invalidation contract** — :func:`~repro.core.workload.register_workload`
+  and :func:`~repro.core.machine.register_machine` notify this module
+  through registry hook lists; only rows indexed under the re-registered
+  name are dropped, everything else stays warm.  Calibration updates are
+  published by re-registering the machine (serve's EWMA re-calibration is a
+  post-prediction multiplier and touches no lowering input at all).
+  Mutating a registered object's arrays/dicts in place is outside the
+  contract.
+* :func:`eq1_predictions` / :func:`eq1_backend` — Eq. 1 as a pure array
+  program.  The numpy form (shared with ``ECMBatch.predictions``, so it is
+  the reference by construction) is the default; a ``jax.jit`` mirror is
+  available for large fused sweeps.  jax lowers to f32 by default, so the
+  jitted backend trades bit-identity for fusion — the ``engine`` bench
+  times both and ``docs/ecm-model.md`` records when each wins.
+* :func:`zoo_sweep` — the full (workloads x machines x cores x frequency)
+  Eq. 2 grid from warm table rows, sub-millisecond once warm.
+
+Everything here is a cache in front of :func:`repro.core.workload.lower`;
+correctness is anchored by tests that diff table-backed results bit-for-bit
+against cold re-lowering for the whole registry.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from contextlib import contextmanager
+from dataclasses import fields, is_dataclass
+
+import numpy as np
+
+from . import machine as _machine_mod
+from . import workload as _workload_mod
+from .ecm import eq1_predictions
+from .machine import MACHINES, MachineModel, get_machine
+from .workload import LoweredBatch, concat_lowered, lower, workload_registry
+
+__all__ = [
+    "LoweredTable", "PackedZoo", "cache_disabled", "cache_enabled",
+    "cache_token", "canonical", "eq1_backend", "eq1_predictions",
+    "fingerprint", "invalidate", "lowered_table", "packed_zoo",
+    "set_cache_enabled", "zoo_sweep",
+]
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints: exact canonical form, interned to small tokens
+# ---------------------------------------------------------------------------
+
+_FP_ATTR = "_ecm_fingerprint"
+_INTERN: dict = {}
+
+
+def canonical(obj):
+    """Reduce ``obj`` to an exact, hashable canonical form.
+
+    The form is *structural*: two objects share a canonical form iff every
+    field (recursively, down to array bytes) is equal — so a fingerprint
+    match guarantees the lowered row was produced from bit-identical
+    inputs, and a re-registered machine with any changed calibration field
+    misses the old rows.  Frozen dataclasses intern their form to a small
+    ``("fp", n)`` token, memoized on the instance, which makes repeat
+    fingerprinting of registry singletons O(1) — that is what keeps warm
+    table lookups off the request path's critical cost.
+    """
+    if obj is None or type(obj) in (bool, int, float, str, bytes):
+        return obj
+    if is_dataclass(obj) and not isinstance(obj, type):
+        memo = getattr(obj, _FP_ATTR, None)
+        if memo is not None:
+            return memo
+        form = (type(obj).__module__, type(obj).__qualname__) + tuple(
+            (f.name, canonical(getattr(obj, f.name))) for f in fields(obj))
+        token = ("fp", _INTERN.setdefault(form, len(_INTERN)))
+        if obj.__dataclass_params__.frozen:
+            try:
+                object.__setattr__(obj, _FP_ATTR, token)
+            except (AttributeError, TypeError):
+                pass
+        return token
+    if type(obj) is np.ndarray:
+        return ("ndarray", obj.shape, str(obj.dtype), obj.tobytes())
+    if type(obj) is dict:
+        return ("dict",) + tuple(
+            (k, canonical(v)) for k, v in sorted(obj.items()))
+    if type(obj) in (tuple, list):
+        return ("seq",) + tuple(canonical(x) for x in obj)
+    if callable(obj):
+        return ("callable", getattr(obj, "__module__", ""),
+                getattr(obj, "__qualname__", repr(obj)))
+    if isinstance(obj, (bool, int, float, str, bytes, np.generic)):
+        return ("scalar", type(obj).__name__, obj.item()
+                if isinstance(obj, np.generic) else obj)
+    return ("repr", type(obj).__qualname__, repr(obj))
+
+
+def fingerprint(obj):
+    """Public alias of :func:`canonical`: the identity a table row is
+    keyed under.  Equal fingerprints == bit-identical lowering inputs."""
+    return canonical(obj)
+
+
+# ---------------------------------------------------------------------------
+# Generation counter + process-wide cache switch
+# ---------------------------------------------------------------------------
+
+_GENERATION = 0
+_CACHE_ENABLED = True
+
+
+def cache_enabled() -> bool:
+    """Whether table/levels caching is live (see :func:`cache_disabled`)."""
+    return _CACHE_ENABLED
+
+
+def set_cache_enabled(flag: bool) -> bool:
+    """Globally enable/disable the precomputed-table fast paths (cold-path
+    benchmarking, paranoia bisection).  Returns the previous setting."""
+    global _CACHE_ENABLED
+    prev, _CACHE_ENABLED = _CACHE_ENABLED, bool(flag)
+    return prev
+
+
+@contextmanager
+def cache_disabled():
+    """Force every lowering/levels evaluation inside the block cold."""
+    prev = set_cache_enabled(False)
+    try:
+        yield
+    finally:
+        set_cache_enabled(prev)
+
+
+def cache_token(machine: "MachineModel | str | None" = None):
+    """Opaque token that changes whenever cached derivations of ``machine``
+    (or, with no argument, of anything) may be stale: bumps with every
+    registry mutation and with the machine's own fingerprint.  Consumers
+    (``simcache``'s levels memo, serve's ``BucketModel``) compare tokens
+    instead of re-deriving."""
+    if machine is None:
+        return (_GENERATION,)
+    m = get_machine(machine)
+    # prefer the currently registered object under the same name, so a
+    # re-registered calibration is picked up even by holders of the old one
+    m = MACHINES.get(m.name, m)
+    return (_GENERATION, canonical(m))
+
+
+def _on_registry_change(obj) -> None:
+    global _GENERATION
+    _GENERATION += 1
+    try:
+        object.__delattr__(obj, _FP_ATTR)   # drop stale memo, if any
+    except AttributeError:
+        pass
+    name = getattr(obj, "name", None)
+    if isinstance(obj, MachineModel):
+        _TABLE.invalidate(machine=name)
+    else:
+        _TABLE.invalidate(workload=name)
+
+
+_workload_mod._REGISTRY_HOOKS.append(_on_registry_change)
+_machine_mod._REGISTRY_HOOKS.append(_on_registry_change)
+
+
+# ---------------------------------------------------------------------------
+# The precomputed lowered-record table
+# ---------------------------------------------------------------------------
+
+def _freeze(lowered: LoweredBatch) -> LoweredBatch:
+    """Cached rows are shared across callers: make their arrays read-only
+    so an accidental in-place edit raises instead of corrupting the
+    table."""
+    for arr in (lowered.batch.t_ol, lowered.batch.t_nol,
+                lowered.batch.transfers, lowered.routed.load_lines,
+                lowered.routed.evict_lines, lowered.l1_uops,
+                lowered.mem_cy_per_line):
+        arr.flags.writeable = False
+    return lowered
+
+
+class LoweredTable:
+    """Precomputed (workload x machine) lowered records.
+
+    Rows hold exactly what :func:`repro.core.workload.lower` returns —
+    packed uop pressure, routed per-edge line counts, bandwidth keys
+    resolved to transfer cycles — keyed by the full input fingerprint
+    ``(workload, machine, sustained_bw, optimized_agu)``.  Keying by
+    fingerprint rather than by name is load-bearing: the autotuners lower
+    many same-named candidates (attention blockings differing only in
+    ``block``), and a name key would alias them.  Name-keyed secondary
+    indexes exist purely for targeted invalidation; eviction is LRU with a
+    bounded row count.
+    """
+
+    def __init__(self, max_rows: int = 4096):
+        self.max_rows = int(max_rows)
+        # key -> (workload_name, machine_name, LoweredBatch)
+        self._rows: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._by_workload: dict[str, set] = {}
+        self._by_machine: dict[str, set] = {}
+        self.stats = {"hits": 0, "misses": 0, "invalidated": 0,
+                      "evicted": 0}
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def key_for(self, workload, machine, *, sustained_bw=None,
+                optimized_agu: bool = False) -> tuple:
+        m = get_machine(machine)
+        return (canonical(workload), canonical(m), canonical(sustained_bw),
+                bool(optimized_agu))
+
+    def get(self, workload, machine, *, sustained_bw=None,
+            optimized_agu: bool = False) -> LoweredBatch:
+        """One workload's lowered record — served warm when fingerprints
+        match, lowered cold (and installed) otherwise."""
+        m = get_machine(machine)
+        key = self.key_for(workload, m, sustained_bw=sustained_bw,
+                           optimized_agu=optimized_agu)
+        row = self._rows.get(key)
+        if row is not None:
+            self.stats["hits"] += 1
+            self._rows.move_to_end(key)
+            return row[2]
+        self.stats["misses"] += 1
+        lowered = _freeze(lower(workload, m, sustained_bw=sustained_bw,
+                                optimized_agu=optimized_agu))
+        wname = getattr(workload, "name", "?")
+        self._rows[key] = (wname, m.name, lowered)
+        self._by_workload.setdefault(wname, set()).add(key)
+        self._by_machine.setdefault(m.name, set()).add(key)
+        while len(self._rows) > self.max_rows:
+            old_key, (ow, om, _) = self._rows.popitem(last=False)
+            self._by_workload.get(ow, set()).discard(old_key)
+            self._by_machine.get(om, set()).discard(old_key)
+            self.stats["evicted"] += 1
+        return lowered
+
+    def get_many(self, workloads, machine, *, sustained_bw=None,
+                 optimized_agu: bool = False) -> LoweredBatch:
+        """Table-backed :func:`repro.core.workload.lower_many`: same rows,
+        same concatenation (:func:`~repro.core.workload.concat_lowered`),
+        bit-identical output."""
+        parts = [self.get(w, machine, sustained_bw=sustained_bw,
+                          optimized_agu=optimized_agu) for w in workloads]
+        return concat_lowered(parts)
+
+    # ------------------------------------------------------------------
+    def build(self, workloads=None, machines=None, **kw) -> int:
+        """Materialize rows ahead of time: every given workload x machine
+        pair (defaults: the full registries).  Returns the row count."""
+        ws = list(workloads if workloads is not None
+                  else workload_registry().values())
+        ms = [get_machine(m) for m in (machines or sorted(MACHINES))]
+        for m in ms:
+            for w in ws:
+                self.get(w, m, **kw)
+        return len(self._rows)
+
+    def invalidate(self, *, workload: "str | None" = None,
+                   machine: "str | None" = None) -> int:
+        """Drop rows: all of them, or only those indexed under a workload
+        and/or machine name.  Returns how many were dropped."""
+        if workload is None and machine is None:
+            n = len(self._rows)
+            self._rows.clear()
+            self._by_workload.clear()
+            self._by_machine.clear()
+        else:
+            keys: set = set()
+            if workload is not None:
+                keys |= self._by_workload.pop(workload, set())
+            if machine is not None:
+                keys |= self._by_machine.pop(machine, set())
+            n = 0
+            for key in keys:
+                row = self._rows.pop(key, None)
+                if row is None:
+                    continue
+                n += 1
+                self._by_workload.get(row[0], set()).discard(key)
+                self._by_machine.get(row[1], set()).discard(key)
+        self.stats["invalidated"] += n
+        return n
+
+
+_TABLE = LoweredTable()
+
+
+def lowered_table() -> LoweredTable:
+    """The process-wide table behind ``lower_many(..., table=None)``."""
+    return _TABLE
+
+
+def invalidate(**kw) -> int:
+    """Module-level convenience: ``lowered_table().invalidate(...)``."""
+    return _TABLE.invalidate(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1 backends: shared numpy reference, optional jax.jit mirror
+# ---------------------------------------------------------------------------
+
+_JAX_EQ1 = None
+
+
+def _jax_eq1():
+    global _JAX_EQ1
+    if _JAX_EQ1 is None:
+        try:
+            import jax
+            import jax.numpy as jnp
+        except ImportError:
+            _JAX_EQ1 = False
+        else:
+            @jax.jit
+            def _eq1(t_ol, t_nol, transfers):
+                zero = jnp.zeros(transfers.shape[:-1] + (1,),
+                                 dtype=transfers.dtype)
+                t_data = jnp.concatenate(
+                    [zero, jnp.cumsum(transfers, axis=-1)], axis=-1)
+                return jnp.maximum(t_nol[..., None] + t_data,
+                                   t_ol[..., None])
+
+            _JAX_EQ1 = _eq1
+    return _JAX_EQ1 or None
+
+
+def eq1_backend(name: str = "numpy"):
+    """Eq. 1 evaluator by backend name.
+
+    ``"numpy"`` is :func:`repro.core.ecm.eq1_predictions` — the exact
+    function ``ECMBatch.predictions`` runs, hence bit-identical by
+    construction and the default everywhere.  ``"jax"`` is a ``jax.jit``
+    mirror: faster only for very large fused sweeps (see the ``engine``
+    bench), numerically f32 under jax's default config, and silently
+    unavailable (-> numpy) when jax is absent.
+    """
+    if name == "jax":
+        fn = _jax_eq1()
+        if fn is not None:
+            return lambda t_ol, t_nol, transfers: np.asarray(
+                fn(np.asarray(t_ol), np.asarray(t_nol),
+                   np.asarray(transfers)))
+    elif name != "numpy":
+        raise ValueError(f"unknown Eq. 1 backend {name!r}")
+    return eq1_predictions
+
+
+# ---------------------------------------------------------------------------
+# Packed zoo + the full Eq. 2 sweep
+# ---------------------------------------------------------------------------
+
+class PackedZoo:
+    """One machine's registry workloads as a single warm
+    :class:`LoweredBatch` (what Eq. 2 consumes), cached per (machine,
+    workloads, bandwidth) fingerprint."""
+
+    __slots__ = ("machine", "names", "lowered", "_scalings")
+
+    def __init__(self, machine: MachineModel, names: tuple,
+                 lowered: LoweredBatch):
+        self.machine = machine
+        self.names = names
+        self.lowered = lowered
+        self._scalings: dict = {}
+
+    def scaling(self, f_ghz=None):
+        """The DVFS-gridded :class:`~repro.core.scaling.ChipScaling` for
+        this zoo, memoized per frequency grid — the frequency rescale and
+        Eq. 1 re-evaluation it embodies are deterministic in (lowered
+        rows, machine, grid), so a warm sweep skips them entirely."""
+        from .scaling import scale_workloads
+        key = canonical(f_ghz)
+        cs = self._scalings.get(key)
+        if cs is None:
+            cs = scale_workloads(self.lowered, self.machine, f_ghz=f_ghz)
+            self._scalings[key] = cs
+        return cs
+
+
+_PACKED: "OrderedDict[tuple, PackedZoo]" = OrderedDict()
+_PACKED_MAX = 64
+
+
+def packed_zoo(machine, workloads=None, *, sustained_bw=None) -> PackedZoo:
+    """The concatenated lowered zoo for one machine, memoized so a warm
+    sweep skips even the per-row concatenation."""
+    m = get_machine(machine)
+    ws = list(workloads if workloads is not None
+              else workload_registry().values())
+    key = (_GENERATION, canonical(m), tuple(canonical(w) for w in ws),
+           canonical(sustained_bw))
+    hit = _PACKED.get(key) if _CACHE_ENABLED else None
+    if hit is not None:
+        _PACKED.move_to_end(key)
+        return hit
+    lowered = _TABLE.get_many(ws, m, sustained_bw=sustained_bw) \
+        if _CACHE_ENABLED else concat_lowered(
+            [lower(w, m, sustained_bw=sustained_bw) for w in ws])
+    zoo = PackedZoo(m, tuple(lowered.batch.names), lowered)
+    if _CACHE_ENABLED:
+        _PACKED[key] = zoo
+        while len(_PACKED) > _PACKED_MAX:
+            _PACKED.popitem(last=False)
+    return zoo
+
+
+def zoo_sweep(machines=None, workloads=None, *, n_cores=None,
+              f_ghz=None, sustained_bw=None) -> dict:
+    """The full Eq. 2 grid: every registered workload x machine x core
+    count x frequency step, from warm table rows.
+
+    Returns ``{machine: {"names", "f_ghz", "n_sat_chip", "core_bound",
+    "performance"}}`` plus a total point count; ``performance`` is the
+    (W, F, N) saturation-capped work rate from
+    :meth:`repro.core.scaling.ChipScaling.performance`.  Warm, the whole
+    registry sweep is sub-millisecond — the ``engine`` bench gates it.
+    """
+    ms = [get_machine(m) for m in (machines or sorted(MACHINES))]
+    out: dict = {}
+    points = 0
+    for m in ms:
+        zoo = packed_zoo(m, workloads, sustained_bw=sustained_bw)
+        cs = zoo.scaling(f_ghz)
+        perf = cs.performance(n_cores)
+        out[m.name] = {
+            "names": zoo.names,
+            "f_ghz": cs.f_ghz,
+            "n_sat_chip": cs.n_saturation_chip(),
+            "core_bound": cs.core_bound(),
+            "performance": perf,
+        }
+        points += int(perf.size)
+    return {"machines": out, "points": points}

@@ -26,7 +26,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from .ecm import ECMModel
-from .machine import HASWELL_MEASURED_BW, MachineModel
+from .machine import HASWELL_EP, MachineModel
 
 
 @dataclass(frozen=True)
@@ -270,11 +270,9 @@ def haswell_ecm(name: str, *, optimized_agu: bool = False,
                 sustained_bw: float | None = None) -> ECMModel:
     """Build the ECM model for one of the paper's benchmarks on Haswell-EP,
     using the paper's measured sustained memory-domain bandwidths."""
-    from .machine import HASWELL_EP
-
     spec = BENCHMARKS[name]
     m = machine or HASWELL_EP
-    bw = sustained_bw or HASWELL_MEASURED_BW[name]
+    bw = sustained_bw or HASWELL_EP.measured_bw[name]
     return spec.ecm(m, bw, optimized_agu=optimized_agu)
 
 

@@ -39,18 +39,13 @@ x problem widths) in one :class:`~repro.core.ecm.ECMBatch`.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
 from .ecm import ECMBatch, ECMModel
 from .machine import HASWELL_EP, MachineModel
-
-#: Deprecated alias — capacities now live on the machine
-#: (``MachineModel.capacities``; the Haswell L3 entry is the Cluster-on-Die
-#: affinity-domain slice, 7 x 2.5 MB, matching the CoD sustained-bandwidth
-#: calibration and ``simcache.HASWELL_CACHES_COD.capacities()``).
-HASWELL_CAPACITIES: tuple[int, ...] = HASWELL_EP.capacities
 
 #: Rule-of-thumb safety factor of the LC literature: require the reuse set
 #: to fit in *half* the cache (associativity conflicts, other data).
@@ -167,7 +162,7 @@ class StencilSpec:
         load traffic on the edge *below* each level.  Defaults to the
         Haswell-EP capacities; pass ``machine.capacities`` for any other
         registry machine."""
-        caps = capacities if capacities is not None else HASWELL_CAPACITIES
+        caps = capacities if capacities is not None else HASWELL_EP.capacities
         return tuple(self.load_misses(c, widths, block=block, safety=safety)
                      for c in caps)
 
@@ -221,7 +216,7 @@ def misses_batch(spec: StencilSpec, widths_arr: np.ndarray,
             f"widths_arr last dim must be {spec.dim - 1}, got {w.shape}")
     r, eb = spec.radius, spec.elem_bytes
     caps = np.asarray(capacities if capacities is not None
-                      else HASWELL_CAPACITIES, float)        # (L,)
+                      else HASWELL_EP.capacities, float)     # (L,)
     if spec.dim == 2:
         nbytes = [(2 * r + 1) * w[:, 0] * eb]                # one condition
         held_misses = [1]
@@ -321,12 +316,26 @@ JACOBI3D = StencilSpec(
 
 STENCILS: dict[str, StencilSpec] = {s.name: s for s in (JACOBI2D, JACOBI3D)}
 
-#: Deprecated alias — the stencil sustained-bandwidth calibration now
-#: lives on the machine (``MachineModel.measured_bw``, with the
-#: ``_stencil`` family fallback); kept for API compatibility.
-STENCIL_MEASURED_BW: dict[str, float] = {
-    k: HASWELL_EP.measured_bw[k] for k in ("jacobi2d", "jacobi3d")
-}
+
+def __getattr__(name: str):
+    # PR-3 alias shims: both tables live on the machine registry now
+    # (capacities and measured_bw with the ``_stencil`` family fallback).
+    if name == "HASWELL_CAPACITIES":
+        warnings.warn(
+            "HASWELL_CAPACITIES is deprecated; read the machine "
+            "calibration directly: HASWELL_EP.capacities (the Haswell L3 "
+            "entry is the Cluster-on-Die affinity-domain slice)",
+            DeprecationWarning, stacklevel=2)
+        return HASWELL_EP.capacities
+    if name == "STENCIL_MEASURED_BW":
+        warnings.warn(
+            "STENCIL_MEASURED_BW is deprecated; read the machine "
+            "calibration directly: HASWELL_EP.measured_bw (with the "
+            "'_stencil' family fallback)",
+            DeprecationWarning, stacklevel=2)
+        return {k: HASWELL_EP.measured_bw[k]
+                for k in ("jacobi2d", "jacobi3d")}
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def stencil_ecm(name_or_spec: "str | StencilSpec", *,

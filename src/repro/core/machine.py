@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from dataclasses import dataclass, field
 
 
@@ -338,12 +339,27 @@ class MachineModel:
 MACHINES: dict[str, MachineModel] = {}
 _ALIASES: dict[str, str] = {}
 
+#: Registry-change observers, called with the machine just (re)registered.
+#: ``repro.core.engine`` appends its invalidation hook here at import time
+#: (a hook list instead of a direct call keeps this module engine-free).
+_REGISTRY_HOOKS: list = []
+
 
 def register_machine(machine: MachineModel, *aliases: str) -> MachineModel:
-    """Register a machine (and optional aliases) for name-based lookup."""
+    """Register a machine (and optional aliases) for name-based lookup.
+
+    Re-registering a name is the supported way to publish a calibration
+    update (new ``measured_bw`` / capacities / power fit): observers in
+    ``_REGISTRY_HOOKS`` — the lowered-record table in
+    :mod:`repro.core.engine` — are notified so rows lowered against the
+    replaced calibration are rebuilt on next access.  Mutating a registered
+    machine's ``measured_bw`` dict in place is outside that contract.
+    """
     MACHINES[machine.name] = machine
     for a in aliases:
         _ALIASES[a] = machine.name
+    for hook in _REGISTRY_HOOKS:
+        hook(machine)
     return machine
 
 
@@ -430,18 +446,34 @@ HASWELL_EP = register_machine(MachineModel(
     bw_freq_coupled=False,
 ), "haswell", "haswell-ep-2695v3", "hsw")
 
-#: Deprecated alias — the calibration table now lives on the machine
-#: (``HASWELL_EP.measured_bw``); this name is kept for API compatibility.
-HASWELL_MEASURED_BW = {
-    k: v for k, v in HASWELL_EP.measured_bw.items() if not k.startswith("_")
-    and k not in ("triad_update", "jacobi2d", "jacobi3d",
-                  "matmul", "flash-attention")
-}
+def _haswell_table1_bw() -> dict:
+    """The paper's Table I stream calibrations, as the pre-registry
+    ``HASWELL_MEASURED_BW`` constant exposed them (streams only: no family
+    fallbacks, no stencil/compute entries)."""
+    return {
+        k: v for k, v in HASWELL_EP.measured_bw.items()
+        if not k.startswith("_")
+        and k not in ("triad_update", "jacobi2d", "jacobi3d",
+                      "matmul", "flash-attention")
+    }
+
 
 #: Non-CoD sustained chip bandwidths (both memory controllers, Fig. 10/11).
 #: The paper gives CoD ~= 1.08x non-CoD for most kernels; we use the chip
 #: bandwidth ~= 52.3 GB/s stream-triad figure scaled per kernel class.
-HASWELL_CHIP_BW_NONCOD = {k: 1.85 * v for k, v in HASWELL_MEASURED_BW.items()}
+HASWELL_CHIP_BW_NONCOD = {k: 1.85 * v for k, v in _haswell_table1_bw().items()}
+
+
+def __getattr__(name: str):
+    # PR-3 alias shim: the calibration table lives on the machine now.
+    if name == "HASWELL_MEASURED_BW":
+        warnings.warn(
+            "HASWELL_MEASURED_BW is deprecated; read the machine "
+            "calibration directly: HASWELL_EP.measured_bw (or "
+            "get_machine('haswell-ep').measured_bw)",
+            DeprecationWarning, stacklevel=2)
+        return _haswell_table1_bw()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ---------------------------------------------------------------------------

@@ -153,13 +153,32 @@ class ChipScaling:
     def cores(self) -> int:
         return self.cores_per_domain * self.n_domains
 
+    def _memo(self, key, build) -> np.ndarray:
+        """Per-instance memo for derived grids.  Every array here is a
+        pure function of the frozen fields, so caching is free of staleness
+        by construction; results are frozen (read-only) because they are
+        shared across callers."""
+        grids = self.__dict__.get("_grids")
+        if grids is None:
+            grids = {}
+            object.__setattr__(self, "_grids", grids)
+        val = grids.get(key)
+        if val is None:
+            val = build()
+            val.flags.writeable = False
+            grids[key] = val
+        return val
+
     def _n_sat_raw(self) -> np.ndarray:
         """(W, F) uncapped Eq. 2 points as floats; ``inf`` where the
         bottleneck term is zero (nothing to saturate)."""
-        bound = self.bottleneck > 0
-        n = np.full(self.bottleneck.shape, np.inf)
-        n[bound] = np.ceil(self.t_single[bound] / self.bottleneck[bound])
-        return n
+        def build():
+            bound = self.bottleneck > 0
+            n = np.full(self.bottleneck.shape, np.inf)
+            n[bound] = np.ceil(self.t_single[bound]
+                               / self.bottleneck[bound])
+            return n
+        return self._memo("n_sat_raw", build)
 
     def core_bound(self) -> np.ndarray:
         """(W, F) booleans: the workload cannot saturate the shared
@@ -169,20 +188,27 @@ class ChipScaling:
         count (in-core time dominates).  Consistent with
         :meth:`performance` by construction: a core-bound workload's
         bandwidth cap is unreachable with the cores this machine has."""
-        return self._n_sat_raw() > self.cores_per_domain
+        return self._memo(
+            "core_bound",
+            lambda: self._n_sat_raw() > self.cores_per_domain)
 
     def n_saturation(self) -> np.ndarray:
         """(W, F) Eq. 2 per-domain saturation points.  The domain core
         count caps the values: core-bound workloads report the full
         domain (linear scaling to the machine's edge)."""
-        return np.minimum(self._n_sat_raw(),
-                          self.cores_per_domain).astype(int)
+        return self._memo(
+            "n_sat",
+            lambda: np.minimum(self._n_sat_raw(),
+                               self.cores_per_domain).astype(int))
 
     def n_saturation_chip(self) -> np.ndarray:
         """(W, F) chip-level saturation under balanced domain pinning:
         ``n_domains`` x the per-domain point (paper Fig. 10: "2 x 4
         cores for the chip"); the full chip for core-bound workloads."""
-        return np.minimum(self.n_saturation() * self.n_domains, self.cores)
+        return self._memo(
+            "n_sat_chip",
+            lambda: np.minimum(self.n_saturation() * self.n_domains,
+                               self.cores))
 
     def saturation_summary(self, f_ghz: float | None = None
                            ) -> dict[str, dict]:
@@ -217,11 +243,17 @@ class ChipScaling:
         """(W, F, N) performance surface in work units per core cycle
         (multiply by ``f * 1e9`` for units/s).  ``work_per_unit``
         broadcasts over ``(W, F)`` (e.g. updates per unit of work)."""
-        w = np.asarray(work_per_unit, float)
-        p1 = w / self.t_single
-        return fill_domains(p1, self._p_sat(work_per_unit),
-                            n_cores or self.cores, self.cores_per_domain,
-                            self.n_domains, fill_domains_first)
+        def build():
+            w = np.asarray(work_per_unit, float)
+            p1 = w / self.t_single
+            return fill_domains(p1, self._p_sat(work_per_unit),
+                                n_cores or self.cores,
+                                self.cores_per_domain,
+                                self.n_domains, fill_domains_first)
+        if type(work_per_unit) in (int, float):    # hashable -> memoizable
+            return self._memo(("perf", n_cores, float(work_per_unit),
+                               fill_domains_first), build)
+        return build()
 
     def energy(self, total_work_units: float, *,
                n_cores: int | None = None,

@@ -294,13 +294,11 @@ def lower(workload: Workload, machine: "MachineModel | str", *,
                         mem_cy_per_line=np.full(b, mem_cy))
 
 
-def lower_many(workloads, machine: "MachineModel | str", *,
-               sustained_bw: "float | dict | None" = None,
-               optimized_agu: bool = False) -> LoweredBatch:
-    """Lower several workloads on one machine into one concatenated
-    :class:`LoweredBatch` (shared level hierarchy)."""
-    parts = [lower(w, machine, sustained_bw=sustained_bw,
-                   optimized_agu=optimized_agu) for w in workloads]
+def concat_lowered(parts: "list[LoweredBatch]") -> LoweredBatch:
+    """Concatenate per-workload :class:`LoweredBatch` parts (shared level
+    hierarchy).  The single home of the batching semantics: both the cold
+    path below and the precomputed table in :mod:`repro.core.engine`
+    assemble their results here, so the two cannot diverge."""
     if len(parts) == 1:
         return parts[0]
     first = parts[0].batch
@@ -326,6 +324,44 @@ def lower_many(workloads, machine: "MachineModel | str", *,
         batch=batch, routed=routed,
         l1_uops=np.concatenate([p.l1_uops for p in parts]),
         mem_cy_per_line=np.concatenate([p.mem_cy_per_line for p in parts]))
+
+
+_ENGINE = None
+
+
+def _engine_mod():
+    """Import :mod:`repro.core.engine` lazily (it imports this module)."""
+    global _ENGINE
+    if _ENGINE is None:
+        from repro.core import engine as _ENGINE_module
+        _ENGINE = _ENGINE_module
+    return _ENGINE
+
+
+def lower_many(workloads, machine: "MachineModel | str", *,
+               sustained_bw: "float | dict | None" = None,
+               optimized_agu: bool = False,
+               table: "bool | object | None" = None) -> LoweredBatch:
+    """Lower several workloads on one machine into one concatenated
+    :class:`LoweredBatch` (shared level hierarchy).
+
+    ``table`` selects the lowering source: ``None`` (default) consults the
+    process-wide precomputed :class:`repro.core.engine.LoweredTable` when
+    engine caching is enabled, ``False`` forces a cold re-lowering, and an
+    explicit table instance uses that table.  Rows served from a table are
+    bit-identical to the cold path (same :func:`lower`, same concatenation)
+    but have read-only arrays, since they are shared across calls.
+    """
+    ws = list(workloads)
+    if table is not False:
+        eng = _engine_mod()
+        tab = table if table not in (None, True) else eng.lowered_table()
+        if tab is not None and (table is not None or eng.cache_enabled()):
+            return tab.get_many(ws, machine, sustained_bw=sustained_bw,
+                                optimized_agu=optimized_agu)
+    parts = [lower(w, machine, sustained_bw=sustained_bw,
+                   optimized_agu=optimized_agu) for w in ws]
+    return concat_lowered(parts)
 
 
 def workload_batch(workloads, machine: "MachineModel | str" = "haswell-ep",
@@ -778,9 +814,15 @@ def tpu_step_workload(step) -> RawWorkload:
 
 WORKLOADS: "dict[str, Workload]" = {}
 
+#: Registry-change observers, called with the workload just (re)registered;
+#: ``repro.core.engine`` appends its lowered-table invalidation hook here.
+_REGISTRY_HOOKS: list = []
+
 
 def register_workload(w: Workload) -> Workload:
     WORKLOADS[w.name] = w
+    for hook in _REGISTRY_HOOKS:
+        hook(w)
     return w
 
 

@@ -117,20 +117,57 @@ class BucketModel:
         self.calib: dict[tuple[str, int], float] = {}
         self._decode: dict[int, dict] = {}
         self._prefill: dict[int, dict] = {}
+        #: full candidate rankings per (kind, bucket), kept as the
+        #: ``prior`` for incremental re-ranking; ``_dirty`` buckets are
+        #: refreshed through it on next access (EWMA re-calibration moves
+        #: no lowering input, so that refresh re-lowers nothing)
+        self._rankings: dict[tuple[str, int], list[dict]] = {}
+        self._dirty: set[tuple[str, int]] = set()
+        self._model_token = None
 
     # -- bucket construction ------------------------------------------------
 
     def ctx_bucket(self, ctx: int) -> int:
         return pow2_bucket(int(ctx), self.min_ctx, self.max_ctx)
 
+    def _machine_token(self):
+        """Fingerprint of the machine calibration this model's buckets
+        were ranked against (tracking the registry: a re-registered
+        machine under the same name is a published calibration update)."""
+        from repro.core import engine as core_engine
+        from repro.core.machine import MACHINES
+        return core_engine.fingerprint(
+            MACHINES.get(self.machine.name, self.machine))
+
+    def _refresh_if_stale(self) -> None:
+        tok = self._machine_token()
+        if tok != self._model_token:
+            if self._model_token is not None:
+                # machine calibration changed: every bucket's lowering
+                # inputs moved, so prior rankings are no longer valid
+                # priors — full cold rebuild on next access
+                from repro.core.machine import MACHINES
+                self.machine = MACHINES.get(self.machine.name,
+                                            self.machine)
+                self._decode.clear()
+                self._prefill.clear()
+                self._rankings.clear()
+                self._dirty.clear()
+            self._model_token = tok
+
     def _decode_entry(self, cb: int) -> dict:
+        self._refresh_if_stale()
+        key = ("decode", cb)
         ent = self._decode.get(cb)
-        if ent is None:
+        if ent is None or key in self._dirty:
             blocks = [(1, bkv) for bkv in self.bkv_candidates if bkv <= cb] \
                 or [(1, cb)]
             ranked = rank_attention_blocks(
                 (1, cb, self.model.d), blocks=blocks, machine=self.machine,
-                causal=False, spec=self.spec)
+                causal=False, spec=self.spec,
+                prior=self._rankings.get(key), dirty=())
+            self._rankings[key] = ranked
+            self._dirty.discard(key)
             fitting = [r for r in ranked if r["fits"]] or ranked
             by_bkv = {r["block"][1]: r["t_ecm"] for r in ranked}
             ent = {
@@ -144,15 +181,20 @@ class BucketModel:
         return ent
 
     def _prefill_entry(self, cb: int) -> dict:
+        self._refresh_if_stale()
+        key = ("prefill", cb)
         ent = self._prefill.get(cb)
-        if ent is None:
+        if ent is None or key in self._dirty:
             blocks = [(bq, bkv)
                       for bq in self.bkv_candidates if bq <= cb
                       for bkv in self.bkv_candidates if bkv <= cb] \
                 or [(cb, cb)]
             ranked = rank_attention_blocks(
                 (cb, cb, self.model.d), blocks=blocks, machine=self.machine,
-                causal=True, spec=self.spec)
+                causal=True, spec=self.spec,
+                prior=self._rankings.get(key), dirty=())
+            self._rankings[key] = ranked
+            self._dirty.discard(key)
             fitting = [r for r in ranked if r["fits"]] or ranked
             best = fitting[0]
             ent = {"block": best["block"], "cy_per_cl": best["t_ecm"]}
@@ -249,11 +291,16 @@ class BucketModel:
     def recalibrate(self, kind: str, ctx: int, ratio: float,
                     alpha: float = 0.75) -> float:
         """Pull the bucket's multiplier toward ``measured/predicted``;
-        returns the new value."""
+        returns the new value.  The bucket is marked dirty: its next
+        access refreshes the ranking through the incremental path, which
+        re-lowers nothing (the multiplier is applied after prediction, so
+        no lowering input changed) — re-calibration never rebuilds the
+        bucket tables."""
         key = (kind, self.ctx_bucket(ctx))
         old = self.calib.get(key, 1.0)
         new = (1.0 - alpha) * old + alpha * old * ratio
         self.calib[key] = new
+        self._dirty.add(key)
         return new
 
 

@@ -63,6 +63,7 @@ from repro.core.layer_condition import (
     misses_batch,
     stencil_batch_from_misses,
 )
+from repro.core import engine
 from repro.core.machine import HASWELL_EP, MachineModel
 from repro.core.workload import (
     LoweredBatch,
@@ -75,12 +76,17 @@ from repro.core.workload import (
 #: batch_array_evals counts vectorized evaluations (one per grid, however
 #: large); scalar_points counts individual (kernel, level/size/core) points
 #: produced.  Their ratio is the "Python-level calls per point" figure.
-EVAL_COUNTERS = {"batch_array_evals": 0, "scalar_points": 0}
+#: levels_cache_hits counts evaluations served from the warm levels memo
+#: (points served from a hit still count in the other two, so the per-point
+#: figures keep their meaning whether or not the cache is on).
+EVAL_COUNTERS = {"batch_array_evals": 0, "scalar_points": 0,
+                 "levels_cache_hits": 0}
 
 
 def reset_counters() -> None:
     EVAL_COUNTERS["batch_array_evals"] = 0
     EVAL_COUNTERS["scalar_points"] = 0
+    EVAL_COUNTERS["levels_cache_hits"] = 0
 
 
 @dataclass(frozen=True)
@@ -235,6 +241,14 @@ def _as_spec(name_or_spec) -> StreamKernelSpec:
     return spec
 
 
+#: warm (kernel-set, machine, bandwidths, params) -> (names, table) memo:
+#: the request-path sweeps re-evaluate the same levels table thousands of
+#: times; a hit skips lowering and simulation entirely.  Keys embed
+#: ``engine.cache_token`` so registry/calibration updates invalidate.
+_LEVELS_MEMO: dict = {}
+_LEVELS_MEMO_MAX = 256
+
+
 def _stream_bws(names, machine: MachineModel, sustained_bw) -> dict:
     if sustained_bw is None:
         return {n: machine.sustained_bw(n, "_stream", default=27e9)
@@ -264,9 +278,30 @@ def simulate_levels_batch(
     specs = [_as_spec(n) for n in (names or BENCHMARKS)]
     names = tuple(s.name for s in specs)
     bws = _stream_bws(names, m, sustained_bw)
-    return simulate_workloads_batch(
+    key = None
+    if engine.cache_enabled():
+        # the machine token covers both registry generation and the
+        # machine's calibration fingerprint, so a re-registered machine
+        # (or any registry mutation) misses every stale entry
+        key = (engine.cache_token(m), tuple(specs),
+               tuple(sorted(bws.items())), params, optimized_agu)
+        hit = _LEVELS_MEMO.get(key)
+        if hit is not None:
+            # points are served either way: keep the per-point counter
+            # semantics identical to a cold evaluation
+            EVAL_COUNTERS["batch_array_evals"] += 1
+            EVAL_COUNTERS["scalar_points"] += hit[1].size
+            EVAL_COUNTERS["levels_cache_hits"] += 1
+            return hit
+    out = simulate_workloads_batch(
         [StreamWorkload(s) for s in specs], m, sustained_bw=bws,
         params=params, optimized_agu=optimized_agu)
+    if key is not None:
+        out[1].flags.writeable = False      # shared across future callers
+        if len(_LEVELS_MEMO) >= _LEVELS_MEMO_MAX:
+            _LEVELS_MEMO.clear()
+        _LEVELS_MEMO[key] = out
+    return out
 
 
 def simulate_level(

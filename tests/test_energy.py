@@ -2,12 +2,8 @@
 import pytest
 
 from repro.core import haswell_ecm
-from repro.core.energy import (
-    FrequencyScaledECM,
-    PowerModel,
-    best_config,
-    energy_grid,
-)
+from repro.core.energy import FrequencyScaledECM, best_config, energy_grid
+from repro.core.machine import ChipPower
 
 FREQS = [1.2, 1.6, 2.0, 2.3, 2.7, 3.0]
 WORK = 10e9 / 3 / 64        # 10 GB striad dataset, CLs of the A array
@@ -16,7 +12,7 @@ WORK = 10e9 / 3 / 64        # 10 GB striad dataset, CLs of the A array
 def _grids(coupled: bool):
     fecm = FrequencyScaledECM(haswell_ecm("striad"), f_nominal_ghz=2.3,
                               bw_freq_coupled=coupled)
-    return energy_grid(fecm, PowerModel(), n_cores_max=14,
+    return energy_grid(fecm, ChipPower(), n_cores_max=14,
                        f_ghz_list=FREQS, total_work_units=WORK)
 
 

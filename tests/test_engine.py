@@ -1,0 +1,310 @@
+"""Request-path engine (``repro.core.engine``): the precompiled lowering
+table, its fingerprint/invalidation contract, the vectorized Eq. 1 fast
+path, and incremental re-ranking.
+
+The contract pinned here:
+
+1. **Bit-identity** — a table-served row is byte-for-byte the row the
+   reference single-workload path produces, for every (workload, machine)
+   pair in the registry, and the Table I goldens in
+   ``tests/golden_haswell_ecm.json`` hold through the table path.
+2. **Invalidation** — re-registering a machine (a published calibration
+   update) or a workload drops exactly the affected rows; a post-update
+   table row equals a cold rebuild.  Rows of other machines survive.
+3. **Incremental re-ranking** — ``prior`` + dirty-set re-ranks are
+   *identical* (``==``) to full re-ranks, and the serving
+   ``BucketModel``'s EWMA re-calibration refreshes buckets with zero
+   table traffic.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import BENCHMARKS, HASWELL_EP, MACHINES, StreamWorkload
+from repro.core import engine
+from repro.core.machine import register_machine
+from repro.core.workload import (
+    WORKLOADS,
+    lower_many,
+    register_workload,
+    workload_registry,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = json.loads(
+    (Path(__file__).parent / "golden_haswell_ecm.json").read_text())
+
+
+# ---------------------------------------------------------------------------
+# 1. Bit-identity of the table fast path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mname", sorted(MACHINES))
+def test_table_rows_bit_identical_to_cold_lowering(mname):
+    ws = list(workload_registry().values())
+    m = MACHINES[mname]
+    with engine.cache_disabled():
+        cold = lower_many(ws, m, table=False)
+    warm = lower_many(ws, m)
+    # canonical() is an exact structural form (arrays -> raw bytes), so
+    # form equality is byte-for-byte equality of every field
+    assert engine.canonical(warm) == engine.canonical(cold)
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN["stream"]))
+def test_stream_goldens_hold_through_table(name):
+    rec = GOLDEN["stream"][name]
+    w = StreamWorkload(BENCHMARKS[name])
+    bw = HASWELL_EP.measured_bw[name]
+    lowered = lower_many([w], HASWELL_EP, sustained_bw=bw)
+    preds = lowered.batch.predictions()[0]
+    assert [float(p).hex() for p in preds] == rec["predictions"]
+
+
+def test_table_hit_is_a_hit_and_arrays_are_frozen():
+    w = next(iter(workload_registry().values()))
+    tab = engine.lowered_table()
+    first = tab.get(w, HASWELL_EP)
+    before = dict(tab.stats)
+    again = tab.get(w, HASWELL_EP)
+    assert tab.stats["hits"] == before["hits"] + 1
+    assert again is first
+    for arr in (again.batch.transfers, again.l1_uops, again.mem_cy_per_line):
+        assert not arr.flags.writeable
+        with pytest.raises(ValueError):
+            arr[...] = 0.0
+
+
+def test_eq1_fast_path_bit_identical_and_backends():
+    from repro.core.ecm import eq1_predictions
+
+    lowered = lower_many(list(workload_registry().values()), HASWELL_EP)
+    b = lowered.batch
+    ref = b.predictions()
+    via_fn = eq1_predictions(b.t_ol, b.t_nol, b.transfers)
+    assert via_fn.tobytes() == ref.tobytes()
+    assert engine.eq1_backend("numpy") is eq1_predictions
+    jx = engine.eq1_backend("jax")
+    if jx is not eq1_predictions:          # jax present: numeric mirror
+        np.testing.assert_allclose(
+            jx(b.t_ol, b.t_nol, b.transfers), ref, rtol=1e-6)
+    with pytest.raises(ValueError):
+        engine.eq1_backend("torch")
+
+
+# ---------------------------------------------------------------------------
+# 2. Invalidation contract
+# ---------------------------------------------------------------------------
+
+
+def test_register_machine_invalidates_only_that_machine():
+    tab = engine.lowered_table()
+    tab.build()                            # all pairs resident
+    rows_before = len(tab)
+    ws = list(workload_registry().values())
+    original = MACHINES["haswell-ep"]
+    bumped = dataclasses.replace(
+        original, measured_bw={k: v * 1.25
+                               for k, v in original.measured_bw.items()})
+    tok_before = engine.cache_token("haswell-ep")
+    sb_row = tab.get(ws[0], MACHINES["sandy-bridge-ep"])
+    inv_before = tab.stats["invalidated"]
+    try:
+        register_machine(bumped)
+        assert engine.cache_token("haswell-ep") != tok_before
+        # every haswell row dropped (>= the registry's worth; autotuners
+        # may have parked extra same-machine rows), no other machine's
+        dropped = tab.stats["invalidated"] - inv_before
+        assert dropped >= len(ws)
+        assert len(tab) == rows_before - dropped
+        assert tab.get(ws[0], MACHINES["sandy-bridge-ep"]) is sb_row
+        warm = lower_many(ws, bumped)
+        with engine.cache_disabled():
+            cold = lower_many(ws, bumped, table=False)
+        assert engine.canonical(warm) == engine.canonical(cold)
+        # and the update is visible: memory-level T_ECM moved
+        with engine.cache_disabled():
+            old = lower_many(ws, original, table=False)
+        assert warm.batch.prediction(-1).tobytes() \
+            != old.batch.prediction(-1).tobytes()
+    finally:
+        register_machine(original)
+
+
+def test_register_workload_invalidates_only_that_row():
+    spec = dataclasses.replace(BENCHMARKS["striad"],
+                               name="striad_test_engine")
+    w = StreamWorkload(spec)
+    tab = engine.lowered_table()
+    try:
+        register_workload(w)
+        warm = lower_many([w], HASWELL_EP)
+        rows_with = len(tab)
+        register_workload(w)               # re-register: row must drop
+        assert len(tab) == rows_with - 1
+        rebuilt = lower_many([w], HASWELL_EP)
+        assert engine.canonical(rebuilt) == engine.canonical(warm)
+    finally:
+        del WORKLOADS[w.name]
+        engine._on_registry_change(w)
+
+
+def test_simulator_level_memo_tracks_registry_generation():
+    from repro.simcache import EVAL_COUNTERS, reset_counters, sweep_batch
+
+    sizes = list(np.geomspace(16 * 1024, 64 * 1024 * 1024, 64))
+    sweep_batch(("ddot",), sizes)          # populate
+    reset_counters()
+    sweep_batch(("ddot",), sizes)
+    assert EVAL_COUNTERS["levels_cache_hits"] > 0
+    original = MACHINES["haswell-ep"]
+    try:
+        register_machine(dataclasses.replace(original))
+        reset_counters()
+        sweep_batch(("ddot",), sizes)      # generation moved: cold again
+        assert EVAL_COUNTERS["levels_cache_hits"] == 0
+    finally:
+        register_machine(original)
+
+
+# ---------------------------------------------------------------------------
+# 3. Incremental re-ranking + the serving BucketModel
+# ---------------------------------------------------------------------------
+
+
+def test_incremental_rank_workloads_identical_to_full():
+    from repro.core.autotune import rank_workloads
+
+    ws = list(workload_registry().values())
+    full = rank_workloads(ws, "haswell-ep")
+    assert rank_workloads(ws, "haswell-ep", prior=full, dirty=None) == full
+    assert rank_workloads(ws, "haswell-ep", prior=full,
+                          dirty=("striad", "ddot")) == full
+    assert rank_workloads(ws, "haswell-ep", prior=full,
+                          dirty=(0, len(ws) - 1)) == full
+
+
+def test_incremental_rank_attention_blocks_identical_to_full():
+    from repro.core.autotune import rank_attention_blocks
+
+    dims = (4096, 4096, 128)
+    full = rank_attention_blocks(dims)
+    assert rank_attention_blocks(dims, prior=full, dirty=()) == full
+    dirty = tuple(tuple(r["block"]) for r in full[:3])
+    assert rank_attention_blocks(dims, prior=full, dirty=dirty) == full
+    with pytest.raises(ValueError):
+        rank_attention_blocks(dims, prior=full[1:], dirty=())
+
+
+def test_bucket_recalibration_refreshes_with_zero_table_traffic():
+    from repro.serve.engine import BucketModel
+
+    bm = BucketModel()
+    before_calib = bm._decode_entry(1024)
+    tab = engine.lowered_table()
+    stats = dict(tab.stats)
+    new_mult = bm.recalibrate("decode", 1024, 1.25)
+    after = bm._decode_entry(1024)
+    # refresh went through the incremental path: no table get at all
+    assert tab.stats["hits"] == stats["hits"]
+    assert tab.stats["misses"] == stats["misses"]
+    assert new_mult != 1.0
+    assert after["best_bkv"] == before_calib["best_bkv"]
+
+
+def test_machine_recalibration_rebuilds_buckets_cold():
+    from repro.serve.engine import BucketModel
+
+    bm = BucketModel()
+    ent = bm._decode_entry(1024)
+    original = MACHINES[bm.machine.name]
+    bumped = dataclasses.replace(
+        original, measured_bw={k: v * 2.0
+                               for k, v in original.measured_bw.items()})
+    try:
+        register_machine(bumped)
+        ent2 = bm._decode_entry(1024)
+        assert ent2["cy_per_cl"] != ent["cy_per_cl"]
+    finally:
+        register_machine(original)
+        bm._decode_entry(1024)             # restore must also refresh
+
+
+def test_zoo_sweep_matches_direct_scaling():
+    from repro.core.scaling import scale_workloads
+
+    out = engine.zoo_sweep(machines=["haswell-ep"])
+    got = out["machines"]["haswell-ep"]
+    ws = list(workload_registry().values())
+    with engine.cache_disabled():
+        cs = scale_workloads(lower_many(ws, "haswell-ep", table=False),
+                             "haswell-ep")
+    assert got["performance"].tobytes() == cs.performance().tobytes()
+    assert got["n_sat_chip"].tobytes() == cs.n_saturation_chip().tobytes()
+    assert out["points"] > 0
+
+
+# ---------------------------------------------------------------------------
+# 4. The --floor gate in tools/check_bench.py
+# ---------------------------------------------------------------------------
+
+
+def _check_bench(*argv, timeout=120):
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_bench.py"),
+         *argv], env=env, cwd=ROOT, capture_output=True, text=True,
+        timeout=timeout)
+
+
+@pytest.fixture(scope="module")
+def engine_artifact(tmp_path_factory):
+    payload = {
+        "schema": 2, "suite": "engine", "machine": "haswell-ep",
+        "table": {"n_workloads": 14, "n_machines": 5, "rows": 70,
+                  "zoo_t_ecm_mem_total_cy": 40870.0},
+        "cold_lower": {"rows": 70, "wall_s": 0.005, "rows_per_s": 14000.0},
+        "warm_eval": {"points": 92880, "iters": 5, "wall_s": 0.002,
+                      "points_per_s": 46440000.0},
+        "zoo_sweep": {"points": 4102, "machines": 5, "iters": 20,
+                      "wall_s": 0.002, "sweeps_per_s": 10000.0},
+        "rerank": {"n_candidates": 25, "n_dirty": 2, "full_wall_s": 0.01,
+                   "incremental_wall_s": 0.001, "speedup": 10.0,
+                   "identical": True},
+        "zoo": {"haswell-ep": {}},
+    }
+    path = tmp_path_factory.mktemp("bench") / "BENCH_engine.json"
+    path.write_text(json.dumps(payload))
+    return path
+
+
+def test_engine_artifact_passes_schema_and_floors(engine_artifact):
+    r = _check_bench(str(engine_artifact),
+                     "--floor", "engine.warm_eval.points_per_s=14000000",
+                     "--floor", "engine.zoo_sweep.sweeps_per_s=1000")
+    assert r.returncode == 0, r.stderr
+
+
+def test_floor_fails_below_bound(engine_artifact):
+    r = _check_bench(str(engine_artifact),
+                     "--floor", "engine.warm_eval.points_per_s=1e12")
+    assert r.returncode == 1
+    assert "below floor" in r.stderr
+
+
+def test_floor_requires_matching_suite_and_valid_syntax(engine_artifact):
+    r = _check_bench(str(engine_artifact),
+                     "--floor", "serve.warm_eval.points_per_s=1")
+    assert r.returncode == 1 and "no artifact of suite" in r.stderr
+    r = _check_bench(str(engine_artifact), "--floor", "engine.warm_eval")
+    assert r.returncode == 1 and "expected" in r.stderr
+    r = _check_bench(str(engine_artifact),
+                     "--floor", "engine.rerank.identical=1")
+    assert r.returncode == 1 and "not a number" in r.stderr

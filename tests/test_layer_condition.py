@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    HASWELL_CAPACITIES,
     HASWELL_EP,
     JACOBI2D,
     JACOBI3D,
@@ -16,7 +15,7 @@ from repro.core import (
 )
 from repro.core.autotune import rank_stencil_blocks, stencil_block_candidates
 
-L1, L2, L3 = HASWELL_CAPACITIES
+L1, L2, L3 = HASWELL_EP.capacities
 
 
 # ---------------------------------------------------------------------------

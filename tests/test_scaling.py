@@ -37,12 +37,7 @@ from repro.core import (
 )
 from repro.core.autotune import rank_operating_points
 from repro.core.ecm import ECMBatch, ECMModel
-from repro.core.energy import (
-    FrequencyScaledECM,
-    PowerModel,
-    best_config,
-    energy_grid,
-)
+from repro.core.energy import FrequencyScaledECM, best_config, energy_grid
 from repro.core.hlo import CollectiveOp, HLOResources
 from repro.core.machine import HASWELL_CHIP_BW_NONCOD, ChipPower
 from repro.core.saturation import (
@@ -108,7 +103,7 @@ def test_energy_minima_bit_equal_to_pre_refactor(label, coupled):
     rec = GOLDEN["energy_one_domain"][label]
     fecm = FrequencyScaledECM(haswell_ecm("striad"), f_nominal_ghz=2.3,
                               bw_freq_coupled=coupled)
-    g = energy_grid(fecm, PowerModel(), n_cores_max=14,
+    g = energy_grid(fecm, ChipPower(), n_cores_max=14,
                     f_ghz_list=FREQS, total_work_units=WORK)
     f_e, n_e, e = best_config(g["energy_J"], FREQS)
     f_d, n_d, d = best_config(g["edp_Js"], FREQS)
@@ -122,7 +117,7 @@ def test_registry_one_domain_override_matches_deprecated_view():
     same energy surface as the deprecated ``energy_grid`` — bit-identical,
     the acceptance bar of the refactor."""
     fecm = FrequencyScaledECM(haswell_ecm("striad"), f_nominal_ghz=2.3)
-    g_old = energy_grid(fecm, PowerModel(), n_cores_max=14,
+    g_old = energy_grid(fecm, ChipPower(), n_cores_max=14,
                         f_ghz_list=FREQS, total_work_units=WORK)
     cs = scale_workloads([workload_registry()["striad"]], "haswell-ep",
                          f_ghz=FREQS, cores_per_domain=14, n_domains=1)

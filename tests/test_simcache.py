@@ -3,7 +3,7 @@ import pytest
 
 from repro.core import (
     BENCHMARKS,
-    HASWELL_MEASURED_BW,
+    HASWELL_EP,
     PAPER_TABLE1_MEASUREMENTS,
     haswell_ecm,
 )
@@ -62,7 +62,7 @@ def test_scaling_saturates_at_domain_bandwidth():
     curve = simulate_scaling("ddot", 14)
     spec = BENCHMARKS["ddot"]
     bpu = spec.mem_streams * 64 / 8            # 16 B per update
-    p_domain = HASWELL_MEASURED_BW["ddot"] / bpu
+    p_domain = HASWELL_EP.measured_bw["ddot"] / bpu
     assert curve[-1] == pytest.approx(2 * p_domain, rel=1e-6)
     assert 3.9e9 < curve[-1] < 4.2e9
     # measured-style saturation is later than the light-speed Eq. 2 point

@@ -21,13 +21,10 @@ import pytest
 
 from repro.core import (
     BENCHMARKS,
-    HASWELL_CAPACITIES,
     HASWELL_EP,
-    HASWELL_MEASURED_BW,
     JACOBI2D,
     MACHINES,
     SKYLAKE_SP,
-    STENCIL_MEASURED_BW,
     TPU_V5E_HIERARCHY,
     TRIAD_UPDATE,
     StencilWorkload,
@@ -89,7 +86,7 @@ def test_blocked_stencil_bit_equal_to_pre_refactor():
 def test_engine_view_equals_spec_view_bitwise():
     """workload_ecm(StreamWorkload(spec)) == spec.ecm == batch element."""
     for name, spec in BENCHMARKS.items():
-        bw = HASWELL_MEASURED_BW[name]
+        bw = HASWELL_EP.measured_bw[name]
         via_engine = workload_ecm(StreamWorkload(spec), HASWELL_EP,
                                   sustained_bw=bw)
         via_spec = spec.ecm(HASWELL_EP, bw)
@@ -222,11 +219,19 @@ def test_nt_speedup_is_free_on_tpu():
 
 
 def test_deprecated_bw_aliases_point_at_machine_calibration():
-    for k, v in HASWELL_MEASURED_BW.items():
+    import repro.core as core
+
+    with pytest.warns(DeprecationWarning):
+        hsw_bw = core.HASWELL_MEASURED_BW
+    with pytest.warns(DeprecationWarning):
+        stencil_bw = core.STENCIL_MEASURED_BW
+    with pytest.warns(DeprecationWarning):
+        caps = core.HASWELL_CAPACITIES
+    for k, v in hsw_bw.items():
         assert HASWELL_EP.measured_bw[k] == v
-    for k, v in STENCIL_MEASURED_BW.items():
+    for k, v in stencil_bw.items():
         assert HASWELL_EP.measured_bw[k] == v
-    assert HASWELL_CAPACITIES == HASWELL_EP.capacities
+    assert caps == HASWELL_EP.capacities
 
 
 def test_bw_lookup_chain():

@@ -5,6 +5,7 @@ regression gate for the perf-trajectory files emitted by
 
     python tools/check_bench.py [files...]      # default: BENCH_*.json
     python tools/check_bench.py NEW.json --compare BASELINE.json [--rtol R]
+    python tools/check_bench.py FILES... --floor engine.warm_eval.points_per_s=14e6
 
 Every artifact shares one envelope (``schema`` version, ``suite``,
 ``machine``) plus a per-suite payload; this checker pins the field names
@@ -20,7 +21,9 @@ spec *pins zero lost requests per fault class*, so a request that
 vanishes without a terminal state fails validation, not just the
 compare), compose (whole-model composed step predictions — the spec pins
 per-config prefill/decode entries and the config x machine zoo, and
-requires decode <= prefill at the bench's equal-context shape).
+requires decode <= prefill at the bench's equal-context shape), engine
+(request-path engine — lowered-table shape, the deterministic zoo T_ECM
+checksum, warm/cold eval sections and the re-rank ``identical`` pin).
 
 ``--compare`` is the CI regression gate: it diffs a freshly generated
 artifact against the committed baseline, failing when any *deterministic*
@@ -28,7 +31,10 @@ value (model predictions, ranked blockings, traffic counts, bit-equality
 flags) drifts beyond ``--rtol`` or disappears.  Wall-clock-derived fields
 (``wall``/``*_s``/``per_s``/throughput ratios/measured overlap fractions)
 are volatile by nature and excluded — the gate guards the *model*, not
-the runner's machine of the day.
+the runner's machine of the day.  ``--floor suite.path=value`` is the
+opt-in complement for exactly those fields: an absolute throughput lower
+bound (repeatable; a floor whose suite matches no checked artifact is an
+error, not a skip).
 
 Exit code 0 when clean, 1 with a per-finding report otherwise.
 """
@@ -42,7 +48,7 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 
 SUITES = ("stream", "stencil", "compute", "scaling", "tpu", "serve",
-          "compose")
+          "compose", "engine")
 
 #: minimal spec language: {key: type | (type, predicate) | dict (nested) |
 #: [element_spec] (non-empty list) | callable(value) -> error or None}
@@ -82,6 +88,13 @@ STREAM_SPEC = {
         "scalar_points_per_s": (NUM, _positive),
         "throughput_ratio": (NUM, _positive),
         "per_point_call_reduction": (NUM, _positive),
+        "cold_wall_s": (NUM, _positive),
+        "cold_points_per_s": (NUM, _positive),
+        "warm_iters": (int, _positive),
+        "warm_points": (int, _positive),
+        "warm_wall_s": (NUM, _positive),
+        "warm_points_per_s": (NUM, _positive),
+        "warm_throughput_ratio": (NUM, _positive),
     },
     "autotune": {
         "n_candidates": (int, _positive),
@@ -360,15 +373,54 @@ COMPOSE_SPEC = {
     },
 }
 
+ENGINE_SPEC = {
+    "table": {
+        "n_workloads": (int, _positive),
+        "n_machines": (int, _positive),
+        "rows": (int, _positive),
+        "zoo_t_ecm_mem_total_cy": (NUM, _positive),
+    },
+    "cold_lower": {
+        "rows": (int, _positive),
+        "wall_s": (NUM, _positive),
+        "rows_per_s": (NUM, _positive),
+    },
+    "warm_eval": {
+        "points": (int, _positive),
+        "iters": (int, _positive),
+        "wall_s": (NUM, _positive),
+        "points_per_s": (NUM, _positive),
+    },
+    "zoo_sweep": {
+        "points": (int, _positive),
+        "machines": (int, _positive),
+        "iters": (int, _positive),
+        "wall_s": (NUM, _positive),
+        "sweeps_per_s": (NUM, _positive),
+    },
+    "rerank": {
+        "n_candidates": (int, _positive),
+        "n_dirty": (int, _positive),
+        "full_wall_s": (NUM, _positive),
+        "incremental_wall_s": (NUM, _positive),
+        "speedup": (NUM, _positive),
+        "identical": bool,
+    },
+    "zoo": dict,
+}
+
 SPECS = {"stream": STREAM_SPEC, "stencil": STENCIL_SPEC,
          "compute": COMPUTE_SPEC, "scaling": SCALING_SPEC,
-         "tpu": TPU_SPEC, "serve": SERVE_SPEC, "compose": COMPOSE_SPEC}
+         "tpu": TPU_SPEC, "serve": SERVE_SPEC, "compose": COMPOSE_SPEC,
+         "engine": ENGINE_SPEC}
 
 #: distinctive payload keys for suite inference on legacy (schema 1)
-#: files; "models" must precede "zoo" — compose payloads carry both
+#: files; "warm_eval" must precede "zoo" (engine payloads carry both) and
+#: "models" must precede "zoo" — compose payloads carry both
 SUITE_HINTS = (("model_eval", "stream"), ("sweep", "stencil"),
                ("matmul", "compute"), ("tpu_dp", "scaling"),
-               ("classes", "serve"), ("models", "compose"), ("zoo", "tpu"))
+               ("classes", "serve"), ("warm_eval", "engine"),
+               ("models", "compose"), ("zoo", "tpu"))
 
 
 def check_value(path: str, value, spec, problems: list[str]) -> None:
@@ -526,6 +578,61 @@ def compare_files(new_path: Path, base_path: Path, rtol: float) -> list[str]:
     return problems
 
 
+def check_floors(files: list[Path], floors: list[str]) -> list[str]:
+    """Opt-in throughput floors: ``--floor suite.dotted.path=value``.
+
+    Volatile (wall-clock) fields are excluded from ``--compare`` by
+    design; a floor is the one sanctioned way to gate them — an absolute
+    lower bound the runner must clear, not a diff against a baseline.
+    Every floor must match at least one artifact of its suite, so a
+    typo'd suite or path fails the gate instead of passing silently.
+    """
+    problems: list[str] = []
+    by_suite: dict[str, list[tuple[Path, dict]]] = {}
+    for f in files:
+        try:
+            payload = json.loads(f.read_text(encoding="utf-8"))
+        except (OSError, json.JSONDecodeError):
+            continue                    # already reported by check_file
+        if not isinstance(payload, dict):
+            continue
+        suite = payload.get("suite")
+        if suite is None:
+            suite = next((s for k, s in SUITE_HINTS if k in payload), None)
+        if suite:
+            by_suite.setdefault(suite, []).append((f, payload))
+
+    for spec in floors:
+        lhs, sep, rhs = spec.partition("=")
+        parts = lhs.split(".")
+        try:
+            floor = float(rhs)
+        except ValueError:
+            floor = None
+        if not sep or floor is None or len(parts) < 2:
+            problems.append(f"--floor {spec!r}: expected "
+                            f"suite.dotted.path=number")
+            continue
+        suite, path = parts[0], parts[1:]
+        matched = by_suite.get(suite, [])
+        if not matched:
+            problems.append(f"--floor {spec}: no artifact of suite "
+                            f"{suite!r} among the checked files")
+            continue
+        for f, payload in matched:
+            cur = payload
+            for seg in path:
+                cur = cur.get(seg) if isinstance(cur, dict) else None
+            if not isinstance(cur, (int, float)) or isinstance(cur, bool):
+                problems.append(f"{f.name}: --floor {spec}: "
+                                f"{'.'.join(path)} is not a number "
+                                f"({cur!r})")
+            elif cur < floor:
+                problems.append(f"{f.name}: {'.'.join(path)} = {cur:g} "
+                                f"below floor {floor:g}")
+    return problems
+
+
 def main(argv: list[str]) -> int:
     ap = argparse.ArgumentParser(
         description="BENCH artifact schema check + regression gate")
@@ -537,6 +644,13 @@ def main(argv: list[str]) -> int:
     ap.add_argument("--rtol", type=float, default=0.05,
                     help="relative drift tolerance for --compare "
                          "(default: 0.05)")
+    ap.add_argument("--floor", action="append", default=[],
+                    metavar="SUITE.PATH=VALUE",
+                    help="opt-in throughput floor, e.g. "
+                         "engine.warm_eval.points_per_s=14000000; fails "
+                         "if any matching artifact's value is below VALUE "
+                         "(repeatable; errors if no artifact of SUITE is "
+                         "among the checked files)")
     args = ap.parse_args(argv)
 
     if args.files:
@@ -564,6 +678,8 @@ def main(argv: list[str]) -> int:
     if baseline is not None:
         problems += check_file(baseline)
         problems += compare_files(files[0], baseline, args.rtol)
+    if args.floor:
+        problems += check_floors(files, args.floor)
     if problems:
         print("\n".join(problems), file=sys.stderr)
         print(f"\ncheck_bench: {len(problems)} problem(s) in "
