@@ -5,7 +5,7 @@ this section exercises the *other* side of Eq. 1 — workloads whose
 ``T_OL`` (FMA ports on the CPUs, the MXU systolic rate on the TPU) hides
 the whole transfer chain.  Per machine it reports the light-speed ECM of
 the cache-blocked GEMM and the flash-attention tiles, the ECM-ranked
-block-size sweeps (``rank_matmul_blocks`` / ``rank_attention_blocks``,
+block-size sweeps (``rank(..., objective="matmul"|"attention")``,
 showing where blocking moves a kernel from the bandwidth-bound into the
 core-bound regime), and interpret-mode validation of the Pallas kernels at
 the autotuner-chosen blockings.
@@ -40,12 +40,12 @@ def _ecm_detail(model) -> dict:
 def matmul_payload(dims=MATMUL_DIMS, machine: str | None = None) -> dict:
     """Light-speed ECM + ECM-ranked (bm, bn) blockings of a blocked GEMM."""
     from repro.core import workload_ecm
-    from repro.core.autotune import rank_matmul_blocks
+    from repro.core.autotune import rank
     from repro.kernels.matmul.ops import matmul_workload
 
     machine = machine or "haswell-ep"
     m, n, k = dims
-    ranked = rank_matmul_blocks(dims, machine=machine)
+    ranked = rank(dims, machine, objective="matmul")
     best = ranked[0]
     w = matmul_workload(m, n, k, bm=best["block"][0], bn=best["block"][1],
                         bk=best["block"][2])
@@ -60,12 +60,12 @@ def attention_payload(dims=ATTENTION_DIMS, machine: str | None = None,
                       causal: bool = True) -> dict:
     """Light-speed ECM + ECM-ranked (bq, bkv) tilings of flash attention."""
     from repro.core import workload_ecm
-    from repro.core.autotune import rank_attention_blocks
+    from repro.core.autotune import rank
     from repro.kernels.attention.ops import attention_workload
 
     machine = machine or "haswell-ep"
     sq, skv, d = dims
-    ranked = rank_attention_blocks(dims, machine=machine, causal=causal)
+    ranked = rank(dims, machine, objective="attention", causal=causal)
     best = ranked[0]
     w = attention_workload(sq, skv, d, bq=best["block"][0],
                            bk=best["block"][1], causal=causal)

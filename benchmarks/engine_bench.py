@@ -120,18 +120,18 @@ def zoo_sweep_payload() -> dict:
 
 def rerank_payload() -> dict:
     """Full vs incremental attention-block re-rank; must be identical."""
-    from repro.core.autotune import rank_attention_blocks
+    from repro.core.autotune import rank
     from repro.core.engine import cache_disabled
 
     dims = RERANK_DIMS
     with cache_disabled():            # full path pays real re-lowering
         t0 = time.perf_counter()
-        full = rank_attention_blocks(dims)
+        full = rank(dims, objective="attention")
         dt_full = time.perf_counter() - t0
 
-    prior = rank_attention_blocks(dims)
+    prior = rank(dims, objective="attention")
     t0 = time.perf_counter()
-    inc = rank_attention_blocks(dims, prior=prior, dirty=RERANK_DIRTY)
+    inc = rank(dims, objective="attention", prior=prior, dirty=RERANK_DIRTY)
     dt_inc = time.perf_counter() - t0
     return {
         "n_candidates": len(full),

@@ -1,0 +1,136 @@
+"""``--suite mesh``: the multi-chip parallelism model + mesh autotuner.
+
+Eq. 2 generalized from cores on a chip to chips on a mesh
+(``repro.core.mesh``): for each pinned zoo config and chip count the
+unified ``autotune.rank(config, machine, mesh=N)`` facade ranks every
+(mesh shape, sharding profile, kernel block sizes) candidate jointly —
+per-chip compute from the whole-model composition, per-strategy ICI
+collective terms from the ring wire-byte math of ``repro.core.hlo``,
+pipeline bubble over microbatch count — and the winner is golden-pinned
+per (config, N) on tpu-v5e.
+
+Three payload blocks:
+
+* ``rankings`` — the pinned winners (mesh label, profile, factorization,
+  attention block, step/ICI microseconds, saturation) per config x chip
+  count; any drift is a modeling change the regression gate must see;
+* ``dp_scaling`` — ``tpu_dp_scaling`` routed through the generalized
+  ``mesh.dp_scaling`` path must stay **bit-identical** to the legacy
+  arithmetic (the refactor's no-drift contract);
+* ``sweep`` — warm-path throughput of the full (config x N x plan)
+  sweep (the ``LoweredTable``-backed regime), floor-gated in CI.
+"""
+from __future__ import annotations
+
+import time
+
+#: the pinned (config, chip-count) grid — three zoo configs spanning the
+#: profile families (dense TP+DP, dense TP+FSDP, MoE expert-parallel)
+MESH_CONFIGS = ("internlm2-1.8b", "glm4-9b", "granite-moe-1b-a400m")
+CHIP_COUNTS = (8, 16, 64)
+BATCH = 8
+SEQ_LEN = 2048
+
+#: keys of one ranked row that are stable pins (no wall-clock content)
+WINNER_KEYS = ("mesh", "profile", "data", "model", "pipe", "microbatches",
+               "t_step_us", "t_ici_us", "bubble_fraction", "n_saturation",
+               "fits_hbm")
+
+
+def _winner(row: dict) -> dict:
+    out = {k: row[k] for k in WINNER_KEYS}
+    if row.get("block") is not None:
+        out["block"] = list(row["block"])
+    return out
+
+
+def rankings_payload(machine: str = "tpu-v5e") -> dict:
+    """The golden-pinned winners: one joint ranking per config x N."""
+    from repro.core.autotune import rank
+
+    out: dict[str, dict] = {}
+    for cfg in MESH_CONFIGS:
+        out[cfg] = {}
+        for n in CHIP_COUNTS:
+            rows = rank(cfg, machine, mesh=n, batch=BATCH, seq_len=SEQ_LEN)
+            out[cfg][str(n)] = {"winner": _winner(rows[0]),
+                                "n_plans": len(rows)}
+    return out
+
+
+def dp_scaling_payload() -> dict:
+    """Bit-identity of the legacy DP path through the mesh model."""
+    from repro.core.mesh import dp_scaling
+    from repro.core.scaling import tpu_dp_scaling
+
+    from .scaling_bench import _dp_resources
+
+    res = _dp_resources()
+    legacy = tpu_dp_scaling(res)
+    new = dp_scaling(res)
+    return {
+        "bit_identical": legacy == new,
+        "chips": new["chips"],
+        "n_saturation": new["n_saturation"],
+        "t_ici_floor_us": new["t_ici_floor_us"],
+    }
+
+
+def sweep_payload(machine: str = "tpu-v5e") -> dict:
+    """Warm-path mesh-sweep throughput over the pinned grid (the second
+    pass hits the request-path ``LoweredTable``, so this times the
+    analytic collective + Eq. 2 evaluation, not lowering)."""
+    from repro.core.autotune import rank
+
+    plans = 0
+    for cfg in MESH_CONFIGS:           # warm the composition/lowering path
+        rank(cfg, machine, mesh=CHIP_COUNTS[0], batch=BATCH,
+             seq_len=SEQ_LEN, include_blocks=False)
+    t0 = time.perf_counter()
+    for cfg in MESH_CONFIGS:
+        for n in CHIP_COUNTS:
+            plans += len(rank(cfg, machine, mesh=n, batch=BATCH,
+                              seq_len=SEQ_LEN, include_blocks=False))
+    dt = time.perf_counter() - t0
+    return {
+        "configs": len(MESH_CONFIGS),
+        "chip_counts": list(CHIP_COUNTS),
+        "plans": plans,
+        "wall_s": dt,
+        "plans_per_s": plans / dt,
+    }
+
+
+def mesh_payload(machine: str = "tpu-v5e") -> dict:
+    """The ``BENCH_mesh.json`` payload body (envelope added by the
+    runner)."""
+    return {
+        "rankings": rankings_payload(machine),
+        "dp_scaling": dp_scaling_payload(),
+        "sweep": sweep_payload(machine),
+    }
+
+
+def run(machine: str | None = None) -> str:
+    """Human-readable report section."""
+    machine = machine or "tpu-v5e"
+    ranks = rankings_payload(machine)
+    dp = dp_scaling_payload()
+    lines = [f"mesh autotuner on {machine} "
+             f"(batch={BATCH}, seq_len={SEQ_LEN}, train step):",
+             f"{'config':<22} {'chips':>5} {'best mesh':<18} "
+             f"{'profile':<8} {'t_step_ms':>10} {'bubble':>7} {'n_sat':>6}"]
+    lines.append("-" * len(lines[-1]))
+    for cfg, by_n in ranks.items():
+        for n, cell in by_n.items():
+            w = cell["winner"]
+            sat = w["n_saturation"]
+            lines.append(
+                f"{cfg:<22} {n:>5} {w['mesh']:<18} {w['profile']:<8} "
+                f"{w['t_step_us'] / 1e3:>10.1f} "
+                f"{w['bubble_fraction']:>7.3f} "
+                f"{sat if sat is not None else '-':>6}")
+    lines.append(f"DP path bit-identical through mesh.dp_scaling: "
+                 f"{dp['bit_identical']} "
+                 f"(saturation ~{dp['n_saturation']} chips)")
+    return "\n".join(lines)

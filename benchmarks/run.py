@@ -7,9 +7,10 @@ runner for all kernel families.
     PYTHONPATH=src python -m benchmarks.run --json --suite stencil
     PYTHONPATH=src python -m benchmarks.run --only machine_zoo --machine skylake-sp
 
-``--suite {stream,stencil,compute,scaling,tpu,serve,compose,engine}``
+``--suite {stream,stencil,compute,scaling,tpu,serve,compose,engine,mesh}``
 selects a kernel family, the chip-level suite, the serving-engine suite,
-the whole-model composition suite, or the request-path engine suite
+the whole-model composition suite, the request-path engine suite, or the
+multi-chip mesh-autotuner suite
 (default: all sections); ``--machine`` picks a
 registry machine for the sections and artifacts that are
 machine-parameterized (the zoo table, the stencil sweep, the compute
@@ -34,7 +35,10 @@ percentiles, predicted-vs-measured step ratios, recovery counts) and
 step cycles per config, the config x machine zoo, composition
 throughput) and ``BENCH_engine.json`` (request-path engine: lowered-table
 shape + deterministic T_ECM checksum, cold-lowering vs warm table-backed
-eval rates, full-zoo Eq. 2 sweep latency, incremental re-rank speedup).
+eval rates, full-zoo Eq. 2 sweep latency, incremental re-rank speedup)
+and ``BENCH_mesh.json`` (mesh autotuner: golden-pinned joint
+(mesh x profile x block) winners per config x chip count, DP
+bit-identity through the generalized path, warm mesh-sweep throughput).
 Field names are
 stable across schema bumps so trajectories remain comparable; the CI
 regression gate diffs fresh artifacts against the committed baselines
@@ -55,6 +59,7 @@ from . import (
     fig12_nt_stores,
     fig789_sweeps,
     machine_zoo,
+    mesh_bench,
     scaling_bench,
     serve_bench,
     stencil_sweep,
@@ -93,6 +98,9 @@ SECTIONS = [
     ("serve_bench",
      "Model-guided serving: continuous batching under fault injection",
      serve_bench),
+    ("mesh_bench",
+     "Mesh autotuner: Eq. 2 over ICI, joint (mesh x profile x block) ranks",
+     mesh_bench),
     ("tpu_stream_ecm", "TPU adaptation: Pallas stream kernels + TPU-ECM",
      tpu_stream_ecm),
     ("tpu_roofline", "TPU §Roofline: per (arch x shape x mesh) ECM terms",
@@ -111,6 +119,7 @@ SUITES = {
     "serve": ["serve_bench", "machine_zoo"],
     "compose": ["compose_bench", "machine_zoo"],
     "engine": ["engine_bench", "machine_zoo"],
+    "mesh": ["mesh_bench", "machine_zoo"],
 }
 
 #: default artifact path per suite (schema: tools/check_bench.py)
@@ -123,6 +132,7 @@ BENCH_PATHS = {
     "serve": "BENCH_serve.json",
     "compose": "BENCH_compose.json",
     "engine": "BENCH_engine.json",
+    "mesh": "BENCH_mesh.json",
 }
 
 BENCH_SCHEMA_VERSION = 2
@@ -312,15 +322,23 @@ def engine_payload(machine: str = "haswell-ep") -> dict:
     }
 
 
+def mesh_payload(machine: str = "tpu-v5e") -> dict:
+    return {
+        **_envelope("mesh", machine),
+        **mesh_bench.mesh_payload(machine=machine),
+    }
+
+
 def emit_json(path: str | None, suite: str = "stream",
               machine: str | None = None) -> str:
     """Write the suite's BENCH artifact; returns the path written."""
     builders = {"stream": stream_payload, "stencil": stencil_payload,
                 "compute": compute_payload, "scaling": scaling_payload,
                 "tpu": tpu_payload, "serve": serve_payload,
-                "compose": compose_payload, "engine": engine_payload}
+                "compose": compose_payload, "engine": engine_payload,
+                "mesh": mesh_payload}
     if machine is None:
-        machine = ("tpu-v5e" if suite in ("tpu", "serve", "compose")
+        machine = ("tpu-v5e" if suite in ("tpu", "serve", "compose", "mesh")
                    else "haswell-ep")
     payload = builders[suite](machine=machine)
     path = path or BENCH_PATHS[suite]
@@ -380,6 +398,16 @@ def emit_json(path: str | None, suite: str = "stream",
               f"points/s, {zoo['sweeps_per_s']:.0f} zoo sweeps/s, "
               f"incremental re-rank {rr['speedup']:.1f}x "
               f"(identical: {rr['identical']})")
+    elif suite == "mesh":
+        ranks, dp = payload["rankings"], payload["dp_scaling"]
+        sw = payload["sweep"]
+        winners = {cell["winner"]["mesh"] + "/" + cell["winner"]["profile"]
+                   for by_n in ranks.values() for cell in by_n.values()}
+        print(f"[bench] wrote {path}: {len(ranks)} configs x "
+              f"{len(sw['chip_counts'])} chip counts, {sw['plans']} plans "
+              f"ranked ({sw['plans_per_s']:.0f} plans/s warm), "
+              f"{len(winners)} distinct winners, DP bit-identical: "
+              f"{dp['bit_identical']}")
     elif suite == "compute":
         mm, att = payload["matmul"], payload["attention"]
         ok = all(v["matches_ref"] for v in payload["kernels"].values())

@@ -85,15 +85,15 @@ def energy_payload(machine: str = "haswell-ep",
 def operating_points_payload(machine: str = "haswell-ep",
                              top: int = 5) -> list[dict]:
     """Top EDP operating points across the Fig. 10 kernels — the
-    ``rank_operating_points`` path exercised end to end."""
+    ``rank(..., objective="edp")`` path exercised end to end."""
     from repro.core import get_machine, workload_registry
-    from repro.core.autotune import rank_operating_points
+    from repro.core.autotune import rank
 
     m = get_machine(machine)
     reg = workload_registry()
     ws = [reg[k] for k in FIG10_KERNELS if k in reg]
-    return rank_operating_points(ws, m, objective="edp",
-                                 total_work_units=_work_units(m), top=top)
+    return rank(ws, m, objective="edp",
+                total_work_units=_work_units(m), top=top)
 
 
 def _dp_resources(n_params: float = 1e9, tokens: float = 1 << 20,

@@ -58,10 +58,10 @@ def sweep_payload(ns=SWEEP_NS, machine: str | None = None) -> list[dict]:
 def blocking_payload(n=BLOCK_N, machine: str | None = None) -> dict:
     """ECM-ranked spatial blockings at a memory-resident problem size."""
     from repro.core import get_machine
-    from repro.core.autotune import rank_stencil_blocks
+    from repro.core.autotune import rank
 
-    ranked = rank_stencil_blocks(
-        "jacobi2d", (n,), machine=get_machine(machine or "haswell-ep"))
+    ranked = rank(
+        "jacobi2d", get_machine(machine or "haswell-ep"), widths=(n,))
     return {"n": n, "ranked": ranked, "best": ranked[0]}
 
 

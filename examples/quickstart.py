@@ -32,20 +32,19 @@ for name in ("ddot", "striad", "schoenauer"):
 
 # --- 2. stencil mode (layer conditions, arXiv:1410.5010) -------------------
 from repro.core import JACOBI2D, stencil_ecm
-from repro.core.autotune import rank_stencil_blocks
+from repro.core.autotune import rank
 
 print("\n== Layer-condition ECM: 2D 5-point Jacobi ==")
 for n in (512, 8192):
     ecm = stencil_ecm("jacobi2d", widths=(n,))
     print(f"N={n:<6d} L1/L2/L3 misses {JACOBI2D.misses_per_level((n,))} "
           f"input {ecm.notation():26s} -> {ecm.prediction_notation()}")
-best = rank_stencil_blocks("jacobi2d", (8192,))[0]
+best = rank("jacobi2d", widths=(8192,))[0]
 print(f"autotuned blocking at N=8192: block {best['block']} "
       f"({best['speedup_vs_unblocked']:.2f}x predicted vs unblocked)")
 
 # --- 3. compute mode (the in-core limit) -----------------------------------
 from repro.core import workload_ecm, workload_registry
-from repro.core.autotune import rank_matmul_blocks
 
 print("\n== Compute-bound ECM: blocked matmul (T_OL dominates) ==")
 mm = workload_registry()["matmul"]
@@ -54,7 +53,7 @@ for machine in ("haswell-ep", "tpu-v5e"):
     bound = "core" if ecm.core_bound() else "transfer"
     print(f"{machine:12s} {ecm.notation():34s} -> "
           f"{ecm.prediction_notation()}  ({bound}-bound)")
-best = rank_matmul_blocks((4096, 4096, 4096))[0]
+best = rank((4096, 4096, 4096), objective="matmul")[0]
 print(f"autotuned tiling: bm x bn = {best['block'][0]}x{best['block'][1]} "
       f"(core-bound: {best['core_bound']}, "
       f"{best['mem_lines']:.0f} mem lines/CL)")

@@ -15,7 +15,7 @@ import shutil
 from repro.configs import ARCH_NAMES, get_arch
 from repro.configs.base import ShapeSpec
 from repro.data.arch_data import ArchSyntheticDataset
-from repro.dist.sharding import PROFILES
+from repro.dist.sharding import get_profile
 from repro.launch.mesh import make_host_mesh
 from repro.optim import AdamWConfig
 from repro.optim.schedule import linear_warmup_cosine
@@ -34,7 +34,7 @@ def main():
     shutil.rmtree(args.ckpt_dir, ignore_errors=True)
     arch = get_arch(args.arch, smoke=True)
     mesh = make_host_mesh(model=1)
-    profile = PROFILES[arch.profile](False)
+    profile = get_profile(arch.profile)
     shape = ShapeSpec("train", seq_len=args.seq, global_batch=args.batch,
                       kind="train")
     data = ArchSyntheticDataset(arch, shape, seed=0)

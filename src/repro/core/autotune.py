@@ -1,34 +1,63 @@
 """ECM-guided configuration selection (beyond-paper use of the model).
 
 The paper's workflow is: build the light-speed model from resource counts,
-find the dominant term, act on it.  This module automates that loop.
+find the dominant term, act on it.  This module automates that loop
+behind **one keyword-driven facade**, :func:`rank`:
 
-**Generic path** — :func:`rank_workloads`: any set of
-``repro.core.workload`` candidates (streams, stencils at different
-blockings, fused chains, pre-lowered TPU steps) is lowered on any registry
-machine through the unified engine and argsorted by predicted ``T_ECM`` at
-a chosen residence level — one code path regardless of family.
-:func:`rank_stencil_blocks` is a convenience that builds the
-spatial-blocking candidate set and routes it through that path.
+* ``rank(workloads, machine)`` — any ``repro.core.workload`` candidates
+  (streams, stencils at different blockings, fused chains, pre-lowered
+  TPU steps) lowered through the unified engine and argsorted by
+  predicted ``T_ECM`` (supports incremental ``prior``/``dirty``
+  re-ranking);
+* ``rank(workloads, machine, objective="edp"|"energy"|"performance")``
+  — chip operating points over the (workload x frequency x cores)
+  surface;
+* ``rank(spec_or_name, machine, widths=...)`` /
+  ``rank(dims, machine, objective="matmul"|"attention")`` — the
+  kernel block-size tuners (stencil spatial blocking, blocked-GEMM
+  tilings, flash-attention tiles);
+* ``rank(config, machine, mesh=n_chips)`` — the **mesh axis**: a joint
+  (mesh shape, sharding profile, kernel block sizes) ranking from
+  :mod:`repro.core.mesh` for a zoo config at a chip count;
+* ``rank(WorkloadSpec(...), n_chips)`` — the first-order analytic
+  (data, model, accum) factorization estimate below (the historical
+  ``rank`` signature, unchanged).
 
-**Mesh path** — :func:`rank`: for a transformer-like workload it estimates
-the three TPU-ECM terms analytically for every candidate (data, model)
-mesh factorization and gradient-accumulation depth, rejects configs whose
-working set exceeds HBM, and ranks the rest by the ECM-bound step time.
+The historical per-family entry points (``rank_workloads``,
+``rank_operating_points``, ``rank_stencil_blocks``,
+``rank_matmul_blocks``, ``rank_attention_blocks``) remain importable as
+thin deprecated wrappers (module ``__getattr__`` shim) and return
+``==``-identical output to the facade.
 
-The estimators are deliberately first-order (the same spirit as the
-paper's stream counting): weights/activations/collectives are counted from
-model dimensions, not from a compile.  `repro.launch.dryrun` remains the
-ground truth; the autotuner prunes the candidate set before any compile
-happens.
+The first-order estimators are deliberately coarse (the same spirit as
+the paper's stream counting): weights/activations/collectives are
+counted from model dimensions, not from a compile.
+`repro.launch.dryrun` remains the ground truth; the autotuner prunes the
+candidate set before any compile happens.
 """
 from __future__ import annotations
 
+import functools
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
 from .machine import TPU_V5E, TPUMachineModel
+
+__all__ = [
+    "CandidateConfig",
+    "Estimate",
+    "WorkloadSpec",
+    "attention_block_candidates",
+    "candidates",
+    "estimate",
+    "estimate_batch",
+    "matmul_block_candidates",
+    "rank",
+    "recommend",
+    "stencil_block_candidates",
+]
 
 
 @dataclass(frozen=True)
@@ -179,8 +208,8 @@ def candidates(n_chips: int, w: WorkloadSpec,
     return out
 
 
-def rank(w: WorkloadSpec, n_chips: int = 256,
-         m: TPUMachineModel = TPU_V5E) -> list[Estimate]:
+def _rank_spec(w: WorkloadSpec, n_chips: int = 256,
+               m: TPUMachineModel = TPU_V5E) -> list[Estimate]:
     """All feasible candidates, best (lowest ECM time) first.
 
     Routed through :func:`estimate_batch`: one vectorized evaluation over
@@ -201,7 +230,7 @@ def rank(w: WorkloadSpec, n_chips: int = 256,
 
 def recommend(w: WorkloadSpec, n_chips: int = 256,
               m: TPUMachineModel = TPU_V5E) -> Estimate:
-    return rank(w, n_chips, m)[0]
+    return _rank_spec(w, n_chips, m)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -209,12 +238,12 @@ def recommend(w: WorkloadSpec, n_chips: int = 256,
 # ---------------------------------------------------------------------------
 
 
-def rank_workloads(workloads, machine=None, *,
-                   level: "int | str" = -1,
-                   sustained_bw=None,
-                   tiebreak=None,
-                   prior: "list[dict] | None" = None,
-                   dirty=None) -> list[dict]:
+def _rank_workloads(workloads, machine=None, *,
+                    level: "int | str" = -1,
+                    sustained_bw=None,
+                    tiebreak=None,
+                    prior: "list[dict] | None" = None,
+                    dirty=None) -> list[dict]:
     """Rank any workloads on any machine by predicted ``T_ECM``.
 
     One vectorized lowering through the unified engine
@@ -312,12 +341,12 @@ def _rerank_workloads(ws, machine, *, level, sustained_bw, tiebreak,
     return [dict(by_index[int(i)]) for i in order]
 
 
-def rank_operating_points(workloads, machine=None, *,
-                          objective: str = "edp",
-                          total_work_units: float = 1.0,
-                          f_ghz=None, sustained_bw=None,
-                          n_cores: int | None = None,
-                          top: int | None = None) -> list[dict]:
+def _rank_operating_points(workloads, machine=None, *,
+                           objective: str = "edp",
+                           total_work_units: float = 1.0,
+                           f_ghz=None, sustained_bw=None,
+                           n_cores: int | None = None,
+                           top: int | None = None) -> list[dict]:
     """Rank chip operating points ``(workload, frequency, cores)`` by a
     performance-, energy- or EDP-objective.
 
@@ -363,12 +392,12 @@ def stencil_block_candidates(widths: tuple[int, ...],
     return blocks
 
 
-def rank_stencil_blocks(spec_or_name, widths: tuple[int, ...],
-                        blocks: "list[tuple[int, ...]] | None" = None,
-                        *, level: "int | str" = "Mem",
-                        machine=None, sustained_bw: float | None = None,
-                        capacities: tuple[int, ...] | None = None
-                        ) -> list[dict]:
+def _rank_stencil_blocks(spec_or_name, widths: tuple[int, ...],
+                         blocks: "list[tuple[int, ...]] | None" = None,
+                         *, level: "int | str" = "Mem",
+                         machine=None, sustained_bw: float | None = None,
+                         capacities: tuple[int, ...] | None = None
+                         ) -> list[dict]:
     """Rank spatial blockings of a stencil by predicted ``T_ECM``.
 
     Same structure as :func:`rank` (the mesh autotuner): one vectorized
@@ -402,7 +431,7 @@ def rank_stencil_blocks(spec_or_name, widths: tuple[int, ...],
     point = StencilWorkload(spec, widths=tuple(widths), capacities=caps)
     # one generic ranking pass over blocking candidates + the truly
     # unblocked baseline (appended last, independent of the candidate set)
-    ranked = rank_workloads(
+    ranked = _rank_workloads(
         [point.with_block(b) for b in cands] + [point], m, level=level,
         sustained_bw=bw,
         # primary key t_ecm ascending, secondary key inner block descending
@@ -446,11 +475,11 @@ def matmul_block_candidates(m: int, n: int, k: int, *,
             for bn in _pow2_divisors(n, min_block, max_block)]
 
 
-def rank_matmul_blocks(dims: tuple[int, int, int],
-                       blocks: "list[tuple[int, int, int]] | None" = None,
-                       *, level: "int | str" = -1,
-                       machine=None, sustained_bw: float | None = None,
-                       spec=None) -> list[dict]:
+def _rank_matmul_blocks(dims: tuple[int, int, int],
+                        blocks: "list[tuple[int, int, int]] | None" = None,
+                        *, level: "int | str" = -1,
+                        machine=None, sustained_bw: float | None = None,
+                        spec=None) -> list[dict]:
     """Rank blocked-GEMM tilings of ``C[m,n] = A[m,k] @ B[k,n]`` by
     predicted ``T_ECM``.
 
@@ -475,8 +504,8 @@ def rank_matmul_blocks(dims: tuple[int, int, int],
     lowered = lower_many(ws, mach, sustained_bw=sustained_bw)
     mem_lines = lowered.routed.mem_lines()       # (C,)
     core = lowered.batch.core_bound(level)       # (C,)
-    ranked = rank_workloads(lowered, level=level,
-                            tiebreak=[-b[0] * b[1] for b in cands])
+    ranked = _rank_workloads(lowered, level=level,
+                             tiebreak=[-b[0] * b[1] for b in cands])
     t_by_index = {r["index"]: r["t_ecm"] for r in ranked}
     base_i = min(range(len(cands)), key=lambda i: cands[i][0] * cands[i][1])
     base = t_by_index[base_i]
@@ -499,14 +528,14 @@ def attention_block_candidates(sq: int, skv: int, *,
             for bkv in _pow2_divisors(skv, min_block, max_block)]
 
 
-def rank_attention_blocks(dims: tuple[int, int, int],
-                          blocks: "list[tuple[int, int]] | None" = None,
-                          *, level: "int | str" = -1,
-                          machine=None, causal: bool = True,
-                          sustained_bw: float | None = None,
-                          spec=None,
-                          prior: "list[dict] | None" = None,
-                          dirty=None) -> list[dict]:
+def _rank_attention_blocks(dims: tuple[int, int, int],
+                           blocks: "list[tuple[int, int]] | None" = None,
+                           *, level: "int | str" = -1,
+                           machine=None, causal: bool = True,
+                           sustained_bw: float | None = None,
+                           spec=None,
+                           prior: "list[dict] | None" = None,
+                           dirty=None) -> list[dict]:
     """Rank flash-attention (bq, bkv) tilings by predicted ``T_ECM``.
 
     ``dims`` is ``(sq, skv, d)``.  Candidates whose working set (q tile,
@@ -583,3 +612,159 @@ def rank_attention_blocks(dims: tuple[int, int, int],
     # fit is the primary key: the traffic model assumes resident tiles
     out.sort(key=lambda r: 0 if r["fits"] else 1)
     return out
+
+
+# ---------------------------------------------------------------------------
+# The unified facade
+# ---------------------------------------------------------------------------
+
+
+_OPERATING_POINT_OBJECTIVES = ("edp", "energy", "performance")
+_UNSET = object()
+
+
+def rank(candidates=None, machine=None, *,
+         objective: str | None = None,
+         mesh=None,
+         level=_UNSET,
+         sustained_bw: float | None = None,
+         tiebreak=None,
+         prior: "list[dict] | None" = None,
+         dirty=None,
+         blocks=None,
+         widths: tuple[int, ...] | None = None,
+         causal: bool = True,
+         spec=None,
+         capacities: tuple[int, ...] | None = None,
+         total_work_units: float = 1.0,
+         f_ghz=None,
+         n_cores: int | None = None,
+         top: int | None = None,
+         n_chips: int = 256,
+         **mesh_opts):
+    """Rank candidates by the ECM model — the single autotuner entry point.
+
+    Dispatch is keyword-driven; ``candidates``/``machine`` mean whatever
+    the selected ranking expects:
+
+    ===========================  ==========================================
+    call shape                   ranking
+    ===========================  ==========================================
+    ``rank(cfg, m, mesh=N)``     joint (mesh shape, sharding profile,
+                                 block sizes) for a zoo config at ``N``
+                                 chips (:func:`repro.core.mesh.rank_meshes`;
+                                 ``mesh`` may also be a dict of its
+                                 options, extra keywords pass through)
+    ``rank(WorkloadSpec, N)``    first-order (data, model, accum)
+                                 factorizations -> ``list[Estimate]``
+                                 (the historical ``rank`` signature)
+    ``objective="edp" |``        chip operating points over the
+    ``"energy"|"performance"``   (workload x frequency x cores) surface
+    ``widths=...`` (or           stencil spatial blockings
+    ``objective="stencil"``)     (``candidates`` is the spec or name)
+    ``objective="matmul"``       blocked-GEMM (bm, bn, bk) tilings
+                                 (``candidates`` is ``(m, n, k)``)
+    ``objective="attention"``    flash-attention (bq, bkv) tilings
+                                 (``candidates`` is ``(sq, skv, d)``;
+                                 supports ``prior``/``dirty``)
+    default                      any ``repro.core.workload`` candidates by
+                                 ``T_ECM`` (supports ``prior``/``dirty``)
+    ===========================  ==========================================
+
+    Every arm delegates to the same implementation the historical
+    per-family names wrap, so output is ``==``-identical either way.
+    """
+    if mesh is not None:
+        from .mesh import rank_meshes
+
+        # ``mesh`` is either the chip count or a mapping of rank_meshes
+        # options (duck-typed, like the pre-lowered ``routed`` protocol)
+        opts = dict(mesh) if hasattr(mesh, "keys") else {}
+        n = int(opts.pop("n_chips", n_chips if hasattr(mesh, "keys")
+                         else mesh))
+        opts.update(mesh_opts)
+        if top is not None:
+            opts.setdefault("top", top)
+        if sustained_bw is not None:
+            opts.setdefault("sustained_bw", sustained_bw)
+        return rank_meshes(candidates, n, machine or "tpu-v5e", **opts)
+    if mesh_opts:
+        raise TypeError(f"unexpected keyword arguments without mesh=: "
+                        f"{sorted(mesh_opts)}")
+    if hasattr(candidates, "step_flops"):
+        # a WorkloadSpec: the historical ``rank(w, n_chips, m)`` shape,
+        # where ``machine`` may carry the chip count positionally
+        m_is_machine = hasattr(machine, "hbm_bytes_per_s")
+        n = (int(machine) if machine is not None and not m_is_machine
+             else n_chips)
+        m = machine if m_is_machine else TPU_V5E
+        return _rank_spec(candidates, n, m)
+    if objective in _OPERATING_POINT_OBJECTIVES:
+        return _rank_operating_points(
+            candidates, machine, objective=objective,
+            total_work_units=total_work_units, f_ghz=f_ghz,
+            sustained_bw=sustained_bw, n_cores=n_cores, top=top)
+    if objective == "stencil" or widths is not None:
+        return _rank_stencil_blocks(
+            candidates, widths, blocks,
+            level=("Mem" if level is _UNSET else level),
+            machine=machine, sustained_bw=sustained_bw,
+            capacities=capacities)
+    if objective == "matmul":
+        return _rank_matmul_blocks(
+            candidates, blocks, level=(-1 if level is _UNSET else level),
+            machine=machine, sustained_bw=sustained_bw, spec=spec)
+    if objective == "attention":
+        return _rank_attention_blocks(
+            candidates, blocks, level=(-1 if level is _UNSET else level),
+            machine=machine, causal=causal, sustained_bw=sustained_bw,
+            spec=spec, prior=prior, dirty=dirty)
+    if objective is None or objective == "t_ecm":
+        return _rank_workloads(
+            candidates, machine, level=(-1 if level is _UNSET else level),
+            sustained_bw=sustained_bw, tiebreak=tiebreak, prior=prior,
+            dirty=dirty)
+    raise ValueError(
+        f"unknown objective {objective!r}; expected one of "
+        f"{_OPERATING_POINT_OBJECTIVES + ('stencil', 'matmul', 'attention', 't_ecm')}")
+
+
+# ---------------------------------------------------------------------------
+# Deprecated per-family names (module __getattr__ shim)
+# ---------------------------------------------------------------------------
+
+#: old public name -> (implementation, suggested facade call shape)
+_DEPRECATED_RANKERS = {
+    "rank_workloads": ("_rank_workloads", "rank(workloads, machine)"),
+    "rank_operating_points": (
+        "_rank_operating_points",
+        'rank(workloads, machine, objective="edp")'),
+    "rank_stencil_blocks": (
+        "_rank_stencil_blocks", "rank(spec, machine, widths=...)"),
+    "rank_matmul_blocks": (
+        "_rank_matmul_blocks", 'rank(dims, machine, objective="matmul")'),
+    "rank_attention_blocks": (
+        "_rank_attention_blocks",
+        'rank(dims, machine, objective="attention")'),
+}
+
+
+def __getattr__(name: str):
+    entry = _DEPRECATED_RANKERS.get(name)
+    if entry is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    impl_name, hint = entry
+    impl = globals()[impl_name]
+
+    @functools.wraps(impl)
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"repro.core.autotune.{name} is deprecated; use "
+            f"repro.core.autotune.{hint} instead",
+            DeprecationWarning, stacklevel=2)
+        return impl(*args, **kwargs)
+
+    wrapper.__name__ = name
+    wrapper.__qualname__ = name
+    return wrapper

@@ -45,7 +45,7 @@ through this path (pinned in ``tests/golden_haswell_ecm.json`` via
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -443,52 +443,15 @@ def tpu_dp_scaling(resources, chip_counts=(1, 2, 4, 8, 16, 32, 64, 128,
     Returns per-``n`` arrays (``t_*_us`` in microseconds) plus
     ``n_saturation`` (``None`` when the program has no collectives —
     linear scaling, the chip-level core-bound case).
+
+    Since the multi-chip generalization landed this is the pure-DP
+    special case of :mod:`repro.core.mesh`: it delegates to
+    :func:`repro.core.mesh.dp_scaling` (bit-identical values through the
+    shared plan evaluator; tensor/pipeline/expert parallelism live
+    there).
     """
-    from .machine import TPU_V5E
-    from .tpu_ecm import TPUStepECM
+    from .mesh import dp_scaling
 
-    m = machine or TPU_V5E
-    peak = dtype_peak or m.peak_bf16_flops
-    exposed = (m.exposed_ici_fraction if exposed_ici_fraction is None
-               else exposed_ici_fraction)
-    colls = list(getattr(resources, "collectives", ()))
-    ici_bw = m.ici_link_bytes_per_s * m.ici_links_per_chip
-
-    def t_ici(n: int) -> float:
-        return sum(replace(c, group_size=n).wire_bytes_per_chip
-                   for c in colls) / ici_bw
-
-    # the floor: ring fraction (n-1)/n -> 1
-    floor_bytes = sum((2.0 if c.kind == "all-reduce" else 1.0) * c.out_bytes
-                      for c in colls)
-    t_floor = floor_bytes / ici_bw
-
-    chips, t_comp, t_hbm, t_coll, t_step = [], [], [], [], []
-    for n in chip_counts:
-        step = TPUStepECM(
-            t_comp=resources.flops / (n * peak),
-            t_hbm=resources.bytes_accessed / (n * m.hbm_bytes_per_s),
-            t_ici=t_ici(n), t_dcn=0.0,
-            exposed_ici_fraction=exposed, name=f"dp-{n}")
-        chips.append(int(n))
-        t_comp.append(step.t_comp)
-        t_hbm.append(step.t_hbm)
-        t_coll.append(step.t_ici)
-        t_step.append(step.t_ecm)
-    t1 = t_step[0] * chips[0]          # single-chip step time equivalent
-    # no collectives, or a fully-hidden ICI term (exposed fraction 0):
-    # nothing ever saturates — the chip-level core-bound case
-    n_sat = (None if t_floor <= 0 or exposed <= 0
-             else max(1, math.ceil(t1 / (exposed * t_floor))))
-    return {
-        "chips": chips,
-        "t_comp_us": [t * 1e6 for t in t_comp],
-        "t_hbm_us": [t * 1e6 for t in t_hbm],
-        "t_ici_us": [t * 1e6 for t in t_coll],
-        "t_step_us": [t * 1e6 for t in t_step],
-        "speedup": [t_step[0] / t for t in t_step],
-        "parallel_efficiency": [t_step[0] / (t * n) * chips[0]
-                                for n, t in zip(chips, t_step)],
-        "t_ici_floor_us": t_floor * 1e6,
-        "n_saturation": n_sat,
-    }
+    return dp_scaling(resources, chip_counts, machine=machine,
+                      dtype_peak=dtype_peak,
+                      exposed_ici_fraction=exposed_ici_fraction)

@@ -128,7 +128,7 @@ class TPUStepECM:
         """Adapter into the unified workload engine: the step model as a
         pre-lowered :class:`~repro.core.workload.RawWorkload`, so TPU
         steps rank/batch through the exact code path every other family
-        uses (``autotune.rank_workloads``, ``ECMBatch`` grids).  The
+        uses (``autotune.rank``, ``ECMBatch`` grids).  The
         record keeps its own (VMEM/HBM/ICI/DCN, us/step) hierarchy —
         batch it with other steps, not with cache-line workloads."""
         from .workload import tpu_step_workload

@@ -660,7 +660,7 @@ class AttentionSpec:
     score, plus the running-max compare and sum.  The online-softmax
     *rescale* (``acc *= alpha`` once per visited KV block) is the uop
     overhead that shrinks with the KV block size — the knob
-    ``rank_attention_blocks`` trades against VMEM/cache fit.
+    ``rank(..., objective="attention")`` trades against VMEM/cache fit.
     """
 
     name: str = "flash-attention"

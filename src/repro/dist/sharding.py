@@ -111,12 +111,64 @@ def dp_vocab(multi_pod: bool = False) -> ShardingProfile:
     )
 
 
-PROFILES: dict[str, Any] = {
-    "tp_dp": tp_dp,
-    "tp_fsdp": tp_fsdp,
-    "moe_ep": moe_ep,
-    "dp_vocab": dp_vocab,
-}
+# ---------------------------------------------------------------------------
+# Profile registry (mirrors MACHINES / workload_registry())
+# ---------------------------------------------------------------------------
+
+#: name -> constructor ``(multi_pod: bool = False) -> ShardingProfile``.
+#: Kept constructor-valued so the historical ``PROFILES[name](multi_pod)``
+#: call shape keeps working; prefer :func:`get_profile` for new code.
+PROFILES: dict[str, Any] = {}
+_PROFILE_ALIASES: dict[str, str] = {}
+
+
+def register_profile(profile_or_ctor, *aliases, name: str | None = None):
+    """Register a sharding profile by name, mirroring ``register_machine``.
+
+    Accepts either a constructor ``ctor(multi_pod: bool = False) ->
+    ShardingProfile`` or a concrete :class:`ShardingProfile` (wrapped in a
+    constructor that ignores ``multi_pod``).  Returns the argument so it
+    can be used as a decorator.
+    """
+    if isinstance(profile_or_ctor, ShardingProfile):
+        prof = profile_or_ctor
+        key = name or prof.name
+
+        def ctor(multi_pod: bool = False, _p=prof) -> ShardingProfile:
+            return _p
+    else:
+        ctor = profile_or_ctor
+        key = name or ctor(False).name
+    PROFILES[key] = ctor
+    for a in aliases:
+        _PROFILE_ALIASES[a] = key
+    return profile_or_ctor
+
+
+def get_profile(name_or_profile, *,
+                multi_pod: bool = False) -> ShardingProfile:
+    """Resolve a profile by registered name (a :class:`ShardingProfile`
+    passes through unchanged, mirroring ``get_machine``)."""
+    if isinstance(name_or_profile, ShardingProfile):
+        return name_or_profile
+    key = _PROFILE_ALIASES.get(name_or_profile, name_or_profile)
+    try:
+        ctor = PROFILES[key]
+    except KeyError:
+        raise KeyError(
+            f"unknown sharding profile {name_or_profile!r}; registered: "
+            f"{', '.join(profile_names())}") from None
+    return ctor(multi_pod)
+
+
+def profile_names() -> tuple[str, ...]:
+    """Sorted names of all registered sharding profiles."""
+    return tuple(sorted(PROFILES))
+
+
+for _ctor in (tp_dp, tp_fsdp, moe_ep, dp_vocab):
+    register_profile(_ctor)
+del _ctor
 
 
 # ---------------------------------------------------------------------------

@@ -56,7 +56,7 @@ def tuned_blocks(sq: int, sk: int, d: int, *, causal: bool = True,
                  machine: str = "tpu-v5e") -> tuple[int, int]:
     """ECM-autotuned ``(bq, bk)`` for :func:`flash_attention` on a
     registry machine (candidates are tilings the kernel accepts)."""
-    from repro.core.autotune import rank_attention_blocks
+    from repro.core.autotune import rank
 
-    return rank_attention_blocks((sq, sk, d), machine=machine,
-                                 causal=causal)[0]["block"]
+    return rank((sq, sk, d), machine, objective="attention",
+                causal=causal)[0]["block"]

@@ -29,7 +29,7 @@ def matmul_workload(m: int, n: int, k: int, *, bm=K.DEFAULT_BM,
                     bn=K.DEFAULT_BN, bk=K.DEFAULT_BK):
     """The analytic ECM workload of this kernel at a given blocking —
     lower it on any registry machine (``repro.core.workload_ecm``) or
-    hand it to ``autotune.rank_workloads``."""
+    hand it to ``autotune.rank``."""
     from repro.core.workload import MATMUL_F32, MatmulWorkload
 
     return MatmulWorkload(MATMUL_F32, m=m, n=n, k=k,
@@ -40,6 +40,6 @@ def tuned_blocks(m: int, n: int, k: int, *,
                  machine: str = "tpu-v5e") -> tuple[int, int, int]:
     """ECM-autotuned ``(bm, bn, bk)`` for :func:`matmul` on a registry
     machine (candidates are restricted to tilings the kernel accepts)."""
-    from repro.core.autotune import rank_matmul_blocks
+    from repro.core.autotune import rank
 
-    return rank_matmul_blocks((m, n, k), machine=machine)[0]["block"]
+    return rank((m, n, k), machine, objective="matmul")[0]["block"]

@@ -32,8 +32,8 @@ from repro.configs.base import ArchDef, ShapeSpec
 from repro.core import hlo as hlo_mod
 from repro.core.tpu_ecm import MeshSpec, from_resources
 from repro.dist.sharding import (
-    PROFILES,
     ShardingProfile,
+    get_profile,
     param_shardings,
     use_mesh_context,
 )
@@ -103,7 +103,7 @@ def lower_cell(arch: ArchDef, shape: ShapeSpec, *, multi_pod: bool,
     (record dict, lowered, compiled)."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     profile_name = profile_name or arch.profile
-    profile = PROFILES[profile_name](multi_pod)
+    profile = get_profile(profile_name, multi_pod=multi_pod)
     opt_cfg = opt_cfg or AdamWConfig(moment_dtype=arch.moment_dtype)
     kv_div = _kv_divisible(arch, mesh)
     in_prof = _input_profile(arch, mesh, multi_pod=multi_pod,
@@ -266,9 +266,13 @@ def predict_table(records, *, machine: str = "tpu-v5e") -> list[dict]:
     prediction against the compiled-HLO three-term model.
 
     Skipped and errored cells stay in the table with their reason —
-    previously they vanished from the run output entirely.
+    previously they vanished from the run output entirely.  ``best_mesh``
+    is the parallelism model's ranked winner at the cell's chip count
+    (``repro.core.mesh.rank_meshes``) — what the mesh *should* have
+    been, next to what the cell actually ran on.
     """
     from repro.core.compose import DRYRUN_TOLERANCE
+    from repro.core.mesh import rank_meshes
 
     lo, hi = DRYRUN_TOLERANCE
     rows = []
@@ -280,19 +284,28 @@ def predict_table(records, *, machine: str = "tpu-v5e") -> list[dict]:
             rows.append(row)
             continue
         shape = SHAPES[rec["shape"]]
+        pods = 2 if rec["mesh"] == "2x16x16" else 1
         n_chips = 512 if rec["mesh"] == "2x16x16" else 256
         pred = composed_step_s(rec["arch"], shape, n_chips, machine=machine)
         sim = float(rec["ecm"]["t_ecm_s"])
         ratio = pred / sim if sim > 0 else float("inf")
+        phase = shape.kind if shape.kind in ("train", "decode") else "prefill"
+        best = rank_meshes(
+            rec["arch"], n_chips, machine, batch=shape.global_batch,
+            seq_len=shape.seq_len,
+            context=shape.seq_len if phase == "decode" else None,
+            phase=phase, pods=pods, include_blocks=False, top=1)[0]
         row.update(predicted_s=pred, simulated_s=sim, ratio=ratio,
-                   agrees=bool(lo <= ratio <= hi))
+                   agrees=bool(lo <= ratio <= hi),
+                   best_mesh=f"{best['mesh']}/{best['profile']}")
         rows.append(row)
     return rows
 
 
 def format_predict_table(rows) -> str:
     header = (f"{'arch':<24} {'shape':<12} {'mesh':<8} "
-              f"{'predicted_s':>12} {'simulated_s':>12} {'ratio':>7}  ok")
+              f"{'predicted_s':>12} {'simulated_s':>12} {'ratio':>7}  "
+              f"{'ok':<3} best_mesh")
     lines = [header, "-" * len(header)]
     for r in rows:
         if r["status"] != "ok":
@@ -302,7 +315,8 @@ def format_predict_table(rows) -> str:
         lines.append(
             f"{r['arch']:<24} {r['shape']:<12} {r['mesh']:<8} "
             f"{r['predicted_s']:>12.4g} {r['simulated_s']:>12.4g} "
-            f"{r['ratio']:>7.2f}  {'yes' if r['agrees'] else 'NO'}")
+            f"{r['ratio']:>7.2f}  {'yes' if r['agrees'] else 'NO':<3} "
+            f"{r.get('best_mesh', '')}")
     return "\n".join(lines)
 
 

@@ -67,7 +67,7 @@ def main() -> int:
     import numpy as np
 
     from repro.configs import ARCH_NAMES, get_arch
-    from repro.dist.sharding import PROFILES, use_mesh_context
+    from repro.dist.sharding import get_profile, use_mesh_context
     from repro.launch.mesh import make_host_mesh, make_production_mesh
     from repro.models.common import materialize
 
@@ -81,7 +81,7 @@ def main() -> int:
     multi_pod = args.mesh == "multi-pod"
     mesh = (make_host_mesh(model=1) if args.mesh == "host"
             else make_production_mesh(multi_pod=multi_pod))
-    profile = PROFILES[arch.profile](multi_pod)
+    profile = get_profile(arch.profile, multi_pod=multi_pod)
     max_len = args.prompt_len + args.gen + 8
 
     from repro.configs.base import ShapeSpec

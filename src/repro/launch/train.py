@@ -16,7 +16,7 @@ import os
 from repro.configs import ARCH_NAMES, get_arch
 from repro.configs.base import ShapeSpec
 from repro.data.arch_data import ArchSyntheticDataset
-from repro.dist.sharding import PROFILES
+from repro.dist.sharding import get_profile
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.optim import AdamWConfig
 from repro.optim.schedule import linear_warmup_cosine
@@ -50,7 +50,7 @@ def main() -> int:
     else:
         multi_pod = args.mesh == "multi-pod"
         mesh = make_production_mesh(multi_pod=multi_pod)
-    profile = PROFILES[arch.profile](multi_pod)
+    profile = get_profile(arch.profile, multi_pod=multi_pod)
 
     shape = ShapeSpec("cli_train", seq_len=args.seq,
                       global_batch=args.batch, kind="train")

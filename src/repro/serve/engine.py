@@ -15,8 +15,9 @@ The model is the scheduler's brain in three places:
 * **bucket predictions** — :class:`BucketModel` lowers a decode-regime
   attention workload (one query row streaming the whole KV: ``sq = bq
   = 1``, the bandwidth-bound case ECM predicts well) per power-of-two
-  context bucket, with ``rank_attention_blocks`` picking the KV block
-  size per bucket, and composes per-step time as the batch's summed
+  context bucket, with ``rank(..., objective="attention")`` picking the
+  KV block size per bucket, and composes per-step time as the batch's
+  summed
   per-request cycles over the data-parallel devices;
 * **admission control** — a request is admitted only if its predicted
   finish (prefill + remaining decode steps at the would-be batch size)
@@ -38,7 +39,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.autotune import rank_attention_blocks
+from repro.core.autotune import rank
 from repro.core.machine import MachineModel, get_machine
 from repro.core.workload import AttentionSpec, AttentionWorkload, lower
 
@@ -86,7 +87,8 @@ class BucketModel:
     — one query row streaming the whole KV, ``causal=False`` (decode
     attends to everything already cached).  Prefill buckets lower the
     causal tiled workload at the bucket's square shape.  For each
-    bucket ``rank_attention_blocks`` ranks the KV block candidates and
+    bucket ``rank(..., objective="attention")`` ranks the KV block
+    candidates and
     the engine serves from the winner (degradation level 2 falls back
     to the smallest fitting candidate).  ``calib`` starts at 1.0 per
     bucket and is pulled toward measured/predicted by
@@ -124,6 +126,10 @@ class BucketModel:
         self._rankings: dict[tuple[str, int], list[dict]] = {}
         self._dirty: set[tuple[str, int]] = set()
         self._model_token = None
+        #: the ranked (data, model) device split; ``None`` until the
+        #: engine installs one (trivially all-DP) or :meth:`remesh`
+        #: re-ranks it after a device count change
+        self.mesh_plan: dict | None = None
 
     # -- bucket construction ------------------------------------------------
 
@@ -162,9 +168,9 @@ class BucketModel:
         if ent is None or key in self._dirty:
             blocks = [(1, bkv) for bkv in self.bkv_candidates if bkv <= cb] \
                 or [(1, cb)]
-            ranked = rank_attention_blocks(
-                (1, cb, self.model.d), blocks=blocks, machine=self.machine,
-                causal=False, spec=self.spec,
+            ranked = rank(
+                (1, cb, self.model.d), self.machine, objective="attention",
+                blocks=blocks, causal=False, spec=self.spec,
                 prior=self._rankings.get(key), dirty=())
             self._rankings[key] = ranked
             self._dirty.discard(key)
@@ -189,9 +195,9 @@ class BucketModel:
                       for bq in self.bkv_candidates if bq <= cb
                       for bkv in self.bkv_candidates if bkv <= cb] \
                 or [(cb, cb)]
-            ranked = rank_attention_blocks(
-                (cb, cb, self.model.d), blocks=blocks, machine=self.machine,
-                causal=True, spec=self.spec,
+            ranked = rank(
+                (cb, cb, self.model.d), self.machine, objective="attention",
+                blocks=blocks, causal=True, spec=self.spec,
                 prior=self._rankings.get(key), dirty=())
             self._rankings[key] = ranked
             self._dirty.discard(key)
@@ -282,6 +288,47 @@ class BucketModel:
         devices (requests partition across devices; the step ends when
         the slowest share does — modeled as an even split)."""
         return cycles / (self.machine.clock_hz * max(n_devices, 1))
+
+    def remesh(self, n_devices: int, *, batch: int = 16) -> dict:
+        """Re-rank the (data, model) split of the serving mesh for a new
+        device count — the device-loss path.
+
+        The same tradeoff :mod:`repro.core.mesh` prices for training, at
+        serving granularity: tensor-parallel ``model`` ways shard the
+        heads (cutting per-token decode latency by ``model``) but pay a
+        ring all-reduce of the attention output over ICI every token,
+        while data-parallel ways multiply throughput with no collective.
+        Splits are ranked by predicted step seconds at an even ``batch``
+        split over the data ways.  Only already-built decode buckets are
+        consulted (falling back to ``min_ctx``), so re-ranking never
+        grows the bucket tables the bench artifacts pin.
+        """
+        from repro.core.mesh import _tpu_chip
+
+        n = max(int(n_devices), 1)
+        cb = max(self._decode, default=self.min_ctx)
+        cy = self.decode_cy_per_token(cb, calibrated=False)
+        chip = _tpu_chip(self.machine)
+        ici_bw = chip.ici_link_bytes_per_s * chip.ici_links_per_chip
+        # row-parallel attention output: d_model activations per token
+        # per layer, ring all-reduce moves 2*(m-1)/m of the payload
+        ar_bytes = (2.0 * self.model.layers * self.model.heads
+                    * self.model.d * self.model.elem_bytes)
+        plans = []
+        m_ways = 1
+        while m_ways <= n:
+            if n % m_ways == 0:
+                data = n // m_ways
+                t_tok = cy / (self.machine.clock_hz * m_ways)
+                if m_ways > 1:
+                    t_tok += ar_bytes * (m_ways - 1) / m_ways / ici_bw
+                t_step = t_tok * -(-max(batch, 1) // data)
+                plans.append({"data": data, "model": m_ways,
+                              "t_step_s": t_step, "ctx_bucket": cb})
+            m_ways *= 2
+        plans.sort(key=lambda p: (p["t_step_s"], p["model"]))
+        self.mesh_plan = plans[0]
+        return self.mesh_plan
 
     # -- calibration --------------------------------------------------------
 
@@ -376,6 +423,9 @@ class ServeEngine:
         self.buckets = BucketModel(
             cfg.machine, model, min_ctx=cfg.min_ctx, max_ctx=cfg.max_ctx,
             bkv_candidates=cfg.bkv_candidates, source=cfg.bucket_source)
+        # all-DP is the trivial split; device loss re-ranks via remesh()
+        self.buckets.mesh_plan = {"data": cfg.n_devices, "model": 1,
+                                  "t_step_s": None, "ctx_bucket": None}
         self.rng = np.random.default_rng(cfg.seed)
         self.now = 0.0
         self.step_idx = 0
@@ -638,6 +688,9 @@ class ServeEngine:
                 self._bounce_lost_shard(running, queue, before,
                                         self.n_devices)
                 self._requeue_overflow(running, queue, "device loss")
+                # the surviving device count is a new machine shape:
+                # re-rank the (data, model) split before the next step
+                self.buckets.remesh(self.n_devices, batch=cfg.max_batch)
 
         predicted = self.predict_step_s(running, prefills)
         raw = self.predict_step_s(running, prefills, calibrated=False)

@@ -15,8 +15,8 @@ Pinned here:
    the prediction equals ``T_OL`` at every residence level, and golden
    Haswell models are pinned bit-identical
    (``tests/golden_haswell_ecm.json``).
-4. **Autotuners** — ``rank_matmul_blocks`` / ``rank_attention_blocks``
-   rank through the generic ``rank_workloads`` path, and the chosen
+4. **Autotuners** — ``rank(..., objective="matmul"|"attention")``
+   ranks through the generic workload path, and the chosen
    blockings drive the real Pallas kernels (interpret mode) to
    oracle-identical results.
 5. **Bench-regression gate** — ``tools/check_bench.py --compare`` passes
@@ -49,8 +49,7 @@ from repro.core import (
 from repro.core.autotune import (
     attention_block_candidates,
     matmul_block_candidates,
-    rank_attention_blocks,
-    rank_matmul_blocks,
+    rank,
 )
 
 GOLDEN = json.loads(
@@ -263,7 +262,7 @@ def test_matmul_candidates_divide_dims():
 
 
 def test_rank_matmul_blocks_prefers_core_bound_tiles():
-    ranked = rank_matmul_blocks((4096, 4096, 4096), machine="haswell-ep")
+    ranked = rank((4096, 4096, 4096), "haswell-ep", objective="matmul")
     best, worst = ranked[0], ranked[-1]
     assert best["core_bound"] and best["t_ecm"] <= worst["t_ecm"]
     assert worst["block"][:2] == (32, 32) and not worst["core_bound"]
@@ -273,7 +272,7 @@ def test_rank_matmul_blocks_prefers_core_bound_tiles():
 
 
 def test_rank_attention_blocks_fit_constraint():
-    ranked = rank_attention_blocks((4096, 4096, 128), machine="haswell-ep")
+    ranked = rank((4096, 4096, 128), "haswell-ep", objective="attention")
     fitting = [r["fits"] for r in ranked]
     # all fitting candidates rank before any non-fitting one
     assert fitting == sorted(fitting, reverse=True)

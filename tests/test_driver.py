@@ -6,7 +6,7 @@ import pytest
 from repro.configs import get_arch
 from repro.configs.base import ShapeSpec
 from repro.data.arch_data import ArchSyntheticDataset
-from repro.dist.sharding import PROFILES
+from repro.dist.sharding import get_profile
 from repro.launch.mesh import make_host_mesh
 from repro.optim import AdamWConfig
 from repro.optim.schedule import constant
@@ -16,7 +16,7 @@ from repro.train.driver import InjectedFailure, Trainer, TrainerConfig
 def _mk(tmp_path, total_steps, hooks=None, interval=5, lr=1e-3):
     arch = get_arch("internlm2-1.8b", smoke=True)
     mesh = make_host_mesh(model=1)
-    profile = PROFILES[arch.profile](False)
+    profile = get_profile(arch.profile)
     shape = ShapeSpec("t", seq_len=16, global_batch=2, kind="train")
     data = ArchSyntheticDataset(arch, shape, seed=3)
     cfg = TrainerConfig(total_steps=total_steps, ckpt_dir=str(tmp_path),

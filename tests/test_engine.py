@@ -180,27 +180,28 @@ def test_simulator_level_memo_tracks_registry_generation():
 
 
 def test_incremental_rank_workloads_identical_to_full():
-    from repro.core.autotune import rank_workloads
+    from repro.core.autotune import rank
 
     ws = list(workload_registry().values())
-    full = rank_workloads(ws, "haswell-ep")
-    assert rank_workloads(ws, "haswell-ep", prior=full, dirty=None) == full
-    assert rank_workloads(ws, "haswell-ep", prior=full,
-                          dirty=("striad", "ddot")) == full
-    assert rank_workloads(ws, "haswell-ep", prior=full,
-                          dirty=(0, len(ws) - 1)) == full
+    full = rank(ws, "haswell-ep")
+    assert rank(ws, "haswell-ep", prior=full, dirty=None) == full
+    assert rank(ws, "haswell-ep", prior=full,
+                dirty=("striad", "ddot")) == full
+    assert rank(ws, "haswell-ep", prior=full,
+                dirty=(0, len(ws) - 1)) == full
 
 
 def test_incremental_rank_attention_blocks_identical_to_full():
-    from repro.core.autotune import rank_attention_blocks
+    from repro.core.autotune import rank
 
     dims = (4096, 4096, 128)
-    full = rank_attention_blocks(dims)
-    assert rank_attention_blocks(dims, prior=full, dirty=()) == full
+    full = rank(dims, objective="attention")
+    assert rank(dims, objective="attention", prior=full, dirty=()) == full
     dirty = tuple(tuple(r["block"]) for r in full[:3])
-    assert rank_attention_blocks(dims, prior=full, dirty=dirty) == full
+    assert rank(dims, objective="attention", prior=full,
+                dirty=dirty) == full
     with pytest.raises(ValueError):
-        rank_attention_blocks(dims, prior=full[1:], dirty=())
+        rank(dims, objective="attention", prior=full[1:], dirty=())
 
 
 def test_bucket_recalibration_refreshes_with_zero_table_traffic():

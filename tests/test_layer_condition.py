@@ -13,7 +13,7 @@ from repro.core import (
     stencil_block_batch,
     stencil_ecm,
 )
-from repro.core.autotune import rank_stencil_blocks, stencil_block_candidates
+from repro.core.autotune import rank, stencil_block_candidates
 
 L1, L2, L3 = HASWELL_EP.capacities
 
@@ -133,7 +133,7 @@ def test_misses_batch_matches_scalar():
 
 
 def test_rank_stencil_blocks_prefers_lc_restoring_block():
-    ranked = rank_stencil_blocks("jacobi2d", (8192,))
+    ranked = rank("jacobi2d", widths=(8192,))
     assert ranked[0]["misses_l1"] == 1
     assert ranked[0]["t_ecm"] <= ranked[-1]["t_ecm"]
     ts = [r["t_ecm"] for r in ranked]

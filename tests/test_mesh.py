@@ -1,0 +1,345 @@
+"""Multi-chip parallelism model (``repro.core.mesh``), the unified
+``autotune.rank`` facade, the sharding-profile registry and the ring
+wire-byte arithmetic the collective terms are built from."""
+import warnings
+
+import pytest
+
+from repro.core import autotune
+from repro.core.autotune import rank
+from repro.core.hlo import CollectiveOp, HLOResources
+from repro.core.mesh import (
+    MeshPlan,
+    dp_scaling,
+    plan_candidates,
+    plan_collectives,
+    rank_meshes,
+)
+from repro.core.scaling import tpu_dp_scaling
+from repro.dist.sharding import (
+    PROFILES,
+    ShardingProfile,
+    get_profile,
+    profile_names,
+    register_profile,
+)
+
+MESH_KW = dict(batch=8, seq_len=2048)
+
+
+# ---------------------------------------------------------------------------
+# 1. Ring wire bytes per chip (the collective-term primitive)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,expected", [
+    ("all-gather", 768.0),           # (4-1)/4 * 1024
+    ("reduce-scatter", 768.0),       # same ring traffic as AG
+    ("all-to-all", 768.0),           # each chip keeps 1/4
+    ("all-reduce", 1536.0),          # RS + AG: 2 * (4-1)/4 * 1024
+    ("collective-permute", 1024.0),  # point-to-point: full buffer
+])
+def test_wire_bytes_per_chip_ring_multipliers(kind, expected):
+    op = CollectiveOp(kind=kind, out_bytes=1024.0, group_size=4)
+    assert op.wire_bytes_per_chip == expected
+
+
+def test_wire_bytes_per_chip_degenerate_groups():
+    # group of 1: the ring fraction vanishes for the sharded collectives
+    assert CollectiveOp("all-gather", 1024.0, 1).wire_bytes_per_chip == 0.0
+    assert CollectiveOp("all-reduce", 1024.0, 1).wire_bytes_per_chip == 0.0
+    # ...but a permute still moves the whole buffer
+    assert CollectiveOp("collective-permute", 1024.0,
+                        1).wire_bytes_per_chip == 1024.0
+    # group_size=0 is clamped, not a ZeroDivisionError
+    assert CollectiveOp("all-gather", 1024.0, 0).wire_bytes_per_chip == 0.0
+
+
+# ---------------------------------------------------------------------------
+# 2. Pure-DP bit-identity: tpu_dp_scaling == mesh.dp_scaling
+# ---------------------------------------------------------------------------
+
+
+def _resources(with_collective=True):
+    res = HLOResources()
+    res.flops = 6.0e15
+    res.bytes_accessed = 4.0e12
+    if with_collective:
+        res.collectives = [CollectiveOp(kind="all-reduce",
+                                        out_bytes=4.0e9, group_size=1)]
+    return res
+
+
+def test_dp_scaling_bit_identical_to_legacy():
+    """The refactor's no-drift contract: the legacy entry point routed
+    through the generalized plan evaluator returns ``==``-identical
+    output (same keys, same floats, no tolerance)."""
+    assert tpu_dp_scaling(_resources()) == dp_scaling(_resources())
+    assert tpu_dp_scaling(_resources(False)) == dp_scaling(_resources(False))
+    legacy = tpu_dp_scaling(_resources(), chip_counts=(1, 4, 16),
+                            exposed_ici_fraction=0.5)
+    assert legacy == dp_scaling(_resources(), (1, 4, 16),
+                                exposed_ici_fraction=0.5)
+
+
+# ---------------------------------------------------------------------------
+# 3. MeshPlan arithmetic + candidate enumeration
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_plan_labels_and_bubble():
+    p = MeshPlan(data=4, model=2)
+    assert p.label == "dp4xtp2" and p.n_chips == 8
+    assert p.bubble_fraction == 0.0 and p.pipeline_scale == 1.0
+    pp = MeshPlan(data=4, pipe=2, microbatches=8)
+    assert pp.label == "dp4xpp2"
+    assert pp.bubble_fraction == pytest.approx((2 - 1) / (8 + 2 - 1))
+    assert pp.pipeline_scale == pytest.approx((8 + 2 - 1) / 8)
+    mp = MeshPlan(data=4, model=2, pods=2)
+    assert mp.label == "2podxdp4xtp2" and mp.multi_pod
+    assert mp.n_chips == 16 and mp.data_total == 8
+
+
+def test_plan_candidates_cover_the_chip_count():
+    plans = plan_candidates(8)
+    assert plans and all(p.n_chips == 8 for p in plans)
+    # pure-DP collapses the model-axis profiles to one representative
+    # per FSDP class: no duplicate (data, model, pipe, profile) rows
+    assert len({(p.data, p.model, p.pipe, p.pods, p.profile)
+                for p in plans}) == len(plans)
+    tp1 = [p for p in plans if p.model == 1 and p.pipe == 1]
+    assert all(p.profile in ("tp_dp", "tp_fsdp") for p in tp1)
+
+
+# ---------------------------------------------------------------------------
+# 4. Analytic collective volumes per plan
+# ---------------------------------------------------------------------------
+
+
+def test_plan_collectives_tp_volume_shrinks_with_data():
+    """Activation collectives are per data-shard: doubling the batch
+    split halves the per-chip TP all-reduce volume, while the gradient
+    sync (the Eq. 2 floor) does not shrink."""
+    a = plan_collectives("internlm2-1.8b", MeshPlan(data=2, model=2),
+                         **MESH_KW)
+    b = plan_collectives("internlm2-1.8b", MeshPlan(data=4, model=2),
+                         **MESH_KW)
+    ar_a = sum(c.wire_bytes_per_chip for c in a.ici
+               if c.kind == "all-reduce" and c not in a.floor)
+    ar_b = sum(c.wire_bytes_per_chip for c in b.ici
+               if c.kind == "all-reduce" and c not in b.floor)
+    assert ar_b == pytest.approx(ar_a / 2)
+    assert a.floor and b.floor
+    assert b.floor_bytes == pytest.approx(a.floor_bytes)
+
+
+def test_plan_collectives_moe_has_all_to_all():
+    colls = plan_collectives("granite-moe-1b-a400m",
+                             MeshPlan(data=2, model=4, profile="moe_ep"),
+                             **MESH_KW)
+    assert any(c.kind == "all-to-all" for c in colls.ici)
+
+
+def test_plan_collectives_fsdp_gathers_raise_the_floor():
+    dp = plan_collectives("internlm2-1.8b", MeshPlan(data=8), **MESH_KW)
+    fsdp = plan_collectives("internlm2-1.8b",
+                            MeshPlan(data=8, profile="tp_fsdp"), **MESH_KW)
+    assert any(c.kind == "all-gather" for c in fsdp.floor)
+    assert fsdp.floor_bytes > dp.floor_bytes
+
+
+def test_plan_collectives_multi_pod_splits_fabrics():
+    colls = plan_collectives("internlm2-1.8b",
+                             MeshPlan(data=8, model=2, pods=2), **MESH_KW)
+    assert colls.dcn, "2-pod gradient sync must put traffic on DCN"
+    assert colls.ici
+
+
+# ---------------------------------------------------------------------------
+# 5. Golden-pinned joint winners (the BENCH_mesh.json contract)
+# ---------------------------------------------------------------------------
+
+#: (config, n_chips) -> (mesh label, profile, t_step_us)
+GOLDEN_WINNERS = {
+    ("internlm2-1.8b", 8): ("dp4xtp2", "tp_dp", 551013.8048099199),
+    ("internlm2-1.8b", 16): ("dp8xtp2", "tp_dp", 292535.77664496),
+    ("internlm2-1.8b", 64): ("dp16xtp4", "tp_dp", 90081.06574024621),
+    ("glm4-9b", 8): ("dp4xtp2", "tp_fsdp", 2690374.523189349),
+    ("glm4-9b", 16): ("dp8xtp2", "tp_fsdp", 1454920.7399946745),
+    ("glm4-9b", 64): ("dp8xtp8", "tp_dp", 438609.01633047726),
+    ("granite-moe-1b-a400m", 8): ("dp4xpp2", "tp_dp", 214018.8132070315),
+    ("granite-moe-1b-a400m", 16): ("dp8xpp2", "tp_dp", 120376.12916351572),
+    ("granite-moe-1b-a400m", 64): ("dp16xpp4", "tp_dp", 42181.72501329647),
+}
+
+
+@pytest.mark.parametrize("config", ["internlm2-1.8b", "glm4-9b",
+                                    "granite-moe-1b-a400m"])
+def test_golden_mesh_winners(config):
+    for n in (8, 16, 64):
+        rows = rank(config, "tpu-v5e", mesh=n, **MESH_KW)
+        mesh_label, profile, t_step = GOLDEN_WINNERS[(config, n)]
+        w = rows[0]
+        assert (w["mesh"], w["profile"]) == (mesh_label, profile), (n, w)
+        assert w["t_step_us"] == pytest.approx(t_step, rel=1e-9)
+        assert w["fits_hbm"] and w["block"] is not None
+        assert w["data"] * w["model"] * w["pipe"] * w.get("pods", 1) == n
+        # fitting plans sort strictly before HBM-overflowing ones
+        fits = [r["fits_hbm"] for r in rows]
+        assert fits == sorted(fits, reverse=True)
+
+
+def test_rank_meshes_decode_phase_and_top():
+    rows = rank_meshes("internlm2-1.8b", 8, "tpu-v5e", batch=8,
+                       seq_len=1, context=4096, phase="decode",
+                       include_blocks=False, top=3)
+    assert len(rows) == 3
+    assert rows[0]["t_step_us"] <= rows[1]["t_step_us"]
+
+
+# ---------------------------------------------------------------------------
+# 6. The unified facade: dispatch, mesh kwarg forms, deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_facade_mesh_int_equals_rank_meshes():
+    via_facade = rank("internlm2-1.8b", "tpu-v5e", mesh=8,
+                      include_blocks=False, **MESH_KW)
+    direct = rank_meshes("internlm2-1.8b", 8, "tpu-v5e",
+                         include_blocks=False, **MESH_KW)
+    assert via_facade == direct
+
+
+def test_facade_mesh_dict_form():
+    a = rank("internlm2-1.8b", "tpu-v5e",
+             mesh={"n_chips": 8, "include_blocks": False}, **MESH_KW)
+    b = rank("internlm2-1.8b", "tpu-v5e", mesh=8, include_blocks=False,
+             **MESH_KW)
+    assert a == b
+
+
+def test_facade_rejects_unknown_objective_and_stray_kwargs():
+    with pytest.raises(ValueError, match="unknown objective"):
+        rank([], "haswell-ep", objective="speed")
+    with pytest.raises(TypeError, match="without mesh="):
+        rank((4096, 4096, 4096), "haswell-ep", objective="matmul",
+             include_blocks=False)
+
+
+@pytest.mark.parametrize("name,call", [
+    ("rank_matmul_blocks",
+     lambda fn: fn((512, 512, 512), machine="haswell-ep")),
+    ("rank_attention_blocks",
+     lambda fn: fn((1024, 1024, 128), machine="haswell-ep")),
+    ("rank_stencil_blocks",
+     lambda fn: fn("jacobi2d", (8192,))),
+])
+def test_deprecated_wrappers_warn_and_match(name, call):
+    with pytest.warns(DeprecationWarning, match=f"{name} is deprecated"):
+        old = call(getattr(autotune, name))
+    impl = getattr(autotune, f"_{name}")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # the impl itself must not warn
+        assert call(impl) == old
+
+
+def test_deprecated_rank_workloads_matches_facade():
+    from repro.core import BENCHMARKS
+    from repro.core.workload import StreamWorkload
+
+    ws = [StreamWorkload(BENCHMARKS[k]) for k in ("copy", "ddot", "striad")]
+    with pytest.warns(DeprecationWarning):
+        old = autotune.rank_workloads(ws, "haswell-ep")
+    assert rank(ws, "haswell-ep") == old
+
+
+def test_deprecated_rank_operating_points_matches_facade():
+    from repro.core import BENCHMARKS
+    from repro.core.workload import StreamWorkload
+
+    ws = [StreamWorkload(BENCHMARKS["striad"])]
+    with pytest.warns(DeprecationWarning):
+        old = autotune.rank_operating_points(ws, "haswell-ep",
+                                             objective="edp")
+    assert rank(ws, "haswell-ep", objective="edp") == old
+
+
+def test_unknown_autotune_attribute_still_raises():
+    with pytest.raises(AttributeError):
+        autotune.no_such_ranker
+
+
+# ---------------------------------------------------------------------------
+# 7. Sharding-profile registry
+# ---------------------------------------------------------------------------
+
+
+def test_get_profile_roundtrip_and_errors():
+    for name in profile_names():
+        p = get_profile(name)
+        assert isinstance(p, ShardingProfile) and p.name == name
+        assert PROFILES[name]() == p        # historical call shape intact
+    with pytest.raises(KeyError, match="tp_dp"):
+        get_profile("no_such_profile")
+
+
+def test_get_profile_instance_passthrough():
+    inst = get_profile("tp_dp", multi_pod=True)
+    assert get_profile(inst) is inst
+    assert "pod" in inst.activation_rules["batch"]
+
+
+def test_register_profile_constructor_and_instance():
+    @register_profile
+    def zz_test_prof(multi_pod=False):
+        base = get_profile("tp_dp", multi_pod=multi_pod)
+        return ShardingProfile("zz_test_prof", rules=base.rules,
+                               activation_rules=base.activation_rules)
+
+    try:
+        assert "zz_test_prof" in profile_names()
+        assert get_profile("zz_test_prof").name == "zz_test_prof"
+        inst = ShardingProfile("zz_inst", rules={},
+                               activation_rules={"batch": ("data",)})
+        register_profile(inst)
+        assert get_profile("zz_inst") == inst
+    finally:
+        PROFILES.pop("zz_test_prof", None)
+        PROFILES.pop("zz_inst", None)
+
+
+# ---------------------------------------------------------------------------
+# 8. Serving + launcher integration
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_model_remesh_ranks_device_split():
+    from repro.serve import EngineConfig, ServeEngine
+
+    engine = ServeEngine(EngineConfig(n_devices=4))
+    # the trivial all-DP plan is installed up front
+    assert engine.buckets.mesh_plan == {"data": 4, "model": 1,
+                                        "t_step_s": None, "ctx_bucket": None}
+    plan = engine.buckets.remesh(2)
+    assert plan["data"] * plan["model"] == 2
+    assert plan["t_step_s"] > 0
+    assert engine.buckets.mesh_plan is plan
+
+
+def test_predict_table_carries_best_mesh():
+    from repro.launch.dryrun import (
+        SHAPES,
+        composed_step_s,
+        format_predict_table,
+        predict_table,
+    )
+
+    pred = composed_step_s("internlm2-1.8b", SHAPES["decode_32k"], 256)
+    rec = {"arch": "internlm2-1.8b", "shape": "decode_32k",
+           "mesh": "16x16", "status": "ok", "ecm": {"t_ecm_s": pred}}
+    rows = predict_table([rec])
+    assert rows[0]["status"] == "ok" and "/" in rows[0]["best_mesh"]
+    mesh_label, profile = rows[0]["best_mesh"].split("/")
+    assert profile in profile_names()
+    table = format_predict_table(rows)
+    assert "best_mesh" in table and rows[0]["best_mesh"] in table

@@ -13,7 +13,7 @@ Four guarantees pinned here:
    ``ZeroDivisionError``.
 3. **One engine, any machine** — the cross-zoo saturation table covers
    every registered workload on every registered machine, and
-   ``rank_operating_points`` ranks the (workload x frequency x cores)
+   ``rank(..., objective="edp")`` ranks the (workload x frequency x cores)
    surface under all three objectives.
 4. **TPU Eq. 2 analogue** — ICI collective wire bytes act as the
    shared-bottleneck term of multi-chip data-parallel scaling.
@@ -35,7 +35,7 @@ from repro.core import (
     tpu_dp_scaling,
     workload_registry,
 )
-from repro.core.autotune import rank_operating_points
+from repro.core.autotune import rank
 from repro.core.ecm import ECMBatch, ECMModel
 from repro.core.energy import FrequencyScaledECM, best_config, energy_grid
 from repro.core.hlo import CollectiveOp, HLOResources
@@ -263,21 +263,21 @@ def test_rank_operating_points_objectives():
     ws = [workload_registry()[k] for k in FIG10]
     for objective, key in (("energy", "energy_J"), ("edp", "edp_Js"),
                            ("performance", "runtime_s")):
-        pts = rank_operating_points(ws, "haswell-ep", objective=objective,
-                                    total_work_units=WORK)
+        pts = rank(ws, "haswell-ep", objective=objective,
+                   total_work_units=WORK)
         assert len(pts) == 3 * len(FREQS) * 14
         values = [p["value"] for p in pts]
         assert values == sorted(values)
         assert all(p["value"] == p[key] for p in pts)
-    top = rank_operating_points(ws, "haswell-ep", total_work_units=WORK,
-                                top=5)
+    top = rank(ws, "haswell-ep", objective="edp", total_work_units=WORK,
+               top=5)
     assert len(top) == 5
 
 
-def test_rank_operating_points_unknown_objective():
-    with pytest.raises(KeyError):
-        rank_operating_points([workload_registry()["striad"]],
-                              "haswell-ep", objective="speed")
+def test_rank_unknown_objective():
+    with pytest.raises(ValueError, match="unknown objective"):
+        rank([workload_registry()["striad"]], "haswell-ep",
+             objective="speed")
 
 
 def test_machine_power_calibration_present():

@@ -8,6 +8,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.dist.sharding import (
     PROFILES,
     ShardingProfile,
+    _axis_sizes,
+    get_profile,
     logical_to_pspec,
     param_shardings,
     tp_dp,
@@ -62,6 +64,42 @@ def test_profiles_construct_both_modes():
         for mp in (False, True):
             p = fn(mp)
             assert "batch" in p.activation_rules, name
+
+
+def test_axis_sizes_two_pod_mesh():
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    assert _axis_sizes(mesh) == {"pod": 2, "data": 2, "model": 2}
+    assert _axis_sizes(None) == {}
+
+
+def test_multi_pod_batch_spans_pod_and_data():
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    prof = get_profile("tp_dp", multi_pod=True)
+    assert prof.activation_rules["batch"] == ("pod", "data")
+    ps = logical_to_pspec(("batch", "seq", "embed"),
+                          prof.activation_rules, (8, 16, 32), mesh)
+    assert ps == P(("pod", "data"), None, None)
+    # an indivisible batch keeps the largest divisible axis prefix: the
+    # 2-pod split survives while the per-pod data split is dropped
+    ps2 = logical_to_pspec(("batch",), prof.activation_rules, (2,), mesh)
+    assert ps2 == P("pod")
+
+
+def test_param_shardings_two_pod_mesh():
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    spec = {
+        "wq": ParamSpec((64, 8, 16), ("embed", "heads", "head_dim")),
+        "emb": ParamSpec((128, 64), ("vocab", "embed")),
+    }
+    # weights never shard over the pod axis — DCN is gradient-sync only
+    sh = param_shardings(spec, mesh, get_profile("tp_dp", multi_pod=True))
+    assert sh["wq"].spec == P(None, "model", None)
+    assert sh["emb"].spec == P("model", None)
+    # FSDP puts embed over data (intra-pod), still never over pod
+    sh_fsdp = param_shardings(spec, mesh,
+                              get_profile("tp_fsdp", multi_pod=True))
+    assert sh_fsdp["wq"].spec == P("data", "model", None)
+    assert sh_fsdp["emb"].spec == P("model", "data")
 
 
 def test_remesh_state_roundtrip():

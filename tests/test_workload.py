@@ -39,7 +39,7 @@ from repro.core import (
     workload_ecm,
     workload_registry,
 )
-from repro.core.autotune import rank_workloads
+from repro.core.autotune import rank
 
 GOLDEN = json.loads(
     (Path(__file__).parent / "golden_haswell_ecm.json").read_text())
@@ -296,8 +296,8 @@ def test_lower_many_rejects_mixed_hierarchies():
 
     step = TPUStepECM(name="step", t_comp=1e-3, t_hbm=2e-3, t_ici=5e-4)
     with pytest.raises(ValueError, match="different hierarchies"):
-        rank_workloads([StreamWorkload(BENCHMARKS["ddot"]),
-                        step.as_workload()], "haswell-ep")
+        rank([StreamWorkload(BENCHMARKS["ddot"]),
+              step.as_workload()], "haswell-ep")
 
 
 def test_registry_seeding_survives_early_user_registration():
@@ -320,11 +320,10 @@ def test_registry_seeding_survives_early_user_registration():
 
 
 def test_unknown_registry_names_raise_keyerror():
-    from repro.core.autotune import rank_stencil_blocks
     from repro.simcache import simulate_level, simulate_stencil_level
 
     with pytest.raises(KeyError, match="jacobi2"):
-        rank_stencil_blocks("jacobi2", (8192,))
+        rank("jacobi2", widths=(8192,))
     with pytest.raises(KeyError, match="ddott"):
         simulate_level("ddott", 0)
     with pytest.raises(KeyError, match="jacobi2"):
@@ -357,7 +356,7 @@ def test_rank_workloads_mixed_families_one_path():
           StreamWorkload(TRIAD_UPDATE),
           StencilWorkload(JACOBI2D, widths=(8192,))]
     for machine in ("haswell-ep", "skylake-sp"):
-        ranked = rank_workloads(ws, machine)
+        ranked = rank(ws, machine)
         ts = [r["t_ecm"] for r in ranked]
         assert ts == sorted(ts)
         assert ranked[0]["name"] == "ddot"
@@ -367,7 +366,7 @@ def test_rank_workloads_accepts_prelowered_tpu_step():
     from repro.core.tpu_ecm import TPUStepECM
 
     step = TPUStepECM(name="step", t_comp=1e-3, t_hbm=2e-3, t_ici=5e-4)
-    ranked = rank_workloads([step.as_workload()], "tpu-v5e")
+    ranked = rank([step.as_workload()], "tpu-v5e")
     assert ranked[0]["name"] == "step"
     assert ranked[0]["t_ecm"] > 0
 

@@ -23,7 +23,11 @@ compare), compose (whole-model composed step predictions — the spec pins
 per-config prefill/decode entries and the config x machine zoo, and
 requires decode <= prefill at the bench's equal-context shape), engine
 (request-path engine — lowered-table shape, the deterministic zoo T_ECM
-checksum, warm/cold eval sections and the re-rank ``identical`` pin).
+checksum, warm/cold eval sections and the re-rank ``identical`` pin),
+mesh (multi-chip parallelism autotuner — golden-pinned joint
+(mesh x profile x block) winners per config x chip count, the
+``tpu_dp_scaling`` bit-identity flag through ``mesh.dp_scaling``, and
+the warm mesh-sweep throughput gated via ``--floor``).
 
 ``--compare`` is the CI regression gate: it diffs a freshly generated
 artifact against the committed baseline, failing when any *deterministic*
@@ -48,7 +52,7 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 
 SUITES = ("stream", "stencil", "compute", "scaling", "tpu", "serve",
-          "compose", "engine")
+          "compose", "engine", "mesh")
 
 #: minimal spec language: {key: type | (type, predicate) | dict (nested) |
 #: [element_spec] (non-empty list) | callable(value) -> error or None}
@@ -409,15 +413,87 @@ ENGINE_SPEC = {
     "zoo": dict,
 }
 
+def _mesh_winner(ctx: str, w) -> str | None:
+    if not isinstance(w, dict):
+        return f"{ctx}: expected winner object"
+    for k in ("mesh", "profile"):
+        if not isinstance(w.get(k), str) or not w[k]:
+            return f"{ctx}.{k}: expected non-empty string"
+    for k in ("data", "model", "pipe", "microbatches"):
+        val = w.get(k)
+        if not isinstance(val, int) or isinstance(val, bool) or val <= 0:
+            return f"{ctx}.{k}: expected positive int, got {val!r}"
+    for k in ("t_step_us", "t_ici_us"):
+        val = w.get(k)
+        if not isinstance(val, NUM) or isinstance(val, bool) or val < 0:
+            return f"{ctx}.{k}: expected non-negative number, got {val!r}"
+    bf = w.get("bubble_fraction")
+    if not isinstance(bf, NUM) or isinstance(bf, bool) \
+            or not 0.0 <= bf <= 1.0:
+        return f"{ctx}.bubble_fraction: expected fraction in [0, 1]"
+    if _int_or_none(w.get("n_saturation")):
+        return f"{ctx}.n_saturation: expected int or null"
+    if not isinstance(w.get("fits_hbm"), bool):
+        return f"{ctx}.fits_hbm: expected bool"
+    if "block" in w and not (isinstance(w["block"], list) and w["block"]):
+        return f"{ctx}.block: expected non-empty array when present"
+    return None
+
+
+def _mesh_rankings(v):
+    """Per-config golden pins: config -> chip count -> winner + plan
+    count.  Every cell must carry a fully-typed winner row — a field
+    dropped by a ``rank_meshes`` refactor fails validation here before
+    the compare gate ever sees it."""
+    if not isinstance(v, dict) or not v:
+        return "expected non-empty object keyed by config"
+    for cfg, by_n in v.items():
+        if not isinstance(by_n, dict) or not by_n:
+            return f"[{cfg}]: expected non-empty object keyed by chip count"
+        for n, cell in by_n.items():
+            if not (isinstance(n, str) and n.isdigit() and int(n) > 0):
+                return f"[{cfg}][{n!r}]: chip-count key must be a " \
+                       f"positive integer string"
+            if not isinstance(cell, dict):
+                return f"[{cfg}][{n}]: expected object"
+            n_plans = cell.get("n_plans")
+            if not isinstance(n_plans, int) or isinstance(n_plans, bool) \
+                    or n_plans <= 0:
+                return f"[{cfg}][{n}].n_plans: expected positive int"
+            err = _mesh_winner(f"[{cfg}][{n}].winner", cell.get("winner"))
+            if err:
+                return err
+    return None
+
+
+MESH_SPEC = {
+    "rankings": _mesh_rankings,
+    "dp_scaling": {
+        "bit_identical": bool,
+        "chips": [(int, _positive)],
+        "n_saturation": _int_or_none,
+        "t_ici_floor_us": (NUM, _positive),
+    },
+    "sweep": {
+        "configs": (int, _positive),
+        "chip_counts": [(int, _positive)],
+        "plans": (int, _positive),
+        "wall_s": (NUM, _positive),
+        "plans_per_s": (NUM, _positive),
+    },
+}
+
 SPECS = {"stream": STREAM_SPEC, "stencil": STENCIL_SPEC,
          "compute": COMPUTE_SPEC, "scaling": SCALING_SPEC,
          "tpu": TPU_SPEC, "serve": SERVE_SPEC, "compose": COMPOSE_SPEC,
-         "engine": ENGINE_SPEC}
+         "engine": ENGINE_SPEC, "mesh": MESH_SPEC}
 
 #: distinctive payload keys for suite inference on legacy (schema 1)
-#: files; "warm_eval" must precede "zoo" (engine payloads carry both) and
+#: files; "rankings" must precede "sweep" (mesh payloads carry both),
+#: "warm_eval" must precede "zoo" (engine payloads carry both) and
 #: "models" must precede "zoo" — compose payloads carry both
-SUITE_HINTS = (("model_eval", "stream"), ("sweep", "stencil"),
+SUITE_HINTS = (("model_eval", "stream"), ("rankings", "mesh"),
+               ("sweep", "stencil"),
                ("matmul", "compute"), ("tpu_dp", "scaling"),
                ("classes", "serve"), ("warm_eval", "engine"),
                ("models", "compose"), ("zoo", "tpu"))
