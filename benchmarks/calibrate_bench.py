@@ -1,0 +1,158 @@
+"""Calibration-loop health: fit residuals, machine-file round-trips, and
+the cold-vs-warm disk-cache speedup.
+
+    PYTHONPATH=src python -m benchmarks.run --suite calibrate
+    PYTHONPATH=src python -m benchmarks.run --json --suite calibrate
+
+Three measurements over one machine (default ``haswell-ep``):
+
+* **fit** — a cold :func:`repro.core.calibrate.calibrate` run against the
+  simcache backend: per-field-class worst least-squares residuals (the
+  ``CALIBRATE_SPEC`` gate pins the overall max), snap counts, and the
+  measurement hash.  On a zoo machine every field must snap back to the
+  registered prior — recalibration confirms the constants.
+* **roundtrip** — the emitted versioned machine file reloads to a model
+  equal to both the fitted machine and the registered prior (the
+  bit-identity acceptance for golden predictions), and the checked-in
+  ``src/repro/machines/*.json`` zoo files still match the registry.
+* **cache** — the same calibration re-run against a warm
+  :mod:`repro.core.diskcache` directory: zero new fits and zero new
+  backend measurements (both asserted via the observability counters),
+  with the wall-clock speedup recorded for the report.
+
+Wall times and the speedup are volatile (excluded from ``--compare`` by
+the usual naming rules); residuals, snap counts, hashes, and the boolean
+identity checks are deterministic and regression-gated.
+"""
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+from pathlib import Path
+
+from .util import table
+
+DEFAULT_MACHINE = "haswell-ep"
+
+
+def fit_payload(report) -> dict:
+    groups = {g: {"n": int(s["n"]), "n_snapped": int(s["n_snapped"]),
+                  "max_residual": float(s["max_residual"])}
+              for g, s in sorted(report.group_summary().items())}
+    return {
+        "base": report.base,
+        "backend": report.backend,
+        "snap_rtol": report.snap_rtol,
+        "n_fields": len(report.fits),
+        "n_snapped": sum(f.snapped for f in report.fits),
+        "residual_max": float(report.residual_max()),
+        "model_gap_max": max((f.model_gap for f in report.fits),
+                             default=0.0),
+        "groups": groups,
+        "measurement_hash": report.measurement_hash,
+        "fit_wall_s": float(report.wall_s),
+    }
+
+
+def roundtrip_payload(report) -> dict:
+    """Emit the machine file, reload it, and pin the bit-identity chain."""
+    from repro.core import get_machine, load_machine_file, machine_to_dict
+    from repro.core.machine import MACHINES, zoo_machine_file
+
+    prior = get_machine(report.base)
+    with tempfile.TemporaryDirectory() as td:
+        path = Path(td) / "machine.json"
+        report.save(path)
+        doc = json.loads(path.read_text())
+        loaded = load_machine_file(path)
+    zoo_paths = sorted(zoo_machine_file("x").parent.glob("*.json"))
+    zoo_ok = all(load_machine_file(f) == MACHINES[f.stem]
+                 for f in zoo_paths)
+    return {
+        "schema": int(doc["schema"]),
+        "reload_equal": loaded == report.machine,
+        "machine_equal_prior": loaded == prior,
+        "dict_equal_prior": (machine_to_dict(loaded)
+                             == machine_to_dict(prior)),
+        "zoo_files": len(zoo_paths),
+        "zoo_files_match_registry": zoo_ok,
+    }
+
+
+def cache_payload(machine: str) -> dict:
+    """Cold vs warm calibration against a fresh disk-cache directory."""
+    from repro.core import calibrate as cal
+    from repro.core import diskcache
+
+    with tempfile.TemporaryDirectory() as td:
+        prev = diskcache.set_cache_dir(td)
+        try:
+            cal.reset_counters()
+            t0 = time.perf_counter()
+            cold = cal.calibrate(machine)
+            cold_s = time.perf_counter() - t0
+            cold_fits = cal.CAL_COUNTERS["fits"]
+
+            diskcache.clear_memo()          # force the on-disk read path
+            cal.reset_counters()
+            t0 = time.perf_counter()
+            warm = cal.calibrate(machine)
+            warm_s = time.perf_counter() - t0
+            warm_fits = cal.CAL_COUNTERS["fits"]
+            warm_meas = cal.CAL_COUNTERS["measurements"]
+        finally:
+            diskcache.restore_cache_dir(prev)
+    return {
+        "cold_wall_s": cold_s,
+        "cold_fits": int(cold_fits),
+        "warm_wall_s": warm_s,
+        "speedup": cold_s / warm_s if warm_s > 0 else float("inf"),
+        "warm_fits": int(warm_fits),
+        "warm_measurements": int(warm_meas),
+        "warm_from_cache": bool(warm.from_cache),
+        "warm_identical": warm.machine == cold.machine,
+    }
+
+
+def calibrate_payload(machine: str = DEFAULT_MACHINE) -> dict:
+    from repro.core import calibrate as cal
+    from repro.core import diskcache
+
+    prev = diskcache.set_cache_dir(None)    # the fit section runs cold
+    try:
+        report = cal.calibrate(machine)
+    finally:
+        diskcache.restore_cache_dir(prev)
+    return {
+        "fit": fit_payload(report),
+        "roundtrip": roundtrip_payload(report),
+        "cache": cache_payload(machine),
+    }
+
+
+def run(machine: str | None = None) -> str:
+    p = calibrate_payload(machine=machine or DEFAULT_MACHINE)
+    fit, rt, c = p["fit"], p["roundtrip"], p["cache"]
+    rows = [
+        ["fit", f"{fit['n_snapped']}/{fit['n_fields']} snapped",
+         f"{fit['base']} via {fit['backend']}, "
+         f"max residual {fit['residual_max']:.1e}, "
+         f"model gap {fit['model_gap_max']:.1e}"],
+        ["round-trip",
+         "bit-identical" if rt["machine_equal_prior"] else "DRIFTED",
+         f"schema v{rt['schema']}, reload == fit: {rt['reload_equal']}, "
+         f"zoo files ({rt['zoo_files']}) match registry: "
+         f"{rt['zoo_files_match_registry']}"],
+        ["disk cache", f"{c['speedup']:.1f}x warm",
+         f"warm fits {c['warm_fits']} / measurements "
+         f"{c['warm_measurements']} (cold: {c['cold_fits']} fits), "
+         f"identical: {c['warm_identical']}"],
+    ]
+    out = [table(["stage", "result", "detail"], rows)]
+    for g, s in fit["groups"].items():
+        out.append(f"  {g:<10} n={s['n']:<3} snapped={s['n_snapped']:<3} "
+                   f"max residual {s['max_residual']:.1e}")
+    out.append(f"\nmeasurement hash: {fit['measurement_hash'][:16]}... "
+               f"(provenance-pinned; any backend drift moves it)")
+    return "\n".join(out)

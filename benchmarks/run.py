@@ -7,10 +7,11 @@ runner for all kernel families.
     PYTHONPATH=src python -m benchmarks.run --json --suite stencil
     PYTHONPATH=src python -m benchmarks.run --only machine_zoo --machine skylake-sp
 
-``--suite {stream,stencil,compute,scaling,tpu,serve,compose,engine,mesh}``
+``--suite {stream,stencil,compute,scaling,tpu,serve,compose,engine,mesh,
+calibrate}``
 selects a kernel family, the chip-level suite, the serving-engine suite,
-the whole-model composition suite, the request-path engine suite, or the
-multi-chip mesh-autotuner suite
+the whole-model composition suite, the request-path engine suite, the
+multi-chip mesh-autotuner suite, or the calibration-loop suite
 (default: all sections); ``--machine`` picks a
 registry machine for the sections and artifacts that are
 machine-parameterized (the zoo table, the stencil sweep, the compute
@@ -38,7 +39,10 @@ shape + deterministic T_ECM checksum, cold-lowering vs warm table-backed
 eval rates, full-zoo Eq. 2 sweep latency, incremental re-rank speedup)
 and ``BENCH_mesh.json`` (mesh autotuner: golden-pinned joint
 (mesh x profile x block) winners per config x chip count, DP
-bit-identity through the generalized path, warm mesh-sweep throughput).
+bit-identity through the generalized path, warm mesh-sweep throughput)
+and ``BENCH_calibrate.json`` (calibration loop: per-field-class fit
+residuals, machine-file round-trip bit-identity, cold-vs-warm disk-cache
+speedup with zero warm re-fits).
 Field names are
 stable across schema bumps so trajectories remain comparable; the CI
 regression gate diffs fresh artifacts against the committed baselines
@@ -52,6 +56,7 @@ import json
 import time
 
 from . import (
+    calibrate_bench,
     compose_bench,
     compute_bench,
     engine_bench,
@@ -101,6 +106,9 @@ SECTIONS = [
     ("mesh_bench",
      "Mesh autotuner: Eq. 2 over ICI, joint (mesh x profile x block) ranks",
      mesh_bench),
+    ("calibrate_bench",
+     "Calibration loop: fit residuals, machine-file round-trip, disk cache",
+     calibrate_bench),
     ("tpu_stream_ecm", "TPU adaptation: Pallas stream kernels + TPU-ECM",
      tpu_stream_ecm),
     ("tpu_roofline", "TPU §Roofline: per (arch x shape x mesh) ECM terms",
@@ -120,6 +128,7 @@ SUITES = {
     "compose": ["compose_bench", "machine_zoo"],
     "engine": ["engine_bench", "machine_zoo"],
     "mesh": ["mesh_bench", "machine_zoo"],
+    "calibrate": ["calibrate_bench", "machine_zoo"],
 }
 
 #: default artifact path per suite (schema: tools/check_bench.py)
@@ -133,6 +142,7 @@ BENCH_PATHS = {
     "compose": "BENCH_compose.json",
     "engine": "BENCH_engine.json",
     "mesh": "BENCH_mesh.json",
+    "calibrate": "BENCH_calibrate.json",
 }
 
 BENCH_SCHEMA_VERSION = 2
@@ -329,6 +339,13 @@ def mesh_payload(machine: str = "tpu-v5e") -> dict:
     }
 
 
+def calibrate_payload(machine: str = "haswell-ep") -> dict:
+    return {
+        **_envelope("calibrate", machine),
+        **calibrate_bench.calibrate_payload(machine=machine),
+    }
+
+
 def emit_json(path: str | None, suite: str = "stream",
               machine: str | None = None) -> str:
     """Write the suite's BENCH artifact; returns the path written."""
@@ -336,7 +353,7 @@ def emit_json(path: str | None, suite: str = "stream",
                 "compute": compute_payload, "scaling": scaling_payload,
                 "tpu": tpu_payload, "serve": serve_payload,
                 "compose": compose_payload, "engine": engine_payload,
-                "mesh": mesh_payload}
+                "mesh": mesh_payload, "calibrate": calibrate_payload}
     if machine is None:
         machine = ("tpu-v5e" if suite in ("tpu", "serve", "compose", "mesh")
                    else "haswell-ep")
@@ -408,6 +425,13 @@ def emit_json(path: str | None, suite: str = "stream",
               f"ranked ({sw['plans_per_s']:.0f} plans/s warm), "
               f"{len(winners)} distinct winners, DP bit-identical: "
               f"{dp['bit_identical']}")
+    elif suite == "calibrate":
+        fit, rt, c = payload["fit"], payload["roundtrip"], payload["cache"]
+        print(f"[bench] wrote {path}: {fit['n_snapped']}/{fit['n_fields']} "
+              f"fields snapped on {fit['base']} (max residual "
+              f"{fit['residual_max']:.2e}), machine file bit-identical: "
+              f"{rt['machine_equal_prior']}, warm cache {c['speedup']:.1f}x "
+              f"with {c['warm_fits']} re-fits")
     elif suite == "compute":
         mm, att = payload["matmul"], payload["attention"]
         ok = all(v["matches_ref"] for v in payload["kernels"].values())
@@ -432,13 +456,20 @@ def main() -> int:
                          "selects the --json payload (default: all sections"
                          " / the stream artifact)")
     ap.add_argument("--machine", default=None,
-                    help="registry machine for machine-parameterized "
-                         "sections and artifacts (see repro.core.MACHINES)")
+                    help="machine for machine-parameterized sections and "
+                         "artifacts: a registry name/alias (see "
+                         "repro.core.MACHINES) or a calibrated "
+                         "machine-file path (registered on load)")
     ap.add_argument("--json", nargs="?", const="", default=None,
                     metavar="PATH",
                     help="emit the suite's perf-trajectory JSON instead of "
                          "the report sections")
     args = ap.parse_args()
+    if args.machine is not None:
+        # accept a machine-file path anywhere a registry name works: the
+        # file is registered and the run proceeds under its name
+        from repro.core.machine import resolve_machine
+        args.machine = resolve_machine(args.machine).name
     if args.json is not None:
         emit_json(args.json or None, suite=args.suite or "stream",
                   machine=args.machine)

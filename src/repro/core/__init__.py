@@ -20,6 +20,14 @@ layer-condition analysis, arXiv:1410.5010) with LC-aware ECM construction.
 
 TPU adaptation: :mod:`.hlo` (compiled-HLO resource extraction) and
 :mod:`.tpu_ecm` (three-term compute/HBM/ICI ECM for JAX programs).
+
+Calibration loop: :mod:`.calibrate` (measure -> least-squares fit ->
+versioned machine files with provenance, closing the paper's §IV-A
+measurement story) and :mod:`.diskcache` (content-fingerprinted on-disk
+persistence of fitted calibrations and tuned-block picks, so warm PR-8
+tables survive process restarts).  Machines serialize declaratively via
+``machine_to_dict``/``machine_from_dict``; the zoo ships as checked-in
+``src/repro/machines/*.json`` files bit-identical to the constants.
 """
 from .ecm import ECMBatch, ECMModel, parse_prediction
 from .kernel_spec import (
@@ -67,8 +75,13 @@ from .machine import (
     TPUMachineModel,
     TransferLevel,
     get_machine,
+    load_machine_file,
+    machine_from_dict,
     machine_names,
+    machine_to_dict,
     register_machine,
+    resolve_machine,
+    save_machine_file,
 )
 from .saturation import ScalingModel, batch_curve, batch_saturation, domain_scaling
 from .scaling import (
@@ -139,8 +152,13 @@ __all__ = [
     "TPUMachineModel",
     "TransferLevel",
     "get_machine",
+    "load_machine_file",
+    "machine_from_dict",
     "machine_names",
+    "machine_to_dict",
     "register_machine",
+    "resolve_machine",
+    "save_machine_file",
     "fuse_chain",
     "LoweredTable",
     "cache_disabled",

@@ -760,8 +760,8 @@ def __getattr__(name: str):
     @functools.wraps(impl)
     def wrapper(*args, **kwargs):
         warnings.warn(
-            f"repro.core.autotune.{name} is deprecated; use "
-            f"repro.core.autotune.{hint} instead",
+            f"repro.core.autotune.{name} is deprecated and scheduled for "
+            f"removal; migrate to repro.core.autotune.{hint}",
             DeprecationWarning, stacklevel=2)
         return impl(*args, **kwargs)
 

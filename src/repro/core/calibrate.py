@@ -1,0 +1,741 @@
+"""Calibration runner: measure -> fit -> emit a versioned machine file.
+
+The ECM model's premise (paper §IV-V) is that machine parameters are
+*measurable*: the same stream/stencil microbenchmark sweeps that validate
+the model are the measurements that fit it, and the fitting procedure
+transfers across processor generations (arXiv:1702.07554).  This module
+closes that measure->calibrate->predict loop:
+
+1. **Measure.**  A measurement backend runs the microbenchmark suite.  On
+   this host the backend is :class:`SimcacheBackend` — the calibrated
+   cache/port simulator standing in for ``likwid-bench`` runs on real
+   hardware (the container has neither a Haswell nor a TPU); hierarchies
+   the simulator cannot sweep (the two-level TPU view) fall back to the
+   ECM forward model itself.  A backend is any object with the same four
+   methods, so real Pallas-kernel timings plug in unchanged.
+
+2. **Fit.**  Each :class:`MachineModel` calibration field class is fitted
+   from its measurement by least squares:
+
+   * ``measured_bw[kernel]`` — the deep-memory sweep plateau is inverted
+     through the backend's forward response (monotone in the sustained
+     bandwidth, solved by geometric bisection to machine precision: the
+     nonlinear least-squares optimum for a scalar parameter).  The pure
+     ECM affine form ``t(bw) = a + c/bw`` is fitted alongside and its
+     relative deviation from the measurement is recorded as the
+     ``model_gap`` — the paper's model-vs-measurement gap (§IV-B, a few
+     to ~15 percent).  The gated ``residual`` is the least-squares
+     misfit of the fitted response itself.
+   * ``capacities[k]`` — the residence knees of the stream sweep: the
+     curve crosses the midpoint of two adjacent level plateaus where the
+     hit weight ``clamp(2*C/ws - 1, 0, 1)`` is one half, i.e. at
+     ``ws = 4C/3``; the layer-condition breaks of the 2D stencil sweep
+     (``C = 2 * 3 rows * 8 B * N_break``, Stengel §LC) are detected as
+     an independent cross-check and recorded in the provenance.
+   * ``ChipPower`` — ordinary least squares of the §III-D form
+     ``P(n, f) = idle + n (static + lin f + quad f^2)`` over the
+     (cores x DVFS-grid) energy measurements; machines without at least
+     three operating frequencies are rank-deficient and keep their
+     priors (noted, not guessed).
+   * overlap — the serial-vs-pipelined "multi-stage pipeline delta"
+     (``tpu_ecm.measured_overlap``) recovers ``exposed_hbm_fraction`` on
+     software-managed hierarchies; it lives on ``TPUMachineModel`` so it
+     is recorded in the provenance rather than the machine dict.
+
+3. **Snap.**  A fit that lands within ``snap_rtol`` of the registered
+   prior *adopts the prior bit-identically* (the raw fit and residual
+   stay in the provenance).  Recalibrating a zoo machine therefore emits
+   a file whose loaded model reproduces the golden predictions exactly —
+   recalibration confirms the constants instead of dithering them.
+   Pass ``snap_rtol=0`` to adopt raw fits (the new-machine onboarding
+   path, exercised by the synthetic-recovery tests).
+
+4. **Emit.**  :meth:`CalibrationReport.save` writes the fitted machine as
+   a versioned machine file with full provenance — per-field raw fits and
+   residuals, a sha256 over every measurement, backend name, schema
+   version — which ``register_machine``/``--machine`` load uniformly.
+
+Reports are persisted in :mod:`repro.core.diskcache` keyed by the prior
+machine's content fingerprint, so a warm rerun performs zero re-fitting
+(``CAL_COUNTERS`` makes that assertable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import diskcache
+from .machine import (ChipPower, MachineModel, get_machine, machine_from_dict,
+                      machine_to_dict, save_machine_file)
+from .workload import lower_many, workload_registry
+
+#: Default snap tolerance: fits within this relative distance of the
+#: registered prior adopt the prior bit-identically (see module notes).
+SNAP_RTOL = 0.05
+
+#: Validation bound on the worst per-field least-squares misfit; the fits
+#: reproduce their measurements essentially exactly, so any drift here
+#: means the measurement response or the fitting inversion changed —
+#: ``check_bench.CALIBRATE_SPEC`` fails the bench gate beyond this.
+MAX_FIT_RESIDUAL = 0.02
+
+#: Observability counters (reset with :func:`reset_counters`): ``fits``
+#: counts fitted fields, ``measurements`` backend sweeps, ``cache_hits``
+#: reports served from the disk cache without re-fitting.
+CAL_COUNTERS = {"fits": 0, "measurements": 0, "cache_hits": 0}
+
+#: Stream kernels the cache/port simulator can measure (its likwid set).
+STREAM_KERNELS = ("copy", "ddot", "load", "schoenauer", "schoenauer_nt",
+                  "store", "striad", "striad_nt", "update")
+STENCIL_KERNELS = ("jacobi2d", "jacobi3d")
+
+_CAL_CACHE_KIND = "calibration"
+
+
+def reset_counters() -> None:
+    for k in CAL_COUNTERS:
+        CAL_COUNTERS[k] = 0
+
+
+# ---------------------------------------------------------------------------
+# Fit records
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FieldFit:
+    """One fitted calibration field: the raw least-squares value, the
+    adopted value (snapped to the prior when close enough), and the model
+    residual against the measurement."""
+
+    field: str                 # e.g. "measured_bw[copy]", "capacities[1]"
+    group: str                 # bandwidth | capacity | power | overlap
+    prior: float
+    fitted: float
+    adopted: float
+    residual: float            # rms relative least-squares misfit (gated)
+    n_points: int
+    snapped: bool
+    model_gap: float = 0.0     # pure-ECM vs measurement deviation (info)
+    note: str = ""
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclass(frozen=True)
+class CalibrationReport:
+    """The outcome of one calibration run (see :func:`calibrate`)."""
+
+    base: str                       # prior machine's registry name
+    machine: MachineModel           # the fitted (adopted-values) machine
+    fits: tuple                     # tuple[FieldFit, ...]
+    measurement_hash: str           # sha256 over every measurement array
+    backend: str
+    snap_rtol: float
+    wall_s: float
+    checks: dict = field(default_factory=dict)   # e.g. stencil LC breaks
+    from_cache: bool = False
+
+    # ------------------------------------------------------------------
+    def residual_max(self, group: str | None = None) -> float:
+        vals = [f.residual for f in self.fits
+                if group is None or f.group == group]
+        return max(vals) if vals else 0.0
+
+    def group_summary(self) -> dict:
+        out: dict = {}
+        for f in self.fits:
+            g = out.setdefault(f.group, {"n": 0, "n_snapped": 0,
+                                         "max_residual": 0.0})
+            g["n"] += 1
+            g["n_snapped"] += bool(f.snapped)
+            g["max_residual"] = max(g["max_residual"], f.residual)
+        return out
+
+    def provenance(self) -> dict:
+        return {
+            "calibrated_from": self.base,
+            "backend": self.backend,
+            "snap_rtol": self.snap_rtol,
+            "measurement_hash": self.measurement_hash,
+            "residual_max": self.residual_max(),
+            "fit_wall_s": self.wall_s,
+            "fits": [f.as_dict() for f in self.fits],
+            "checks": dict(self.checks),
+        }
+
+    def save(self, path) -> "Path":  # noqa: F821 - Path via machine module
+        """Write the fitted machine as a versioned machine file."""
+        return save_machine_file(self.machine, path,
+                                 provenance=self.provenance())
+
+    # ------------------------------------------------------------------
+    def to_literal(self) -> dict:
+        """Plain-literal form for the disk cache (see ``from_literal``)."""
+        return {
+            "base": self.base,
+            "machine": machine_to_dict(self.machine),
+            "fits": [f.as_dict() for f in self.fits],
+            "measurement_hash": self.measurement_hash,
+            "backend": self.backend,
+            "snap_rtol": self.snap_rtol,
+            "wall_s": self.wall_s,
+            "checks": dict(self.checks),
+        }
+
+    @classmethod
+    def from_literal(cls, doc: dict, *, from_cache: bool = False):
+        return cls(
+            base=doc["base"],
+            machine=machine_from_dict(doc["machine"]),
+            fits=tuple(FieldFit(**f) for f in doc["fits"]),
+            measurement_hash=doc["measurement_hash"],
+            backend=doc["backend"],
+            snap_rtol=doc["snap_rtol"],
+            wall_s=doc["wall_s"],
+            checks=dict(doc.get("checks") or {}),
+            from_cache=from_cache,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Measurement backend
+# ---------------------------------------------------------------------------
+
+
+class SimcacheBackend:
+    """Measurements from the calibrated cache/port simulator — the host's
+    stand-in for likwid-bench / RAPL runs on real hardware.
+
+    Any object with the same four methods is a valid backend; timings from
+    executed Pallas kernels plug in here when the hardware exists.
+    """
+
+    name = "simcache"
+
+    def __init__(self, machine: "MachineModel | str"):
+        self.machine = get_machine(machine)
+
+    # -- stream ---------------------------------------------------------
+    def supports_sweeps(self) -> bool:
+        """The residence blend models a 3-level cache + Mem hierarchy."""
+        return len(self.machine.capacities) == 3
+
+    def stream_sweep(self, kernels, sizes_bytes, *,
+                     sustained_bw=None) -> np.ndarray:
+        from .. import simcache
+        CAL_COUNTERS["measurements"] += 1
+        _, vals = simcache.sweep_batch(list(kernels), sizes_bytes,
+                                       machine=self.machine,
+                                       sustained_bw=sustained_bw)
+        return vals
+
+    def stream_levels(self, kernels) -> np.ndarray:
+        from .. import simcache
+        CAL_COUNTERS["measurements"] += 1
+        _, tab = simcache.simulate_levels_batch(list(kernels),
+                                                machine=self.machine)
+        return tab
+
+    # -- stencil --------------------------------------------------------
+    def stencil_sweep(self, name, problem_ns, *,
+                      sustained_bw=None) -> np.ndarray:
+        from .. import simcache
+        CAL_COUNTERS["measurements"] += 1
+        out = simcache.stencil_sweep_batch(name, problem_ns,
+                                           machine=self.machine,
+                                           sustained_bw=sustained_bw)
+        return np.asarray(out["measured"], dtype=float)
+
+    # -- power ----------------------------------------------------------
+    def power_grid(self, n_cores, f_ghz) -> np.ndarray:
+        """Package power draw (watts) for each (frequency, active-core)
+        grid point — the RAPL-counter measurement of §III-D."""
+        CAL_COUNTERS["measurements"] += 1
+        p = self.machine.power
+        return np.array([[p.watts(int(n), float(f)) for n in n_cores]
+                         for f in f_ghz], dtype=float)
+
+    # -- overlap --------------------------------------------------------
+    def pipeline_pair(self) -> tuple:
+        """(t_serial, t_pipelined, t_transfer) seconds for a reference
+        compute-dominated step: the ``num_stages=1`` vs multi-buffered
+        DMA-pipeline timing pair (``repro.kernels.pipeline``)."""
+        from .tpu_ecm import TPU_V5E, TPUStepECM
+        CAL_COUNTERS["measurements"] += 1
+        step = TPUStepECM(name="calibrate-ref", t_comp=2e-3, t_hbm=1e-3,
+                          t_ici=0.0,
+                          exposed_hbm_fraction=TPU_V5E.exposed_hbm_fraction,
+                          exposed_ici_fraction=0.0)
+        return step.t_comp + step.t_hbm, step.t_ecm, step.t_hbm
+
+
+# ---------------------------------------------------------------------------
+# Fit primitives
+# ---------------------------------------------------------------------------
+
+
+def _snap(fitted: float, prior: float, snap_rtol: float) -> tuple:
+    """(adopted, snapped): adopt the prior when the fit confirms it."""
+    if fitted == prior:
+        return prior, True
+    if prior != 0 and abs(fitted - prior) <= snap_rtol * abs(prior):
+        return prior, True
+    return fitted, False
+
+
+def _rms_rel(obs: np.ndarray, pred: np.ndarray) -> float:
+    obs = np.asarray(obs, dtype=float)
+    pred = np.asarray(pred, dtype=float)
+    return float(np.sqrt(np.mean(((obs - pred) / obs) ** 2)))
+
+
+def _affine_in_inv_bw(machine, workloads, bw_lo=10e9, bw_hi=40e9):
+    """Exact ECM mem-level prediction coefficients ``t(bw) = a + c/bw``
+    (verified affine: two probes determine the model everywhere)."""
+    p_lo = lower_many(workloads, machine, sustained_bw=bw_lo,
+                      table=False).batch.prediction(-1)
+    p_hi = lower_many(workloads, machine, sustained_bw=bw_hi,
+                      table=False).batch.prediction(-1)
+    c = (p_lo - p_hi) / (1.0 / bw_lo - 1.0 / bw_hi)
+    a = p_lo - c / bw_lo
+    return a, c
+
+
+def _bisect_bw(forward, obs: float, prior: float, *, iters: int = 52):
+    """Invert a monotone-decreasing measurement response ``forward(bw)``
+    for the sustained bandwidth matching ``obs`` (geometric bisection —
+    the exact scalar nonlinear-least-squares solution).  Returns ``None``
+    when ``obs`` is outside the bracketing response (unidentifiable)."""
+    lo, hi = prior / 16.0, prior * 16.0
+    if not (forward(hi) <= obs <= forward(lo)):
+        return None
+    for _ in range(iters):
+        mid = math.sqrt(lo * hi)
+        if forward(mid) > obs:
+            lo = mid
+        else:
+            hi = mid
+    return math.sqrt(lo * hi)
+
+
+def _crossings(sizes: np.ndarray, curve: np.ndarray, level: float):
+    """Log-interpolated first upward crossing of ``level``, or ``None``."""
+    idx = np.nonzero((curve[:-1] < level) & (curve[1:] >= level))[0]
+    if not len(idx):
+        return None
+    i = int(idx[0])
+    f = (level - curve[i]) / (curve[i + 1] - curve[i])
+    return math.exp(math.log(sizes[i])
+                    + f * (math.log(sizes[i + 1]) - math.log(sizes[i])))
+
+
+# ---------------------------------------------------------------------------
+# Field-class fitters
+# ---------------------------------------------------------------------------
+
+def _deep_sizes(machine, n: int = 4) -> np.ndarray:
+    cap = max(machine.capacities or (32 * 1024 * 1024,))
+    return np.geomspace(16.0 * cap, 128.0 * cap, n)
+
+
+def _fit_stream_bandwidths(machine, backend, snap_rtol, meas, fits):
+    """measured_bw[kernel] for every simulator-measurable stream kernel,
+    fitted jointly by vectorized geometric bisection."""
+    kernels = [k for k in STREAM_KERNELS if k in machine.measured_bw]
+    if not kernels or not backend.supports_sweeps():
+        return {}
+    sizes = _deep_sizes(machine)
+    obs = backend.stream_sweep(kernels, sizes)          # (K, S) cy/CL
+    meas.append(("stream_sweep", obs))
+    obs_mean = obs.mean(axis=1)
+    priors = np.array([machine.measured_bw[k] for k in kernels])
+    lo, hi = priors / 16.0, priors * 16.0
+    for _ in range(52):
+        mid = np.sqrt(lo * hi)
+        resp = backend.stream_sweep(
+            kernels, sizes,
+            sustained_bw={k: float(b) for k, b in zip(kernels, mid)})
+        too_slow = resp.mean(axis=1) > obs_mean         # bw guess too low
+        lo = np.where(too_slow, mid, lo)
+        hi = np.where(too_slow, hi, mid)
+    fitted = np.sqrt(lo * hi)
+    # pure-ECM affine deviation at the adopted bandwidth (= model error)
+    reg = workload_registry()
+    ws = [reg[k] for k in kernels]
+    a, c = _affine_in_inv_bw(machine, ws)
+    out = {}
+    adopted_all = {}
+    for i, k in enumerate(kernels):
+        adopted_all[k] = _snap(float(fitted[i]), float(priors[i]),
+                               snap_rtol)
+    refit = backend.stream_sweep(
+        kernels, sizes,
+        sustained_bw={k: v[0] for k, v in adopted_all.items()})
+    for i, k in enumerate(kernels):
+        adopted, snapped = adopted_all[k]
+        fits.append(FieldFit(
+            field=f"measured_bw[{k}]", group="bandwidth",
+            prior=float(priors[i]), fitted=float(fitted[i]),
+            adopted=adopted, residual=_rms_rel(obs[i], refit[i]),
+            n_points=obs.shape[1], snapped=snapped,
+            model_gap=_rms_rel(obs[i], a[i] + c[i] / adopted)))
+        CAL_COUNTERS["fits"] += 1
+        out[k] = adopted
+    return out
+
+
+def _fit_stencil_bandwidths(machine, backend, snap_rtol, meas, fits):
+    out = {}
+    if not backend.supports_sweeps():
+        return out
+    for k in STENCIL_KERNELS:
+        if k not in machine.measured_bw:
+            continue
+        prior = float(machine.measured_bw[k])
+        # deep problem sizes: past every layer-condition break
+        n_deep = max(machine.capacities) // 24          # > C3/(LC*3*8)
+        ns = np.geomspace(n_deep, 4 * n_deep, 3).astype(int)
+        obs = backend.stencil_sweep(k, ns)
+        meas.append((f"stencil_sweep[{k}]", obs))
+        obs_mean = float(obs.mean())
+
+        def forward(bw, _k=k, _ns=ns):
+            return float(backend.stencil_sweep(_k, _ns,
+                                               sustained_bw=bw).mean())
+
+        fitted = _bisect_bw(forward, obs_mean, prior)
+        if fitted is None:
+            fits.append(FieldFit(
+                field=f"measured_bw[{k}]", group="bandwidth", prior=prior,
+                fitted=prior, adopted=prior, residual=0.0,
+                n_points=len(ns), snapped=True,
+                note="measurement response does not bracket the "
+                     "observation; prior retained"))
+        else:
+            adopted, snapped = _snap(fitted, prior, snap_rtol)
+            refit = backend.stencil_sweep(k, ns, sustained_bw=adopted)
+            reg = workload_registry()
+            a, c = _affine_in_inv_bw(machine, [reg[k]])
+            fits.append(FieldFit(
+                field=f"measured_bw[{k}]", group="bandwidth", prior=prior,
+                fitted=fitted, adopted=adopted,
+                residual=_rms_rel(obs, refit), n_points=len(ns),
+                snapped=snapped,
+                model_gap=_rms_rel(obs, float(a[0] + c[0] / adopted))))
+            out[k] = adopted
+        CAL_COUNTERS["fits"] += 1
+    return out
+
+
+def _fit_model_forward_bandwidths(machine, backend, snap_rtol, meas, fits):
+    """Hierarchies the simulator cannot sweep (the two-level TPU view):
+    invert the ECM forward model's deep-memory response directly — the
+    affine ``t = a + c/bw`` solved in closed form."""
+    out = {}
+    reg = workload_registry()
+    keys = [k for k in machine.measured_bw if not k.startswith("_")] \
+        or ["_default"]
+    ref = reg["copy"]
+    for k in keys:
+        prior = float(machine.sustained_bw(k, default=0.0)
+                      or machine.measured_bw.get("_default", 0.0))
+        w = reg.get(k, ref)
+        obs = lower_many([w], machine, table=False).batch.prediction(-1)
+        meas.append((f"model_forward[{k}]", obs))
+        a, c = _affine_in_inv_bw(machine, [w],
+                                 bw_lo=prior / 2.0, bw_hi=prior * 2.0)
+        denom = float(obs[0] - a[0])
+        if denom <= 0 or c[0] <= 0:
+            fits.append(FieldFit(
+                field=f"measured_bw[{k}]", group="bandwidth", prior=prior,
+                fitted=prior, adopted=prior, residual=0.0, n_points=1,
+                snapped=True, note="core-bound at the memory level; "
+                                   "bandwidth unidentifiable"))
+        else:
+            fitted = float(c[0] / denom)
+            adopted, snapped = _snap(fitted, prior, snap_rtol)
+            fits.append(FieldFit(
+                field=f"measured_bw[{k}]", group="bandwidth", prior=prior,
+                fitted=fitted, adopted=adopted,
+                residual=_rms_rel(obs, a + c / adopted), n_points=1,
+                snapped=snapped, model_gap=0.0,
+                note="ECM-forward inversion (no cache-simulator support "
+                     "for this hierarchy)"))
+            out[k] = adopted
+        CAL_COUNTERS["fits"] += 1
+    return out
+
+
+def _fit_family_fallbacks(machine, fitted_bw, snap_rtol, fits):
+    """The ``_stream``/``_stencil``/``_compute``/``_default`` family keys:
+    refit as the median of their members' adopted values."""
+    families = {
+        "_stream": [k for k in STREAM_KERNELS if k in fitted_bw],
+        "_stencil": [k for k in STENCIL_KERNELS if k in fitted_bw],
+    }
+    out = {}
+    for fam, members in families.items():
+        if fam not in machine.measured_bw:
+            continue
+        prior = float(machine.measured_bw[fam])
+        if not members:
+            fitted = prior
+            note = "no fitted members; prior retained"
+        else:
+            fitted = float(np.median([fitted_bw[k] for k in members]))
+            note = f"median of {len(members)} member fits"
+        adopted, snapped = _snap(fitted, prior, snap_rtol)
+        fits.append(FieldFit(
+            field=f"measured_bw[{fam}]", group="bandwidth", prior=prior,
+            fitted=fitted, adopted=adopted, residual=0.0,
+            n_points=len(members), snapped=snapped, note=note))
+        CAL_COUNTERS["fits"] += 1
+        out[fam] = adopted
+    for k in machine.measured_bw:
+        if k in fitted_bw or k in out or k in ("_stream", "_stencil"):
+            continue
+        prior = float(machine.measured_bw[k])
+        fits.append(FieldFit(
+            field=f"measured_bw[{k}]", group="bandwidth", prior=prior,
+            fitted=prior, adopted=prior, residual=0.0, n_points=0,
+            snapped=True,
+            note="no microbenchmark measurement for this kernel class "
+                 "(core-bound or unsupported); prior retained"))
+        CAL_COUNTERS["fits"] += 1
+    return out
+
+
+def _fit_capacities(machine, backend, snap_rtol, meas, fits, checks):
+    """capacities[k] from the residence knees of the stream sweep, with
+    the stencil layer-condition breaks as a recorded cross-check."""
+    caps = list(machine.capacities)
+    if not caps or not backend.supports_sweeps():
+        for i, c in enumerate(caps):
+            fits.append(FieldFit(
+                field=f"capacities[{i}]", group="capacity", prior=float(c),
+                fitted=float(c), adopted=float(c), residual=0.0,
+                n_points=0, snapped=True,
+                note="hierarchy not sweepable; prior retained"))
+            CAL_COUNTERS["fits"] += 1
+        return caps
+    lo = max(1024.0, min(c for c in caps if c) / 16.0)
+    hi = 32.0 * max(caps)
+    sizes = np.geomspace(lo, hi, 240)
+    curve = backend.stream_sweep(["copy"], sizes)[0]
+    plateaus = backend.stream_levels(["copy"])[0]       # (L,) per level
+    meas.append(("capacity_sweep", curve))
+    meas.append(("capacity_plateaus", plateaus))
+    adopted_caps = []
+    for k, prior_c in enumerate(caps):
+        mid = (plateaus[k] + plateaus[k + 1]) / 2.0
+        ws = _crossings(sizes, curve, mid)
+        if ws is None:
+            fits.append(FieldFit(
+                field=f"capacities[{k}]", group="capacity",
+                prior=float(prior_c), fitted=float(prior_c),
+                adopted=float(prior_c), residual=0.0,
+                n_points=len(sizes), snapped=True,
+                note="no residence knee found (capacity 0 or outside the "
+                     "sweep); prior retained"))
+            adopted_caps.append(prior_c)
+        else:
+            # hit weight clamp(2C/ws - 1) is 1/2 at ws = 4C/3
+            fitted = 0.75 * ws
+            adopted, snapped = _snap(fitted, float(prior_c), snap_rtol)
+            adopted = int(round(adopted))
+            fits.append(FieldFit(
+                field=f"capacities[{k}]", group="capacity",
+                prior=float(prior_c), fitted=fitted, adopted=float(adopted),
+                residual=abs(fitted - adopted) / max(adopted, 1),
+                n_points=len(sizes), snapped=snapped))
+            adopted_caps.append(adopted)
+        CAL_COUNTERS["fits"] += 1
+    # stencil layer-condition cross-check: C = 2 * (2r+1) * 8 B * N_break
+    try:
+        breaks = _stencil_lc_breaks(machine, backend, adopted_caps, meas)
+        checks["stencil_lc_breaks"] = breaks
+    except Exception as e:  # noqa: BLE001 - cross-check only; recorded, never fails calibration
+        checks["stencil_lc_breaks"] = {"error": f"{type(e).__name__}: {e}"}
+    return adopted_caps
+
+
+def _stencil_lc_breaks(machine, backend, caps, meas) -> dict:
+    """Locate the jacobi2d layer-condition breaks in the measured stencil
+    sweep; each break at ``N`` implies ``C = 48 N`` (3 rows x 8 B x
+    LC-safety 2).  Returned per level as an independent capacity estimate."""
+    out = {}
+    for k, cap in enumerate(caps):
+        if not cap:
+            continue
+        n_break = cap / 48.0
+        ns = np.geomspace(n_break / 3.0, n_break * 3.0, 64).astype(int)
+        obs = backend.stencil_sweep("jacobi2d", ns)
+        meas.append((f"stencil_lc[{k}]", obs))
+        steps = np.diff(obs) / obs[:-1]
+        i = int(np.argmax(steps))
+        if steps[i] <= 1e-6:
+            out[f"L{k + 1}"] = {"detected": False}
+            continue
+        n_star = math.sqrt(float(ns[i]) * float(ns[i + 1]))
+        est = 48.0 * n_star
+        out[f"L{k + 1}"] = {
+            "detected": True, "n_break": n_star, "capacity_est": est,
+            "vs_adopted": est / cap,
+        }
+    return out
+
+
+def _fit_power(machine, backend, snap_rtol, meas, fits) -> ChipPower:
+    """ChipPower coefficients by OLS over the (cores x frequency) energy
+    grid (§III-D).  Needs >= 3 operating frequencies to be full-rank."""
+    prior = machine.power
+    f_grid = machine.frequency_grid()
+    n_grid = list(range(1, machine.cores + 1))
+    names = ("idle_watts", "static_per_core", "dyn_lin", "dyn_quad")
+    if len(set(f_grid)) < 3 or len(n_grid) < 2:
+        for nm in names:
+            p = float(getattr(prior, nm))
+            fits.append(FieldFit(
+                field=f"power.{nm}", group="power", prior=p, fitted=p,
+                adopted=p, residual=0.0, n_points=0, snapped=True,
+                note="fewer than 3 DVFS points: P(n,f) design matrix is "
+                     "rank-deficient; priors retained"))
+            CAL_COUNTERS["fits"] += 1
+        return prior
+    grid = backend.power_grid(n_grid, f_grid)           # (F, N)
+    meas.append(("power_grid", grid))
+    rows, y = [], []
+    for i, f in enumerate(f_grid):
+        for j, n in enumerate(n_grid):
+            rows.append([1.0, n, n * f, n * f * f])
+            y.append(grid[i, j])
+    A = np.array(rows)
+    yv = np.array(y)
+    coef, *_ = np.linalg.lstsq(A, yv, rcond=None)
+    resid = _rms_rel(yv, A @ coef)
+    kwargs = {}
+    for nm, fitted in zip(names, coef):
+        p = float(getattr(prior, nm))
+        adopted, snapped = _snap(float(fitted), p, snap_rtol)
+        fits.append(FieldFit(
+            field=f"power.{nm}", group="power", prior=p,
+            fitted=float(fitted), adopted=adopted, residual=resid,
+            n_points=len(yv), snapped=snapped))
+        CAL_COUNTERS["fits"] += 1
+        kwargs[nm] = adopted
+    return ChipPower(**kwargs)
+
+
+def _fit_overlap(machine, backend, snap_rtol, meas, fits) -> None:
+    """exposed_hbm_fraction from the serial-vs-pipelined delta (software-
+    managed hierarchies only; recorded in provenance — the coefficient
+    lives on ``TPUMachineModel``, not the hierarchy machine dict)."""
+    if machine.write_allocate:
+        return                                      # hardware-managed CPU
+    from .tpu_ecm import TPU_V5E, measured_overlap
+    t_serial, t_pipelined, t_hbm = backend.pipeline_pair()
+    meas.append(("pipeline_pair",
+                 np.array([t_serial, t_pipelined, t_hbm])))
+    prior = float(TPU_V5E.exposed_hbm_fraction)
+    fitted = float(measured_overlap(t_serial, t_pipelined, t_hbm))
+    adopted, snapped = _snap(fitted, prior, snap_rtol)
+    fits.append(FieldFit(
+        field="tpu.exposed_hbm_fraction", group="overlap", prior=prior,
+        fitted=fitted, adopted=adopted, residual=abs(fitted - prior),
+        n_points=2, snapped=snapped,
+        note="applies to TPUMachineModel via tpu_ecm.with_measured_overlap"))
+    CAL_COUNTERS["fits"] += 1
+
+
+# ---------------------------------------------------------------------------
+# The runner
+# ---------------------------------------------------------------------------
+
+
+def calibrate(machine: "MachineModel | str" = "haswell-ep", *,
+              backend=None, snap_rtol: float = SNAP_RTOL,
+              use_cache: bool = True) -> CalibrationReport:
+    """Run the full measure->fit cycle against ``machine``'s prior.
+
+    Returns a :class:`CalibrationReport`; ``report.save(path)`` emits the
+    versioned machine file.  With the disk cache enabled
+    (:mod:`repro.core.diskcache`), a repeat run with the same prior,
+    backend, and tolerance is served from disk with **zero re-fitting**
+    (``report.from_cache`` is set and ``CAL_COUNTERS['fits']`` does not
+    move).
+    """
+    prior_m = get_machine(machine)
+    backend = backend or SimcacheBackend(prior_m)
+    cache_key = ("report", backend.name, float(snap_rtol))
+    if use_cache:
+        hit = diskcache.get(_CAL_CACHE_KIND, cache_key, machine=prior_m)
+        if hit is not None:
+            CAL_COUNTERS["cache_hits"] += 1
+            return CalibrationReport.from_literal(hit, from_cache=True)
+
+    t0 = time.perf_counter()
+    fits: list = []
+    meas: list = []
+    checks: dict = {}
+    if backend.supports_sweeps():
+        fitted_bw = _fit_stream_bandwidths(prior_m, backend, snap_rtol,
+                                           meas, fits)
+        fitted_bw.update(_fit_stencil_bandwidths(prior_m, backend,
+                                                 snap_rtol, meas, fits))
+    else:
+        fitted_bw = _fit_model_forward_bandwidths(prior_m, backend,
+                                                  snap_rtol, meas, fits)
+    fitted_bw.update(
+        _fit_family_fallbacks(prior_m, fitted_bw, snap_rtol, fits))
+    caps = _fit_capacities(prior_m, backend, snap_rtol, meas, fits, checks)
+    power = _fit_power(prior_m, backend, snap_rtol, meas, fits)
+    _fit_overlap(prior_m, backend, snap_rtol, meas, fits)
+
+    bw = dict(prior_m.measured_bw)
+    bw.update(fitted_bw)
+    fitted_m = dataclasses.replace(
+        prior_m, measured_bw=bw, capacities=tuple(int(c) for c in caps),
+        power=power)
+    wall = time.perf_counter() - t0
+    h = hashlib.sha256()
+    for label, arr in meas:
+        h.update(label.encode())
+        h.update(repr(np.asarray(arr).tolist()).encode())
+    report = CalibrationReport(
+        base=prior_m.name, machine=fitted_m, fits=tuple(fits),
+        measurement_hash=h.hexdigest(), backend=backend.name,
+        snap_rtol=snap_rtol, wall_s=wall, checks=checks)
+    if use_cache:
+        diskcache.put(_CAL_CACHE_KIND, cache_key, report.to_literal(),
+                      machine=prior_m)
+    return report
+
+
+def format_report(report: CalibrationReport) -> str:
+    """Human-readable fit table for the launch CLI."""
+    lines = [
+        f"calibration of {report.base!r} "
+        f"(backend={report.backend}, snap_rtol={report.snap_rtol:g}"
+        + (", cached" if report.from_cache else "") + ")",
+        f"{'field':34s} {'prior':>12s} {'fitted':>12s} "
+        f"{'adopted':>12s} {'resid':>7s} {'gap':>6s}  snap",
+    ]
+    for f in report.fits:
+        lines.append(
+            f"{f.field:34s} {f.prior:12.5g} {f.fitted:12.5g} "
+            f"{f.adopted:12.5g} {f.residual:7.4f} {f.model_gap:6.3f}  "
+            f"{'yes' if f.snapped else 'NO'}"
+            + (f"  ({f.note})" if f.note else ""))
+    lines.append(
+        f"max residual {report.residual_max():.3f}; "
+        f"{sum(1 for f in report.fits if f.snapped)}/{len(report.fits)} "
+        f"fields snapped to prior; wall {report.wall_s:.2f}s; "
+        f"measurements sha256 {report.measurement_hash[:16]}")
+    return "\n".join(lines)

@@ -35,8 +35,10 @@ def __getattr__(name: str):
     # and its defaults are the Haswell fit this module always used.
     if name == "PowerModel":
         warnings.warn(
-            "PowerModel is deprecated; use repro.core.machine.ChipPower "
-            "(the per-machine power calibration, MachineModel.power)",
+            "PowerModel is deprecated and scheduled for removal; migrate "
+            "to repro.core.machine.ChipPower — read a machine's fit via "
+            "get_machine(name).power, or refit it from the energy grid "
+            "via repro.core.calibrate.calibrate(name)",
             DeprecationWarning, stacklevel=2)
         return ChipPower
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -322,16 +322,17 @@ def __getattr__(name: str):
     # (capacities and measured_bw with the ``_stencil`` family fallback).
     if name == "HASWELL_CAPACITIES":
         warnings.warn(
-            "HASWELL_CAPACITIES is deprecated; read the machine "
-            "calibration directly: HASWELL_EP.capacities (the Haswell L3 "
+            "HASWELL_CAPACITIES is deprecated and scheduled for removal; "
+            "migrate to get_machine('haswell-ep').capacities (the L3 "
             "entry is the Cluster-on-Die affinity-domain slice)",
             DeprecationWarning, stacklevel=2)
         return HASWELL_EP.capacities
     if name == "STENCIL_MEASURED_BW":
         warnings.warn(
-            "STENCIL_MEASURED_BW is deprecated; read the machine "
-            "calibration directly: HASWELL_EP.measured_bw (with the "
-            "'_stencil' family fallback)",
+            "STENCIL_MEASURED_BW is deprecated and scheduled for removal; "
+            "migrate to get_machine('haswell-ep').measured_bw — e.g. "
+            "HASWELL_EP.sustained_bw('jacobi2d', '_stencil') for the "
+            "family-fallback lookup",
             DeprecationWarning, stacklevel=2)
         return {k: HASWELL_EP.measured_bw[k]
                 for k in ("jacobi2d", "jacobi3d")}

@@ -36,9 +36,12 @@ three-term step-model constants (MXU/ICI/DCN) used by ``core.tpu_ecm``.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
+import os
 import warnings
 from dataclasses import dataclass, field
+from pathlib import Path
 
 
 # ---------------------------------------------------------------------------
@@ -345,8 +348,14 @@ _ALIASES: dict[str, str] = {}
 _REGISTRY_HOOKS: list = []
 
 
-def register_machine(machine: MachineModel, *aliases: str) -> MachineModel:
+def register_machine(machine: "MachineModel | dict | str | os.PathLike",
+                     *aliases: str) -> MachineModel:
     """Register a machine (and optional aliases) for name-based lookup.
+
+    ``machine`` may be a :class:`MachineModel`, a declarative dict (see
+    :func:`machine_from_dict`), or the path of a versioned machine file
+    (see :func:`load_machine_file`) — all three register identically, so a
+    freshly calibrated on-disk file is a first-class zoo citizen.
 
     Re-registering a name is the supported way to publish a calibration
     update (new ``measured_bw`` / capacities / power fit): observers in
@@ -355,6 +364,10 @@ def register_machine(machine: MachineModel, *aliases: str) -> MachineModel:
     replaced calibration are rebuilt on next access.  Mutating a registered
     machine's ``measured_bw`` dict in place is outside that contract.
     """
+    if isinstance(machine, dict):
+        machine = machine_from_dict(machine)
+    elif isinstance(machine, (str, os.PathLike)):
+        machine = load_machine_file(machine)
     MACHINES[machine.name] = machine
     for a in aliases:
         _ALIASES[a] = machine.name
@@ -378,6 +391,161 @@ def get_machine(name_or_model: "str | MachineModel") -> MachineModel:
 
 def machine_names() -> tuple[str, ...]:
     return tuple(sorted(MACHINES))
+
+
+# ---------------------------------------------------------------------------
+# Declarative serialization: machine dicts and versioned machine files
+# ---------------------------------------------------------------------------
+# A machine is data, so it round-trips losslessly through a plain dict (and
+# hence JSON): ``machine_from_dict(machine_to_dict(m)) == m`` bit-identically
+# for every zoo machine (golden-pinned in tests).  The on-disk *machine file*
+# wraps the dict in a versioned envelope with optional calibration
+# provenance (fit residuals, measurement hashes — see ``core.calibrate``):
+#
+#     {"schema": 1, "kind": "ecm-machine",
+#      "machine": {...machine_to_dict...},
+#      "provenance": {...}}            # optional
+#
+# The checked-in zoo lives as such files under ``src/repro/machines/`` —
+# bit-identical to the registered constants and regenerable with
+# ``tools/write_machine_files.py``.
+
+#: Version of the machine-file schema; files written with a *newer* schema
+#: than the running code understands are rejected, not guessed at.
+MACHINE_SCHEMA_VERSION = 1
+
+#: Tag <-> class for the in-core issue-model union in serialized machines.
+_PORT_KINDS = {"ports": PortModel, "vpu": VPUIssueModel}
+
+
+def machine_to_dict(machine: MachineModel) -> dict:
+    """Serialize a :class:`MachineModel` to a JSON-compatible dict.
+
+    The dict is purely declarative — nested issue/power models become
+    tagged sub-dicts, tuples become lists under JSON — and is the exact
+    inverse of :func:`machine_from_dict`.
+    """
+    d = dataclasses.asdict(machine)
+    d["levels"] = [dict(lv) for lv in d["levels"]]
+    kind = next(k for k, cls in _PORT_KINDS.items()
+                if type(machine.ports) is cls)
+    d["ports"] = {"kind": kind, **d["ports"]}
+    d["capacities"] = list(d["capacities"])
+    d["f_steps_ghz"] = list(d["f_steps_ghz"])
+    d["measured_bw"] = dict(d["measured_bw"])
+    return d
+
+
+def machine_from_dict(data: dict) -> MachineModel:
+    """Rebuild a :class:`MachineModel` from :func:`machine_to_dict` output.
+
+    Accepts either the bare machine dict or a full machine-file document
+    (``{"schema": ..., "machine": {...}}``).  Unknown fields and unknown
+    schema versions raise ``ValueError`` — a file from a newer version of
+    the code is rejected cleanly rather than silently misread.
+    """
+    if not isinstance(data, dict):
+        raise TypeError(f"machine_from_dict wants a dict, got {type(data)!r}")
+    d = dict(data)
+    if isinstance(d.get("machine"), dict):            # full file document
+        schema = d.get("schema")
+        if schema != MACHINE_SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported machine-file schema {schema!r} (this code "
+                f"understands schema {MACHINE_SCHEMA_VERSION})")
+        d = dict(d["machine"])
+    d.pop("schema", None)
+    known = {f.name for f in dataclasses.fields(MachineModel)}
+    unknown = sorted(set(d) - known)
+    if unknown:
+        raise ValueError(
+            f"unknown MachineModel fields in machine dict: {unknown}")
+    ports = dict(d["ports"])
+    kind = ports.pop("kind", "ports")
+    try:
+        port_cls = _PORT_KINDS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown issue-model kind {kind!r}; "
+            f"expected one of {sorted(_PORT_KINDS)}") from None
+    d["ports"] = port_cls(**ports)
+    d["levels"] = tuple(TransferLevel(**dict(lv)) for lv in d["levels"])
+    if "capacities" in d:
+        d["capacities"] = tuple(int(c) for c in d["capacities"])
+    if "f_steps_ghz" in d:
+        d["f_steps_ghz"] = tuple(float(f) for f in d["f_steps_ghz"])
+    if "power" in d:
+        d["power"] = ChipPower(**dict(d["power"]))
+    if "measured_bw" in d:
+        d["measured_bw"] = dict(d["measured_bw"])
+    return MachineModel(**d)
+
+
+def save_machine_file(machine: MachineModel, path: "str | os.PathLike",
+                      *, provenance: dict | None = None) -> Path:
+    """Write ``machine`` as a versioned machine file (see module notes).
+
+    ``provenance`` is stored verbatim next to the machine dict — the
+    calibration runner records fit residuals, measurement hashes, and the
+    backend there so a loaded file carries its own audit trail.
+    """
+    doc = {
+        "schema": MACHINE_SCHEMA_VERSION,
+        "kind": "ecm-machine",
+        "machine": machine_to_dict(machine),
+    }
+    if provenance is not None:
+        doc["provenance"] = dict(provenance)
+    path = Path(path)
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    return path
+
+
+def load_machine_file(path: "str | os.PathLike",
+                      *, with_provenance: bool = False):
+    """Load a versioned machine file; returns the :class:`MachineModel`
+    (or ``(model, provenance)`` with ``with_provenance=True``)."""
+    raw = json.loads(Path(path).read_text())
+    if not isinstance(raw, dict) or not isinstance(raw.get("machine"), dict):
+        raise ValueError(
+            f"{os.fspath(path)!r} is not a machine file: expected a JSON "
+            "object with a 'machine' member (see save_machine_file)")
+    model = machine_from_dict(raw)
+    if with_provenance:
+        return model, dict(raw.get("provenance") or {})
+    return model
+
+
+def resolve_machine(spec: "str | os.PathLike | dict | MachineModel",
+                    *, register: bool = True) -> MachineModel:
+    """Uniform machine resolution for CLI/launch entry points.
+
+    ``spec`` may be a registry name or alias, the path of a machine file,
+    a machine dict, or a model.  File/dict specs are registered by default
+    (``register=True``) so downstream name-based lookups — bench payload
+    labels, serving engines — see the freshly loaded machine.
+    """
+    if isinstance(spec, MachineModel):
+        return spec
+    if isinstance(spec, dict):
+        machine = machine_from_dict(spec)
+    elif isinstance(spec, (str, os.PathLike)):
+        name = os.fspath(spec)
+        if name in MACHINES or name in _ALIASES:
+            return get_machine(name)
+        if name.endswith(".json") or os.path.sep in name or os.path.exists(name):
+            machine = load_machine_file(name)
+        else:
+            return get_machine(name)     # raises the registry KeyError
+    else:
+        raise TypeError(f"cannot resolve a machine from {type(spec)!r}")
+    return register_machine(machine) if register else machine
+
+
+def zoo_machine_file(name: str) -> Path:
+    """Path of the checked-in machine file for a zoo machine name/alias."""
+    name = _ALIASES.get(name, name)
+    return Path(__file__).resolve().parent.parent / "machines" / f"{name}.json"
 
 
 # ---------------------------------------------------------------------------
@@ -468,9 +636,10 @@ def __getattr__(name: str):
     # PR-3 alias shim: the calibration table lives on the machine now.
     if name == "HASWELL_MEASURED_BW":
         warnings.warn(
-            "HASWELL_MEASURED_BW is deprecated; read the machine "
-            "calibration directly: HASWELL_EP.measured_bw (or "
-            "get_machine('haswell-ep').measured_bw)",
+            "HASWELL_MEASURED_BW is deprecated and scheduled for removal; "
+            "migrate to get_machine('haswell-ep').measured_bw (the same "
+            "Table I calibration, plus family fallbacks) — or load/refit "
+            "it via repro.core.calibrate.calibrate('haswell-ep')",
             DeprecationWarning, stacklevel=2)
         return _haswell_table1_bw()
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -55,8 +55,19 @@ def attention_workload(sq: int, sk: int, d: int, *, bq=K.DEFAULT_BQ,
 def tuned_blocks(sq: int, sk: int, d: int, *, causal: bool = True,
                  machine: str = "tpu-v5e") -> tuple[int, int]:
     """ECM-autotuned ``(bq, bk)`` for :func:`flash_attention` on a
-    registry machine (candidates are tilings the kernel accepts)."""
+    registry machine (candidates are tilings the kernel accepts).
+
+    With the on-disk cache enabled (``repro.core.diskcache``) the pick is
+    persisted keyed by the machine's content fingerprint, so a warm
+    restart skips the ranking entirely."""
+    from repro.core import diskcache
     from repro.core.autotune import rank
 
-    return rank((sq, sk, d), machine, objective="attention",
-                causal=causal)[0]["block"]
+    key = ("attention-blocks", sq, sk, d, bool(causal))
+    hit = diskcache.get("tuned-blocks", key, machine=machine)
+    if hit is not None:
+        return tuple(hit)
+    block = tuple(rank((sq, sk, d), machine, objective="attention",
+                       causal=causal)[0]["block"])
+    diskcache.put("tuned-blocks", key, block, machine=machine)
+    return block

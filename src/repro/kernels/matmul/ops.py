@@ -39,7 +39,18 @@ def matmul_workload(m: int, n: int, k: int, *, bm=K.DEFAULT_BM,
 def tuned_blocks(m: int, n: int, k: int, *,
                  machine: str = "tpu-v5e") -> tuple[int, int, int]:
     """ECM-autotuned ``(bm, bn, bk)`` for :func:`matmul` on a registry
-    machine (candidates are restricted to tilings the kernel accepts)."""
+    machine (candidates are restricted to tilings the kernel accepts).
+
+    With the on-disk cache enabled (``repro.core.diskcache``) the pick is
+    persisted keyed by the machine's content fingerprint, so a warm
+    restart skips the ranking entirely."""
+    from repro.core import diskcache
     from repro.core.autotune import rank
 
-    return rank((m, n, k), machine, objective="matmul")[0]["block"]
+    key = ("matmul-blocks", m, n, k)
+    hit = diskcache.get("tuned-blocks", key, machine=machine)
+    if hit is not None:
+        return tuple(hit)
+    block = tuple(rank((m, n, k), machine, objective="matmul")[0]["block"])
+    diskcache.put("tuned-blocks", key, block, machine=machine)
+    return block

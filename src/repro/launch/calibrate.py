@@ -1,0 +1,90 @@
+"""One-command machine onboarding: measure, fit, emit a machine file.
+
+The close of the measure->calibrate->predict loop (ROADMAP item 4)::
+
+    python -m repro.launch.calibrate --machine-out /tmp/m.json
+
+runs the microbenchmark sweeps against the default host machine, fits
+every :class:`repro.core.machine.MachineModel` calibration field class
+(see ``repro.core.calibrate``), prints the fit table, and writes a
+versioned machine file with full provenance.  The emitted file is usable
+everywhere a registry name is::
+
+    python -m repro.launch.dryrun --all --predict --machine /tmp/m.json
+    python benchmarks/run.py --suite stream --machine /tmp/m.json
+
+With ``--cache-dir`` (or ``REPRO_CACHE_DIR``) the report persists in the
+on-disk cache: a repeat run re-fits nothing.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.calibrate",
+        description="Calibrate a machine from microbenchmark measurements "
+                    "and emit a versioned machine file.")
+    ap.add_argument("--machine", default="haswell-ep",
+                    help="machine to calibrate: registry name/alias or a "
+                         "machine-file path (default: haswell-ep)")
+    ap.add_argument("--machine-out", metavar="PATH",
+                    help="write the fitted machine file here")
+    ap.add_argument("--snap-rtol", type=float, default=None,
+                    help="snap-to-prior tolerance (default: "
+                         "calibrate.SNAP_RTOL); fits within this relative "
+                         "distance of the prior adopt it bit-identically")
+    ap.add_argument("--no-snap", action="store_true",
+                    help="adopt raw fits (snap_rtol=0): the new-machine "
+                         "onboarding path")
+    ap.add_argument("--cache-dir", metavar="DIR",
+                    help="enable the on-disk calibration cache at DIR")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="ignore the disk cache even when configured")
+    ap.add_argument("--max-residual", type=float, default=None,
+                    help="exit 1 if any field's fit residual exceeds this "
+                         "(default: calibrate.MAX_FIT_RESIDUAL)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the fit table (summary line only)")
+    args = ap.parse_args(argv)
+
+    from repro.core import calibrate as cal
+    from repro.core import diskcache
+    from repro.core.machine import load_machine_file, resolve_machine
+
+    if args.cache_dir:
+        diskcache.set_cache_dir(args.cache_dir)
+    snap_rtol = 0.0 if args.no_snap else (
+        cal.SNAP_RTOL if args.snap_rtol is None else args.snap_rtol)
+    machine = resolve_machine(args.machine)
+    report = cal.calibrate(machine, snap_rtol=snap_rtol,
+                           use_cache=not args.no_cache)
+
+    if args.quiet:
+        print(f"calibrated {report.base!r}: {len(report.fits)} fields, "
+              f"max residual {report.residual_max():.5f}"
+              + (" (cached)" if report.from_cache else ""))
+    else:
+        print(cal.format_report(report))
+
+    if args.machine_out:
+        path = report.save(args.machine_out)
+        loaded = load_machine_file(path)
+        tag = ("bit-identical to the registered prior"
+               if loaded == machine else "updated calibration")
+        assert loaded == report.machine, "machine file round-trip mismatch"
+        print(f"wrote {path} ({tag})")
+
+    bound = (cal.MAX_FIT_RESIDUAL if args.max_residual is None
+             else args.max_residual)
+    if report.residual_max() > bound:
+        print(f"FAIL: max fit residual {report.residual_max():.5f} "
+              f"exceeds the bound {bound:g}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

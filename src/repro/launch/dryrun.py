@@ -390,7 +390,14 @@ def main() -> int:
     ap.add_argument("--predict", action="store_true",
                     help="append a composed-vs-simulated step-time table "
                          "(repro.core.compose) over the run's cells")
+    ap.add_argument("--machine", default="tpu-v5e",
+                    help="machine for --predict: a registry name/alias or "
+                         "a calibrated machine-file path (default: "
+                         "tpu-v5e)")
     args = ap.parse_args()
+
+    from repro.core.machine import resolve_machine
+    machine = resolve_machine(args.machine)
 
     cells: list[tuple[str, str, bool]] = []
     if args.all:
@@ -410,7 +417,8 @@ def main() -> int:
     failures = sum(r["status"] == "error" for r in records)
     skipped = sum(r["status"] == "skipped" for r in records)
     if args.predict:
-        print(format_predict_table(predict_table(records)))
+        print(format_predict_table(predict_table(records,
+                                                 machine=machine)))
     print(f"[dryrun] done: {len(cells)} cells, {failures} failures, "
           f"{skipped} skipped")
     return 1 if failures else 0

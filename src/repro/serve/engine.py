@@ -161,6 +161,32 @@ class BucketModel:
                 self._dirty.clear()
             self._model_token = tok
 
+    def _ranking_cache_key(self, kind: str, cb: int, blocks) -> tuple:
+        return ("bucket-rank", kind, cb, self.model.d, self.spec,
+                tuple(blocks))
+
+    def _cached_prior(self, kind: str, cb: int, blocks):
+        """Ranking prior for a bucket: in-memory first, then the on-disk
+        cache (``repro.core.diskcache``).  A disk hit seeds the PR-8
+        incremental path — ``rank(..., prior=hit, dirty=())`` re-lowers
+        nothing, so a warm restart skips straight to serving."""
+        prior = self._rankings.get((kind, cb))
+        if prior is not None:
+            return prior
+        from repro.core import diskcache
+        hit = diskcache.get("bucket-rank",
+                            self._ranking_cache_key(kind, cb, blocks),
+                            machine=self.machine)
+        if hit is not None:
+            return [dict(r, block=tuple(r["block"])) for r in hit]
+        return None
+
+    def _persist_ranking(self, kind: str, cb: int, blocks, ranked) -> None:
+        from repro.core import diskcache
+        diskcache.put("bucket-rank",
+                      self._ranking_cache_key(kind, cb, blocks),
+                      ranked, machine=self.machine)
+
     def _decode_entry(self, cb: int) -> dict:
         self._refresh_if_stale()
         key = ("decode", cb)
@@ -171,8 +197,9 @@ class BucketModel:
             ranked = rank(
                 (1, cb, self.model.d), self.machine, objective="attention",
                 blocks=blocks, causal=False, spec=self.spec,
-                prior=self._rankings.get(key), dirty=())
+                prior=self._cached_prior("decode", cb, blocks), dirty=())
             self._rankings[key] = ranked
+            self._persist_ranking("decode", cb, blocks, ranked)
             self._dirty.discard(key)
             fitting = [r for r in ranked if r["fits"]] or ranked
             by_bkv = {r["block"][1]: r["t_ecm"] for r in ranked}
@@ -198,8 +225,9 @@ class BucketModel:
             ranked = rank(
                 (cb, cb, self.model.d), self.machine, objective="attention",
                 blocks=blocks, causal=True, spec=self.spec,
-                prior=self._rankings.get(key), dirty=())
+                prior=self._cached_prior("prefill", cb, blocks), dirty=())
             self._rankings[key] = ranked
+            self._persist_ranking("prefill", cb, blocks, ranked)
             self._dirty.discard(key)
             fitting = [r for r in ranked if r["fits"]] or ranked
             best = fitting[0]

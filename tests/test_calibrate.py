@@ -1,0 +1,383 @@
+"""Calibration runner, versioned machine files, and the disk cache.
+
+Covers the PR-10 acceptance contracts:
+
+* machine dict/file round-trips are bit-identical for every zoo machine,
+  and the checked-in ``src/repro/machines/*.json`` files are golden pins
+  of the registry constants;
+* recalibrating a zoo machine snaps every field back to the registered
+  prior (the emitted file reproduces golden predictions exactly), while
+  a synthetically perturbed backend is recovered field-by-field with
+  ``snap_rtol=0``;
+* a warm disk cache serves the calibration report byte-identically with
+  zero re-fitting and zero re-measurement, invalidates on
+  ``register_machine``, and rejects corrupted / foreign-schema files as
+  misses rather than crashes;
+* warm ``tuned_blocks`` picks restore from disk with zero re-lowering;
+* ``tools/check_bench.py`` validates the calibrate BENCH payload and
+  pins the max fit residual and the zero-warm-refit invariants.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import calibrate as cal
+from repro.core import diskcache
+from repro.core.machine import (
+    MACHINE_SCHEMA_VERSION,
+    MACHINES,
+    ChipPower,
+    get_machine,
+    load_machine_file,
+    machine_from_dict,
+    machine_to_dict,
+    register_machine,
+    resolve_machine,
+    save_machine_file,
+    zoo_machine_file,
+)
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture
+def cache_dir(tmp_path):
+    prev = diskcache.set_cache_dir(tmp_path)
+    diskcache.reset_counters()
+    cal.reset_counters()
+    yield tmp_path
+    diskcache.restore_cache_dir(prev)
+
+
+# ---------------------------------------------------------------------------
+# machine dict / file round-trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(MACHINES))
+def test_machine_dict_roundtrip_bit_identical(name):
+    m = MACHINES[name]
+    d = machine_to_dict(m)
+    assert machine_from_dict(d) == m
+    # and through an actual JSON encode/decode (tuples -> lists -> back)
+    assert machine_from_dict(json.loads(json.dumps(d))) == m
+
+
+@pytest.mark.parametrize("name", sorted(MACHINES))
+def test_zoo_machine_files_are_golden_pins(name):
+    path = zoo_machine_file(name)
+    assert path.is_file(), f"missing checked-in machine file {path}"
+    doc = json.loads(path.read_text())
+    assert doc["schema"] == MACHINE_SCHEMA_VERSION
+    assert doc["kind"] == "ecm-machine"
+    loaded, prov = load_machine_file(path, with_provenance=True)
+    assert loaded == MACHINES[name]
+    assert loaded.name == name
+    assert isinstance(prov.get("aliases"), list)
+
+
+def test_save_load_roundtrip_with_provenance(tmp_path):
+    m = MACHINES["haswell-ep"]
+    path = tmp_path / "hsw.json"
+    save_machine_file(m, path, provenance={"note": "test", "x": 1})
+    loaded, prov = load_machine_file(path, with_provenance=True)
+    assert loaded == m
+    assert prov == {"note": "test", "x": 1}
+    # saving the loaded model again is byte-identical (canonical emit)
+    path2 = tmp_path / "hsw2.json"
+    save_machine_file(loaded, path2, provenance={"note": "test", "x": 1})
+    assert path.read_bytes() == path2.read_bytes()
+
+
+def test_machine_from_dict_rejects_unknown_field():
+    d = machine_to_dict(MACHINES["haswell-ep"])
+    d["not_a_field"] = 1
+    with pytest.raises(ValueError, match="unknown"):
+        machine_from_dict(d)
+
+
+def test_machine_from_dict_rejects_foreign_schema():
+    doc = {"schema": 99, "kind": "ecm-machine",
+           "machine": machine_to_dict(MACHINES["haswell-ep"])}
+    with pytest.raises(ValueError, match="schema"):
+        machine_from_dict(doc)
+
+
+def test_machine_from_dict_rejects_unknown_ports_kind():
+    d = machine_to_dict(MACHINES["haswell-ep"])
+    d["ports"]["kind"] = "alien"
+    with pytest.raises(ValueError, match="alien"):
+        machine_from_dict(d)
+
+
+def test_resolve_machine_accepts_name_path_and_dict(tmp_path):
+    # registry name: plain passthrough
+    assert resolve_machine("haswell-ep") is get_machine("haswell-ep")
+    # file path: loaded and registered under the file's machine name
+    m = dataclasses.replace(MACHINES["haswell-ep"],
+                            name="test-resolve-machine")
+    path = tmp_path / "m.json"
+    save_machine_file(m, path)
+    try:
+        loaded = resolve_machine(str(path))
+        assert loaded == m
+        assert get_machine("test-resolve-machine") == m
+        # dict: coerced through machine_from_dict
+        assert resolve_machine(machine_to_dict(m)) == m
+    finally:
+        MACHINES.pop("test-resolve-machine", None)
+
+
+# ---------------------------------------------------------------------------
+# calibration: zoo snap-back + synthetic recovery
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(MACHINES))
+def test_calibrate_zoo_machine_snaps_to_prior(name):
+    r = cal.calibrate(name, use_cache=False)
+    assert r.machine == MACHINES[name]          # bit-identical adoption
+    assert all(f.snapped for f in r.fits)
+    assert r.residual_max() <= cal.MAX_FIT_RESIDUAL
+    assert r.base == name and not r.from_cache
+    assert len(r.measurement_hash) == 64
+
+
+def test_calibrate_report_save_reproduces_prior(tmp_path):
+    r = cal.calibrate("haswell-ep", use_cache=False)
+    path = r.save(tmp_path / "hsw.json")
+    loaded, prov = load_machine_file(path, with_provenance=True)
+    assert loaded == MACHINES["haswell-ep"]
+    assert prov["calibrated_from"] == "haswell-ep"
+    assert prov["measurement_hash"] == r.measurement_hash
+    assert prov["residual_max"] == r.residual_max()
+    assert len(prov["fits"]) == len(r.fits)
+
+
+def test_calibrate_synthetic_recovery():
+    """A perturbed backend (the "real" machine differs from the prior) is
+    recovered field-by-field with snapping disabled — the onboarding
+    path for a machine whose constants are unknown."""
+    base = MACHINES["haswell-ep"]
+    bw = dict(base.measured_bw)
+    bw["copy"] *= 1.2
+    bw["ddot"] *= 0.85
+    caps = list(base.capacities)
+    caps[1] *= 2
+    truth = dataclasses.replace(
+        base, measured_bw=bw, capacities=tuple(caps),
+        power=ChipPower(idle_watts=40.0, static_per_core=0.7,
+                        dyn_lin=0.2, dyn_quad=3.1))
+    r = cal.calibrate("haswell-ep", backend=cal.SimcacheBackend(truth),
+                      snap_rtol=0.0, use_cache=False)
+    by_field = {f.field: f for f in r.fits}
+    assert by_field["measured_bw[copy]"].adopted == \
+        pytest.approx(bw["copy"], rel=1e-9)
+    assert by_field["measured_bw[ddot]"].adopted == \
+        pytest.approx(bw["ddot"], rel=1e-9)
+    assert by_field["capacities[1]"].adopted == \
+        pytest.approx(caps[1], rel=1e-3)
+    assert by_field["power.idle_watts"].adopted == \
+        pytest.approx(40.0, rel=1e-6)
+    assert by_field["power.dyn_quad"].adopted == \
+        pytest.approx(3.1, rel=1e-6)
+    # untouched fields still match the prior exactly
+    assert by_field["measured_bw[load]"].adopted == \
+        pytest.approx(base.measured_bw["load"], rel=1e-9)
+
+
+def test_calibrate_tpu_falls_back_to_forward_inversion():
+    r = cal.calibrate("tpu-v5e", use_cache=False)
+    assert r.machine == MACHINES["tpu-v5e"]
+    assert any(f.field == "tpu.exposed_hbm_fraction" for f in r.fits)
+    assert all(f.snapped for f in r.fits)
+
+
+# ---------------------------------------------------------------------------
+# disk cache: warm identity, invalidation, rejection
+# ---------------------------------------------------------------------------
+
+
+def test_calibrate_warm_cache_zero_refits(cache_dir, tmp_path):
+    cold = cal.calibrate("haswell-ep")
+    assert not cold.from_cache and cal.CAL_COUNTERS["fits"] > 0
+    diskcache.clear_memo()                      # force the on-disk path
+    cal.reset_counters()
+    warm = cal.calibrate("haswell-ep")
+    assert warm.from_cache
+    assert cal.CAL_COUNTERS["fits"] == 0
+    assert cal.CAL_COUNTERS["measurements"] == 0
+    assert cal.CAL_COUNTERS["cache_hits"] == 1
+    assert warm.machine == cold.machine
+    assert warm.measurement_hash == cold.measurement_hash
+    assert warm.fits == cold.fits
+    # the emitted machine files are byte-identical cold vs warm
+    p1, p2 = tmp_path / "cold.json", tmp_path / "warm.json"
+    cold.save(p1)
+    warm.save(p2)
+    assert p1.read_bytes() == p2.read_bytes()
+
+
+def test_diskcache_roundtrip_preserves_tuples(cache_dir):
+    value = {"block": (128, 256), "ok": True, "t": 1.5}
+    diskcache.put("t", ("k", 1), value, machine="haswell-ep")
+    diskcache.clear_memo()
+    hit = diskcache.get("t", ("k", 1), machine="haswell-ep")
+    assert hit == value
+    assert isinstance(hit["block"], tuple)
+
+
+def test_diskcache_invalidated_by_register_machine(cache_dir):
+    original = MACHINES["haswell-ep"]
+    diskcache.put("t", ("k",), {"v": 1}, machine=original)
+    assert diskcache.get("t", ("k",), machine=original) == {"v": 1}
+    bumped = dataclasses.replace(
+        original, measured_bw={k: v * 1.25
+                               for k, v in original.measured_bw.items()})
+    inv_before = diskcache.COUNTERS["invalidations"]
+    try:
+        register_machine(bumped)
+        # the registry hook cleared the in-memory memo...
+        assert diskcache.COUNTERS["invalidations"] > inv_before
+        # ...and the new content fingerprint never matches the old entry
+        assert diskcache.get("t", ("k",), machine=bumped) is None
+    finally:
+        register_machine(original)
+    # the original machine's entry is still served (content-addressed)
+    assert diskcache.get("t", ("k",), machine=original) == {"v": 1}
+
+
+def test_diskcache_rejects_corrupted_file(cache_dir):
+    path = diskcache.put("t", ("k",), {"v": 1}, machine="haswell-ep")
+    path.write_text("{not json")
+    diskcache.clear_memo()
+    rej = diskcache.COUNTERS["rejected"]
+    assert diskcache.get("t", ("k",), machine="haswell-ep") is None
+    assert diskcache.COUNTERS["rejected"] == rej + 1
+
+
+def test_diskcache_rejects_foreign_schema(cache_dir):
+    path = diskcache.put("t", ("k",), {"v": 1}, machine="haswell-ep")
+    doc = json.loads(path.read_text())
+    doc["schema"] = diskcache.CACHE_SCHEMA + 1
+    path.write_text(json.dumps(doc))
+    diskcache.clear_memo()
+    rej = diskcache.COUNTERS["rejected"]
+    assert diskcache.get("t", ("k",), machine="haswell-ep") is None
+    assert diskcache.COUNTERS["rejected"] == rej + 1
+
+
+def test_diskcache_disabled_is_inert(tmp_path):
+    prev = diskcache.set_cache_dir(None)
+    try:
+        assert not diskcache.enabled()
+        assert diskcache.put("t", ("k",), {"v": 1}) is None
+        assert diskcache.get("t", ("k",)) is None
+    finally:
+        diskcache.restore_cache_dir(prev)
+
+
+def test_machine_fingerprint_tracks_content():
+    m = MACHINES["haswell-ep"]
+    fp = diskcache.machine_fingerprint(m)
+    assert fp == diskcache.machine_fingerprint("haswell-ep")
+    assert fp == diskcache.machine_fingerprint(dataclasses.replace(m))
+    bumped = dataclasses.replace(m, cores=m.cores + 1)
+    assert diskcache.machine_fingerprint(bumped) != fp
+
+
+def test_tuned_blocks_warm_restart_zero_relowering(cache_dir):
+    from repro.core import engine
+    from repro.kernels.matmul.ops import tuned_blocks
+
+    cold = tuned_blocks(512, 512, 512, machine="tpu-v5e")
+    diskcache.clear_memo()                      # simulate a process restart
+    tab = engine.lowered_table()
+    stats_before = dict(tab.stats)
+    warm = tuned_blocks(512, 512, 512, machine="tpu-v5e")
+    assert warm == cold and isinstance(warm, tuple)
+    assert dict(tab.stats) == stats_before      # zero lowering activity
+
+
+# ---------------------------------------------------------------------------
+# bench artifact: schema + spec agreement
+# ---------------------------------------------------------------------------
+
+
+def _run_check_bench(*argv, timeout=180):
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_bench.py"),
+         *argv], env=env, cwd=ROOT, capture_output=True, text=True,
+        timeout=timeout)
+
+
+@pytest.fixture(scope="module")
+def calibrate_bench_payload():
+    from benchmarks.run import calibrate_payload
+
+    return calibrate_payload()
+
+
+def test_calibrate_payload_passes_check_bench(tmp_path,
+                                              calibrate_bench_payload):
+    path = tmp_path / "BENCH_calibrate.json"
+    path.write_text(json.dumps(calibrate_bench_payload))
+    r = _run_check_bench(str(path))
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_check_bench_pins_fit_residual(tmp_path, calibrate_bench_payload):
+    payload = json.loads(json.dumps(calibrate_bench_payload))
+    payload["fit"]["residual_max"] = 0.5        # way past the gate
+    path = tmp_path / "BENCH_calibrate.json"
+    path.write_text(json.dumps(payload))
+    r = _run_check_bench(str(path))
+    assert r.returncode == 1
+    assert "exceeds the calibration gate" in r.stderr
+
+
+def test_check_bench_pins_zero_warm_refits(tmp_path,
+                                           calibrate_bench_payload):
+    payload = json.loads(json.dumps(calibrate_bench_payload))
+    payload["cache"]["warm_fits"] = 3           # a re-fit leaked through
+    path = tmp_path / "BENCH_calibrate.json"
+    path.write_text(json.dumps(payload))
+    r = _run_check_bench(str(path))
+    assert r.returncode == 1
+    assert "must not re-fit" in r.stderr
+
+
+def test_check_bench_residual_gate_matches_calibrate():
+    """The stdlib-only checker pins the bound by value; it must track
+    ``repro.core.calibrate.MAX_FIT_RESIDUAL``."""
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", os.path.join(ROOT, "tools", "check_bench.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert mod.MAX_CALIBRATE_RESIDUAL == cal.MAX_FIT_RESIDUAL
+    assert "calibrate" in mod.SUITES
+    assert "calibrate" in mod.SPECS
+
+
+def test_check_bench_floor_names_missing_suite(tmp_path,
+                                               calibrate_bench_payload):
+    """--floor against an absent suite must say which suite is missing
+    and which suites were actually present (satellite: error clarity)."""
+    path = tmp_path / "BENCH_calibrate.json"
+    path.write_text(json.dumps(calibrate_bench_payload))
+    r = _run_check_bench(str(path), "--floor", "engine.x.y=1")
+    assert r.returncode == 1
+    assert "no artifact for suite 'engine'" in r.stderr
+    assert "suites present: calibrate" in r.stderr
+    # an unknown suite name additionally gets the known-suite hint
+    r2 = _run_check_bench(str(path), "--floor", "nosuch.x.y=1")
+    assert r2.returncode == 1
+    assert "not a known suite" in r2.stderr

@@ -1,0 +1,104 @@
+"""Deprecation shims: actionable warnings, and a source guard that the
+repo itself has fully migrated off them.
+
+The PR-3/PR-7/PR-8 compatibility shims (``HASWELL_MEASURED_BW``,
+``STENCIL_MEASURED_BW``, ``HASWELL_CAPACITIES``, ``PowerModel``, and the
+five ``rank_*`` wrappers) are graduating toward removal: every warning
+now names the exact replacement call, and no in-repo code may import or
+reference them outside the modules that define the shims and the tests
+that pin them.
+"""
+import re
+import warnings
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+#: the package __init__ lazily forwards the constant aliases (so the
+#: warning fires in the owning submodule); it is shim plumbing, not a
+#: caller, and is the only other file allowed to spell the names
+_FORWARDER = "src/repro/core/__init__.py"
+
+#: deprecated name -> modules that own the shim (the only allowed source
+#: references outside tests)
+DEPRECATED = {
+    "HASWELL_MEASURED_BW": {"src/repro/core/machine.py", _FORWARDER},
+    "HASWELL_CAPACITIES": {"src/repro/core/layer_condition.py", _FORWARDER},
+    "STENCIL_MEASURED_BW": {"src/repro/core/layer_condition.py",
+                            _FORWARDER},
+    "PowerModel": {"src/repro/core/energy.py", _FORWARDER},
+    "rank_workloads": {"src/repro/core/autotune.py"},
+    "rank_operating_points": {"src/repro/core/autotune.py"},
+    "rank_stencil_blocks": {"src/repro/core/autotune.py"},
+    "rank_matmul_blocks": {"src/repro/core/autotune.py"},
+    "rank_attention_blocks": {"src/repro/core/autotune.py"},
+}
+
+
+def test_no_in_repo_caller_uses_deprecated_names():
+    """Grep the shipped source tree (src/ + benchmarks/ + examples/ +
+    launch entry points) for the deprecated names; only each shim's own
+    defining module may mention its name."""
+    offenders = []
+    scan_roots = ("src/repro", "benchmarks", "examples")
+    for root in scan_roots:
+        for path in sorted((ROOT / root).rglob("*.py")):
+            rel = path.relative_to(ROOT).as_posix()
+            text = path.read_text()
+            for name, owners in DEPRECATED.items():
+                if rel in owners:
+                    continue
+                if re.search(rf"\b{name}\b", text):
+                    offenders.append(f"{rel}: {name}")
+    assert not offenders, (
+        "deprecated names referenced outside their shim modules "
+        f"(migrate per the DeprecationWarning hint): {offenders}")
+
+
+@pytest.mark.parametrize("name,module", [
+    ("HASWELL_MEASURED_BW", "repro.core.machine"),
+    ("HASWELL_CAPACITIES", "repro.core.layer_condition"),
+    ("STENCIL_MEASURED_BW", "repro.core.layer_condition"),
+    ("PowerModel", "repro.core.energy"),
+])
+def test_constant_shims_warn_with_migration_hint(name, module):
+    import importlib
+
+    mod = importlib.import_module(module)
+    with pytest.warns(DeprecationWarning,
+                      match=rf"{name} is deprecated and scheduled for "
+                            rf"removal; migrate"):
+        getattr(mod, name)
+
+
+@pytest.mark.parametrize("name", [
+    "rank_workloads", "rank_operating_points", "rank_stencil_blocks",
+    "rank_matmul_blocks", "rank_attention_blocks",
+])
+def test_ranker_shims_warn_and_name_replacement(name):
+    from repro.core import autotune
+
+    fn = autotune.__getattr__(name)
+    assert callable(fn)
+    # the warning fires on *call* and points at the unified rank() API
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        try:
+            fn()
+        except TypeError:
+            pass                                # bad args; warning already out
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert dep, f"{name} did not emit a DeprecationWarning"
+    msg = str(dep[0].message)
+    assert "deprecated and scheduled for removal" in msg
+    assert "migrate to repro.core.autotune.rank" in msg
+
+
+def test_unknown_attribute_still_raises():
+    from repro.core import autotune, energy, machine
+
+    for mod in (autotune, energy, machine):
+        with pytest.raises(AttributeError):
+            mod.__getattr__("definitely_not_a_symbol")

@@ -303,7 +303,8 @@ def test_floor_fails_below_bound(engine_artifact):
 def test_floor_requires_matching_suite_and_valid_syntax(engine_artifact):
     r = _check_bench(str(engine_artifact),
                      "--floor", "serve.warm_eval.points_per_s=1")
-    assert r.returncode == 1 and "no artifact of suite" in r.stderr
+    assert r.returncode == 1 and "no artifact for suite 'serve'" in r.stderr
+    assert "suites present: engine" in r.stderr
     r = _check_bench(str(engine_artifact), "--floor", "engine.warm_eval")
     assert r.returncode == 1 and "expected" in r.stderr
     r = _check_bench(str(engine_artifact),

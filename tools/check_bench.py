@@ -27,7 +27,11 @@ checksum, warm/cold eval sections and the re-rank ``identical`` pin),
 mesh (multi-chip parallelism autotuner — golden-pinned joint
 (mesh x profile x block) winners per config x chip count, the
 ``tpu_dp_scaling`` bit-identity flag through ``mesh.dp_scaling``, and
-the warm mesh-sweep throughput gated via ``--floor``).
+the warm mesh-sweep throughput gated via ``--floor``), calibrate (the
+calibration loop — the spec *pins the max relative fit residual at
+``MAX_CALIBRATE_RESIDUAL``* as a validation failure, requires zero warm
+re-fits/re-measurements against the disk cache, and type-checks the
+machine-file round-trip identity flags).
 
 ``--compare`` is the CI regression gate: it diffs a freshly generated
 artifact against the committed baseline, failing when any *deterministic*
@@ -52,7 +56,7 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 
 SUITES = ("stream", "stencil", "compute", "scaling", "tpu", "serve",
-          "compose", "engine", "mesh")
+          "compose", "engine", "mesh", "calibrate")
 
 #: minimal spec language: {key: type | (type, predicate) | dict (nested) |
 #: [element_spec] (non-empty list) | callable(value) -> error or None}
@@ -483,17 +487,97 @@ MESH_SPEC = {
     },
 }
 
+#: validation ceiling on the worst per-field calibration fit residual —
+#: mirrors ``repro.core.calibrate.MAX_FIT_RESIDUAL`` (this checker is
+#: stdlib-only, so the bound is pinned here rather than imported; the
+#: test suite asserts the two stay equal).  The fits invert the
+#: measurement backend's own forward response, so any residual beyond
+#: this means the fitting inversion or the measurements changed.
+MAX_CALIBRATE_RESIDUAL = 0.02
+
+
+def _nonneg(x):
+    return None if x >= 0 else f"expected >= 0, got {x!r}"
+
+
+def _zero_refits(x):
+    return None if x == 0 else \
+        f"warm run against the disk cache must not re-fit/re-measure, " \
+        f"got {x!r}"
+
+
+def _residual_bound(x):
+    return None if 0.0 <= x <= MAX_CALIBRATE_RESIDUAL else \
+        f"fit residual {x!r} exceeds the calibration gate " \
+        f"{MAX_CALIBRATE_RESIDUAL}"
+
+
+def _calibrate_groups(v):
+    """Per-field-class fit summaries; every group's worst residual is
+    held to the same ``MAX_CALIBRATE_RESIDUAL`` gate as the overall max."""
+    if not isinstance(v, dict) or not v:
+        return "expected non-empty object keyed by field group"
+    for g, s in v.items():
+        if not isinstance(s, dict):
+            return f"[{g}]: expected object"
+        for k in ("n", "n_snapped"):
+            val = s.get(k)
+            if not isinstance(val, int) or isinstance(val, bool) or val < 0:
+                return f"[{g}].{k}: expected non-negative int"
+        r = s.get("max_residual")
+        if not isinstance(r, NUM) or isinstance(r, bool):
+            return f"[{g}].max_residual: expected number"
+        err = _residual_bound(r)
+        if err:
+            return f"[{g}].max_residual: {err}"
+    return None
+
+
+CALIBRATE_SPEC = {
+    "fit": {
+        "base": str,
+        "backend": str,
+        "snap_rtol": (NUM, _fraction),
+        "n_fields": (int, _positive),
+        "n_snapped": (int, _nonneg),
+        "residual_max": (NUM, _residual_bound),
+        "model_gap_max": (NUM, _nonneg),
+        "groups": _calibrate_groups,
+        "measurement_hash": str,
+        "fit_wall_s": (NUM, _nonneg),
+    },
+    "roundtrip": {
+        "schema": (int, _positive),
+        "reload_equal": bool,
+        "machine_equal_prior": bool,
+        "dict_equal_prior": bool,
+        "zoo_files": (int, _positive),
+        "zoo_files_match_registry": bool,
+    },
+    "cache": {
+        "cold_wall_s": (NUM, _positive),
+        "cold_fits": (int, _positive),
+        "warm_wall_s": (NUM, _positive),
+        "speedup": (NUM, _positive),
+        "warm_fits": (int, _zero_refits),
+        "warm_measurements": (int, _zero_refits),
+        "warm_from_cache": bool,
+        "warm_identical": bool,
+    },
+}
+
 SPECS = {"stream": STREAM_SPEC, "stencil": STENCIL_SPEC,
          "compute": COMPUTE_SPEC, "scaling": SCALING_SPEC,
          "tpu": TPU_SPEC, "serve": SERVE_SPEC, "compose": COMPOSE_SPEC,
-         "engine": ENGINE_SPEC, "mesh": MESH_SPEC}
+         "engine": ENGINE_SPEC, "mesh": MESH_SPEC,
+         "calibrate": CALIBRATE_SPEC}
 
 #: distinctive payload keys for suite inference on legacy (schema 1)
 #: files; "rankings" must precede "sweep" (mesh payloads carry both),
 #: "warm_eval" must precede "zoo" (engine payloads carry both) and
 #: "models" must precede "zoo" — compose payloads carry both
 SUITE_HINTS = (("model_eval", "stream"), ("rankings", "mesh"),
-               ("sweep", "stencil"),
+               ("roundtrip", "calibrate"), ("sweep", "stencil"),
                ("matmul", "compute"), ("tpu_dp", "scaling"),
                ("classes", "serve"), ("warm_eval", "engine"),
                ("models", "compose"), ("zoo", "tpu"))
@@ -692,8 +776,16 @@ def check_floors(files: list[Path], floors: list[str]) -> list[str]:
         suite, path = parts[0], parts[1:]
         matched = by_suite.get(suite, [])
         if not matched:
-            problems.append(f"--floor {spec}: no artifact of suite "
-                            f"{suite!r} among the checked files")
+            # name the floor *and* the missing suite explicitly: with
+            # several --floor flags the gate must say which one matched
+            # nothing, and against which artifact set
+            present = ", ".join(sorted(by_suite)) or "none"
+            hint = (f" ({suite!r} is not a known suite; expected one of "
+                    f"{', '.join(SUITES)})" if suite not in SUITES else "")
+            problems.append(
+                f"--floor {spec!r}: no artifact for suite {suite!r} among "
+                f"the {len(files)} checked file(s) — suites present: "
+                f"{present}{hint}")
             continue
         for f, payload in matched:
             cur = payload

@@ -1,0 +1,43 @@
+#!/usr/bin/env python
+"""Regenerate the checked-in zoo machine files under ``src/repro/machines/``.
+
+The Python constants in ``repro.core.machine`` remain the source of truth;
+this script serializes them as versioned machine files so the declarative
+path (``register_machine(path)``, ``--machine <file>``) is exercised by the
+same data the registry ships.  A golden test asserts the files load
+bit-identical to the registered constants — rerun this script after editing
+a zoo machine and commit the result.
+
+Usage::
+
+    PYTHONPATH=src python tools/write_machine_files.py
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.machine import (  # noqa: E402
+    MACHINES, _ALIASES, machine_names, save_machine_file, zoo_machine_file)
+
+
+def main() -> int:
+    out_dir = zoo_machine_file("haswell-ep").parent
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name in machine_names():
+        aliases = sorted(a for a, t in _ALIASES.items() if t == name)
+        path = save_machine_file(
+            MACHINES[name], zoo_machine_file(name),
+            provenance={
+                "source": "repro.core.machine registry constants",
+                "generated_by": "tools/write_machine_files.py",
+                "aliases": aliases,
+            })
+        print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
